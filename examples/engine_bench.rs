@@ -1,0 +1,64 @@
+//! Engine micro-timing: prefill and decode step latencies on the real
+//! PJRT path — the L1/L2 hot-path measurements for EXPERIMENTS §Perf.
+//!
+//!     cargo run --release --example engine_bench
+
+use loraserve::runtime::ModelEngine;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("LORASERVE_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let engine = ModelEngine::load(&dir)?;
+    let bank = ModelEngine::load_bank(&dir)?;
+
+    for &(b, lp) in &[(1usize, 32usize), (4, 64), (8, 64)] {
+        if !engine.prefill_shapes().contains(&(b, lp)) {
+            continue;
+        }
+        // batch of b prompts, mixed adapters (slots 0..b)
+        let slots: Vec<usize> = (0..b).map(|i| i % 8).collect();
+        let adapters: Vec<Option<&_>> =
+            (0..b.min(8)).map(|i| Some(&bank[i])).collect();
+        let stack = engine.stack_adapters(&adapters)?;
+        let prompts: Vec<Vec<i32>> =
+            (0..b).map(|i| (1..24 + i as i32).collect()).collect();
+
+        // prefill timing
+        let t0 = Instant::now();
+        let n_pf = 10;
+        let mut kv = None;
+        for _ in 0..n_pf {
+            let (_, k) = engine.prefill((b, lp), &prompts, &slots, &stack)?;
+            kv = Some(k);
+        }
+        let pf = t0.elapsed().as_secs_f64() / n_pf as f64;
+
+        // decode timing
+        let mut kv = kv.unwrap();
+        let tokens = vec![5i32; b];
+        let mut pos: Vec<i32> = (0..b).map(|_| 30).collect();
+        let mut slots_row = slots.clone();
+        slots_row.resize(b, 0);
+        let n_dec = 30;
+        let t0 = Instant::now();
+        for _ in 0..n_dec {
+            let (_, nkv) =
+                engine.decode(kv, &tokens, &slots_row, &pos, &stack)?;
+            kv = nkv;
+            for p in pos.iter_mut() {
+                *p += 1;
+            }
+        }
+        let dec = t0.elapsed().as_secs_f64() / n_dec as f64;
+        println!(
+            "b={b} lp={lp}: prefill {:.1} ms ({:.0} tok/s), decode step \
+             {:.1} ms ({:.0} tok/s)",
+            pf * 1e3,
+            (b * lp) as f64 / pf,
+            dec * 1e3,
+            b as f64 / dec,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Placement explorer: watch Algorithm 1 react to workload drift.
+//!
+//! Simulates a shifting-skew workload window by window, printing the
+//! demand the coordinator projects, the rank budgets, the resulting
+//! placement (which ranks each server hosts, expected utilization),
+//! and the migration traffic against the previous window — the
+//! dynamics of Fig 13/16 in one terminal view.
+//!
+//!     cargo run --release --example placement_explorer [--windows N]
+
+use loraserve::config::ServerConfig;
+use loraserve::coordinator::DemandTracker;
+use loraserve::placement::loraserve::LoraServePlacer;
+use loraserve::placement::{Assignment, PlacementCtx, Placer};
+use loraserve::sim::profile::empirical_operating_points;
+use loraserve::trace::azure::{AzureConfig, RankPopularity};
+use loraserve::trace::azure;
+use loraserve::util::cli::Args;
+use loraserve::util::table::fmt_bytes;
+use loraserve::workload::RANK_CLASSES;
+
+fn main() -> Result<(), String> {
+    let args = Args::from_env(&[])?;
+    let n_windows = args.get_usize("windows", 6)?;
+    let n_servers = args.get_usize("servers", 4)?;
+    let window = 200.0; // seconds per placement window
+
+    let trace = azure::generate(&AzureConfig {
+        popularity: RankPopularity::ShiftingSkew,
+        rps: 20.0,
+        duration: window * n_windows as f64,
+        seed: args.get_u64("seed", 0)?,
+        ..Default::default()
+    });
+    println!(
+        "trace: {} requests over {:.0}s, {} adapters, shifting skew\n",
+        trace.requests.len(),
+        trace.duration(),
+        trace.adapters.len()
+    );
+
+    let server = ServerConfig::default();
+    let oppoints =
+        empirical_operating_points(&server, &RANK_CLASSES, 10.0);
+    println!("profiled operating points (tokens/s under SLO):");
+    for (r, op) in &oppoints {
+        println!("  rank {r:3}: {op:6.0}");
+    }
+
+    let mut tracker = DemandTracker::new(window, 16);
+    let mut placer = LoraServePlacer::new();
+    let mut prev: Option<Assignment> = None;
+    let mut req_iter = trace.requests.iter().peekable();
+
+    for w in 0..n_windows {
+        let t_end = (w + 1) as f64 * window;
+        while let Some(r) = req_iter.peek() {
+            if r.arrival > t_end {
+                break;
+            }
+            let r = req_iter.next().unwrap();
+            tracker.record(r.adapter, r.total_tokens());
+        }
+        tracker.roll_window();
+        let projected = tracker.projected_tps();
+        let ctx = PlacementCtx {
+            adapters: &trace.adapters,
+            n_servers,
+            demand_tps: &projected,
+            operating_points: &oppoints,
+            prev: prev.as_ref(),
+        };
+        let asg = placer.place(&ctx);
+        asg.validate(n_servers).map_err(|e| e.to_string())?;
+
+        println!("\n== window {w} (t <= {t_end:.0}s)");
+        // rank-level demand
+        let mut by_rank = std::collections::BTreeMap::new();
+        for (a, tps) in &projected {
+            let rank = trace.adapters.get(*a).rank;
+            *by_rank.entry(rank).or_insert(0.0) += tps;
+        }
+        print!("   projected demand: ");
+        for (r, tps) in &by_rank {
+            print!("r{r}:{tps:.0}tps ");
+        }
+        println!();
+        let utils = asg.server_utils(
+            n_servers,
+            &trace.adapters,
+            &projected,
+            &oppoints,
+        );
+        for s in 0..n_servers {
+            let mut ranks: Vec<u32> = asg
+                .adapters_on(s)
+                .iter()
+                .map(|&a| trace.adapters.get(a).rank)
+                .collect();
+            ranks.sort_unstable();
+            ranks.dedup();
+            println!(
+                "   server {s}: util {:.2}, {} adapters, ranks {:?}",
+                utils[s],
+                asg.adapters_on(s).len(),
+                ranks
+            );
+        }
+        if let Some(p) = &prev {
+            println!(
+                "   migration: {}",
+                fmt_bytes(asg.migration_bytes(p, &trace.adapters))
+            );
+        }
+        prev = Some(asg);
+    }
+    println!("\nplacement_explorer OK");
+    Ok(())
+}

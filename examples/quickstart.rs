@@ -1,0 +1,42 @@
+//! Quickstart: load the AOT artifacts, run one real LoRA inference on
+//! the PJRT CPU client, and print latencies for two adapter ranks.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use loraserve::runtime::ModelEngine;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("LORASERVE_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    println!("loading engine from {dir}/ ...");
+    let t0 = Instant::now();
+    let engine = ModelEngine::load(&dir)?;
+    let bank = ModelEngine::load_bank(&dir)?;
+    println!(
+        "engine ready on {} in {:.1}s ({} artifacts, {} bank adapters)",
+        engine.platform(),
+        t0.elapsed().as_secs_f64(),
+        engine.prefill_shapes().len() + engine.decode_batches().len(),
+        bank.len(),
+    );
+
+    let prompt: Vec<i32> = (1..=24).collect();
+    for (label, idx) in [("rank-8 adapter", 0usize), ("rank-128 adapter", 4)]
+    {
+        let adapter = &bank[idx];
+        let t = Instant::now();
+        let tokens = engine.generate(&prompt, adapter, 16)?;
+        let dt = t.elapsed().as_secs_f64();
+        println!(
+            "{label} (rank {:3}): {:2} tokens in {:.3}s ({:.1} tok/s) -> {:?}",
+            adapter.rank,
+            tokens.len(),
+            dt,
+            tokens.len() as f64 / dt,
+            &tokens[..8.min(tokens.len())],
+        );
+    }
+    println!("quickstart OK");
+    Ok(())
+}

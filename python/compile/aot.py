@@ -1,0 +1,240 @@
+"""AOT lowering: jax/pallas model -> HLO text artifacts for the rust runtime.
+
+Emits, into `artifacts/` (gitignored):
+
+  prefill_b{B}_l{Lp}.hlo.txt   prefill executables (one per batch shape)
+  decode_b{B}.hlo.txt          decode executables
+  params.bin                   base-model weights        (tensorfile)
+  adapters.bin                 adapter bank A/B/alpha    (tensorfile)
+  manifest.json                ABI: shapes, arg order, model config
+  golden.json                  greedy-generation goldens for rust tests
+
+HLO **text** is the interchange format, not `.serialize()`: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the rust `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Pallas kernels are lowered with interpret=True so they become plain HLO
+executable by the CPU PJRT client (real-TPU lowering emits Mosaic
+custom-calls the CPU plugin cannot run).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import sgmv
+from . import tensorfile
+
+SEED = 0x10AD_5E4E % (2**31)
+BATCH_SLOTS = 8  # adapter slots per co-batch (S_b): stacked lora tensor dim
+
+# Adapter bank served end-to-end: ids 0..15, the paper's five rank classes.
+BANK_RANKS = [8, 16, 32, 64, 128, 8, 16, 32, 64, 128, 8, 8, 16, 32, 64, 128]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _arg_specs_prefill(cfg: M.ModelConfig, b: int, lp: int):
+    shapes = M.param_shapes(cfg)
+    names = M.param_names(cfg)
+    specs = [("param:" + n, _spec(shapes[n])) for n in names]
+    d, r = cfg.d_model, cfg.r_max
+    nb = b * lp // cfg.block_tokens
+    specs += [
+        ("lora_a", _spec((BATCH_SLOTS, d, r))),
+        ("lora_b", _spec((BATCH_SLOTS, r, d))),
+        ("scalings", _spec((BATCH_SLOTS,))),
+        ("tokens", _spec((b, lp), jnp.int32)),
+        ("bseg", _spec((nb,), jnp.int32)),
+        ("lens", _spec((b,), jnp.int32)),
+    ]
+    return specs
+
+
+def _arg_specs_decode(cfg: M.ModelConfig, b: int):
+    shapes = M.param_shapes(cfg)
+    names = M.param_names(cfg)
+    specs = [("param:" + n, _spec(shapes[n])) for n in names]
+    d, r, h, dh = cfg.d_model, cfg.r_max, cfg.n_heads, cfg.head_dim
+    kv = (cfg.n_layers, b, cfg.max_seq, h, dh)
+    specs += [
+        ("lora_a", _spec((BATCH_SLOTS, d, r))),
+        ("lora_b", _spec((BATCH_SLOTS, r, d))),
+        ("scalings", _spec((BATCH_SLOTS,))),
+        ("k_cache", _spec(kv)),
+        ("v_cache", _spec(kv)),
+        ("tokens", _spec((b,), jnp.int32)),
+        ("bseg", _spec((b,), jnp.int32)),
+        ("pos", _spec((b,), jnp.int32)),
+    ]
+    return specs
+
+
+def _manifest_args(specs):
+    return [
+        {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+        for n, s in specs
+    ]
+
+
+def make_adapter_bank(key, cfg: M.ModelConfig):
+    """Deterministic adapter bank: (A, B, alpha) per adapter id."""
+    bank = []
+    for i, r in enumerate(BANK_RANKS):
+        ka, kb = jax.random.split(jax.random.fold_in(key, i))
+        a = jax.random.normal(ka, (cfg.d_model, r), jnp.float32) * 0.05
+        b = jax.random.normal(kb, (r, cfg.d_model), jnp.float32) * 0.05
+        bank.append((a, b, float(2 * r)))
+    return bank
+
+
+def lower_all(cfg: M.ModelConfig, out_dir: str, prefill_shapes,
+              decode_batches, fast: bool) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = []
+
+    for b, lp in prefill_shapes:
+        name = f"prefill_b{b}_l{lp}"
+        specs = _arg_specs_prefill(cfg, b, lp)
+        fn = M.prefill_flat(cfg)
+        lowered = jax.jit(fn).lower(*[s for _, s in specs])
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append({
+            "name": name, "kind": "prefill", "batch": b, "prompt_len": lp,
+            "file": name + ".hlo.txt", "args": _manifest_args(specs),
+            "outputs": ["logits", "k_cache", "v_cache"],
+        })
+        print(f"  lowered {name}: {len(text)} chars")
+
+    for b in decode_batches:
+        name = f"decode_b{b}"
+        specs = _arg_specs_decode(cfg, b)
+        fn = M.decode_flat(cfg)
+        lowered = jax.jit(fn).lower(*[s for _, s in specs])
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append({
+            "name": name, "kind": "decode", "batch": b, "prompt_len": 0,
+            "file": name + ".hlo.txt", "args": _manifest_args(specs),
+            "outputs": ["logits", "k_cache", "v_cache"],
+        })
+        print(f"  lowered {name}: {len(text)} chars")
+
+    return {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff, "max_seq": cfg.max_seq, "r_max": cfg.r_max,
+            "block_tokens": cfg.block_tokens,
+        },
+        "batch_slots": BATCH_SLOTS,
+        "param_names": M.param_names(cfg),
+        "bank_ranks": BANK_RANKS,
+        "artifacts": artifacts,
+        "seed": SEED,
+    }
+
+
+def emit_goldens(cfg, params, bank, out_dir: str) -> None:
+    """Greedy-generation goldens the rust integration tests replay."""
+    goldens = []
+    cases = [
+        # (prompt length, adapter id in bank, steps)
+        (5, 0, 6),    # rank 8
+        (12, 4, 6),   # rank 128
+        (20, 2, 4),   # rank 32
+    ]
+    for plen, aid, steps in cases:
+        rng = np.random.RandomState(plen * 1000 + aid)
+        prompt = rng.randint(1, cfg.vocab, size=plen).tolist()
+        # Stack a batch with the chosen adapter in slot 0.
+        la, lb, sc, _rk = sgmv.stack_adapters([bank[aid]], cfg.d_model,
+                                              cfg.r_max)
+        pad = BATCH_SLOTS - 1
+        la = jnp.concatenate([la, jnp.zeros((pad,) + la.shape[1:])], 0)
+        lb = jnp.concatenate([lb, jnp.zeros((pad,) + lb.shape[1:])], 0)
+        sc = jnp.concatenate([sc, jnp.zeros((pad,))], 0)
+        toks = M.reference_generate(params, la, lb, sc, prompt, 0, steps,
+                                    cfg)
+        goldens.append({"prompt": prompt, "adapter": aid, "steps": steps,
+                        "tokens": toks})
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(goldens, f, indent=1)
+    print(f"  goldens: {[g['tokens'] for g in goldens]}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="emit the minimal artifact set")
+    args = ap.parse_args()
+    out_dir = args.out
+
+    cfg = M.ModelConfig()
+    # NOTE: for every prefill batch size B there must be a decode
+    # artifact with the same B — the KV-cache shapes are baked per batch
+    # and the rust engine feeds prefill outputs straight into decode.
+    if args.fast:
+        prefill_shapes = [(1, 32)]
+        decode_batches = [1]
+    else:
+        prefill_shapes = [(1, 32), (4, 32), (4, 64), (8, 64)]
+        decode_batches = [1, 4, 8]
+
+    print("lowering artifacts ...")
+    manifest = lower_all(cfg, out_dir, prefill_shapes, decode_batches,
+                         args.fast)
+
+    key = jax.random.PRNGKey(SEED)
+    params = M.init_params(key, cfg)
+    tensorfile.write_tensors(
+        os.path.join(out_dir, "params.bin"),
+        [(n, np.asarray(params[n])) for n in M.param_names(cfg)],
+    )
+
+    bank = make_adapter_bank(jax.random.fold_in(key, 1), cfg)
+    bank_tensors = []
+    for i, (a, b, alpha) in enumerate(bank):
+        bank_tensors.append((f"adapter{i}.a", np.asarray(a)))
+        bank_tensors.append((f"adapter{i}.b", np.asarray(b)))
+        bank_tensors.append((f"adapter{i}.alpha",
+                             np.asarray([alpha], np.float32)))
+    tensorfile.write_tensors(os.path.join(out_dir, "adapters.bin"),
+                             bank_tensors)
+
+    emit_goldens(cfg, params, bank, out_dir)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts "
+          f"to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

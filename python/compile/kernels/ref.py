@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the multi-adapter LoRA kernels.
+
+These are the correctness references: simple, obviously-right per-token
+gather implementations with no tiling or padding tricks. The Pallas
+kernels in ``sgmv.py`` are validated against these by
+``python/tests/test_kernel.py``.
+
+Shapes (shared by kernels and oracles):
+  x       : [T, d]              tokens (co-batched across requests)
+  seg_ids : [T] int32           adapter index per token
+  lora_a  : [n_adapters, d, r_max]   "shrink" matrices, zero-padded
+  lora_b  : [n_adapters, r_max, d]   "expand" matrices, zero-padded
+  ranks   : [n_adapters] int32  true rank of each adapter (<= r_max)
+
+The LoRA delta for token t with adapter s = seg_ids[t] is
+
+  delta[t] = (x[t] @ lora_a[s]) @ lora_b[s] * scaling
+
+Rows/columns of A/B beyond the adapter's true rank are zero, so padded
+and rank-masked computations agree numerically; what differs between the
+kernel variants is the *work* performed, which is the paper's whole point
+(pad-to-max-rank interference).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lora_delta_ref(x, seg_ids, lora_a, lora_b, scaling=1.0):
+    """Per-token gathered LoRA delta: the ground truth.
+
+    Gathers each token's (A, B) pair and applies the two skinny matmuls
+    exactly. Same asymptotic work as the real kernels, but with a gather
+    of full adapter matrices per token — fine for an oracle.
+    """
+    a = lora_a[seg_ids]  # [T, d, r_max]
+    b = lora_b[seg_ids]  # [T, r_max, d]
+    h = jnp.einsum("td,tdr->tr", x, a)
+    out = jnp.einsum("tr,trd->td", h, b)
+    return out * scaling
+
+
+def lora_delta_masked_ref(x, seg_ids, lora_a, lora_b, ranks, scaling=1.0):
+    """Oracle with explicit rank masking.
+
+    Identical result to ``lora_delta_ref`` when the stacked A/B are
+    zero-padded beyond each adapter's rank; used to verify that the
+    rank-aware kernel's masking is exact even when the padding of A/B is
+    garbage (non-zero).
+    """
+    a = lora_a[seg_ids]  # [T, d, r_max]
+    b = lora_b[seg_ids]  # [T, r_max, d]
+    r_max = lora_a.shape[-1]
+    mask = jnp.arange(r_max)[None, :] < ranks[seg_ids][:, None]  # [T, r_max]
+    h = jnp.einsum("td,tdr->tr", x, a)
+    h = jnp.where(mask, h, 0.0)
+    out = jnp.einsum("tr,trd->td", h, b)
+    return out * scaling
+
+
+def lora_matmul_ref(x, w, seg_ids, lora_a, lora_b, scaling=1.0):
+    """Full LoRA projection: frozen base weight + adapter delta.
+
+      y = x @ w + scaling * (x @ A[seg]) @ B[seg]
+    """
+    return x @ w + lora_delta_ref(x, seg_ids, lora_a, lora_b, scaling)

@@ -1,0 +1,178 @@
+"""Pallas multi-adapter LoRA kernels (L1).
+
+Two variants of the fused heterogeneous-LoRA delta, mirroring the kernels
+the paper analyzes (§II-B, §III-A.5):
+
+* ``bgmv_padded`` — Punica-style BGMV: every token block executes GEMMs
+  padded to the *maximum* rank present in the stacked adapter tensors,
+  regardless of each adapter's true rank. This is the behaviour whose
+  interference the paper measures: low-rank requests pay r_max work.
+
+* ``sgmv_rank_aware`` — S-LoRA MBGMV-style segmented gather kernel with
+  explicit rank masking. The intermediate activations beyond an adapter's
+  true rank are zeroed, so the result is exact even if the stacked A/B
+  padding holds garbage. On real hardware the tile shapes (and thus MXU
+  occupancy) are still dictated by r_max — the masking trims numerics,
+  not the systolic-array schedule — which is exactly the residual
+  dependency on the highest rank the paper calls out.
+
+TPU adaptation (see DESIGN.md §3): the CUDA kernels tile per threadblock
+and stage adapter slices in shared memory; here the grid iterates over
+fixed-size *token blocks* (one adapter per block — the serving engine
+lays out co-batched requests contiguously and pads each request to a
+block multiple), and the adapter pair for the block is gathered from the
+stacked HBM tensors into VMEM-resident tiles. ``interpret=True`` is
+mandatory: the CPU PJRT plugin cannot execute Mosaic custom-calls, so the
+kernel lowers to plain HLO and the same artifact runs under the rust
+runtime.
+
+Batch layout contract (shared with rust `server/` and L2 `model.py`):
+  x          : [T, d]   T = n_blocks * block_tokens
+  block_seg  : [n_blocks] int32, adapter index of each token block
+  lora_a     : [S, d, r_max]   zero-padded shrink matrices
+  lora_b     : [S, r_max, d]   zero-padded expand matrices
+  scalings   : [S] f32         alpha/rank per adapter
+  ranks      : [S] int32       true ranks (rank-aware variant only)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_TOKENS = 8
+
+
+def _delta_kernel(seg_ref, x_ref, a_ref, b_ref, scale_ref, o_ref, *,
+                  rank_aware, ranks_ref=None):
+    """One grid step: LoRA delta for a single token block.
+
+    `seg_ref` is the scalar-prefetch operand: the BlockSpec index maps
+    below use it to gather *only this block's* adapter pair HBM->VMEM —
+    the canonical SGMV schedule (a CUDA kernel does the same staging
+    with cp.async into shared memory). The VMEM-resident working set per
+    grid step is exactly x-tile + one (A, B) pair + out-tile.
+    """
+    del seg_ref  # consumed by the index maps
+    x = x_ref[...]                # [BT, d]
+    a = a_ref[0]                  # [d, r_max]
+    b = b_ref[0]                  # [r_max, d]
+    scale = scale_ref[0]
+
+    # Shrink: [BT, d] @ [d, r_max]. The MXU tile is r_max wide for every
+    # block — this is the pad-to-max-rank cost, present in BOTH variants.
+    h = jnp.dot(x, a, preferred_element_type=jnp.float32)  # [BT, r_max]
+
+    if rank_aware:
+        r = ranks_ref[0]
+        r_max = h.shape[-1]
+        mask = jax.lax.broadcasted_iota(jnp.int32, (1, r_max), 1) < r
+        h = jnp.where(mask, h, 0.0)
+
+    # Expand: [BT, r_max] @ [r_max, d].
+    out = jnp.dot(h, b, preferred_element_type=jnp.float32)  # [BT, d]
+    o_ref[...] = (out * scale).astype(o_ref.dtype)
+
+
+def _lora_delta(x, block_seg, lora_a, lora_b, scalings, ranks, *,
+                block_tokens, rank_aware, interpret=True):
+    t, d = x.shape
+    s_count, d_a, r_max = lora_a.shape
+    assert d_a == d, f"lora_a dim {d_a} != x dim {d}"
+    assert lora_b.shape == (s_count, r_max, d), lora_b.shape
+    assert t % block_tokens == 0, f"T={t} not a multiple of block_tokens={block_tokens}"
+    n_blocks = t // block_tokens
+    assert block_seg.shape == (n_blocks,), (block_seg.shape, n_blocks)
+
+    if rank_aware:
+        def kernel(seg_ref, x_ref, a_ref, b_ref, scale_ref, ranks_ref,
+                   o_ref):
+            return _delta_kernel(seg_ref, x_ref, a_ref, b_ref, scale_ref,
+                                 o_ref, rank_aware=True,
+                                 ranks_ref=ranks_ref)
+    else:
+        def kernel(seg_ref, x_ref, a_ref, b_ref, scale_ref, o_ref):
+            return _delta_kernel(seg_ref, x_ref, a_ref, b_ref, scale_ref,
+                                 o_ref, rank_aware=False)
+
+    # Scalar-prefetch grid spec: block_seg is available to every index
+    # map, so each grid step's BlockSpec gathers one adapter's tensors
+    # rather than staging the whole stack (which an earlier version did
+    # — see EXPERIMENTS.md §Perf for the before/after).
+    in_specs = [
+        pl.BlockSpec((block_tokens, d), lambda i, seg: (i, 0)),   # x
+        pl.BlockSpec((1, d, r_max), lambda i, seg: (seg[i], 0, 0)),
+        pl.BlockSpec((1, r_max, d), lambda i, seg: (seg[i], 0, 0)),
+        pl.BlockSpec((1,), lambda i, seg: (seg[i],)),             # scaling
+    ]
+    args = [block_seg.astype(jnp.int32), x, lora_a, lora_b,
+            scalings.astype(jnp.float32)]
+    if rank_aware:
+        in_specs.append(pl.BlockSpec((1,), lambda i, seg: (seg[i],)))
+        args.append(ranks.astype(jnp.int32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_tokens, d), lambda i, seg: (i, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=interpret,
+    )(*args)
+
+
+def bgmv_padded(x, block_seg, lora_a, lora_b, scalings, *,
+                block_tokens=DEFAULT_BLOCK_TOKENS, interpret=True):
+    """Punica-style padded BGMV delta: all blocks run r_max-wide GEMMs.
+
+    Correct only when lora_a/lora_b are zero-padded beyond each adapter's
+    true rank (the serving engine guarantees this).
+    """
+    return _lora_delta(x, block_seg, lora_a, lora_b, scalings, None,
+                       block_tokens=block_tokens, rank_aware=False,
+                       interpret=interpret)
+
+
+def sgmv_rank_aware(x, block_seg, lora_a, lora_b, scalings, ranks, *,
+                    block_tokens=DEFAULT_BLOCK_TOKENS, interpret=True):
+    """S-LoRA MBGMV-style delta with exact rank masking.
+
+    Robust to arbitrary values in the padded region of lora_a/lora_b.
+    """
+    return _lora_delta(x, block_seg, lora_a, lora_b, scalings, ranks,
+                       block_tokens=block_tokens, rank_aware=True,
+                       interpret=interpret)
+
+
+def stack_adapters(adapters, d, r_max, dtype=jnp.float32):
+    """Stack per-adapter (A [d, r], B [r, d], alpha) into padded tensors.
+
+    Returns (lora_a [S,d,r_max], lora_b [S,r_max,d], scalings [S],
+    ranks [S]). Zero-pads beyond each adapter's rank, which makes the
+    padded BGMV variant exact.
+    """
+    s_count = len(adapters)
+    lora_a = jnp.zeros((s_count, d, r_max), dtype)
+    lora_b = jnp.zeros((s_count, r_max, d), dtype)
+    scalings = jnp.zeros((s_count,), jnp.float32)
+    ranks = jnp.zeros((s_count,), jnp.int32)
+    for i, (a, b, alpha) in enumerate(adapters):
+        r = a.shape[1]
+        assert a.shape == (d, r) and b.shape == (r, d), (a.shape, b.shape)
+        assert r <= r_max, f"rank {r} exceeds r_max {r_max}"
+        lora_a = lora_a.at[i, :, :r].set(a.astype(dtype))
+        lora_b = lora_b.at[i, :r, :].set(b.astype(dtype))
+        scalings = scalings.at[i].set(alpha / r)
+        ranks = ranks.at[i].set(r)
+    return lora_a, lora_b, scalings, ranks
+
+
+def expand_block_seg(block_seg, block_tokens):
+    """[n_blocks] block-level adapter ids -> [T] per-token seg_ids."""
+    return jnp.repeat(block_seg, block_tokens)

@@ -1,0 +1,289 @@
+"""L2: LoRA transformer forward (prefill + decode), built on the L1 kernels.
+
+A small decoder-only transformer (pre-RMSNorm, MHA, GELU MLP) with LoRA
+adapters on the q/k/v/o projections, applied through the Pallas
+multi-adapter kernel so heterogeneous adapters co-batch exactly the way
+the paper's serving systems do (pad-to-max-rank SGMV).
+
+Everything here is build-time only: `aot.py` lowers the two entry points
+to HLO text and the rust runtime executes them; Python is never on the
+request path.
+
+Entry points (functional, KV cache passed in/out):
+
+  prefill(params..., lora_a, lora_b, scalings, tokens, bseg, lens)
+      tokens : [B, Lp] int32 (right-padded prompts)
+      bseg   : [B*Lp/BT] int32 adapter index per token block
+      lens   : [B] int32 true prompt lengths
+      -> (logits [B, V] at the last real token, k_cache, v_cache)
+
+  decode(params..., lora_a, lora_b, scalings, k_cache, v_cache,
+         tokens, bseg, pos)
+      tokens : [B] int32 (previous emitted token per request)
+      bseg   : [B] int32 adapter per request (block_tokens=1)
+      pos    : [B] int32 position being generated
+      -> (logits [B, V], k_cache, v_cache)
+
+KV cache layout: [n_layers, B, Lmax, n_heads, head_dim] for k and v.
+
+Batch layout contract with rust `server/`: co-batched requests are rows;
+each row uses one adapter; rows are padded to Lp; inactive rows carry
+adapter 0 and are masked by lens/pos on the rust side.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import sgmv
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Dimensions of the mini LoRA transformer served end-to-end."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 1024
+    max_seq: int = 160          # Lmax: prompt budget + decode budget
+    r_max: int = 128            # widest adapter rank servable
+    block_tokens: int = 32      # SGMV token-block size for prefill
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Deterministic parameter order — the artifact ABI (see manifest)."""
+    names = ["embed"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}.ln1", f"l{i}.wq", f"l{i}.wk", f"l{i}.wv", f"l{i}.wo",
+            f"l{i}.ln2", f"l{i}.w1", f"l{i}.w2",
+        ]
+    names += ["ln_f", "unembed"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    d, f = cfg.d_model, cfg.d_ff
+    shapes: Dict[str, Tuple[int, ...]] = {"embed": (cfg.vocab, d)}
+    for i in range(cfg.n_layers):
+        shapes[f"l{i}.ln1"] = (d,)
+        shapes[f"l{i}.wq"] = (d, d)
+        shapes[f"l{i}.wk"] = (d, d)
+        shapes[f"l{i}.wv"] = (d, d)
+        shapes[f"l{i}.wo"] = (d, d)
+        shapes[f"l{i}.ln2"] = (d,)
+        shapes[f"l{i}.w1"] = (d, f)
+        shapes[f"l{i}.w2"] = (f, d)
+    shapes["ln_f"] = (d,)
+    shapes["unembed"] = (d, cfg.vocab)
+    return shapes
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """Random init; scale chosen to keep logits O(1) for greedy decoding."""
+    params: Dict[str, jax.Array] = {}
+    shapes = param_shapes(cfg)
+    keys = jax.random.split(key, len(shapes))
+    for k, name in zip(keys, param_names(cfg)):
+        shape = shapes[name]
+        if len(shape) == 1:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = (jax.random.normal(k, shape, jnp.float32)
+                            * (1.0 / jnp.sqrt(fan_in)))
+    return params
+
+
+def _rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def _lora_proj(x_flat, w, lora_a, lora_b, scalings, bseg, block_tokens,
+               interpret=True):
+    """Base projection + multi-adapter LoRA delta via the Pallas kernel."""
+    base = x_flat @ w
+    delta = sgmv.bgmv_padded(x_flat, bseg, lora_a, lora_b, scalings,
+                             block_tokens=block_tokens, interpret=interpret)
+    return base + delta
+
+
+def _attention_prefill(q, k, v, lens):
+    """Causal self-attention over the padded prompt.
+
+    q,k,v: [B, Lp, H, Dh]. Padding tokens (>= lens) are masked out of the
+    key side; their query outputs are garbage but never read (logits are
+    gathered at lens-1, and decode overwrites cache rows past lens before
+    ever attending to them).
+    """
+    b, t, h, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    qpos = jnp.arange(t)[None, None, :, None]
+    kpos = jnp.arange(t)[None, None, None, :]
+    causal = kpos <= qpos
+    valid = kpos < lens[:, None, None, None]
+    mask = jnp.logical_and(causal, valid)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out.reshape(b, t, h * dh)
+
+
+def _attention_decode(q, k_cache_l, v_cache_l, pos):
+    """Single-position attention against the cache.
+
+    q: [B, H, Dh]; caches: [B, Lmax, H, Dh]; pos: [B] (index of the query
+    token, already written into the cache).
+    """
+    b, lmax, h, dh = k_cache_l.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    logits = jnp.einsum("bhd,bkhd->bhk", q, k_cache_l) * scale
+    kpos = jnp.arange(lmax)[None, None, :]
+    mask = kpos <= pos[:, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", probs, v_cache_l)
+    return out.reshape(b, h * dh)
+
+
+def prefill(params: Dict[str, jax.Array], lora_a, lora_b, scalings,
+            tokens, bseg, lens, cfg: ModelConfig, interpret=True):
+    b, lp = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    bt = cfg.block_tokens
+    x = jnp.take(params["embed"], tokens, axis=0)  # [B, Lp, d]
+
+    k_cache = jnp.zeros((cfg.n_layers, b, cfg.max_seq, h, dh), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+
+    for i in range(cfg.n_layers):
+        xn = _rms_norm(x, params[f"l{i}.ln1"])
+        xf = xn.reshape(b * lp, d)
+        q = _lora_proj(xf, params[f"l{i}.wq"], lora_a, lora_b, scalings,
+                       bseg, bt, interpret)
+        k = _lora_proj(xf, params[f"l{i}.wk"], lora_a, lora_b, scalings,
+                       bseg, bt, interpret)
+        v = _lora_proj(xf, params[f"l{i}.wv"], lora_a, lora_b, scalings,
+                       bseg, bt, interpret)
+        q = q.reshape(b, lp, h, dh)
+        k = k.reshape(b, lp, h, dh)
+        v = v.reshape(b, lp, h, dh)
+        k_cache = k_cache.at[i, :, :lp].set(k)
+        v_cache = v_cache.at[i, :, :lp].set(v)
+        attn = _attention_prefill(q, k, v, lens)  # [B, Lp, d]
+        o = _lora_proj(attn.reshape(b * lp, d), params[f"l{i}.wo"],
+                       lora_a, lora_b, scalings, bseg, bt, interpret)
+        x = x + o.reshape(b, lp, d)
+        xn = _rms_norm(x, params[f"l{i}.ln2"])
+        hmid = jax.nn.gelu(xn @ params[f"l{i}.w1"])
+        x = x + hmid @ params[f"l{i}.w2"]
+
+    x = _rms_norm(x, params["ln_f"])
+    # Logits at the last *real* token of each row.
+    last = jnp.clip(lens - 1, 0, lp - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    logits = x_last @ params["unembed"]
+    return logits, k_cache, v_cache
+
+
+def decode(params: Dict[str, jax.Array], lora_a, lora_b, scalings,
+           k_cache, v_cache, tokens, bseg, pos, cfg: ModelConfig,
+           interpret=True):
+    b = tokens.shape[0]
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    x = jnp.take(params["embed"], tokens, axis=0)  # [B, d]
+
+    for i in range(cfg.n_layers):
+        xn = _rms_norm(x, params[f"l{i}.ln1"])
+        q = _lora_proj(xn, params[f"l{i}.wq"], lora_a, lora_b, scalings,
+                       bseg, 1, interpret)
+        k = _lora_proj(xn, params[f"l{i}.wk"], lora_a, lora_b, scalings,
+                       bseg, 1, interpret)
+        v = _lora_proj(xn, params[f"l{i}.wv"], lora_a, lora_b, scalings,
+                       bseg, 1, interpret)
+        q = q.reshape(b, h, dh)
+        k = k.reshape(b, h, dh)
+        v = v.reshape(b, h, dh)
+        bidx = jnp.arange(b)
+        k_cache = k_cache.at[i, bidx, pos].set(k)
+        v_cache = v_cache.at[i, bidx, pos].set(v)
+        attn = _attention_decode(q, k_cache[i], v_cache[i], pos)
+        o = _lora_proj(attn, params[f"l{i}.wo"], lora_a, lora_b, scalings,
+                       bseg, 1, interpret)
+        x = x + o
+        xn = _rms_norm(x, params[f"l{i}.ln2"])
+        hmid = jax.nn.gelu(xn @ params[f"l{i}.w1"])
+        x = x + hmid @ params[f"l{i}.w2"]
+
+    x = _rms_norm(x, params["ln_f"])
+    logits = x @ params["unembed"]
+    return logits, k_cache, v_cache
+
+
+def prefill_flat(cfg: ModelConfig, interpret=True):
+    """Entry point over flat positional params — the lowered ABI.
+
+    Argument order: *params (param_names order), lora_a, lora_b,
+    scalings, tokens, bseg, lens.
+    """
+    names = param_names(cfg)
+
+    def fn(*args):
+        params = dict(zip(names, args[: len(names)]))
+        lora_a, lora_b, scalings, tokens, bseg, lens = args[len(names):]
+        return prefill(params, lora_a, lora_b, scalings, tokens, bseg,
+                       lens, cfg, interpret)
+
+    return fn
+
+
+def decode_flat(cfg: ModelConfig, interpret=True):
+    """Argument order: *params, lora_a, lora_b, scalings, k_cache,
+    v_cache, tokens, bseg, pos."""
+    names = param_names(cfg)
+
+    def fn(*args):
+        params = dict(zip(names, args[: len(names)]))
+        (lora_a, lora_b, scalings, k_cache, v_cache, tokens, bseg,
+         pos) = args[len(names):]
+        return decode(params, lora_a, lora_b, scalings, k_cache, v_cache,
+                      tokens, bseg, pos, cfg, interpret)
+
+    return fn
+
+
+def reference_generate(params, lora_a, lora_b, scalings, prompt, adapter_id,
+                       n_steps, cfg: ModelConfig):
+    """Greedy generation oracle used by tests and by the rust integration
+    golden files: prefill one prompt then decode n_steps-1 more tokens."""
+    lp = cfg.block_tokens * max(1, (len(prompt) + cfg.block_tokens - 1)
+                                // cfg.block_tokens)
+    tokens = jnp.zeros((1, lp), jnp.int32).at[0, : len(prompt)].set(
+        jnp.array(prompt, jnp.int32))
+    bseg = jnp.full((lp // cfg.block_tokens,), adapter_id, jnp.int32)
+    lens = jnp.array([len(prompt)], jnp.int32)
+    logits, kc, vc = prefill(params, lora_a, lora_b, scalings, tokens,
+                             bseg, lens, cfg)
+    out = [int(jnp.argmax(logits[0]))]
+    pos = len(prompt)
+    for _ in range(n_steps - 1):
+        tok = jnp.array([out[-1]], jnp.int32)
+        logits, kc, vc = decode(params, lora_a, lora_b, scalings, kc, vc,
+                                tok, jnp.array([adapter_id], jnp.int32),
+                                jnp.array([pos], jnp.int32), cfg)
+        out.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    return out

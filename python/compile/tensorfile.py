@@ -1,0 +1,63 @@
+"""Tiny binary tensor container shared with the rust runtime.
+
+Format (little-endian):
+  magic   : 4 bytes b"LSTF"
+  version : u32 (=1)
+  count   : u32
+  per tensor:
+    name_len : u16, name utf-8
+    dtype    : u8 (0 = f32, 1 = i32)
+    ndim     : u8
+    dims     : u32 * ndim
+    data     : raw little-endian values
+
+Rust counterpart: `rust/src/runtime/tensorfile.rs`. Kept deliberately
+dumb — no alignment, no compression — so both sides stay ~100 lines.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+MAGIC = b"LSTF"
+VERSION = 1
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+_DTYPES_INV = {0: np.dtype(np.float32), 1: np.dtype(np.int32)}
+
+
+def write_tensors(path: str, tensors: List[Tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPES:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def read_tensors(path: str) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == VERSION, f"bad version {version}"
+        for _ in range(count):
+            (name_len,) = struct.unpack("<H", f.read(2))
+            name = f.read(name_len).decode("utf-8")
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dtype = _DTYPES_INV[dt]
+            n = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(n * dtype.itemsize), dtype=dtype)
+            out[name] = data.reshape(dims)
+    return out

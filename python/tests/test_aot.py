@@ -1,0 +1,66 @@
+"""AOT plumbing: arg specs, manifest structure, HLO text emission."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model as M
+
+
+def test_arg_specs_prefill_abi():
+    cfg = M.ModelConfig()
+    specs = aot._arg_specs_prefill(cfg, b=2, lp=32)
+    names = [n for n, _ in specs]
+    n_params = len(M.param_names(cfg))
+    assert names[:n_params] == ["param:" + n for n in M.param_names(cfg)]
+    assert names[n_params:] == ["lora_a", "lora_b", "scalings", "tokens",
+                                "bseg", "lens"]
+    spec = dict(specs)
+    assert spec["lora_a"].shape == (aot.BATCH_SLOTS, cfg.d_model, cfg.r_max)
+    assert spec["tokens"].shape == (2, 32)
+    assert spec["bseg"].shape == (2 * 32 // cfg.block_tokens,)
+
+
+def test_arg_specs_decode_abi():
+    cfg = M.ModelConfig()
+    specs = aot._arg_specs_decode(cfg, b=4)
+    spec = dict(specs)
+    assert spec["k_cache"].shape == (cfg.n_layers, 4, cfg.max_seq,
+                                     cfg.n_heads, cfg.head_dim)
+    assert spec["tokens"].shape == (4,)
+    names = [n for n, _ in specs]
+    assert names[-3:] == ["tokens", "bseg", "pos"]
+
+
+def test_to_hlo_text_smoke():
+    """The text interchange path itself (stablehlo -> XlaComputation)."""
+    lowered = jax.jit(lambda x: (x * 2 + 1,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4]" in text
+
+
+def test_adapter_bank_deterministic():
+    cfg = M.ModelConfig(d_model=16, r_max=128)
+    k = jax.random.PRNGKey(aot.SEED)
+    b1 = aot.make_adapter_bank(k, cfg)
+    b2 = aot.make_adapter_bank(k, cfg)
+    assert len(b1) == len(aot.BANK_RANKS)
+    for (a1, bb1, al1), (a2, bb2, al2) in zip(b1, b2):
+        assert al1 == al2
+        assert (a1 == a2).all() and (bb1 == bb2).all()
+    # ranks as advertised
+    for (a, b, alpha), r in zip(b1, aot.BANK_RANKS):
+        assert a.shape == (cfg.d_model, r)
+        assert b.shape == (r, cfg.d_model)
+        assert alpha == 2 * r
+
+
+def test_manifest_args_json_serializable():
+    cfg = M.ModelConfig()
+    specs = aot._arg_specs_decode(cfg, b=1)
+    args = aot._manifest_args(specs)
+    json.dumps(args)  # must not raise
+    assert all(a["dtype"] in ("float32", "int32") for a in args)

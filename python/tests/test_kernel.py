@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas multi-adapter kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/ranks/adapter counts; fixed parametrized cases
+pin the edge cases (single block, single adapter, rank == r_max, rank 1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sgmv
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_bank(key, d, r_max, ranks):
+    """Random adapter bank with given true ranks."""
+    adapters = []
+    for i, r in enumerate(ranks):
+        ka, kb = jax.random.split(jax.random.fold_in(key, i))
+        a = jax.random.normal(ka, (d, r)) * 0.3
+        b = jax.random.normal(kb, (r, d)) * 0.3
+        adapters.append((a, b, float(2 * r)))
+    return sgmv.stack_adapters(adapters, d, r_max)
+
+
+def run_pair(key, d, r_max, ranks, bseg, bt):
+    la, lb, sc, rk = make_bank(key, d, r_max, ranks)
+    t = len(bseg) * bt
+    x = jax.random.normal(jax.random.fold_in(key, 999), (t, d))
+    bseg = jnp.array(bseg, jnp.int32)
+    seg = sgmv.expand_block_seg(bseg, bt)
+    want = ref.lora_delta_ref(x, seg, la, lb) * sc[seg][:, None]
+    got_padded = sgmv.bgmv_padded(x, bseg, la, lb, sc, block_tokens=bt)
+    got_masked = sgmv.sgmv_rank_aware(x, bseg, la, lb, sc, rk,
+                                      block_tokens=bt)
+    return np.asarray(want), np.asarray(got_padded), np.asarray(got_masked)
+
+
+@pytest.mark.parametrize("d,r_max,ranks,bseg,bt", [
+    (16, 4, [4], [0], 4),                      # single block, single adapter
+    (32, 8, [8, 8], [0, 1, 0], 8),             # rank == r_max everywhere
+    (32, 16, [1, 16], [1, 0, 1, 1], 4),        # rank 1 vs full
+    (64, 32, [2, 4, 8, 16, 32], [4, 3, 2, 1, 0, 0], 8),  # all rank classes
+    (8, 2, [2, 1], [0, 1], 1),                 # block_tokens = 1 (decode)
+])
+def test_kernels_match_ref_fixed(d, r_max, ranks, bseg, bt):
+    key = jax.random.PRNGKey(hash((d, r_max, bt)) % 2**31)
+    want, got_p, got_m = run_pair(key, d, r_max, ranks, bseg, bt)
+    np.testing.assert_allclose(got_p, want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_m, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    d=st.sampled_from([8, 16, 32, 64]),
+    r_max_log=st.integers(0, 5),
+    n_adapters=st.integers(1, 6),
+    n_blocks=st.integers(1, 6),
+    bt=st.sampled_from([1, 2, 4, 8]),
+)
+def test_kernels_match_ref_hypothesis(seed, d, r_max_log, n_adapters,
+                                      n_blocks, bt):
+    r_max = 2 ** r_max_log
+    key = jax.random.PRNGKey(seed)
+    rank_key, seg_key = jax.random.split(key)
+    # true ranks: random powers of two <= r_max
+    ranks = [int(2 ** int(v)) for v in
+             jax.random.randint(rank_key, (n_adapters,), 0, r_max_log + 1)]
+    bseg = [int(v) for v in
+            jax.random.randint(seg_key, (n_blocks,), 0, n_adapters)]
+    want, got_p, got_m = run_pair(key, d, r_max, ranks, bseg, bt)
+    np.testing.assert_allclose(got_p, want, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(got_m, want, rtol=2e-4, atol=2e-4)
+
+
+def test_rank_mask_exact_under_garbage_padding():
+    """Only the rank-aware kernel must survive garbage in the padding."""
+    key = jax.random.PRNGKey(7)
+    d, r_max = 32, 16
+    la, lb, sc, rk = make_bank(key, d, r_max, [4, 16, 2])
+    bseg = jnp.array([0, 2, 1], jnp.int32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (3 * 8, d))
+    seg = sgmv.expand_block_seg(bseg, 8)
+    want = ref.lora_delta_masked_ref(x, seg, la, lb, rk) * sc[seg][:, None]
+
+    # poison the padded regions: A cols >= rank AND B rows >= rank (either
+    # alone is annihilated by the other side's zero padding)
+    pad_a = (jnp.arange(r_max)[None, None, :] >= rk[:, None, None]) * 13.0
+    pad_b = (jnp.arange(r_max)[None, :, None] >= rk[:, None, None]) * 13.0
+    la_bad = la + pad_a
+    lb_bad = lb + pad_b
+    got = sgmv.sgmv_rank_aware(x, bseg, la_bad, lb_bad, sc, rk,
+                               block_tokens=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+    # sanity: the padded kernel is NOT robust to this (it must differ)
+    got_padded = sgmv.bgmv_padded(x, bseg, la_bad, lb_bad, sc,
+                                  block_tokens=8)
+    assert not np.allclose(np.asarray(got_padded), np.asarray(want),
+                           rtol=1e-3, atol=1e-3)
+
+
+def test_scaling_is_alpha_over_rank():
+    key = jax.random.PRNGKey(3)
+    d = 16
+    la, lb, sc, rk = make_bank(key, d, 8, [8, 4])
+    # stack_adapters stores alpha/r; bank alpha = 2r, so scaling == 2.
+    np.testing.assert_allclose(np.asarray(sc), [2.0, 2.0])
+
+
+def test_zero_adapter_gives_zero_delta():
+    d, r_max = 16, 8
+    la = jnp.zeros((2, d, r_max))
+    lb = jnp.zeros((2, r_max, d))
+    sc = jnp.ones((2,))
+    x = jnp.ones((8, d))
+    out = sgmv.bgmv_padded(x, jnp.array([0], jnp.int32), la, lb, sc,
+                           block_tokens=8)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((8, d)))
+
+
+def test_block_seg_expansion():
+    bseg = jnp.array([3, 1, 4], jnp.int32)
+    seg = sgmv.expand_block_seg(bseg, 2)
+    np.testing.assert_array_equal(np.asarray(seg), [3, 3, 1, 1, 4, 4])
+
+
+def test_bad_shapes_rejected():
+    d, r_max = 16, 8
+    la = jnp.zeros((1, d, r_max))
+    lb = jnp.zeros((1, r_max, d))
+    sc = jnp.ones((1,))
+    x = jnp.ones((7, d))  # 7 not a multiple of block_tokens=8
+    with pytest.raises(AssertionError):
+        sgmv.bgmv_padded(x, jnp.array([0], jnp.int32), la, lb, sc,
+                         block_tokens=8)
+    with pytest.raises(AssertionError):
+        sgmv.stack_adapters([(jnp.zeros((d, 16)), jnp.zeros((16, d)), 1.0)],
+                            d, r_max)  # rank > r_max

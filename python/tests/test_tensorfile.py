@@ -1,0 +1,56 @@
+"""tensorfile round-trip + format pinning (the rust loader must agree)."""
+
+import struct
+
+import numpy as np
+import pytest
+
+from compile import tensorfile
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "t.bin")
+    tensors = [
+        ("a", np.arange(12, dtype=np.float32).reshape(3, 4)),
+        ("b.scale", np.array([1.5], np.float32)),
+        ("idx", np.array([[1, 2], [3, 4]], np.int32)),
+        ("scalar0d", np.array(7, np.int32)),
+    ]
+    tensorfile.write_tensors(path, tensors)
+    out = tensorfile.read_tensors(path)
+    assert list(out) == ["a", "b.scale", "idx", "scalar0d"]
+    for name, arr in tensors:
+        np.testing.assert_array_equal(out[name], arr)
+        assert out[name].dtype == arr.dtype
+
+
+def test_header_layout_pinned(tmp_path):
+    """Byte-level pin: rust/src/runtime/tensorfile.rs parses this exact
+    layout; if this test changes, change the rust side too."""
+    path = str(tmp_path / "t.bin")
+    tensorfile.write_tensors(path, [("x", np.zeros((2,), np.float32))])
+    raw = open(path, "rb").read()
+    assert raw[:4] == b"LSTF"
+    version, count = struct.unpack_from("<II", raw, 4)
+    assert (version, count) == (1, 1)
+    name_len = struct.unpack_from("<H", raw, 12)[0]
+    assert name_len == 1 and raw[14:15] == b"x"
+    dtype, ndim = struct.unpack_from("<BB", raw, 15)
+    assert (dtype, ndim) == (0, 1)
+    dim0 = struct.unpack_from("<I", raw, 17)[0]
+    assert dim0 == 2
+    assert len(raw) == 21 + 8  # header + 2 f32
+
+
+def test_unsupported_dtype_rejected(tmp_path):
+    with pytest.raises(ValueError):
+        tensorfile.write_tensors(str(tmp_path / "t.bin"),
+                                 [("x", np.zeros(2, np.float64))])
+
+
+def test_bad_magic_rejected(tmp_path):
+    path = str(tmp_path / "bad.bin")
+    with open(path, "wb") as f:
+        f.write(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(AssertionError):
+        tensorfile.read_tensors(path)

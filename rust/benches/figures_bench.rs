@@ -1,0 +1,26 @@
+//! Paper-table bench target: `cargo bench` regenerates every figure in
+//! fast mode through the same registry the CLI uses, timing each one.
+//! (The full-scale regeneration is `cargo run --release -- figures
+//! --all`; see EXPERIMENTS.md for archived full-scale outputs.)
+
+use loraserve::figures::{registry, FigOpts};
+use std::time::Instant;
+
+fn main() {
+    // Bench harnesses run from the crate root; keep results separate
+    // from full-scale runs.
+    let opts = FigOpts {
+        fast: true,
+        seed: 0,
+    };
+    println!("figure regeneration benchmark (fast mode)\n");
+    let mut total = 0.0;
+    for (id, desc, f) in registry() {
+        let t = Instant::now();
+        f(&opts).unwrap_or_else(|e| panic!("{id}: {e}"));
+        let dt = t.elapsed().as_secs_f64();
+        total += dt;
+        println!(">>> {id:10} {dt:7.2}s  {desc}");
+    }
+    println!("\ntotal: {total:.1}s for {} figures", registry().len());
+}

@@ -1,0 +1,202 @@
+//! Hot-path micro-benchmarks (custom harness — criterion is not
+//! available offline). Measures the L3 request-path and control-plane
+//! operations; `cargo bench` prints ns/op tables and writes
+//! results/bench_hotpaths.csv.
+//!
+//! Paper-table benches (end-to-end figure regenerations) live behind
+//! the `figures` CLI; this file owns the microbenchmarks the §Perf pass
+//! optimizes: router sampling, placement epoch, DES event loop,
+//! demand tracking, trace generation, and percentile computation.
+
+use loraserve::config::ClusterConfig;
+use loraserve::coordinator::{DemandTracker, Router, RoutingTable};
+use loraserve::costmodel;
+use loraserve::placement::loraserve::LoraServePlacer;
+use loraserve::placement::{Placer, PlacementCtx};
+use loraserve::sim::{self, SimConfig, SystemKind};
+use loraserve::trace::azure::{self, AzureConfig};
+use loraserve::trace::LengthModel;
+use loraserve::util::rng::Pcg32;
+use loraserve::util::stats::Samples;
+use loraserve::util::table::Table;
+use loraserve::workload::{AdapterId, AdapterSet, RANK_CLASSES};
+use std::collections::BTreeMap;
+use std::hint::black_box;
+use std::time::Instant;
+
+struct Bench {
+    table: Table,
+}
+
+impl Bench {
+    fn new() -> Self {
+        Bench {
+            table: Table::new(
+                "hot-path microbenchmarks",
+                &["bench", "iters", "total", "per-op"],
+            ),
+        }
+    }
+
+    /// Run `f` repeatedly for ~0.5 s (after warmup) and record ns/op.
+    fn run<F: FnMut() -> u64>(&mut self, name: &str, mut f: F) {
+        // warmup + calibration
+        let t0 = Instant::now();
+        let mut ops = f();
+        while t0.elapsed().as_millis() < 50 {
+            ops += f();
+        }
+        let per_call = ops.max(1);
+        let _ = per_call;
+        let start = Instant::now();
+        let mut total_ops = 0u64;
+        while start.elapsed().as_millis() < 500 {
+            total_ops += f();
+        }
+        let elapsed = start.elapsed();
+        let per_op = elapsed.as_nanos() as f64 / total_ops.max(1) as f64;
+        let per_op_str = if per_op > 1e6 {
+            format!("{:.2} ms", per_op / 1e6)
+        } else if per_op > 1e3 {
+            format!("{:.2} us", per_op / 1e3)
+        } else {
+            format!("{per_op:.0} ns")
+        };
+        println!("{name:32} {total_ops:>10} ops  {per_op_str}/op");
+        self.table.row(vec![
+            name.to_string(),
+            total_ops.to_string(),
+            format!("{:.3}s", elapsed.as_secs_f64()),
+            per_op_str,
+        ]);
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let model = loraserve::config::ModelSpec::LLAMA_7B;
+
+    // --- router sampling (per-request hot path)
+    let adapters = AdapterSet::power_law_counts(1000, &RANK_CLASSES, 1.0, &model);
+    let demand: BTreeMap<AdapterId, f64> =
+        adapters.iter().map(|a| (a.id, 100.0)).collect();
+    let oppoints = costmodel::operating_points(
+        &loraserve::config::ServerConfig::default(),
+        &RANK_CLASSES,
+    );
+    let ctx = PlacementCtx {
+        adapters: &adapters,
+        n_servers: 64,
+        demand_tps: &demand,
+        operating_points: &oppoints,
+        prev: None,
+    };
+    let asg = LoraServePlacer::new().place(&ctx);
+    let table = RoutingTable::from_assignment(&asg);
+    let router = Router::Table(table);
+    let outstanding = vec![0.0f64; 64];
+    let mut rng = Pcg32::new(1);
+    b.run("router: table route (1k ad.)", || {
+        let mut acc = 0usize;
+        for i in 0..1024u32 {
+            acc += router.route(i % 1000, &outstanding, &mut rng);
+        }
+        black_box(acc);
+        1024
+    });
+    let toppings = Router::Toppings { n_servers: 64 };
+    b.run("router: toppings least-work", || {
+        let mut acc = 0usize;
+        for i in 0..1024u32 {
+            acc += toppings.route(i % 1000, &outstanding, &mut rng);
+        }
+        black_box(acc);
+        1024
+    });
+
+    // --- placement epoch (control plane: 1000 adapters x 64 servers)
+    b.run("placement: 1000x64 epoch", || {
+        let mut placer = LoraServePlacer::new();
+        black_box(placer.place(&ctx));
+        1
+    });
+    let prev = LoraServePlacer::new().place(&ctx);
+    let ctx_prev = PlacementCtx {
+        prev: Some(&prev),
+        ..ctx
+    };
+    b.run("placement: epoch + permutation", || {
+        let mut placer = LoraServePlacer::new();
+        black_box(placer.place(&ctx_prev));
+        1
+    });
+
+    // --- demand tracker
+    b.run("demand: record + roll (1k ad.)", || {
+        let mut d = DemandTracker::new(60.0, 16);
+        for i in 0..1000u32 {
+            d.record(i, 640);
+        }
+        d.roll_window();
+        black_box(d.projected_tps());
+        1000
+    });
+
+    // --- DES end-to-end events/sec
+    let trace = azure::generate(&AzureConfig {
+        rps: 20.0,
+        duration: 120.0,
+        lengths: LengthModel::fixed(256, 32),
+        ..Default::default()
+    });
+    let cluster = ClusterConfig::default();
+    b.run("sim: 120s x 20rps x 4srv run", || {
+        let rep = sim::run(
+            &trace,
+            &SimConfig::new(cluster.clone(), SystemKind::LoraServe),
+        );
+        black_box(rep.completed);
+        1
+    });
+
+    // --- cost model evaluations (per-iteration hot path in DES)
+    let server = loraserve::config::ServerConfig::default();
+    b.run("costmodel: prefill_time", || {
+        let mut acc = 0.0;
+        for i in 0..4096u64 {
+            acc += costmodel::prefill_time(&server, 512 + i % 64, 64);
+        }
+        black_box(acc);
+        4096
+    });
+    b.run("costmodel: decode_time", || {
+        let mut acc = 0.0;
+        for i in 0..4096 {
+            acc +=
+                costmodel::decode_time(&server, 16, 8192 + i % 128, 64);
+        }
+        black_box(acc);
+        4096
+    });
+
+    // --- trace generation + percentile stats
+    b.run("trace: azure gen (12k reqs)", || {
+        let t = azure::generate(&AzureConfig {
+            rps: 20.0,
+            duration: 600.0,
+            ..Default::default()
+        });
+        black_box(t.requests.len() as u64)
+    });
+    b.run("stats: p95 of 100k samples", || {
+        let mut s = Samples::new();
+        let mut rng = Pcg32::new(3);
+        for _ in 0..100_000 {
+            s.push(rng.f64());
+        }
+        black_box(s.p95());
+        100_000
+    });
+
+    b.table.emit("results", "bench_hotpaths").unwrap();
+}

@@ -1,0 +1,336 @@
+//! Configuration: model/GPU specs, cluster layout, SLOs.
+//!
+//! `ModelSpec` carries the published Llama dimensions used by the
+//! analytical cost model; `GpuSpec` the A100 parts the paper's testbed
+//! used; `ClusterConfig`/`SloConfig` the experiment-level knobs. Configs
+//! load from JSON files (see `examples/configs/`) with CLI overrides.
+
+use crate::util::json::{self, Json};
+
+/// Transformer dimensions for the cost model. LoRA is applied to the
+/// q/k/v/o projections of every layer (the paper's setting, §III-A.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub params: f64,        // total parameter count
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub bytes_per_param: f64, // serving precision (fp16 = 2.0)
+}
+
+impl ModelSpec {
+    pub const LLAMA_7B: ModelSpec = ModelSpec {
+        name: "llama-7b",
+        params: 6.74e9,
+        n_layers: 32,
+        d_model: 4096,
+        n_heads: 32,
+        d_ff: 11008,
+        bytes_per_param: 2.0,
+    };
+    pub const LLAMA_13B: ModelSpec = ModelSpec {
+        name: "llama-13b",
+        params: 13.0e9,
+        n_layers: 40,
+        d_model: 5120,
+        n_heads: 40,
+        d_ff: 13824,
+        bytes_per_param: 2.0,
+    };
+    pub const LLAMA_30B: ModelSpec = ModelSpec {
+        name: "llama-30b",
+        params: 32.5e9,
+        n_layers: 60,
+        d_model: 6656,
+        n_heads: 52,
+        d_ff: 17920,
+        bytes_per_param: 2.0,
+    };
+    pub const LLAMA_70B: ModelSpec = ModelSpec {
+        name: "llama-70b",
+        params: 70.0e9,
+        n_layers: 80,
+        d_model: 8192,
+        n_heads: 64,
+        d_ff: 28672,
+        bytes_per_param: 2.0,
+    };
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        match name {
+            "llama-7b" | "7b" => Some(Self::LLAMA_7B),
+            "llama-13b" | "13b" => Some(Self::LLAMA_13B),
+            "llama-30b" | "30b" => Some(Self::LLAMA_30B),
+            "llama-70b" | "70b" => Some(Self::LLAMA_70B),
+            _ => None,
+        }
+    }
+
+    /// Weight bytes of the base model at serving precision.
+    pub fn weight_bytes(&self) -> f64 {
+        self.params * self.bytes_per_param
+    }
+
+    /// LoRA adapter byte size for a given rank: A[d,r] + B[r,d] per
+    /// projection, 4 projections (q,k,v,o) per layer.
+    pub fn adapter_bytes(&self, rank: u32) -> u64 {
+        let params =
+            8.0 * self.d_model as f64 * rank as f64 * self.n_layers as f64;
+        (params * self.bytes_per_param) as u64
+    }
+
+    /// KV-cache bytes per token (fp16 K and V across all layers).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.n_layers as f64
+            * self.d_model as f64
+            * self.bytes_per_param
+    }
+}
+
+/// GPU part used by the cost model. Numbers are vendor specs; the
+/// *effective* fractions live in `costmodel::calib`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub peak_flops: f64,    // dense fp16/bf16 FLOP/s
+    pub hbm_bw: f64,        // bytes/s
+    pub hbm_bytes: f64,
+    pub pcie_bw: f64,       // host<->device bytes/s
+    pub nvlink_bw: f64,     // intra-node GPU<->GPU bytes/s
+    pub ib_bw: f64,         // inter-node (InfiniBand HDR) bytes/s per GPU
+    pub ssd_bw: f64,        // local NVMe read bytes/s
+}
+
+impl GpuSpec {
+    /// A100 SXM 40GB on Standard_ND96asr_v4 (8x HDR IB @200Gb/s).
+    pub const A100_40G: GpuSpec = GpuSpec {
+        name: "a100-40g",
+        peak_flops: 312e12,
+        hbm_bw: 1.555e12,
+        hbm_bytes: 40e9,
+        pcie_bw: 25e9,
+        nvlink_bw: 300e9,
+        ib_bw: 25e9,
+        ssd_bw: 2.0e9,
+    };
+    /// A100 PCIe 80GB on Standard_NC24ads_A100_v4.
+    pub const A100_80G: GpuSpec = GpuSpec {
+        name: "a100-80g",
+        peak_flops: 312e12,
+        hbm_bw: 1.935e12,
+        hbm_bytes: 80e9,
+        pcie_bw: 25e9,
+        nvlink_bw: 0.0,
+        ib_bw: 12.5e9,
+        ssd_bw: 2.0e9,
+    };
+}
+
+/// Latency SLOs (the paper uses P95 TTFT ≤ 10 s for scalability,
+/// 20 s for Fig 6; requests past `timeout` count as violations and are
+/// dropped by the simulated frontends).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloConfig {
+    pub ttft_p95: f64,
+    pub timeout: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            ttft_p95: 10.0,
+            timeout: 120.0,
+        }
+    }
+}
+
+/// One LLM inference server (one base-model instance, possibly TP over
+/// several GPUs) — the unit LORASERVE places adapters onto.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServerConfig {
+    pub model: ModelSpec,
+    pub gpu: GpuSpec,
+    pub tp: usize,
+    /// Token budget of one continuous-batching iteration (prefill).
+    pub max_batch_tokens: usize,
+    /// Max concurrent decode slots.
+    pub max_batch_size: usize,
+    /// Host (CPU) memory available for resident adapters, bytes.
+    pub host_mem_bytes: u64,
+    /// GPU memory reserved for *active* adapter slices (S-LoRA's
+    /// unified paging pool). Adapters outside this cache page in from
+    /// host memory over PCIe before their batch can run — the cost
+    /// that punishes scattering a wide working set across every server.
+    pub gpu_adapter_cache_bytes: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            model: ModelSpec::LLAMA_7B,
+            gpu: GpuSpec::A100_40G,
+            tp: 4,
+            // S-LoRA-generation serving stacks run modest iteration
+            // budgets; these put single-server capacity at the paper's
+            // regime (Fig 6: 4 RPS of 512/128 saturates high ranks).
+            max_batch_tokens: 2048,
+            max_batch_size: 24,
+            host_mem_bytes: 900 * (1 << 30), // ND96asr_v4: 900 GiB host
+            gpu_adapter_cache_bytes: (3 << 30) / 2, // ~1.5 GiB of HBM after weights+KV
+        }
+    }
+}
+
+/// Cluster-level experiment configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub n_servers: usize,
+    pub server: ServerConfig,
+    pub slo: SloConfig,
+    /// Placement rebalance period in seconds (the paper's "time step",
+    /// cluster-admin configurable, §IV).
+    pub rebalance_period: f64,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            n_servers: 4,
+            server: ServerConfig::default(),
+            slo: SloConfig::default(),
+            rebalance_period: 60.0,
+            seed: 0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Load from a JSON object; missing keys keep defaults. Shape:
+    /// `{"n_servers": 4, "model": "llama-7b", "tp": 4,
+    ///   "ttft_slo": 10.0, "rebalance_period": 60.0, ...}`
+    pub fn from_json(v: &Json) -> Result<ClusterConfig, String> {
+        let mut cfg = ClusterConfig::default();
+        if let Some(n) = v.get("n_servers").and_then(Json::as_usize) {
+            cfg.n_servers = n;
+        }
+        if let Some(name) = v.get("model").and_then(Json::as_str) {
+            cfg.server.model = ModelSpec::by_name(name)
+                .ok_or_else(|| format!("unknown model '{name}'"))?;
+        }
+        if let Some(gpu) = v.get("gpu").and_then(Json::as_str) {
+            cfg.server.gpu = match gpu {
+                "a100-40g" => GpuSpec::A100_40G,
+                "a100-80g" => GpuSpec::A100_80G,
+                other => return Err(format!("unknown gpu '{other}'")),
+            };
+        }
+        if let Some(tp) = v.get("tp").and_then(Json::as_usize) {
+            if !tp.is_power_of_two() || tp > 8 {
+                return Err(format!("tp must be 1/2/4/8, got {tp}"));
+            }
+            cfg.server.tp = tp;
+        }
+        if let Some(x) = v.get("max_batch_tokens").and_then(Json::as_usize) {
+            cfg.server.max_batch_tokens = x;
+        }
+        if let Some(x) = v.get("max_batch_size").and_then(Json::as_usize) {
+            cfg.server.max_batch_size = x;
+        }
+        if let Some(x) = v.get("host_mem_gib").and_then(Json::as_f64) {
+            cfg.server.host_mem_bytes = (x * (1u64 << 30) as f64) as u64;
+        }
+        if let Some(x) = v.get("ttft_slo").and_then(Json::as_f64) {
+            cfg.slo.ttft_p95 = x;
+        }
+        if let Some(x) = v.get("timeout").and_then(Json::as_f64) {
+            cfg.slo.timeout = x;
+        }
+        if let Some(x) = v.get("rebalance_period").and_then(Json::as_f64) {
+            cfg.rebalance_period = x;
+        }
+        if let Some(x) = v.get("seed").and_then(Json::as_f64) {
+            cfg.seed = x as u64;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<ClusterConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{path}: {e}"))?;
+        let v = json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json(&v)
+    }
+
+    /// Total GPUs in the cluster (the resource the paper's "50% fewer
+    /// GPUs" claim counts).
+    pub fn total_gpus(&self) -> usize {
+        self.n_servers * self.server.tp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adapter_bytes_matches_paper_scale() {
+        // 7B fp16, rank 64: 8*4096*64*32 params * 2 B ≈ 134 MB.
+        let b = ModelSpec::LLAMA_7B.adapter_bytes(64);
+        assert_eq!(b, 8 * 4096 * 64 * 32 * 2);
+        // ranks scale linearly
+        assert_eq!(
+            ModelSpec::LLAMA_7B.adapter_bytes(128),
+            2 * ModelSpec::LLAMA_7B.adapter_bytes(64)
+        );
+        // adapters are ~1-2% of base weights at rank 128 (paper §I)
+        let frac = ModelSpec::LLAMA_7B.adapter_bytes(128) as f64
+            / ModelSpec::LLAMA_7B.weight_bytes();
+        assert!(frac > 0.005 && frac < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn model_lookup() {
+        assert_eq!(
+            ModelSpec::by_name("llama-70b").unwrap().n_layers,
+            80
+        );
+        assert_eq!(ModelSpec::by_name("7b").unwrap().d_model, 4096);
+        assert!(ModelSpec::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn config_from_json() {
+        let v = json::parse(
+            r#"{"n_servers": 8, "model": "llama-30b", "tp": 8,
+                "ttft_slo": 20.0, "rebalance_period": 30.0,
+                "host_mem_gib": 220.0, "seed": 7}"#,
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.n_servers, 8);
+        assert_eq!(cfg.server.model.name, "llama-30b");
+        assert_eq!(cfg.server.tp, 8);
+        assert_eq!(cfg.slo.ttft_p95, 20.0);
+        assert_eq!(cfg.rebalance_period, 30.0);
+        assert_eq!(cfg.server.host_mem_bytes, 220 * (1 << 30));
+        assert_eq!(cfg.total_gpus(), 64);
+    }
+
+    #[test]
+    fn config_rejects_bad_values() {
+        let v = json::parse(r#"{"tp": 3}"#).unwrap();
+        assert!(ClusterConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"model": "nope"}"#).unwrap();
+        assert!(ClusterConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn kv_bytes_per_token() {
+        // 7B: 2 * 32 * 4096 * 2 = 512 KiB/token
+        let kv = ModelSpec::LLAMA_7B.kv_bytes_per_token();
+        assert_eq!(kv, 2.0 * 32.0 * 4096.0 * 2.0);
+    }
+}

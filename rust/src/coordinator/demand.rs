@@ -1,0 +1,150 @@
+//! Per-adapter demand tracking + extrapolation (Algorithm 1 step 1:
+//! GETPREVTIMESTEPTPS + EXTRAPOLATE over TPSHistory).
+
+use crate::util::stats::linear_fit;
+use crate::workload::AdapterId;
+use std::collections::BTreeMap;
+
+/// Accumulates request tokens per adapter within the current time step
+/// and keeps a bounded TPS history for extrapolation.
+#[derive(Debug, Clone)]
+pub struct DemandTracker {
+    window: f64,
+    history_len: usize,
+    current_tokens: BTreeMap<AdapterId, f64>,
+    history: BTreeMap<AdapterId, Vec<f64>>,
+    /// Disable trend extrapolation (ablation A3): project last value.
+    pub last_value_only: bool,
+}
+
+impl DemandTracker {
+    pub fn new(window: f64, history_len: usize) -> Self {
+        assert!(window > 0.0 && history_len >= 1);
+        DemandTracker {
+            window,
+            history_len,
+            current_tokens: BTreeMap::new(),
+            history: BTreeMap::new(),
+            last_value_only: false,
+        }
+    }
+
+    /// Record an arriving request's token demand.
+    pub fn record(&mut self, adapter: AdapterId, tokens: u64) {
+        *self.current_tokens.entry(adapter).or_insert(0.0) +=
+            tokens as f64;
+    }
+
+    /// Close the current time step: fold the accumulated tokens into
+    /// per-adapter TPS history.
+    pub fn roll_window(&mut self) {
+        let current = std::mem::take(&mut self.current_tokens);
+        // every adapter with history also gets a 0 sample when silent
+        let ids: std::collections::BTreeSet<AdapterId> = self
+            .history
+            .keys()
+            .copied()
+            .chain(current.keys().copied())
+            .collect();
+        for id in ids {
+            let tps =
+                current.get(&id).copied().unwrap_or(0.0) / self.window;
+            let h = self.history.entry(id).or_default();
+            h.push(tps);
+            if h.len() > self.history_len {
+                h.remove(0);
+            }
+        }
+    }
+
+    /// Projected TPS for the *next* time step per adapter: linear trend
+    /// over the history, evaluated one step ahead, clamped to ≥ 0.
+    /// Unseen adapters project 0.
+    pub fn projected_tps(&self) -> BTreeMap<AdapterId, f64> {
+        self.history
+            .iter()
+            .map(|(&id, h)| {
+                let proj = if self.last_value_only || h.len() < 3 {
+                    *h.last().unwrap_or(&0.0)
+                } else {
+                    let (slope, intercept) = linear_fit(h);
+                    (slope * h.len() as f64 + intercept).max(0.0)
+                };
+                (id, proj)
+            })
+            .collect()
+    }
+
+    /// Last completed-window TPS (no extrapolation), for reporting.
+    pub fn last_tps(&self) -> BTreeMap<AdapterId, f64> {
+        self.history
+            .iter()
+            .map(|(&id, h)| (id, *h.last().unwrap_or(&0.0)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tps_is_tokens_over_window() {
+        let mut d = DemandTracker::new(10.0, 8);
+        d.record(0, 500);
+        d.record(0, 500);
+        d.record(1, 100);
+        d.roll_window();
+        let tps = d.last_tps();
+        assert_eq!(tps[&0], 100.0);
+        assert_eq!(tps[&1], 10.0);
+    }
+
+    #[test]
+    fn silent_adapter_decays_to_zero() {
+        let mut d = DemandTracker::new(1.0, 8);
+        d.record(0, 100);
+        d.roll_window();
+        d.roll_window();
+        d.roll_window();
+        assert_eq!(d.last_tps()[&0], 0.0);
+        // projection also heads to zero (clamped)
+        assert!(d.projected_tps()[&0] <= 100.0 / 3.0);
+    }
+
+    #[test]
+    fn extrapolates_rising_trend() {
+        let mut d = DemandTracker::new(1.0, 8);
+        for step in 1..=5u64 {
+            d.record(0, step * 100);
+            d.roll_window();
+        }
+        // history: 100..500, trend +100/step -> projection ~600
+        let proj = d.projected_tps()[&0];
+        assert!((proj - 600.0).abs() < 1.0, "proj={proj}");
+        // ablation: last-value-only projects 500
+        let mut d2 = d.clone();
+        d2.last_value_only = true;
+        assert_eq!(d2.projected_tps()[&0], 500.0);
+    }
+
+    #[test]
+    fn projection_never_negative() {
+        let mut d = DemandTracker::new(1.0, 8);
+        for step in (1..=5u64).rev() {
+            d.record(0, step * 100);
+            d.roll_window();
+        }
+        assert!(d.projected_tps()[&0] >= 0.0);
+    }
+
+    #[test]
+    fn history_bounded() {
+        let mut d = DemandTracker::new(1.0, 3);
+        for _ in 0..10 {
+            d.record(0, 1);
+            d.roll_window();
+        }
+        assert_eq!(d.history[&0].len(), 3);
+    }
+}

@@ -1,0 +1,14 @@
+//! Cluster orchestrator: routing table, demand tracking, rebalancing.
+//!
+//! This is the LORASERVE *service* of Fig 11/13: it receives every
+//! request, looks up the routing table, picks a server with probability
+//! φ, tracks per-adapter demand, and every time step re-runs the
+//! placement algorithm and updates the table + the adapter-location
+//! map. Both the DES simulator and the real mini-cluster drive the same
+//! coordinator code.
+
+pub mod demand;
+pub mod router;
+
+pub use demand::DemandTracker;
+pub use router::{Router, RoutingTable};

@@ -1,0 +1,143 @@
+//! Request routing: the probabilistic routing table plus the Toppings
+//! baseline's request-level least-work router.
+
+use crate::placement::Assignment;
+use crate::util::rng::Pcg32;
+use crate::workload::{AdapterId, ServerId};
+
+/// The routing table of Fig 11: per adapter, `(server, φ)` tuples with
+/// Σφ = 1. Requests are routed to server s with probability φ_s.
+#[derive(Debug, Clone, Default)]
+pub struct RoutingTable {
+    entries: Vec<Vec<(ServerId, f64)>>,
+}
+
+impl RoutingTable {
+    pub fn from_assignment(asg: &Assignment) -> Self {
+        RoutingTable {
+            entries: asg.shares.clone(),
+        }
+    }
+
+    pub fn n_adapters(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn entry(&self, adapter: AdapterId) -> &[(ServerId, f64)] {
+        &self.entries[adapter as usize]
+    }
+
+    /// Sample a server for this adapter according to φ.
+    pub fn route(&self, adapter: AdapterId, rng: &mut Pcg32) -> ServerId {
+        let entry = &self.entries[adapter as usize];
+        debug_assert!(!entry.is_empty(), "adapter {adapter} unrouted");
+        if entry.len() == 1 {
+            return entry[0].0;
+        }
+        let mut x = rng.f64();
+        for &(s, phi) in entry {
+            x -= phi;
+            if x <= 0.0 {
+                return s;
+            }
+        }
+        entry.last().unwrap().0
+    }
+}
+
+/// Routing policy, matching the paper's systems:
+///  * `Table` — LORASERVE and the static S-LoRA placements (their
+///    assignments just never change);
+///  * `Toppings` — request-level global least-outstanding-work router,
+///    rank-agnostic, with every adapter replicated on every server.
+#[derive(Debug, Clone)]
+pub enum Router {
+    Table(RoutingTable),
+    Toppings { n_servers: usize },
+}
+
+impl Router {
+    /// Route one request. `outstanding_work[s]` is the live estimate of
+    /// queued + running service seconds on server s (what Toppings
+    /// inspects; the table policies ignore it).
+    pub fn route(
+        &self,
+        adapter: AdapterId,
+        outstanding_work: &[f64],
+        rng: &mut Pcg32,
+    ) -> ServerId {
+        match self {
+            Router::Table(table) => table.route(adapter, rng),
+            Router::Toppings { n_servers } => {
+                debug_assert_eq!(outstanding_work.len(), *n_servers);
+                let mut best = 0;
+                for s in 1..*n_servers {
+                    if outstanding_work[s] < outstanding_work[best] {
+                        best = s;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    pub fn update_table(&mut self, table: RoutingTable) {
+        if let Router::Table(t) = self {
+            *t = table;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::Assignment;
+
+    fn table() -> RoutingTable {
+        let mut asg = Assignment::new(2);
+        asg.add(0, 1, 1.0);
+        asg.add(1, 0, 0.3);
+        asg.add(1, 2, 0.7);
+        RoutingTable::from_assignment(&asg)
+    }
+
+    #[test]
+    fn deterministic_single_entry() {
+        let t = table();
+        let mut rng = Pcg32::new(0);
+        for _ in 0..20 {
+            assert_eq!(t.route(0, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn respects_phi_distribution() {
+        let t = table();
+        let mut rng = Pcg32::new(1);
+        let mut counts = [0u32; 3];
+        for _ in 0..20_000 {
+            counts[t.route(1, &mut rng)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let f0 = counts[0] as f64 / 20_000.0;
+        assert!((f0 - 0.3).abs() < 0.02, "f0={f0}");
+    }
+
+    #[test]
+    fn toppings_picks_least_work() {
+        let r = Router::Toppings { n_servers: 3 };
+        let mut rng = Pcg32::new(2);
+        assert_eq!(r.route(0, &[5.0, 1.0, 3.0], &mut rng), 1);
+        assert_eq!(r.route(7, &[0.0, 0.0, 0.0], &mut rng), 0); // ties -> lowest id
+    }
+
+    #[test]
+    fn table_update() {
+        let mut r = Router::Table(table());
+        let mut asg = Assignment::new(1);
+        asg.add(0, 2, 1.0);
+        r.update_table(RoutingTable::from_assignment(&asg));
+        let mut rng = Pcg32::new(3);
+        assert_eq!(r.route(0, &[], &mut rng), 2);
+    }
+}

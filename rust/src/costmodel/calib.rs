@@ -1,0 +1,79 @@
+//! Calibration constants for the analytical cost model.
+//!
+//! Derivation (DESIGN.md §7): with
+//!   base(N,M,t)  = 2·N·P(M) / (t · F_peak · EFF_PREFILL)
+//!   beta(M,t)    = BETA0 + BETA_TP·(t−1) + BETA_LAYER·(L(M)−32)
+//!   lora(N,r,M,t)= KAPPA · N·L(M)·d(M)·r / (t · F_peak)
+//! the three paper-reported ratios pin the constants:
+//!
+//!  (1) Fig 3  — TTFT(r128)/TTFT(r8) = 2.7 at N=2000, 7B, TP1:
+//!      16x + B1 = 2.7(B1 + x)      with x = lora(r8), B1 = base+beta
+//!  (2) Fig 5  — ratio = 1.2 at N=2000, 7B, TP8
+//!  (3) Fig 4  — ratio = 1.45 at N=2000, 70B, TP8
+//!
+//! Solving with A100 peak 312 TFLOP/s and EFF_PREFILL = 0.55 gives
+//! BETA0 ≈ 0.05 s, BETA_TP ≈ 0.025 s/GPU, BETA_LAYER ≈ 2.2 ms/layer,
+//! KAPPA ≈ 3.94e3 (the effective inefficiency of pad-to-max-rank
+//! BGMV/MBGMV on skinny LoRA GEMMs, consistent with the paper's
+//! observation that kernel latency tracks the maximum rank rather than
+//! useful FLOPs). The tests in `latency.rs` assert all three target
+//! ratios within tolerance.
+
+/// MXU/tensor-core efficiency achieved by dense prefill GEMMs.
+pub const EFF_PREFILL: f64 = 0.55;
+
+/// HBM bandwidth efficiency achieved by decode (weight streaming).
+pub const EFF_BW: f64 = 0.6;
+
+/// Fixed per-prefill-batch overhead (scheduling, tokenization, kernel
+/// launches), seconds.
+pub const BETA0: f64 = 0.05;
+
+/// TP communication/sync overhead per extra GPU, seconds *per
+/// BETA_REF_TOKENS prefill tokens* (activation allreduces scale with
+/// token count).
+pub const BETA_TP: f64 = 0.025;
+
+/// Per-layer overhead beyond 32 layers, seconds per BETA_REF_TOKENS
+/// tokens (deeper stacks run more kernels per token).
+pub const BETA_LAYER: f64 = 0.0022;
+
+/// Token count at which BETA_TP/BETA_LAYER are quoted (the paper's
+/// Fig 3-5 measurement point).
+pub const BETA_REF_TOKENS: f64 = 2000.0;
+
+/// Effective inefficiency multiplier of the multi-adapter LoRA kernel
+/// on *prefill* GEMMs: time = KAPPA · (ideal MXU time of the padded
+/// LoRA GEMMs).
+pub const KAPPA: f64 = 3.94e3;
+
+/// Decode-side multiplier: the BGMV/MBGMV GEMV path is launch- and
+/// gather-bound per token, far less efficient than the prefill GEMM
+/// path (Punica reports decode kernel latency tracking max rank).
+/// Calibrated so Fig 6's crossover lands where the paper measured it:
+/// at 4 RPS of 512/128 on one Llama-7B TP4 server, ranks 64/128 blow a
+/// 20 s P95 TTFT SLO while ranks 8-32 meet it.
+pub const KAPPA_DECODE: f64 = 13.0 * KAPPA;
+
+/// Fixed per-decode-step overhead, seconds.
+pub const GAMMA0: f64 = 0.002;
+
+/// Per-sequence decode cost per step (scheduler bookkeeping, sampler,
+/// python-era serving-stack overhead the paper's testbed carried),
+/// seconds. Most decode overhead is per-sequence rather than per-step
+/// so that consolidation does not get an artificial amortization bonus
+/// (calibration point: GAMMA0 + 24*GAMMA_PER_SEQ = 16.4 ms, the same
+/// per-step overhead as the Fig 6 fit at the saturated batch size).
+pub const GAMMA_PER_SEQ: f64 = 0.0006;
+
+/// Utilization headroom when converting a capacity into an
+/// operating point under SLO (Algorithm 1's profiled "operating
+/// points"): serving at full capacity has unbounded queueing delay, so
+/// the operating point is this fraction of saturation throughput.
+pub const OPPOINT_HEADROOM: f64 = 0.85;
+
+/// Request shape used when profiling operating points a priori
+/// (the paper profiles with a representative fixed shape; Fig 6 uses
+/// 512/128).
+pub const PROFILE_PROMPT: u32 = 512;
+pub const PROFILE_OUTPUT: u32 = 128;

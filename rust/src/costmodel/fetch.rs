@@ -1,0 +1,110 @@
+//! Adapter fetch/fabric model (Fig 14): latency of materializing an
+//! adapter's tensors in GPU memory from each possible source.
+//!
+//! The paper's measurement: GPUDirect-RDMA over InfiniBand from a
+//! remote server's GPU costs about the same as a local host-memory →
+//! GPU copy over PCIe, while local SSD is prohibitively slower — which
+//! is what makes the distributed adapter pool viable.
+
+use crate::config::GpuSpec;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FetchSource {
+    /// Already resident in GPU HBM (cache hit) — free.
+    GpuResident,
+    /// Host DRAM of the same server, over PCIe.
+    LocalHostMem,
+    /// Remote server: host→GPU on the remote side, then GPUDirect RDMA
+    /// over InfiniBand into the local GPU (the Fig 13 two-hop path).
+    RemoteRdma,
+    /// Local NVMe SSD.
+    LocalSsd,
+}
+
+impl FetchSource {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FetchSource::GpuResident => "gpu-resident",
+            FetchSource::LocalHostMem => "local-host-mem",
+            FetchSource::RemoteRdma => "remote-rdma",
+            FetchSource::LocalSsd => "local-ssd",
+        }
+    }
+}
+
+/// Fixed software latency per transfer (driver, registration), seconds.
+const LAT_PCIE: f64 = 100e-6;
+const LAT_RDMA: f64 = 250e-6; // two hops + IB setup
+const LAT_SSD: f64 = 250e-6; // io submission + fs
+
+/// Time to materialize `bytes` in local GPU memory from `src`.
+pub fn fetch_time(gpu: &GpuSpec, src: FetchSource, bytes: u64) -> f64 {
+    let b = bytes as f64;
+    match src {
+        FetchSource::GpuResident => 0.0,
+        FetchSource::LocalHostMem => LAT_PCIE + b / gpu.pcie_bw,
+        FetchSource::RemoteRdma => {
+            // remote host -> remote GPU (PCIe), then remote GPU ->
+            // local GPU (GPUDirect RDMA over IB). The two stages
+            // pipeline in chunks; the slower link dominates, plus one
+            // chunk of the faster one (approximate with 10% overlap
+            // slack).
+            let stage = b / gpu.pcie_bw.min(gpu.ib_bw);
+            LAT_RDMA + stage * 1.1
+        }
+        FetchSource::LocalSsd => LAT_SSD + b / gpu.ssd_bw,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, ModelSpec};
+
+    const G: GpuSpec = GpuSpec::A100_40G;
+
+    #[test]
+    fn fig14_ordering_rdma_close_to_local_ssd_far() {
+        // across adapter-scale tensor sizes (16 MB – 2 GB)
+        for mb in [16u64, 64, 256, 1024, 2048] {
+            let bytes = mb * (1 << 20);
+            let local = fetch_time(&G, FetchSource::LocalHostMem, bytes);
+            let rdma = fetch_time(&G, FetchSource::RemoteRdma, bytes);
+            let ssd = fetch_time(&G, FetchSource::LocalSsd, bytes);
+            assert!(rdma < 1.5 * local, "{mb}MB rdma={rdma} local={local}");
+            assert!(ssd > 5.0 * local, "{mb}MB ssd={ssd} local={local}");
+            assert!(ssd > 5.0 * rdma);
+        }
+    }
+
+    #[test]
+    fn resident_is_free_and_latency_floors_hold() {
+        assert_eq!(fetch_time(&G, FetchSource::GpuResident, 1 << 30), 0.0);
+        // tiny transfers are latency-bound
+        let t = fetch_time(&G, FetchSource::RemoteRdma, 1);
+        assert!(t >= 250e-6);
+    }
+
+    #[test]
+    fn adapter_scale_sanity() {
+        // 7B rank-64 adapter ≈ 134 MB: local fetch ≈ 5.5 ms, rdma ≈ 6 ms
+        let bytes = ModelSpec::LLAMA_7B.adapter_bytes(64);
+        let local = fetch_time(&G, FetchSource::LocalHostMem, bytes);
+        let rdma = fetch_time(&G, FetchSource::RemoteRdma, bytes);
+        assert!(local > 3e-3 && local < 10e-3, "local={local}");
+        assert!(rdma > 3e-3 && rdma < 12e-3, "rdma={rdma}");
+    }
+
+    #[test]
+    fn monotone_in_bytes() {
+        for src in [
+            FetchSource::LocalHostMem,
+            FetchSource::RemoteRdma,
+            FetchSource::LocalSsd,
+        ] {
+            let a = fetch_time(&G, src, 1 << 20);
+            let b = fetch_time(&G, src, 1 << 24);
+            assert!(b > a, "{src:?}");
+        }
+    }
+}

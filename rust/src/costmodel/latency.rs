@@ -1,0 +1,208 @@
+//! Prefill/decode service-time formulas (see `calib` for constants and
+//! their derivation from the paper's measured ratios).
+
+use super::calib::*;
+use crate::config::ServerConfig;
+
+/// Cost model bound to one server configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub server: ServerConfig,
+}
+
+impl CostModel {
+    pub fn new(server: ServerConfig) -> Self {
+        CostModel { server }
+    }
+
+    /// Service time of one prefill iteration over `n_tokens` co-batched
+    /// prompt tokens whose largest adapter rank is `max_rank`
+    /// (0 = no LoRA in batch).
+    pub fn prefill(&self, n_tokens: u64, max_rank: u32) -> f64 {
+        prefill_time(&self.server, n_tokens, max_rank)
+    }
+
+    /// Service time of one decode step over `batch` sequences with
+    /// `cached_tokens` total KV residency and max adapter rank
+    /// `max_rank`.
+    pub fn decode(&self, batch: usize, cached_tokens: u64, max_rank: u32) -> f64 {
+        decode_time(&self.server, batch, cached_tokens, max_rank)
+    }
+
+    /// Saturation throughput (tokens/s) for a single-rank workload of
+    /// the given request shape: the steady-state rate at which the
+    /// server can complete requests, counting prompt+output tokens.
+    pub fn saturation_tps(
+        &self,
+        rank: u32,
+        prompt: u32,
+        output: u32,
+        decode_batch: usize,
+    ) -> f64 {
+        // Per-request busy time: its share of a full prefill batch plus
+        // its share of `output` decode steps at the typical decode
+        // batch size.
+        let bt = self.server.max_batch_tokens as u64;
+        let per_batch = (bt / prompt.max(1) as u64).max(1);
+        let prefill_share =
+            self.prefill(per_batch * prompt as u64, rank) / per_batch as f64;
+        let cached = decode_batch as u64 * (prompt as u64 + output as u64 / 2);
+        let step = self.decode(decode_batch, cached, rank);
+        let decode_share = step / decode_batch as f64 * output as f64;
+        let req_time = prefill_share + decode_share;
+        (prompt as u64 + output as u64) as f64 / req_time
+    }
+}
+
+/// Per-prefill-batch overhead for this model/TP (seconds): a fixed
+/// scheduler term plus token-proportional TP-sync and depth terms
+/// (quoted per BETA_REF_TOKENS tokens — see calib.rs derivation).
+pub fn beta(server: &ServerConfig, n_tokens: u64) -> f64 {
+    let scale = n_tokens as f64 / BETA_REF_TOKENS;
+    BETA0
+        + scale
+            * (BETA_TP * (server.tp as f64 - 1.0)
+                + BETA_LAYER
+                    * (server.model.n_layers as f64 - 32.0).max(0.0))
+}
+
+/// Ideal (100%-efficient) time of the padded LoRA GEMMs for `n_tokens`
+/// at rank `r`: 4 projections × (shrink+expand) ≈ 16·N·d·r FLOPs/layer.
+fn lora_ideal(server: &ServerConfig, n_tokens: u64, r: u32) -> f64 {
+    if r == 0 {
+        return 0.0;
+    }
+    let m = &server.model;
+    // The kernel's tiles are sized by the max rank present; KAPPA folds
+    // the resulting padding + skinny-GEMM inefficiency into one factor.
+    n_tokens as f64 * m.n_layers as f64 * m.d_model as f64 * r as f64
+        / (server.tp as f64 * server.gpu.peak_flops)
+}
+
+pub fn prefill_time(server: &ServerConfig, n_tokens: u64, max_rank: u32) -> f64 {
+    let m = &server.model;
+    let base = 2.0 * n_tokens as f64 * m.params
+        / (server.tp as f64 * server.gpu.peak_flops * EFF_PREFILL);
+    base + beta(server, n_tokens)
+        + KAPPA * lora_ideal(server, n_tokens, max_rank)
+}
+
+pub fn decode_time(
+    server: &ServerConfig,
+    batch: usize,
+    cached_tokens: u64,
+    max_rank: u32,
+) -> f64 {
+    if batch == 0 {
+        return 0.0;
+    }
+    let m = &server.model;
+    let g = &server.gpu;
+    let weights = m.weight_bytes()
+        / (server.tp as f64 * g.hbm_bw * EFF_BW);
+    let kv = cached_tokens as f64 * m.kv_bytes_per_token()
+        / (server.tp as f64 * g.hbm_bw * EFF_BW);
+    let lora = KAPPA_DECODE * lora_ideal(server, batch as u64, max_rank);
+    weights + kv + lora + GAMMA0 + GAMMA_PER_SEQ * batch as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, ModelSpec, ServerConfig};
+
+    fn server(model: ModelSpec, tp: usize) -> ServerConfig {
+        ServerConfig {
+            model,
+            gpu: GpuSpec::A100_40G,
+            tp,
+            ..Default::default()
+        }
+    }
+
+    fn ttft_ratio(model: ModelSpec, tp: usize, n: u64, r_hi: u32, r_lo: u32) -> f64 {
+        let s = server(model, tp);
+        prefill_time(&s, n, r_hi) / prefill_time(&s, n, r_lo)
+    }
+
+    /// Fig 3: rank-128 isolated prefill ≈ 2.7× rank-8 at input 2000, 7B.
+    #[test]
+    fn calibration_fig3_ratio() {
+        let r = ttft_ratio(ModelSpec::LLAMA_7B, 1, 2000, 128, 8);
+        assert!((r - 2.7).abs() < 0.15, "ratio={r}");
+    }
+
+    /// Fig 5: ratio shrinks to ≈1.2 at TP8 on 7B.
+    #[test]
+    fn calibration_fig5_ratio() {
+        let r = ttft_ratio(ModelSpec::LLAMA_7B, 8, 2000, 128, 8);
+        assert!((r - 1.2).abs() < 0.1, "ratio={r}");
+        // and decreases monotonically with TP
+        let mut prev = f64::MAX;
+        for tp in [1, 2, 4, 8] {
+            let x = ttft_ratio(ModelSpec::LLAMA_7B, tp, 2000, 128, 8);
+            assert!(x < prev, "tp={tp} ratio={x} prev={prev}");
+            prev = x;
+        }
+    }
+
+    /// Fig 4: ≈45% penalty on 70B TP8; penalty grows with model size.
+    #[test]
+    fn calibration_fig4_ratio() {
+        let r = ttft_ratio(ModelSpec::LLAMA_70B, 8, 2000, 128, 8);
+        assert!((r - 1.45).abs() < 0.12, "ratio={r}");
+        let r7 = ttft_ratio(ModelSpec::LLAMA_7B, 8, 2000, 128, 8);
+        let r30 = ttft_ratio(ModelSpec::LLAMA_30B, 8, 2000, 128, 8);
+        assert!(r7 < r30 && r30 < r, "7b={r7} 30b={r30} 70b={r}");
+    }
+
+    /// Fig 3 bottom: TBT is only mildly rank-sensitive but grows with
+    /// cache size.
+    #[test]
+    fn decode_shape() {
+        let s = server(ModelSpec::LLAMA_7B, 4);
+        let d8 = decode_time(&s, 8, 8 * 512, 8);
+        let d128 = decode_time(&s, 8, 8 * 512, 128);
+        let rel = d128 / d8;
+        assert!(rel > 1.0 && rel < 1.6, "rel={rel}");
+        // longer context => slower steps
+        let long = decode_time(&s, 8, 8 * 4096, 8);
+        assert!(long > d8);
+        // larger batch => higher step time but lower per-seq time
+        let d16 = decode_time(&s, 16, 16 * 512, 8);
+        assert!(d16 > d8);
+        assert!(d16 / 16.0 < d8 / 8.0);
+    }
+
+    #[test]
+    fn prefill_monotonicity() {
+        let s = server(ModelSpec::LLAMA_7B, 4);
+        assert!(prefill_time(&s, 2000, 8) > prefill_time(&s, 500, 8));
+        assert!(prefill_time(&s, 2000, 64) > prefill_time(&s, 2000, 16));
+        // no-LoRA batch is cheapest
+        assert!(prefill_time(&s, 2000, 0) < prefill_time(&s, 2000, 8));
+        // more TP is faster in absolute terms
+        let s8 = server(ModelSpec::LLAMA_7B, 8);
+        assert!(
+            prefill_time(&s8, 4000, 128) < prefill_time(&server(ModelSpec::LLAMA_7B, 1), 4000, 128)
+        );
+    }
+
+    #[test]
+    fn saturation_tps_decreases_with_rank() {
+        let cm = CostModel::new(server(ModelSpec::LLAMA_7B, 4));
+        let mut prev = f64::MAX;
+        for r in [8u32, 16, 32, 64, 128] {
+            let tps = cm.saturation_tps(r, 512, 128, 16);
+            assert!(tps < prev, "rank {r}: {tps} !< {prev}");
+            assert!(tps > 100.0, "rank {r}: {tps}");
+            prev = tps;
+        }
+    }
+
+    #[test]
+    fn decode_empty_batch_is_free() {
+        let s = server(ModelSpec::LLAMA_7B, 4);
+        assert_eq!(decode_time(&s, 0, 0, 128), 0.0);
+    }
+}

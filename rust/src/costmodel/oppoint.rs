@@ -1,0 +1,75 @@
+//! Operating points: tokens/second a server sustains per adapter rank
+//! under the SLO — the a-priori profiling step Algorithm 1 consumes
+//! ("operatingPoints[rank]", §IV-A).
+//!
+//! The analytic path derives each rank's saturation throughput from the
+//! cost model and applies a utilization headroom (serving *at*
+//! saturation has unbounded queueing delay). The `profile` CLI
+//! subcommand cross-checks this against the DES simulator by binary
+//! search on offered load.
+
+use super::calib::{OPPOINT_HEADROOM, PROFILE_OUTPUT, PROFILE_PROMPT};
+use super::latency::CostModel;
+use crate::config::ServerConfig;
+use std::collections::BTreeMap;
+
+/// Analytic operating point (tokens/s) for one rank.
+pub fn operating_point(server: &ServerConfig, rank: u32) -> f64 {
+    let cm = CostModel::new(*server);
+    let decode_batch = (server.max_batch_size / 2).max(1);
+    cm.saturation_tps(rank, PROFILE_PROMPT, PROFILE_OUTPUT, decode_batch)
+        * OPPOINT_HEADROOM
+}
+
+/// Operating points for every rank in `ranks`.
+pub fn operating_points(
+    server: &ServerConfig,
+    ranks: &[u32],
+) -> BTreeMap<u32, f64> {
+    ranks
+        .iter()
+        .map(|&r| (r, operating_point(server, r)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelSpec, ServerConfig};
+    use crate::workload::RANK_CLASSES;
+
+    #[test]
+    fn monotone_decreasing_in_rank() {
+        let server = ServerConfig::default();
+        let ops = operating_points(&server, &RANK_CLASSES);
+        let vals: Vec<f64> = RANK_CLASSES.iter().map(|r| ops[r]).collect();
+        for w in vals.windows(2) {
+            assert!(w[0] > w[1], "{vals:?}");
+        }
+    }
+
+    #[test]
+    fn bigger_model_lower_oppoint() {
+        let mut s7 = ServerConfig::default();
+        s7.tp = 8;
+        let mut s70 = s7;
+        s70.model = ModelSpec::LLAMA_70B;
+        assert!(operating_point(&s7, 32) > operating_point(&s70, 32));
+    }
+
+    #[test]
+    fn more_tp_higher_oppoint() {
+        let mut s1 = ServerConfig::default();
+        s1.tp = 1;
+        let mut s8 = s1;
+        s8.tp = 8;
+        assert!(operating_point(&s8, 64) > operating_point(&s1, 64));
+    }
+
+    #[test]
+    fn plausible_scale() {
+        // Llama-7B TP4 at 512/128 shape: thousands of tokens/sec.
+        let op = operating_point(&ServerConfig::default(), 8);
+        assert!(op > 1000.0 && op < 100_000.0, "op={op}");
+    }
+}

@@ -1,0 +1,89 @@
+//! Ablations of Algorithm 1's design choices (DESIGN.md §8).
+//!
+//! A1 rank-aware budgeting vs rank-agnostic load balancing,
+//! A2 churn-minimizing permutation step on/off (migration bytes),
+//! A3 trend extrapolation vs last-value demand projection,
+//! A4 distributed pool vs full replication (memory/fetch trade).
+
+use super::helpers::{FigOpts, RESULTS_DIR};
+use crate::config::ClusterConfig;
+use crate::sim::{run, LoraServeOpts, SimConfig, SystemKind};
+use crate::trace::{azure, Trace};
+use crate::util::table::{fmt_bytes, fmt_secs, Table};
+
+fn drift_trace(opts: &FigOpts) -> Trace {
+    // shifting skew stresses every mechanism under ablation
+    azure::generate(&azure::AzureConfig {
+        arrival: azure::Arrival::Poisson,
+        popularity: azure::RankPopularity::ShiftingSkew,
+        rps: 20.0,
+        duration: opts.scale(1200.0),
+        seed: opts.seed,
+        ..Default::default()
+    })
+}
+
+pub fn ablations(opts: &FigOpts) -> std::io::Result<()> {
+    let trace = drift_trace(opts);
+    let cluster = ClusterConfig {
+        n_servers: 4,
+        ..Default::default()
+    };
+    let variants: Vec<(&str, LoraServeOpts)> = vec![
+        ("full", LoraServeOpts::default()),
+        (
+            "A1 rank-agnostic",
+            LoraServeOpts {
+                rank_agnostic: true,
+                ..Default::default()
+            },
+        ),
+        (
+            "A2 no-permutation",
+            LoraServeOpts {
+                skip_permutation: true,
+                ..Default::default()
+            },
+        ),
+        (
+            "A3 last-value demand",
+            LoraServeOpts {
+                last_value_demand: true,
+                ..Default::default()
+            },
+        ),
+        (
+            "A4 full replication",
+            LoraServeOpts {
+                full_replication: true,
+                ..Default::default()
+            },
+        ),
+    ];
+    let mut table = Table::new(
+        "Ablations — LORASERVE variants on a shifting-skew trace (20 RPS)",
+        &[
+            "variant", "p95 ttft", "p95 tbt", "drops",
+            "migrated", "fetches", "max resident",
+        ],
+    );
+    for (name, lopts) in variants {
+        let mut cfg = SimConfig::new(cluster.clone(), SystemKind::LoraServe);
+        cfg.opts = lopts;
+        let mut rep = run(&trace, &cfg);
+        table.row(vec![
+            name.to_string(),
+            fmt_secs(rep.ttft_p95()),
+            fmt_secs(rep.tbt_p95()),
+            rep.timeouts.to_string(),
+            fmt_bytes(rep.migration_bytes),
+            rep.fetches.to_string(),
+            rep.per_server_max_adapters
+                .iter()
+                .max()
+                .unwrap()
+                .to_string(),
+        ]);
+    }
+    table.emit(RESULTS_DIR, "ablations")
+}

@@ -1,0 +1,181 @@
+//! §III-B workload characterization figures (7, 8, 9, 10, 15, 16) over
+//! the synthesized production-like data (DESIGN.md §4 substitution).
+
+use super::helpers::{FigOpts, RESULTS_DIR};
+use crate::trace::production::{
+    self, fleet_snapshot, raw_adapter_shares, week_rpm_series,
+    ProductionConfig,
+};
+use crate::trace::{azure, characterize};
+use crate::util::stats::moving_average;
+use crate::util::table::{fmt_f, Table};
+
+/// Fig 7: adapters + memory footprint per base model.
+pub fn fig7(opts: &FigOpts) -> std::io::Result<()> {
+    let fleet = fleet_snapshot(opts.seed);
+    let mut table = Table::new(
+        "Fig 7 — adapters and memory footprint per base model",
+        &["base model", "adapters", "est. footprint (GB)"],
+    );
+    for (name, n, gb) in &fleet.models {
+        table.row(vec![
+            name.to_string(),
+            n.to_string(),
+            fmt_f(*gb, 1),
+        ]);
+    }
+    table.emit(RESULTS_DIR, "fig7")
+}
+
+/// Fig 8: request share per adapter for Model A (top-5 > 70%).
+pub fn fig8(opts: &FigOpts) -> std::io::Result<()> {
+    let shares = raw_adapter_shares(1000, opts.seed);
+    let mut table = Table::new(
+        "Fig 8 — adapter request shares, Model A (1000 adapters)",
+        &["adapter", "share", "cumulative"],
+    );
+    let mut cum = 0.0;
+    for (i, s) in shares.iter().take(10).enumerate() {
+        cum += s;
+        table.row(vec![
+            format!("#{}", i + 1),
+            format!("{:.1}%", s * 100.0),
+            format!("{:.1}%", cum * 100.0),
+        ]);
+    }
+    let top5: f64 = shares.iter().take(5).sum();
+    let tail_mean: f64 =
+        shares[5..].iter().sum::<f64>() / (shares.len() - 5) as f64;
+    table.row(vec![
+        "top-5 total".into(),
+        format!("{:.1}%", top5 * 100.0),
+        "-".into(),
+    ]);
+    table.row(vec![
+        "mean of rest".into(),
+        format!("{:.3}%", tail_mean * 100.0),
+        "-".into(),
+    ]);
+    table.emit(RESULTS_DIR, "fig8")
+}
+
+/// Fig 9: server share per model and per region.
+pub fn fig9(opts: &FigOpts) -> std::io::Result<()> {
+    let fleet = fleet_snapshot(opts.seed);
+    let mut table = Table::new(
+        "Fig 9 — share of LLM servers per model (left) and region (right)",
+        &["dimension", "name", "share"],
+    );
+    for (name, s) in &fleet.server_share_by_model {
+        table.row(vec![
+            "model".into(),
+            name.to_string(),
+            format!("{:.0}%", s * 100.0),
+        ]);
+    }
+    for (name, s) in &fleet.server_share_by_region {
+        table.row(vec![
+            "region".into(),
+            name.to_string(),
+            format!("{:.0}%", s * 100.0),
+        ]);
+    }
+    table.emit(RESULTS_DIR, "fig9")
+}
+
+/// Fig 10: weekly requests-per-minute of the top-5 adapters (hourly
+/// moving average, 8 sample points per adapter for the table; the CSV
+/// holds the full series).
+pub fn fig10(opts: &FigOpts) -> std::io::Result<()> {
+    let series = week_rpm_series(opts.seed);
+    let mut table = Table::new(
+        "Fig 10 — weekly RPM per top adapter (hourly MA, day boundaries)",
+        &[
+            "adapter(shape)", "d0", "d1", "d2", "d3", "d4", "d5", "d6",
+        ],
+    );
+    let mut csv = Table::new(
+        "fig10 full series",
+        &["adapter", "minute", "rpm_ma60"],
+    );
+    for (i, (shape, xs)) in series.iter().enumerate() {
+        let ma = moving_average(xs, 60);
+        let mut row = vec![format!("A{} ({:?})", i + 1, shape)];
+        for day in 0..7 {
+            let idx = day * 24 * 60 + 12 * 60; // midday sample
+            row.push(fmt_f(ma[idx], 0));
+        }
+        table.row(row);
+        for (m, v) in ma.iter().enumerate().step_by(30) {
+            csv.row(vec![
+                format!("A{}", i + 1),
+                m.to_string(),
+                fmt_f(*v, 2),
+            ]);
+        }
+    }
+    table.emit(RESULTS_DIR, "fig10_summary")?;
+    // full series only as CSV (too long for console)
+    std::fs::create_dir_all(RESULTS_DIR)?;
+    std::fs::write(
+        format!("{RESULTS_DIR}/fig10_series.csv"),
+        csv.to_csv(),
+    )?;
+    println!("[written {RESULTS_DIR}/fig10_series.csv]");
+    Ok(())
+}
+
+/// Fig 15: rank-wise request and token distribution of the production
+/// trace.
+pub fn fig15(opts: &FigOpts) -> std::io::Result<()> {
+    let cfg = ProductionConfig {
+        n_adapters: 100,
+        n_requests: opts.scale(250_138.0) as usize,
+        duration: opts.scale(8.0 * 3600.0),
+        seed: opts.seed,
+        ..Default::default()
+    };
+    let trace = production::generate(&cfg);
+    let req = characterize::rank_request_shares(&trace);
+    let tok = characterize::rank_token_shares(&trace);
+    let mut table = Table::new(
+        "Fig 15 — rank-wise request (left) and token (right) shares",
+        &["rank", "request share", "token share"],
+    );
+    for ((rank, rs), (_, ts)) in req.iter().zip(tok.iter()) {
+        table.row(vec![
+            rank.to_string(),
+            format!("{:.1}%", rs * 100.0),
+            format!("{:.1}%", ts * 100.0),
+        ]);
+    }
+    table.emit(RESULTS_DIR, "fig15")
+}
+
+/// Fig 16: the shifting-skew schedule (rank shares over time windows).
+pub fn fig16(opts: &FigOpts) -> std::io::Result<()> {
+    let cfg = azure::AzureConfig {
+        popularity: azure::RankPopularity::ShiftingSkew,
+        rps: 40.0,
+        duration: opts.scale(1200.0),
+        seed: opts.seed,
+        ..Default::default()
+    };
+    let trace = azure::generate(&cfg);
+    let wins = characterize::rank_share_over_time(&trace, 6);
+    let mut table = Table::new(
+        "Fig 16 — shifting skew: rank popularity per time window",
+        &["window", "r8", "r16", "r32", "r64", "r128"],
+    );
+    for (w, shares) in wins.iter().enumerate() {
+        let mut row = vec![format!("t{w}")];
+        for rank in crate::workload::RANK_CLASSES {
+            row.push(format!(
+                "{:.0}%",
+                shares.get(&rank).copied().unwrap_or(0.0) * 100.0
+            ));
+        }
+        table.row(row);
+    }
+    table.emit(RESULTS_DIR, "fig16")
+}

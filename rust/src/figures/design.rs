@@ -1,0 +1,111 @@
+//! Design-section figures: placement illustration (Fig 12) and the
+//! fetch-latency benchmark behind the distributed pool (Fig 14).
+
+use super::helpers::{FigOpts, RESULTS_DIR};
+use crate::config::{GpuSpec, ModelSpec};
+use crate::costmodel::{fetch_time, operating_points, FetchSource};
+use crate::placement::baselines::{ContiguousPlacer, RandomPlacer};
+use crate::placement::loraserve::LoraServePlacer;
+use crate::placement::{PlacementCtx, Placer};
+use crate::util::rng::Pcg32;
+use crate::util::table::{fmt_f, fmt_secs, Table};
+use crate::workload::{AdapterId, AdapterSet, RANK_CLASSES};
+use std::collections::BTreeMap;
+
+/// Fig 12: qualitative placement comparison — load balance vs rank
+/// heterogeneity for Random / Contiguous / LORASERVE on one instance.
+pub fn fig12(opts: &FigOpts) -> std::io::Result<()> {
+    let n_servers = 4;
+    let adapters = AdapterSet::power_law_counts(
+        16,
+        &RANK_CLASSES,
+        1.0,
+        &ModelSpec::LLAMA_7B,
+    );
+    let mut rng = Pcg32::with_stream(opts.seed, 0xf12);
+    let mut demand: BTreeMap<AdapterId, f64> = BTreeMap::new();
+    for a in adapters.iter() {
+        demand.insert(a.id, rng.lognormal((300.0f64).ln(), 1.0));
+    }
+    let oppoints = operating_points(
+        &crate::config::ServerConfig::default(),
+        &RANK_CLASSES,
+    );
+    let ctx = PlacementCtx {
+        adapters: &adapters,
+        n_servers,
+        demand_tps: &demand,
+        operating_points: &oppoints,
+        prev: None,
+    };
+    let mut table = Table::new(
+        "Fig 12 — placement quality: load balance vs rank heterogeneity",
+        &[
+            "placer", "util cv", "mean ranks/server", "max ranks/server",
+            "server loads",
+        ],
+    );
+    let placers: Vec<Box<dyn Placer>> = vec![
+        Box::new(RandomPlacer::new(opts.seed)),
+        Box::new(ContiguousPlacer::new()),
+        Box::new(LoraServePlacer::new()),
+    ];
+    for mut p in placers {
+        let asg = p.place(&ctx);
+        asg.validate(n_servers).unwrap();
+        let utils =
+            asg.server_utils(n_servers, &adapters, &demand, &oppoints);
+        let mean = utils.iter().sum::<f64>() / n_servers as f64;
+        let var = utils.iter().map(|u| (u - mean).powi(2)).sum::<f64>()
+            / n_servers as f64;
+        let cv = var.sqrt() / mean;
+        let het = asg.heterogeneity(n_servers, &adapters);
+        table.row(vec![
+            p.name().to_string(),
+            fmt_f(cv, 3),
+            fmt_f(
+                het.iter().sum::<usize>() as f64 / n_servers as f64,
+                2,
+            ),
+            het.iter().max().unwrap().to_string(),
+            format!(
+                "[{}]",
+                utils
+                    .iter()
+                    .map(|u| format!("{u:.2}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        ]);
+    }
+    table.emit(RESULTS_DIR, "fig12")
+}
+
+/// Fig 14: latency of fetching a tensor from each source vs size.
+pub fn fig14(_opts: &FigOpts) -> std::io::Result<()> {
+    let gpu = GpuSpec::A100_40G;
+    let mut table = Table::new(
+        "Fig 14 — tensor fetch latency by source",
+        &["size", "local host mem", "remote GPU (RDMA)", "local SSD"],
+    );
+    for mb in [16u64, 32, 64, 128, 256, 512, 1024, 2048] {
+        let bytes = mb << 20;
+        table.row(vec![
+            format!("{mb} MiB"),
+            fmt_secs(fetch_time(&gpu, FetchSource::LocalHostMem, bytes)),
+            fmt_secs(fetch_time(&gpu, FetchSource::RemoteRdma, bytes)),
+            fmt_secs(fetch_time(&gpu, FetchSource::LocalSsd, bytes)),
+        ]);
+    }
+    // adapter-scale reference rows
+    for rank in [8u32, 128] {
+        let bytes = ModelSpec::LLAMA_7B.adapter_bytes(rank);
+        table.row(vec![
+            format!("7B rank-{rank} adapter"),
+            fmt_secs(fetch_time(&gpu, FetchSource::LocalHostMem, bytes)),
+            fmt_secs(fetch_time(&gpu, FetchSource::RemoteRdma, bytes)),
+            fmt_secs(fetch_time(&gpu, FetchSource::LocalSsd, bytes)),
+        ]);
+    }
+    table.emit(RESULTS_DIR, "fig14")
+}

@@ -1,0 +1,179 @@
+//! Shared scaffolding for the figure harnesses.
+
+use crate::config::ClusterConfig;
+use crate::sim::{run, SimConfig, SimReport, SystemKind};
+use crate::trace::Trace;
+
+pub const RESULTS_DIR: &str = "results";
+
+/// Global knobs for a figures run.
+#[derive(Debug, Clone, Copy)]
+pub struct FigOpts {
+    /// Shrink workloads for smoke runs / CI.
+    pub fast: bool,
+    pub seed: u64,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        FigOpts {
+            fast: false,
+            seed: 0,
+        }
+    }
+}
+
+impl FigOpts {
+    /// Scale a duration/request count down in fast mode.
+    pub fn scale(&self, x: f64) -> f64 {
+        if self.fast {
+            x / 4.0
+        } else {
+            x
+        }
+    }
+}
+
+/// Steady-state warmup excluded from figure statistics: two rebalance
+/// periods, enough for LORASERVE's first demand-informed placement to
+/// take effect (the paper reports steady-state latencies).
+pub fn warmup_secs(cluster: &ClusterConfig) -> f64 {
+    2.0 * cluster.rebalance_period
+}
+
+/// Run one (trace, system) pair on a cluster.
+pub fn run_system(
+    trace: &Trace,
+    cluster: &ClusterConfig,
+    system: SystemKind,
+) -> SimReport {
+    // never let warmup swallow more than a third of the trace
+    let warmup = warmup_secs(cluster).min(trace.duration() / 3.0);
+    run(
+        trace,
+        &SimConfig::new(cluster.clone(), system).with_warmup(warmup),
+    )
+}
+
+/// Largest RPS (within `tol`) at which `system` still meets the SLO on
+/// rescalings of `trace` — the paper's "max throughput under SLA"
+/// metric (Fig 17/21). Monotone bisection over trace rescaling.
+pub fn max_rps_under_slo(
+    trace: &Trace,
+    cluster: &ClusterConfig,
+    system: SystemKind,
+    lo: f64,
+    hi: f64,
+    tol: f64,
+) -> f64 {
+    let meets = |rps: f64| -> bool {
+        let t = trace.scale_to_rps(rps);
+        let mut rep = run_system(&t, cluster, system);
+        rep.meets_slo(cluster.slo.ttft_p95)
+    };
+    if !meets(lo) {
+        return 0.0;
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    if meets(hi) {
+        return hi;
+    }
+    while hi - lo > tol {
+        let mid = 0.5 * (lo + hi);
+        if meets(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Smallest server count (1..=max) meeting the SLO at the trace's
+/// native rate — the "GPUs needed" metric behind the paper's
+/// "up to 50% fewer GPUs" claim.
+pub fn min_servers_under_slo(
+    trace: &Trace,
+    base: &ClusterConfig,
+    system: SystemKind,
+    max_servers: usize,
+) -> Option<usize> {
+    for n in 1..=max_servers {
+        let mut cluster = base.clone();
+        cluster.n_servers = n;
+        let mut rep = run_system(trace, &cluster, system);
+        if rep.meets_slo(cluster.slo.ttft_p95) {
+            return Some(n);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::azure::{self, AzureConfig};
+    use crate::trace::LengthModel;
+
+    fn trace() -> Trace {
+        azure::generate(&AzureConfig {
+            rps: 8.0,
+            duration: 90.0,
+            lengths: LengthModel::fixed(512, 128),
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn bisection_brackets_capacity() {
+        let cluster = ClusterConfig {
+            n_servers: 2,
+            ..Default::default()
+        };
+        let cap = max_rps_under_slo(
+            &trace(),
+            &cluster,
+            SystemKind::LoraServe,
+            1.0,
+            64.0,
+            2.0,
+        );
+        assert!(cap > 1.0 && cap < 64.0, "cap={cap}");
+        // more servers => more capacity
+        let cluster4 = ClusterConfig {
+            n_servers: 4,
+            ..Default::default()
+        };
+        let cap4 = max_rps_under_slo(
+            &trace(),
+            &cluster4,
+            SystemKind::LoraServe,
+            1.0,
+            64.0,
+            2.0,
+        );
+        assert!(cap4 > cap, "cap4={cap4} cap2={cap}");
+    }
+
+    #[test]
+    fn min_servers_monotone_in_load() {
+        let base = ClusterConfig::default();
+        let light = trace().scale_to_rps(2.0);
+        let heavy = trace().scale_to_rps(12.0);
+        let n_light = min_servers_under_slo(
+            &light,
+            &base,
+            SystemKind::LoraServe,
+            8,
+        )
+        .unwrap();
+        let n_heavy = min_servers_under_slo(
+            &heavy,
+            &base,
+            SystemKind::LoraServe,
+            8,
+        )
+        .unwrap();
+        assert!(n_heavy >= n_light, "{n_heavy} < {n_light}");
+    }
+}

@@ -1,0 +1,118 @@
+//! Figure harnesses: one entry per table/figure in the paper's
+//! evaluation (see DESIGN.md §6 for the experiment index). Each prints
+//! a markdown table and writes `results/<id>.csv`.
+//!
+//! ```text
+//! cargo run --release -- figures --all [--fast]
+//! cargo run --release -- figures --fig 17
+//! ```
+
+pub mod ablations;
+pub mod characterization;
+pub mod design;
+pub mod eval;
+pub mod helpers;
+pub mod motivation;
+pub mod sensitivity;
+
+pub use helpers::FigOpts;
+
+type FigFn = fn(&FigOpts) -> std::io::Result<()>;
+
+/// Registry: (id, description, runner).
+pub fn registry() -> Vec<(&'static str, &'static str, FigFn)> {
+    vec![
+        ("fig1", "co-serving interference (P95 TTFT per pair)",
+         motivation::fig1 as FigFn),
+        ("fig3", "isolated TTFT/TBT vs input size per rank",
+         motivation::fig3),
+        ("fig4", "relative TTFT vs model size", motivation::fig4),
+        ("fig5", "relative TTFT vs TP", motivation::fig5),
+        ("fig6", "4 RPS Poisson per rank vs SLO", motivation::fig6),
+        ("fig7", "adapters + footprint per base model",
+         characterization::fig7),
+        ("fig8", "adapter request shares (top-5 > 70%)",
+         characterization::fig8),
+        ("fig9", "server shares per model/region",
+         characterization::fig9),
+        ("fig10", "weekly RPM of top-5 adapters",
+         characterization::fig10),
+        ("fig12", "placement quality comparison", design::fig12),
+        ("fig14", "tensor fetch latency by source", design::fig14),
+        ("fig15", "rank-wise request/token distribution",
+         characterization::fig15),
+        ("fig16", "shifting-skew schedule", characterization::fig16),
+        ("fig17", "production traces: max RPS + GPU savings",
+         eval::fig17),
+        ("fig18", "per-server latency + resident adapters",
+         eval::fig18),
+        ("fig19", "TTFT (and fig20 TBT) on six derived traces",
+         eval::fig19_20),
+        ("fig21", "weak scaling 4/8/12 servers", eval::fig21),
+        ("fig22", "rank-skew sensitivity (alpha sweep)",
+         sensitivity::fig22),
+        ("fig23", "model-size sensitivity", sensitivity::fig23),
+        ("fig24", "TP sensitivity", sensitivity::fig24),
+        ("tops", "operating-point table", motivation::tops),
+        ("storage", "adapter storage/fetch summary",
+         eval::storage_summary),
+        ("ablations", "Algorithm 1 design-choice ablations",
+         ablations::ablations),
+    ]
+}
+
+/// Run one figure by id.
+pub fn run_one(id: &str, opts: &FigOpts) -> std::io::Result<bool> {
+    for (fid, _, f) in registry() {
+        if fid == id || fid.strip_prefix("fig") == Some(id) {
+            f(opts)?;
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}
+
+/// Run everything (the `make figures` target).
+pub fn run_all(opts: &FigOpts) -> std::io::Result<()> {
+    for (id, desc, f) in registry() {
+        println!("\n===== {id}: {desc} =====");
+        let t = std::time::Instant::now();
+        f(opts)?;
+        println!("[{id} done in {:.1}s]", t.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique_and_resolvable() {
+        let reg = registry();
+        let ids: std::collections::BTreeSet<&str> =
+            reg.iter().map(|(id, _, _)| *id).collect();
+        assert_eq!(ids.len(), reg.len());
+        assert!(ids.contains("fig17") && ids.contains("ablations"));
+    }
+
+    #[test]
+    fn cheap_figures_run() {
+        // run the closed-form/characterization harnesses end to end in
+        // a temp dir (they write results/)
+        let tmp = std::env::temp_dir().join("loraserve_figs");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let old = std::env::current_dir().unwrap();
+        std::env::set_current_dir(&tmp).unwrap();
+        let opts = FigOpts {
+            fast: true,
+            seed: 0,
+        };
+        for id in ["fig3", "fig4", "fig5", "fig7", "fig8", "fig9",
+                   "fig12", "fig14", "fig16", "tops"] {
+            assert!(run_one(id, &opts).unwrap(), "{id} missing");
+        }
+        assert!(!run_one("nope", &opts).unwrap());
+        std::env::set_current_dir(old).unwrap();
+    }
+}

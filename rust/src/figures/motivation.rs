@@ -1,0 +1,259 @@
+//! §III-A motivation figures: rank interference (Fig 1, 3, 4, 5, 6).
+
+use super::helpers::{FigOpts, RESULTS_DIR};
+use crate::config::{ClusterConfig, ModelSpec, ServerConfig};
+use crate::costmodel::{decode_time, prefill_time};
+use crate::sim::{run, SimConfig, SystemKind};
+use crate::trace::{azure, LengthModel, Trace};
+use crate::util::rng::Pcg32;
+use crate::util::table::{fmt_f, fmt_secs, Table};
+use crate::workload::{Adapter, AdapterSet, Request};
+
+/// Fig 1: P95 TTFT per adapter when two adapters are co-served on one
+/// Llama-7B server. Pairs (8,8) … (8,128); greater rank heterogeneity
+/// should inflate the rank-8 adapter's tail latency and variability.
+pub fn fig1(opts: &FigOpts) -> std::io::Result<()> {
+    let mut table = Table::new(
+        "Fig 1 — co-serving two adapters on one server (P95 TTFT, s)",
+        &[
+            "pair", "rank8 p50", "rank8 p95", "partner p95",
+            "rank8 iqr", "rank8 p95 vs (8,8)",
+        ],
+    );
+    let model = ModelSpec::LLAMA_7B;
+    let duration = opts.scale(600.0);
+    let mut base_p95 = None;
+    for partner in [8u32, 16, 32, 64, 128] {
+        let adapters = AdapterSet::new(vec![
+            Adapter { id: 0, rank: 8, size_bytes: model.adapter_bytes(8) },
+            Adapter {
+                id: 1,
+                rank: partner,
+                size_bytes: model.adapter_bytes(partner),
+            },
+        ]);
+        // Poisson arrivals, both adapters equally popular, fixed shape;
+        // rate chosen near (not past) single-server capacity so queueing
+        // amplifies the interference the way the paper's testbed did.
+        let mut rng = Pcg32::with_stream(opts.seed, 0xf1 + partner as u64);
+        let rps = 3.5;
+        let mut reqs = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(rps);
+            if t > duration {
+                break;
+            }
+            reqs.push(Request {
+                id: 0,
+                adapter: (rng.f64() < 0.5) as u32,
+                prompt_len: 512,
+                output_len: 64,
+                arrival: t,
+            });
+        }
+        let trace = Trace::new(&format!("fig1-{partner}"), adapters, reqs);
+        let cluster = ClusterConfig {
+            n_servers: 1,
+            slo: crate::config::SloConfig {
+                ttft_p95: 20.0,
+                timeout: 600.0,
+            },
+            ..Default::default()
+        };
+        let rep = run(
+            &trace,
+            &SimConfig::new(cluster, SystemKind::SLoraRandom),
+        );
+        let mut r8 = rep.per_adapter_ttft.get(&0).cloned().unwrap_or_default();
+        let mut partner_s =
+            rep.per_adapter_ttft.get(&1).cloned().unwrap_or_default();
+        let p50 = r8.p50();
+        let p95 = r8.p95();
+        let iqr = r8.percentile(75.0) - r8.percentile(25.0);
+        if partner == 8 {
+            base_p95 = Some(p95);
+        }
+        let rel = p95 / base_p95.unwrap();
+        table.row(vec![
+            format!("(8,{partner})"),
+            fmt_secs(p50),
+            fmt_secs(p95),
+            fmt_secs(partner_s.p95()),
+            fmt_secs(iqr),
+            format!("{:.2}x", rel),
+        ]);
+    }
+    table.emit(RESULTS_DIR, "fig1")
+}
+
+/// Fig 3: isolated TTFT and TBT vs input size per rank (Llama-7B TP1).
+pub fn fig3(_opts: &FigOpts) -> std::io::Result<()> {
+    let server = ServerConfig {
+        tp: 1,
+        ..Default::default()
+    };
+    let mut ttft = Table::new(
+        "Fig 3 (top) — isolated TTFT vs input size, Llama-7B TP1",
+        &["input", "r8", "r16", "r32", "r64", "r128", "r128/r8"],
+    );
+    let mut tbt = Table::new(
+        "Fig 3 (bottom) — isolated TBT vs input size (batch 1)",
+        &["input", "r8", "r16", "r32", "r64", "r128", "r128/r8"],
+    );
+    for input in [128u64, 512, 1000, 2000, 4000, 8000] {
+        let pf: Vec<f64> = [8u32, 16, 32, 64, 128]
+            .iter()
+            .map(|&r| prefill_time(&server, input, r))
+            .collect();
+        let dc: Vec<f64> = [8u32, 16, 32, 64, 128]
+            .iter()
+            .map(|&r| decode_time(&server, 1, input, r))
+            .collect();
+        let mut row = vec![input.to_string()];
+        row.extend(pf.iter().map(|&x| fmt_secs(x)));
+        row.push(format!("{:.2}x", pf[4] / pf[0]));
+        ttft.row(row);
+        let mut row = vec![input.to_string()];
+        row.extend(dc.iter().map(|&x| fmt_secs(x)));
+        row.push(format!("{:.2}x", dc[4] / dc[0]));
+        tbt.row(row);
+    }
+    ttft.emit(RESULTS_DIR, "fig3_ttft")?;
+    tbt.emit(RESULTS_DIR, "fig3_tbt")
+}
+
+/// Fig 4: relative TTFT (vs rank 8) across model sizes, input 2000, TP8.
+pub fn fig4(_opts: &FigOpts) -> std::io::Result<()> {
+    let mut table = Table::new(
+        "Fig 4 — relative TTFT vs model size (input 2000, TP8)",
+        &["model", "r8", "r16", "r32", "r64", "r128"],
+    );
+    for model in [
+        ModelSpec::LLAMA_7B,
+        ModelSpec::LLAMA_13B,
+        ModelSpec::LLAMA_30B,
+        ModelSpec::LLAMA_70B,
+    ] {
+        let server = ServerConfig {
+            model,
+            tp: 8,
+            ..Default::default()
+        };
+        let base = prefill_time(&server, 2000, 8);
+        let mut row = vec![model.name.to_string()];
+        for r in [8u32, 16, 32, 64, 128] {
+            row.push(format!(
+                "{:.2}",
+                prefill_time(&server, 2000, r) / base
+            ));
+        }
+        table.row(row);
+    }
+    table.emit(RESULTS_DIR, "fig4")
+}
+
+/// Fig 5: relative TTFT (vs rank 8) across TP degrees, Llama-7B.
+pub fn fig5(_opts: &FigOpts) -> std::io::Result<()> {
+    let mut table = Table::new(
+        "Fig 5 — relative TTFT vs TP (Llama-7B, input 2000)",
+        &["tp", "r8", "r16", "r32", "r64", "r128"],
+    );
+    for tp in [1usize, 2, 4, 8] {
+        let server = ServerConfig {
+            tp,
+            ..Default::default()
+        };
+        let base = prefill_time(&server, 2000, 8);
+        let mut row = vec![format!("TP={tp}")];
+        for r in [8u32, 16, 32, 64, 128] {
+            row.push(format!(
+                "{:.2}",
+                prefill_time(&server, 2000, r) / base
+            ));
+        }
+        table.row(row);
+    }
+    table.emit(RESULTS_DIR, "fig5")
+}
+
+/// Fig 6: 4 RPS Poisson, fixed 512/128 shape, single-rank workloads on
+/// one server — high ranks blow the 20 s P95 TTFT SLO.
+pub fn fig6(opts: &FigOpts) -> std::io::Result<()> {
+    let mut table = Table::new(
+        "Fig 6 — 4 RPS Poisson per rank (one Llama-7B TP4 server, SLO 20s)",
+        &["rank", "p50 ttft", "p95 ttft", "timeouts", "violates slo"],
+    );
+    let duration = opts.scale(900.0);
+    for rank in [8u32, 16, 32, 64, 128] {
+        let cfg = azure::AzureConfig {
+            arrival: azure::Arrival::Poisson,
+            popularity: azure::RankPopularity::Uniform,
+            adapters_per_rank: 1,
+            rps: 4.0,
+            duration,
+            lengths: LengthModel::fixed(512, 128),
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let mut trace = azure::generate(&cfg);
+        // restrict to the single-rank adapter: remap every request to
+        // the adapter of `rank`
+        let target = trace
+            .adapters
+            .iter()
+            .find(|a| a.rank == rank)
+            .unwrap()
+            .id;
+        for r in trace.requests.iter_mut() {
+            r.adapter = target;
+        }
+        let cluster = ClusterConfig {
+            n_servers: 1,
+            slo: crate::config::SloConfig {
+                ttft_p95: 20.0,
+                timeout: 300.0,
+            },
+            ..Default::default()
+        };
+        let mut rep = run(
+            &trace,
+            &SimConfig::new(cluster, SystemKind::SLoraContiguous),
+        );
+        let p95 = rep.ttft_p95();
+        table.row(vec![
+            rank.to_string(),
+            fmt_secs(rep.ttft.p50()),
+            fmt_secs(p95),
+            rep.timeouts.to_string(),
+            if p95 > 20.0 || rep.completion_rate() < 0.99 {
+                "YES".into()
+            } else {
+                "no".into()
+            },
+        ]);
+    }
+    table.emit(RESULTS_DIR, "fig6")
+}
+
+/// Operating-point table (§IV-A profiling step).
+pub fn tops(_opts: &FigOpts) -> std::io::Result<()> {
+    let mut table = Table::new(
+        "Operating points — tokens/s per rank under SLO (Llama-7B TP4)",
+        &["rank", "tokens/s", "vs r8"],
+    );
+    let server = ServerConfig::default();
+    let ops = crate::costmodel::operating_points(
+        &server,
+        &crate::workload::RANK_CLASSES,
+    );
+    let base = ops[&8];
+    for r in crate::workload::RANK_CLASSES {
+        table.row(vec![
+            r.to_string(),
+            fmt_f(ops[&r], 0),
+            format!("{:.2}x", ops[&r] / base),
+        ]);
+    }
+    table.emit(RESULTS_DIR, "tops")
+}

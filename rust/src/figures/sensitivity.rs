@@ -1,0 +1,142 @@
+//! Sensitivity studies: rank skew (Fig 22), model size (Fig 23), tensor
+//! parallelism (Fig 24).
+
+use super::helpers::{run_system, FigOpts, RESULTS_DIR};
+use crate::config::{ClusterConfig, ModelSpec};
+use crate::sim::SystemKind;
+use crate::trace::{LengthModel, Trace};
+use crate::util::rng::{Pcg32, PowerLaw};
+use crate::util::table::{fmt_secs, Table};
+use crate::workload::{AdapterSet, Request, RANK_CLASSES};
+
+/// Power-law-popularity Poisson trace: 100 adapters (20 per rank),
+/// adapter popularity ∝ (idx+1)^-α with small ranks first (Fig 22's
+/// setup; α ∈ {1/3, 1, 3}).
+pub fn skew_trace(alpha: f64, rps: f64, duration: f64, seed: u64) -> Trace {
+    let model = ModelSpec::LLAMA_7B;
+    let adapters = AdapterSet::uniform_per_rank(100, &RANK_CLASSES, &model);
+    // order adapters by rank ascending (they already are) so the power
+    // law favors small ranks, as in the paper
+    let pl = PowerLaw::new(100, alpha);
+    let lengths = LengthModel::default();
+    let mut rng = Pcg32::with_stream(seed, 0xf22);
+    let mut reqs = Vec::new();
+    let mut t = 0.0;
+    loop {
+        t += rng.exponential(rps);
+        if t > duration {
+            break;
+        }
+        let adapter = pl.sample(&mut rng) as u32;
+        let (p, o) = lengths.sample(&mut rng);
+        reqs.push(Request {
+            id: 0,
+            adapter,
+            prompt_len: p,
+            output_len: o,
+            arrival: t,
+        });
+    }
+    Trace::new(&format!("skew-a{alpha:.2}"), adapters, reqs)
+}
+
+/// Fig 22: varying α in the popularity power law. The paper runs this
+/// at 36 RPS on its A100 testbed; our simulated cluster saturates at
+/// ~0.72x the paper's absolute rate (see EXPERIMENTS.md scale note), so
+/// the harness runs at 26 RPS — the same relative operating point.
+pub fn fig22(opts: &FigOpts) -> std::io::Result<()> {
+    let mut table = Table::new(
+        "Fig 22 — power-law popularity skew (22 RPS Poisson, 100 adapters)",
+        &["alpha", "system", "p50 ttft", "p95 ttft", "drops"],
+    );
+    for alpha in [1.0 / 3.0, 1.0, 3.0] {
+        let trace =
+            skew_trace(alpha, 22.0, opts.scale(1200.0), opts.seed);
+        let cluster = ClusterConfig {
+            n_servers: 4,
+            ..Default::default()
+        };
+        for system in SystemKind::all() {
+            let mut rep = run_system(&trace, &cluster, system);
+            let dropped = rep.completion_rate() < 0.99;
+            table.row(vec![
+                format!("{alpha:.2}"),
+                system.label().to_string(),
+                fmt_secs(rep.ttft.p50()),
+                if dropped {
+                    "TIMEOUT".into()
+                } else {
+                    fmt_secs(rep.ttft_p95())
+                },
+                rep.timeouts.to_string(),
+            ]);
+        }
+    }
+    table.emit(RESULTS_DIR, "fig22")
+}
+
+/// Fig 23: model-size sensitivity (Llama 7B/30B/70B, TP8), fixed trace
+/// per model with load scaled to each model's capacity regime.
+pub fn fig23(opts: &FigOpts) -> std::io::Result<()> {
+    let mut table = Table::new(
+        "Fig 23 — model sizes (TP8): P95 TTFT per system",
+        &["model", "rps", "loraserve", "slora-random",
+          "slora-contiguous", "toppings"],
+    );
+    for (model, rps) in [
+        (ModelSpec::LLAMA_7B, 20.0),
+        (ModelSpec::LLAMA_30B, 6.0),
+        (ModelSpec::LLAMA_70B, 3.0),
+    ] {
+        let trace =
+            skew_trace(1.0, rps, opts.scale(1200.0), opts.seed);
+        let mut cluster = ClusterConfig {
+            n_servers: 4,
+            ..Default::default()
+        };
+        cluster.server.model = model;
+        cluster.server.tp = 8;
+        let mut row =
+            vec![model.name.to_string(), format!("{rps:.0}")];
+        for system in SystemKind::all() {
+            let mut rep = run_system(&trace, &cluster, system);
+            if rep.completion_rate() < 0.99 {
+                row.push("TIMEOUT".into());
+            } else {
+                row.push(fmt_secs(rep.ttft_p95()));
+            }
+        }
+        table.row(row);
+    }
+    table.emit(RESULTS_DIR, "fig23")
+}
+
+/// Fig 24: TP sensitivity on Llama-7B — LORASERVE's gains persist at
+/// every TP degree.
+pub fn fig24(opts: &FigOpts) -> std::io::Result<()> {
+    let mut table = Table::new(
+        "Fig 24 — TP sensitivity (Llama-7B): P95 TTFT per system",
+        &["tp", "rps", "loraserve", "slora-random",
+          "slora-contiguous", "toppings"],
+    );
+    for (tp, rps) in [(2usize, 12.0), (4, 22.0), (8, 28.0)] {
+        let trace =
+            skew_trace(1.0, rps, opts.scale(1200.0), opts.seed);
+        let mut cluster = ClusterConfig {
+            n_servers: 4,
+            ..Default::default()
+        };
+        cluster.server.tp = tp;
+        let mut row = vec![format!("TP={tp}"), format!("{rps:.0}")];
+        for system in SystemKind::all() {
+            let mut rep = run_system(&trace, &cluster, system);
+            if rep.completion_rate() < 0.99 {
+                row.push("TIMEOUT".into());
+            } else {
+                row.push(fmt_secs(rep.ttft_p95()));
+            }
+        }
+        table.row(row);
+    }
+    table.emit(RESULTS_DIR, "fig24")
+}

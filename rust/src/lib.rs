@@ -1,0 +1,33 @@
+//! LoRAServe — a reproduction of *"Serving Heterogeneous LoRA Adapters
+//! in Distributed LLM Inference Systems"* (CS.DC 2025).
+//!
+//! Rank-aware, workload-adaptive adapter placement + routing for
+//! multi-tenant LoRA serving, as a three-layer stack:
+//!
+//! * **L3 (this crate)** — cluster orchestrator: the placement
+//!   algorithm (Algorithm 1), probabilistic routing table, distributed
+//!   adapter pool, discrete-event cluster simulator, and a *real*
+//!   mini-cluster whose servers execute AOT-compiled XLA artifacts via
+//!   PJRT ([`runtime`], [`server`]).
+//! * **L2 (python/compile/model.py)** — a LoRA transformer (prefill +
+//!   decode) lowered once to HLO text at build time.
+//! * **L1 (python/compile/kernels/sgmv.py)** — the Pallas
+//!   multi-adapter SGMV/BGMV kernels whose pad-to-max-rank behaviour is
+//!   the interference the paper measures.
+//!
+//! See DESIGN.md for the full inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results of every figure.
+
+pub mod config;
+pub mod costmodel;
+pub mod placement;
+pub mod coordinator;
+pub mod pool;
+pub mod sim;
+pub mod runtime;
+pub mod server;
+pub mod figures;
+pub mod metrics;
+pub mod trace;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,321 @@
+//! LoRAServe CLI — the cluster launcher and experiment driver.
+//!
+//! Subcommands:
+//!   figures   regenerate paper tables/figures (`--all` or `--fig N`)
+//!   simulate  run one trace × system on the DES cluster
+//!   trace     synthesize + characterize traces (writes CSV)
+//!   profile   print operating points for a server config
+//!   serve     run the real PJRT mini-cluster on a synthetic workload
+
+use loraserve::config::ClusterConfig;
+use loraserve::figures::{self, FigOpts};
+use loraserve::sim::{self, SystemKind};
+use loraserve::trace::{azure, production};
+use loraserve::util::cli::Args;
+use loraserve::util::table::{fmt_bytes, fmt_secs, Table};
+
+fn main() {
+    let args = match Args::from_env(&["all", "fast", "help", "empirical"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.subcommand().is_none() {
+        usage();
+        return;
+    }
+    let result = match args.subcommand().unwrap() {
+        "figures" => cmd_figures(&args),
+        "simulate" => cmd_simulate(&args),
+        "trace" => cmd_trace(&args),
+        "profile" => cmd_profile(&args),
+        "serve" => cmd_serve(&args),
+        other => {
+            eprintln!("unknown subcommand '{other}'");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "loraserve — rank-aware LoRA adapter placement & routing \
+         (paper reproduction)\n\n\
+         USAGE: loraserve <subcommand> [options]\n\n\
+         figures  --all | --fig <id>   [--fast] [--seed S]\n\
+         simulate --system <loraserve|slora-random|slora-contiguous|\
+         toppings>\n         \
+         [--trace prod|shifting|uniform] [--rps R] [--servers N]\n         \
+         [--adapters N] [--duration S] [--seed S] [--config file.json]\n\
+         trace    --kind prod|azure [--adapters N] [--out file.csv]\n\
+         profile  [--model 7b|13b|30b|70b] [--tp N]\n\
+         serve    [--servers N] [--requests N] [--duration S]"
+    );
+}
+
+fn parse_system(s: &str) -> Result<SystemKind, String> {
+    match s {
+        "loraserve" => Ok(SystemKind::LoraServe),
+        "slora-random" | "random" => Ok(SystemKind::SLoraRandom),
+        "slora-contiguous" | "contiguous" => {
+            Ok(SystemKind::SLoraContiguous)
+        }
+        "toppings" => Ok(SystemKind::Toppings),
+        other => Err(format!("unknown system '{other}'")),
+    }
+}
+
+fn cmd_figures(args: &Args) -> Result<(), String> {
+    let opts = FigOpts {
+        fast: args.flag("fast"),
+        seed: args.get_u64("seed", 0)?,
+    };
+    if args.flag("all") {
+        figures::run_all(&opts).map_err(|e| e.to_string())
+    } else if let Some(id) = args.get("fig") {
+        if figures::run_one(id, &opts).map_err(|e| e.to_string())? {
+            Ok(())
+        } else {
+            let ids: Vec<&str> = figures::registry()
+                .iter()
+                .map(|(id, _, _)| *id)
+                .collect();
+            Err(format!("unknown figure '{id}'; have {ids:?}"))
+        }
+    } else {
+        println!("available figures:");
+        for (id, desc, _) in figures::registry() {
+            println!("  {id:10} {desc}");
+        }
+        Ok(())
+    }
+}
+
+fn build_cluster(args: &Args) -> Result<ClusterConfig, String> {
+    let mut cluster = match args.get("config") {
+        Some(path) => ClusterConfig::from_file(path)?,
+        None => ClusterConfig::default(),
+    };
+    cluster.n_servers = args.get_usize("servers", cluster.n_servers)?;
+    cluster.seed = args.get_u64("seed", cluster.seed)?;
+    if let Some(m) = args.get("model") {
+        cluster.server.model = loraserve::config::ModelSpec::by_name(m)
+            .ok_or_else(|| format!("unknown model '{m}'"))?;
+    }
+    cluster.server.tp = args.get_usize("tp", cluster.server.tp)?;
+    Ok(cluster)
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let system = parse_system(args.get_or("system", "loraserve"))?;
+    let cluster = build_cluster(args)?;
+    let rps = args.get_f64("rps", 16.0)?;
+    let duration = args.get_f64("duration", 600.0)?;
+    let n_adapters = args.get_usize("adapters", 100)?;
+    let seed = args.get_u64("seed", 0)?;
+    let kind = args.get_or("trace", "prod");
+    let trace = match kind {
+        "prod" => production::generate(&production::ProductionConfig {
+            n_adapters,
+            n_requests: (rps * duration) as usize,
+            duration,
+            seed,
+            ..Default::default()
+        }),
+        "shifting" => azure::generate(&azure::AzureConfig {
+            popularity: azure::RankPopularity::ShiftingSkew,
+            rps,
+            duration,
+            seed,
+            ..Default::default()
+        }),
+        "uniform" => azure::generate(&azure::AzureConfig {
+            rps,
+            duration,
+            seed,
+            ..Default::default()
+        }),
+        "skew" => loraserve::figures::sensitivity::skew_trace(
+            args.get_f64("alpha", 1.0)?,
+            rps,
+            duration,
+            seed,
+        ),
+        other => return Err(format!("unknown trace kind '{other}'")),
+    };
+    println!(
+        "simulating {} on '{}' ({} reqs, {:.1} rps, {} servers)",
+        system.label(),
+        trace.name,
+        trace.requests.len(),
+        trace.mean_rps(),
+        cluster.n_servers
+    );
+    let t0 = std::time::Instant::now();
+    let mut rep = sim::run(
+        &trace,
+        &sim::SimConfig::new(cluster.clone(), system),
+    );
+    let wall = t0.elapsed().as_secs_f64();
+    let mut table = Table::new("simulation report", &["metric", "value"]);
+    let meets = rep.meets_slo(cluster.slo.ttft_p95);
+    let rows: Vec<(&str, String)> = vec![
+        ("completed", rep.completed.to_string()),
+        ("timeouts", rep.timeouts.to_string()),
+        ("throughput", format!("{:.2} req/s", rep.throughput_rps())),
+        ("ttft p50", fmt_secs(rep.ttft.p50())),
+        ("ttft p95", fmt_secs(rep.ttft_p95())),
+        ("tbt p50", fmt_secs(rep.tbt.p50())),
+        ("tbt p95", fmt_secs(rep.tbt_p95())),
+        ("meets slo", meets.to_string()),
+        ("rebalances", rep.rebalances.to_string()),
+        ("migrated", fmt_bytes(rep.migration_bytes)),
+        ("fetches", rep.fetches.to_string()),
+        (
+            "max resident adapters",
+            rep.per_server_max_adapters
+                .iter()
+                .max()
+                .copied()
+                .unwrap_or(0)
+                .to_string(),
+        ),
+        ("sim wall time", format!("{wall:.2}s")),
+    ];
+    for (k, v) in rows {
+        table.row(vec![k.to_string(), v]);
+    }
+    println!("{}", table.to_markdown());
+    for s in 0..cluster.n_servers {
+        println!(
+            "  server {s}: n={:5} p50={} p95={} busy={:.0}s max_adapters={} hi_frac={:.2}",
+            rep.per_server_ttft[s].len(),
+            fmt_secs(rep.per_server_ttft[s].p50()),
+            fmt_secs(rep.per_server_ttft[s].p95()),
+            rep.per_server_busy[s],
+            rep.per_server_max_adapters[s],
+            rep.per_server_highrank_frac[s],
+        );
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    let kind = args.get_or("kind", "prod");
+    let n_adapters = args.get_usize("adapters", 100)?;
+    let seed = args.get_u64("seed", 0)?;
+    let trace = match kind {
+        "prod" => production::generate(&production::ProductionConfig {
+            n_adapters,
+            seed,
+            ..Default::default()
+        }),
+        "azure" => azure::generate(&azure::AzureConfig {
+            seed,
+            ..Default::default()
+        }),
+        other => return Err(format!("unknown kind '{other}'")),
+    };
+    println!(
+        "trace '{}': {} requests over {:.0}s, {} adapters",
+        trace.name,
+        trace.requests.len(),
+        trace.duration(),
+        trace.adapters.len()
+    );
+    let shares =
+        loraserve::trace::characterize::rank_request_shares(&trace);
+    for (rank, s) in shares {
+        println!("  rank {rank:3}: {:.1}% of requests", s * 100.0);
+    }
+    if let Some(out) = args.get("out") {
+        trace.save_csv(out).map_err(|e| e.to_string())?;
+        println!("written {out}");
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<(), String> {
+    let cluster = build_cluster(args)?;
+    let ops = if args.flag("empirical") {
+        loraserve::sim::profile::empirical_operating_points(
+            &cluster.server,
+            &loraserve::workload::RANK_CLASSES,
+            cluster.slo.ttft_p95,
+        )
+    } else {
+        loraserve::costmodel::operating_points(
+            &cluster.server,
+            &loraserve::workload::RANK_CLASSES,
+        )
+    };
+    let mut table = Table::new(
+        &format!(
+            "operating points — {} TP{}",
+            cluster.server.model.name, cluster.server.tp
+        ),
+        &["rank", "tokens/s under SLO"],
+    );
+    for (rank, tps) in ops {
+        table.row(vec![rank.to_string(), format!("{tps:.0}")]);
+    }
+    println!("{}", table.to_markdown());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    // thin wrapper over the E2E example path
+    let n_servers = args.get_usize("servers", 2)?;
+    let n_requests = args.get_usize("requests", 40)?;
+    let duration = args.get_f64("duration", 15.0)?;
+    let seed = args.get_u64("seed", 0)?;
+    let system = parse_system(args.get_or("system", "loraserve"))?;
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    let mut cluster = loraserve::server::RealCluster::start(
+        loraserve::server::RealClusterConfig {
+            n_servers,
+            artifacts_dir: dir,
+            system,
+            rebalance_period: duration / 4.0,
+            seed,
+        },
+    )
+    .map_err(|e| format!("{e:#}"))?;
+    let ranks: Vec<u32> =
+        cluster.adapters.iter().map(|a| a.rank).collect();
+    let mut rng = loraserve::util::rng::Pcg32::with_stream(seed, 0x5e);
+    let workload: Vec<loraserve::server::cluster::TimedRequest> = (0
+        ..n_requests)
+        .map(|i| {
+            let plen = 8 + rng.below(24) as usize;
+            loraserve::server::cluster::TimedRequest {
+                at: duration * i as f64 / n_requests as f64,
+                adapter: rng.below(ranks.len() as u64) as u32,
+                prompt: (0..plen)
+                    .map(|_| 1 + rng.below(500) as i32)
+                    .collect(),
+                output_len: 4 + rng.below(8) as usize,
+            }
+        })
+        .collect();
+    let rep = cluster.run(&workload).map_err(|e| format!("{e:#}"))?;
+    cluster.shutdown();
+    let mut ttft = rep.ttft.clone();
+    let mut tbt = rep.tbt.clone();
+    println!(
+        "{}: {} completed, {:.2} req/s, ttft p95 {}, tbt p50 {}",
+        rep.system,
+        rep.completed,
+        rep.throughput_rps(),
+        fmt_secs(ttft.p95()),
+        fmt_secs(tbt.p50()),
+    );
+    Ok(())
+}

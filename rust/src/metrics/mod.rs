@@ -1,0 +1,5 @@
+//! Re-exports of the metric primitives (kept as a stable public path;
+//! the implementations live in `util::stats` and `sim::report`).
+
+pub use crate::sim::report::SimReport;
+pub use crate::util::stats::{Histogram, Samples};

@@ -1,0 +1,160 @@
+//! Baseline placements (§V-D): S-LoRA Random and S-LoRA Contiguous.
+//! (Toppings is a request-level router, not a placement — it lives in
+//! `coordinator::router` and replicates every adapter on every server.)
+
+use super::{Assignment, PlacementCtx, Placer};
+use crate::util::rng::Pcg32;
+
+/// *S-LoRA Random*: each adapter is statically assigned to one
+/// uniformly random server — "resembles the placement used at
+/// Company X".
+#[derive(Debug, Clone)]
+pub struct RandomPlacer {
+    rng: Pcg32,
+    /// Static: place once, then keep returning the same assignment.
+    cached: Option<Assignment>,
+}
+
+impl RandomPlacer {
+    pub fn new(seed: u64) -> Self {
+        RandomPlacer {
+            rng: Pcg32::with_stream(seed, 0x5a0d),
+            cached: None,
+        }
+    }
+}
+
+impl Placer for RandomPlacer {
+    fn name(&self) -> &'static str {
+        "slora-random"
+    }
+
+    fn place(&mut self, ctx: &PlacementCtx) -> Assignment {
+        if let Some(a) = &self.cached {
+            if a.shares.len() == ctx.adapters.len() {
+                return a.clone();
+            }
+        }
+        let mut asg = Assignment::new(ctx.adapters.len());
+        for a in ctx.adapters.iter() {
+            let s = self.rng.below(ctx.n_servers as u64) as usize;
+            asg.add(a.id, s, 1.0);
+        }
+        self.cached = Some(asg.clone());
+        asg
+    }
+}
+
+/// *S-LoRA Contiguous*: adapters ordered by rank, split into
+/// equal-count contiguous chunks, one chunk per server — co-locates
+/// similar ranks but ignores demand.
+#[derive(Debug, Clone, Default)]
+pub struct ContiguousPlacer {
+    cached: Option<Assignment>,
+}
+
+impl ContiguousPlacer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Placer for ContiguousPlacer {
+    fn name(&self) -> &'static str {
+        "slora-contiguous"
+    }
+
+    fn place(&mut self, ctx: &PlacementCtx) -> Assignment {
+        if let Some(a) = &self.cached {
+            if a.shares.len() == ctx.adapters.len() {
+                return a.clone();
+            }
+        }
+        let mut order: Vec<u32> =
+            (0..ctx.adapters.len() as u32).collect();
+        order.sort_by_key(|&a| (ctx.adapters.get(a).rank, a));
+        let n = ctx.n_servers;
+        let per = order.len().div_ceil(n);
+        let mut asg = Assignment::new(ctx.adapters.len());
+        for (i, &a) in order.iter().enumerate() {
+            let s = (i / per.max(1)).min(n - 1);
+            asg.add(a, s, 1.0);
+        }
+        self.cached = Some(asg.clone());
+        asg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::testutil::random_ctx;
+
+    #[test]
+    fn random_is_valid_and_static() {
+        let data = random_ctx(3, 50, 4);
+        let mut p = RandomPlacer::new(9);
+        let a1 = p.place(&data.ctx());
+        a1.validate(4).unwrap();
+        // single server per adapter
+        for ss in &a1.shares {
+            assert_eq!(ss.len(), 1);
+        }
+        // static across calls (no churn on rebalance)
+        let a2 = p.place(&data.ctx());
+        assert_eq!(a1, a2);
+        // different seeds give different placements
+        let a3 = RandomPlacer::new(10).place(&data.ctx());
+        assert_ne!(a1, a3);
+    }
+
+    #[test]
+    fn random_roughly_balanced_in_count() {
+        let data = random_ctx(5, 400, 4);
+        let a = RandomPlacer::new(1).place(&data.ctx());
+        for s in 0..4 {
+            let c = a.adapters_on(s).len();
+            assert!((60..=140).contains(&c), "server {s}: {c}");
+        }
+    }
+
+    #[test]
+    fn contiguous_homogeneous_chunks() {
+        let data = random_ctx(7, 100, 5);
+        let a = ContiguousPlacer::new().place(&data.ctx());
+        a.validate(5).unwrap();
+        // each server hosts a contiguous rank range: max rank of server
+        // s <= min rank of server s+1
+        let mut ranges = Vec::new();
+        for s in 0..5 {
+            let ranks: Vec<u32> = a
+                .adapters_on(s)
+                .iter()
+                .map(|&ad| data.adapters.get(ad).rank)
+                .collect();
+            let min = *ranks.iter().min().unwrap();
+            let max = *ranks.iter().max().unwrap();
+            ranges.push((min, max));
+        }
+        for w in ranges.windows(2) {
+            assert!(w[0].1 <= w[1].0, "{ranges:?}");
+        }
+        // heterogeneity lower than random
+        let r = RandomPlacer::new(2).place(&data.ctx());
+        let h = |x: &Assignment| {
+            x.heterogeneity(5, &data.adapters).iter().sum::<usize>()
+        };
+        assert!(h(&a) <= h(&r));
+    }
+
+    #[test]
+    fn contiguous_counts_balanced() {
+        let data = random_ctx(11, 103, 4);
+        let a = ContiguousPlacer::new().place(&data.ctx());
+        let counts: Vec<usize> =
+            (0..4).map(|s| a.adapters_on(s).len()).collect();
+        let max = counts.iter().max().unwrap();
+        let min = counts.iter().min().unwrap();
+        assert!(max - min <= 26, "{counts:?}");
+    }
+}

@@ -1,0 +1,204 @@
+//! Fractional bin packing (Algorithm 1 step 3).
+//!
+//! Packs items with sizes (utilization units) into bins of equal
+//! capacity, first-fit-decreasing, *splitting* an item across bins when
+//! it doesn't fit — the split fractions become the routing φ's. Items
+//! larger than one bin's capacity spread over several bins.
+
+/// One packed piece: (item index, bin index, fraction of the item).
+pub type Piece = (usize, usize, f64);
+
+/// Pack `sizes` into `n_bins` bins of `capacity`. Returns the pieces
+/// and the indices of items that could not be (fully) packed because
+/// the bins ran out. Zero-size items are packed whole onto the
+/// currently-least-loaded bin (they consume no capacity but must live
+/// somewhere).
+pub fn fractional_pack(
+    sizes: &[f64],
+    n_bins: usize,
+    capacity: f64,
+) -> (Vec<Piece>, Vec<usize>) {
+    assert!(capacity >= 0.0);
+    let mut pieces = Vec::new();
+    let mut leftovers = Vec::new();
+    if n_bins == 0 {
+        return (pieces, (0..sizes.len()).collect());
+    }
+
+    let mut order: Vec<usize> = (0..sizes.len()).collect();
+    order.sort_by(|&a, &b| sizes[b].partial_cmp(&sizes[a]).unwrap());
+
+    let mut load = vec![0.0f64; n_bins];
+    let mut bin = 0usize;
+    for &i in &order {
+        let size = sizes[i];
+        // sizes below the packing epsilon are parked like zero-demand
+        // items (they would otherwise fall through both the packing
+        // loop and the leftover check)
+        if size <= 1e-12 {
+            // zero-demand adapter: park on the least-loaded bin
+            let target = (0..n_bins)
+                .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
+                .unwrap();
+            pieces.push((i, target, 1.0));
+            continue;
+        }
+        let mut remaining = size;
+        while remaining > 1e-12 && bin < n_bins {
+            let free = capacity - load[bin];
+            if free <= 1e-12 {
+                bin += 1;
+                continue;
+            }
+            let take = remaining.min(free);
+            load[bin] += take;
+            pieces.push((i, bin, take / size));
+            remaining -= take;
+        }
+        if remaining > 1e-9 * size.max(1.0) {
+            // Ran out of bins: the caller re-routes whole leftover
+            // items, so drop this item's partial pieces (keeping Σφ = 1
+            // for everything packed) and give their load back to the
+            // exact bins that held them.
+            let mut removed: Vec<(usize, f64)> = Vec::new();
+            pieces.retain(|&(item, b, f)| {
+                if item == i {
+                    removed.push((b, f));
+                    false
+                } else {
+                    true
+                }
+            });
+            for (b, f) in removed {
+                load[b] -= f * size;
+            }
+            leftovers.push(i);
+        }
+    }
+    (pieces, leftovers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use std::collections::BTreeMap;
+
+    fn check_invariants(
+        sizes: &[f64],
+        n_bins: usize,
+        capacity: f64,
+        pieces: &[Piece],
+        leftovers: &[usize],
+    ) {
+        // every non-leftover item's fractions sum to 1
+        let mut frac: BTreeMap<usize, f64> = BTreeMap::new();
+        let mut load = vec![0.0; n_bins];
+        for &(i, b, f) in pieces {
+            assert!(b < n_bins);
+            assert!(f > 0.0 && f <= 1.0 + 1e-9);
+            *frac.entry(i).or_insert(0.0) += f;
+            load[b] += f * sizes[i];
+        }
+        for (i, &size) in sizes.iter().enumerate() {
+            let total = frac.get(&i).copied().unwrap_or(0.0);
+            if leftovers.contains(&i) {
+                assert_eq!(total, 0.0, "leftover {i} has pieces");
+            } else {
+                assert!(
+                    (total - 1.0).abs() < 1e-6,
+                    "item {i} (size {size}) frac {total}"
+                );
+            }
+        }
+        for (b, &l) in load.iter().enumerate() {
+            assert!(l <= capacity * (1.0 + 1e-6), "bin {b} load {l}");
+        }
+    }
+
+    #[test]
+    fn simple_split() {
+        // capacity 1.0: item of 1.5 splits 1.0 + 0.5
+        let sizes = [1.5, 0.4];
+        let (pieces, leftovers) = fractional_pack(&sizes, 2, 1.0);
+        assert!(leftovers.is_empty());
+        check_invariants(&sizes, 2, 1.0, &pieces, &leftovers);
+        // item 0 spans both bins
+        let bins0: Vec<usize> = pieces
+            .iter()
+            .filter(|p| p.0 == 0)
+            .map(|p| p.1)
+            .collect();
+        assert_eq!(bins0.len(), 2);
+    }
+
+    #[test]
+    fn overflow_becomes_leftover() {
+        let sizes = [1.0, 1.0, 1.0];
+        let (pieces, leftovers) = fractional_pack(&sizes, 2, 1.0);
+        assert_eq!(leftovers.len(), 1);
+        check_invariants(&sizes, 2, 1.0, &pieces, &leftovers);
+    }
+
+    #[test]
+    fn zero_bins_all_leftover() {
+        let (pieces, leftovers) = fractional_pack(&[0.5, 0.5], 0, 1.0);
+        assert!(pieces.is_empty());
+        assert_eq!(leftovers, vec![0, 1]);
+    }
+
+    #[test]
+    fn subepsilon_items_parked_whole() {
+        let sizes = [1e-14, 0.5];
+        let (pieces, leftovers) = fractional_pack(&sizes, 1, 1.0);
+        assert!(leftovers.is_empty());
+        let item0: Vec<_> =
+            pieces.iter().filter(|p| p.0 == 0).collect();
+        assert_eq!(item0.len(), 1);
+        assert_eq!(item0[0].2, 1.0);
+    }
+
+    #[test]
+    fn zero_size_items_parked() {
+        let sizes = [0.0, 0.9, 0.0];
+        let (pieces, leftovers) = fractional_pack(&sizes, 2, 1.0);
+        assert!(leftovers.is_empty());
+        check_invariants(&sizes, 2, 1.0, &pieces, &leftovers);
+        // zero items placed whole
+        for &(i, _, f) in &pieces {
+            if sizes[i] == 0.0 {
+                assert_eq!(f, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn property_random_instances() {
+        let mut rng = Pcg32::new(123);
+        for case in 0..300 {
+            let n_items = 1 + rng.below(20) as usize;
+            let n_bins = rng.below(6) as usize;
+            let capacity = rng.range_f64(0.5, 3.0);
+            let sizes: Vec<f64> = (0..n_items)
+                .map(|_| {
+                    if rng.f64() < 0.15 {
+                        0.0
+                    } else {
+                        rng.range_f64(0.01, 2.5)
+                    }
+                })
+                .collect();
+            let (pieces, leftovers) =
+                fractional_pack(&sizes, n_bins, capacity);
+            check_invariants(&sizes, n_bins, capacity, &pieces, &leftovers);
+            // if total size fits comfortably, nothing is leftover
+            let total: f64 = sizes.iter().sum();
+            if n_bins > 0 && total <= capacity * n_bins as f64 * 0.999 {
+                assert!(
+                    leftovers.is_empty(),
+                    "case {case}: total={total} cap={capacity}x{n_bins} leftovers={leftovers:?}"
+                );
+            }
+        }
+    }
+}

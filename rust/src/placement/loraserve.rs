@@ -1,0 +1,478 @@
+//! Algorithm 1: the LORASERVE rank-aware, demand-aware placer.
+//!
+//! Steps (paper §IV-A):
+//!  1. estimate per-adapter TPS demand and the average target
+//!     utilization per server (demand extrapolation happens upstream in
+//!     `coordinator::demand`; this placer consumes projected TPS);
+//!  2. compute each rank's *server budget* — how many whole servers the
+//!     rank's aggregate utilization deserves;
+//!  3. fractionally bin-pack each budgeted rank's adapters into its
+//!     servers (splits become routing φ's);
+//!  4. allocate leftovers (zero-budget ranks, overflow) to the server
+//!     with the highest max resident rank, least-utilized first —
+//!     keeping big-rank adapters away from small-rank servers;
+//!  5. permute the new placement's server labels to maximize overlap
+//!     with the previous placement (minimizes migration bytes);
+//!  6. emit the routing table (done by the coordinator from the
+//!     returned `Assignment`).
+
+
+use super::{Assignment, PlacementCtx, Placer};
+use crate::workload::AdapterId;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct LoraServePlacer {
+    /// Disable step 5 (ablation A2 in DESIGN.md §8).
+    pub skip_permutation: bool,
+}
+
+impl LoraServePlacer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Placer for LoraServePlacer {
+    fn name(&self) -> &'static str {
+        "loraserve"
+    }
+
+    fn place(&mut self, ctx: &PlacementCtx) -> Assignment {
+        let n = ctx.n_servers;
+        let adapters = ctx.adapters;
+        assert!(n > 0 && !adapters.is_empty());
+
+        // ---- step 1: per-rank utilization and target utilization
+        let util_of = |a: AdapterId| -> f64 {
+            let adapter = adapters.get(a);
+            let demand = ctx.demand_tps.get(&a).copied().unwrap_or(0.0);
+            let op = ctx
+                .operating_points
+                .get(&adapter.rank)
+                .copied()
+                .unwrap_or(f64::INFINITY);
+            demand / op
+        };
+        let ranks = adapters.unique_ranks();
+        let mut rank_util: BTreeMap<u32, f64> = BTreeMap::new();
+        for a in adapters.iter() {
+            *rank_util.entry(a.rank).or_insert(0.0) += util_of(a.id);
+        }
+        let total_util: f64 = rank_util.values().sum();
+        // Guard: an idle cluster still needs a placement; use a uniform
+        // nominal utilization so packing degenerates gracefully.
+        let target_util = if total_util > 1e-9 {
+            total_util / n as f64
+        } else {
+            1.0
+        };
+
+        // ---- step 2: server budget per rank (ROUND + repair) — kept
+        // for reporting and for sizing intuition; the packing below
+        // realizes these budgets implicitly (a rank's contiguous span
+        // covers ~util/target servers).
+        let mut budget: BTreeMap<u32, usize> = BTreeMap::new();
+        for &r in &ranks {
+            let b = (rank_util[&r] / target_util).round() as usize;
+            budget.insert(r, b);
+        }
+        repair_budgets(&mut budget, &rank_util, target_util, n);
+
+        // ---- steps 3+4: rank-contiguous *stream* packing. Adapters
+        // are laid out grouped by rank (descending), demand-sorted
+        // within each rank, and the stream is cut into n bins of
+        // exactly targetUtil, splitting an adapter across consecutive
+        // servers at each cut (the split fractions are the routing
+        // φ's). By construction every server lands on the average
+        // utilization and at most two adjacent rank classes share a
+        // boundary server — the minimal heterogeneity achievable when
+        // ranks outnumber servers (Fig 12's LORASERVE picture).
+        // Low-demand ranks occupy slivers of shared servers rather
+        // than dedicated ones ("co-locating low-demand adapters").
+        //
+        // Mixing-aware pricing: a piece placed on a server whose max
+        // resident rank exceeds its own is consumed at the *server's*
+        // rank price (its requests co-batch to the server's max rank —
+        // the pad-to-max-rank tax). Since mixing inflates the total
+        // effective utilization, the packing runs a short fixed-point:
+        // pack, recompute the inflated total, repack with the larger
+        // target.
+        let op_of_rank = |r: u32| -> f64 {
+            ctx.operating_points
+                .get(&r)
+                .copied()
+                .unwrap_or(f64::INFINITY)
+        };
+        let mut ranks_desc = ranks.clone();
+        ranks_desc.sort_unstable_by(|a, b| b.cmp(a));
+        const EPS: f64 = 1e-12;
+
+        let pack = |target: f64| -> (Assignment, f64) {
+            let mut assignment = Assignment::new(adapters.len());
+            let mut server_util = vec![0.0f64; n];
+            let mut bin_max_rank = vec![0u32; n];
+            let mut bin = 0usize;
+            for &r in &ranks_desc {
+                let mut members: Vec<(AdapterId, f64)> = adapters
+                    .iter()
+                    .filter(|a| a.rank == r)
+                    .map(|a| {
+                        (a.id, ctx.demand_tps.get(&a.id).copied().unwrap_or(0.0))
+                    })
+                    .collect();
+                members.sort_by(|a, b| {
+                    b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+                });
+                let rank_first_bin = bin;
+                for &(a, demand) in &members {
+                    if demand / op_of_rank(r) <= EPS {
+                        continue; // zero-demand: parked below
+                    }
+                    let mut remaining = demand; // in tokens/sec
+                    while remaining > EPS * op_of_rank(r) {
+                        if bin_max_rank[bin] == 0 {
+                            bin_max_rank[bin] = r;
+                        }
+                        // price at the server's max rank (co-batching)
+                        let op = op_of_rank(bin_max_rank[bin].max(r));
+                        let free = target - server_util[bin];
+                        if free <= EPS {
+                            if bin + 1 < n {
+                                bin += 1;
+                                continue;
+                            }
+                            // stream residue (fixed-point error):
+                            // water-fill onto the least-loaded server
+                            // instead of melting the last one
+                            let lightest = (0..n)
+                                .min_by(|&x, &y| {
+                                    server_util[x]
+                                        .partial_cmp(&server_util[y])
+                                        .unwrap()
+                                })
+                                .unwrap();
+                            if bin_max_rank[lightest] == 0 {
+                                bin_max_rank[lightest] = r;
+                            }
+                            let op2 = op_of_rank(
+                                bin_max_rank[lightest].max(r),
+                            );
+                            assignment.add(a, lightest, remaining / demand);
+                            server_util[lightest] += remaining / op2;
+                            remaining = 0.0;
+                            continue;
+                        }
+                        let take_demand = remaining.min(free * op);
+                        assignment.add(a, bin, take_demand / demand);
+                        server_util[bin] += take_demand / op;
+                        remaining -= take_demand;
+                    }
+                }
+                // zero-demand members: park on the least-loaded server
+                // of this rank's span (no utilization added)
+                let rank_last_bin = bin;
+                for &(a, demand) in &members {
+                    if demand / op_of_rank(r) > EPS {
+                        continue;
+                    }
+                    let t = (rank_first_bin..=rank_last_bin)
+                        .min_by(|&x, &y| {
+                            server_util[x]
+                                .partial_cmp(&server_util[y])
+                                .unwrap()
+                        })
+                        .unwrap_or(bin);
+                    assignment.add(a, t, 1.0);
+                }
+            }
+            (assignment, server_util.iter().sum())
+        };
+
+        // short fixed point on the mixing-inflated target
+        let mut target = target_util;
+        let mut assignment = Assignment::new(adapters.len());
+        for _ in 0..4 {
+            let (asg, total_eff) = pack(target);
+            assignment = asg;
+            let next = (total_eff / n as f64).max(target_util);
+            if (next - target).abs() <= 0.01 * target {
+                break;
+            }
+            target = next;
+        }
+
+        assignment.normalize();
+
+        // ---- step 5: permute server labels to match prev assignment
+        if let (false, Some(prev)) = (self.skip_permutation, ctx.prev) {
+            assignment =
+                permute_to_match(&assignment, prev, ctx.adapters, n);
+        }
+        #[cfg(debug_assertions)]
+        if let Err(e) = assignment.validate(n) {
+            panic!("loraserve placement invalid: {e}");
+        }
+        assignment
+    }
+}
+
+/// Repair rank budgets after rounding so Σ budgets ≤ n and every unit
+/// of leftover capacity goes to the most-utilized ranks.
+fn repair_budgets(
+    budget: &mut BTreeMap<u32, usize>,
+    rank_util: &BTreeMap<u32, f64>,
+    target_util: f64,
+    n: usize,
+) {
+    // shrink: while over budget, decrement the rank whose last server
+    // is least justified (smallest util/budget ratio)
+    loop {
+        let total: usize = budget.values().sum();
+        if total <= n {
+            break;
+        }
+        let victim = budget
+            .iter()
+            .filter(|(_, &b)| b > 0)
+            .min_by(|(r1, &b1), (r2, &b2)| {
+                let j1 = rank_util[r1] - (b1 as f64 - 1.0) * target_util;
+                let j2 = rank_util[r2] - (b2 as f64 - 1.0) * target_util;
+                j1.partial_cmp(&j2).unwrap()
+            })
+            .map(|(r, _)| *r)
+            .expect("over budget but no positive budgets");
+        *budget.get_mut(&victim).unwrap() -= 1;
+    }
+    // grow: hand spare servers to the rank with most residual util
+    loop {
+        let total: usize = budget.values().sum();
+        if total >= n {
+            break;
+        }
+        let winner = budget
+            .iter()
+            .max_by(|(r1, &b1), (r2, &b2)| {
+                let res1 = rank_util[r1] - b1 as f64 * target_util;
+                let res2 = rank_util[r2] - b2 as f64 * target_util;
+                res1.partial_cmp(&res2).unwrap()
+            })
+            .map(|(r, _)| *r)
+            .unwrap();
+        *budget.get_mut(&winner).unwrap() += 1;
+    }
+}
+
+/// Step 5: relabel servers in `next` to maximize byte overlap with
+/// `prev` (greedy maximum matching on the overlap matrix).
+fn permute_to_match(
+    next: &Assignment,
+    prev: &Assignment,
+    adapters: &crate::workload::AdapterSet,
+    n: usize,
+) -> Assignment {
+    // overlap[new][old] = bytes of adapters on both
+    let mut overlap = vec![vec![0u64; n]; n];
+    for (a, ss) in next.shares.iter().enumerate() {
+        let bytes = adapters.get(a as AdapterId).size_bytes;
+        let old_servers: Vec<usize> = prev
+            .shares
+            .get(a)
+            .map(|v| v.iter().map(|(s, _)| *s).collect())
+            .unwrap_or_default();
+        for &(s_new, _) in ss {
+            for &s_old in &old_servers {
+                overlap[s_new][s_old] += bytes;
+            }
+        }
+    }
+    // greedy: repeatedly take the largest overlap pair
+    let mut mapping = vec![usize::MAX; n]; // new -> old label
+    let mut used_old = vec![false; n];
+    let mut used_new = vec![false; n];
+    for _ in 0..n {
+        let mut best = (0usize, 0usize, 0u64);
+        let mut found = false;
+        for s_new in 0..n {
+            if used_new[s_new] {
+                continue;
+            }
+            for s_old in 0..n {
+                if used_old[s_old] {
+                    continue;
+                }
+                if !found || overlap[s_new][s_old] > best.2 {
+                    best = (s_new, s_old, overlap[s_new][s_old]);
+                    found = true;
+                }
+            }
+        }
+        if !found {
+            break;
+        }
+        mapping[best.0] = best.1;
+        used_new[best.0] = true;
+        used_old[best.1] = true;
+    }
+    // any unmatched new slots get remaining old labels
+    let mut spare: Vec<usize> =
+        (0..n).filter(|&s| !used_old[s]).collect();
+    for m in mapping.iter_mut() {
+        if *m == usize::MAX {
+            *m = spare.pop().expect("label underflow");
+        }
+    }
+
+    let mut out = Assignment::new(next.shares.len());
+    for (a, ss) in next.shares.iter().enumerate() {
+        for &(s, phi) in ss {
+            out.add(a as AdapterId, mapping[s], phi);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::testutil::random_ctx;
+
+    #[test]
+    fn valid_assignment_across_random_instances() {
+        for seed in 0..40 {
+            let data = random_ctx(seed, 5 + (seed as usize * 7) % 120, 1 + (seed as usize) % 12);
+            let mut placer = LoraServePlacer::new();
+            let asg = placer.place(&data.ctx());
+            asg.validate(data.n_servers)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+    }
+
+    #[test]
+    fn load_balanced_within_tolerance() {
+        // with many adapters, expected utils should be near-uniform
+        let data = random_ctx(7, 100, 4);
+        let mut placer = LoraServePlacer::new();
+        let asg = placer.place(&data.ctx());
+        let utils = asg.server_utils(
+            4,
+            &data.adapters,
+            &data.demand,
+            &data.oppoints,
+        );
+        let mean: f64 = utils.iter().sum::<f64>() / 4.0;
+        for (s, &u) in utils.iter().enumerate() {
+            assert!(
+                u < mean * 1.8 + 1e-9,
+                "server {s} util {u} vs mean {mean} ({utils:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn reduces_heterogeneity_vs_random() {
+        use crate::placement::baselines::RandomPlacer;
+        let data = random_ctx(11, 60, 4);
+        let mut ls = LoraServePlacer::new();
+        let mut rnd = RandomPlacer::new(0);
+        let a_ls = ls.place(&data.ctx());
+        let a_rnd = rnd.place(&data.ctx());
+        let het = |a: &Assignment| -> f64 {
+            let h = a.heterogeneity(4, &data.adapters);
+            h.iter().sum::<usize>() as f64 / 4.0
+        };
+        assert!(
+            het(&a_ls) < het(&a_rnd),
+            "loraserve {} !< random {}",
+            het(&a_ls),
+            het(&a_rnd)
+        );
+    }
+
+    #[test]
+    fn hot_adapter_splits_across_servers() {
+        // one adapter with demand far above a single server's capacity
+        let mut data = random_ctx(13, 10, 4);
+        let hot = 0u32;
+        let op = data.oppoints[&data.adapters.get(hot).rank];
+        data.demand.insert(hot, op * 3.0); // needs ~3 servers
+        for a in 1..10u32 {
+            data.demand.insert(a, 1.0);
+        }
+        let mut placer = LoraServePlacer::new();
+        let asg = placer.place(&data.ctx());
+        assert!(
+            asg.servers_of(hot).len() >= 2,
+            "hot adapter on {:?}",
+            asg.servers_of(hot)
+        );
+        asg.validate(4).unwrap();
+    }
+
+    #[test]
+    fn permutation_reduces_migration() {
+        let data = random_ctx(17, 80, 6);
+        let mut placer = LoraServePlacer::new();
+        let prev = placer.place(&data.ctx());
+
+        // drift the demand a little and re-place with/without step 5
+        let mut drifted = data.demand.clone();
+        for (i, (_, d)) in drifted.iter_mut().enumerate() {
+            *d *= 1.0 + 0.1 * ((i % 5) as f64 - 2.0);
+            *d = d.max(0.0);
+        }
+        let ctx = crate::placement::PlacementCtx {
+            adapters: &data.adapters,
+            n_servers: data.n_servers,
+            demand_tps: &drifted,
+            operating_points: &data.oppoints,
+            prev: Some(&prev),
+        };
+        let with_perm = LoraServePlacer::new().place(&ctx);
+        let without = LoraServePlacer {
+            skip_permutation: true,
+        }
+        .place(&ctx);
+        let m_with = with_perm.migration_bytes(&prev, &data.adapters);
+        let m_without = without.migration_bytes(&prev, &data.adapters);
+        assert!(
+            m_with <= m_without,
+            "with={m_with} without={m_without}"
+        );
+        with_perm.validate(data.n_servers).unwrap();
+    }
+
+    #[test]
+    fn zero_demand_cluster_still_places_everything() {
+        let mut data = random_ctx(19, 30, 4);
+        for (_, d) in data.demand.iter_mut() {
+            *d = 0.0;
+        }
+        let asg = LoraServePlacer::new().place(&data.ctx());
+        asg.validate(4).unwrap();
+    }
+
+    #[test]
+    fn single_server_cluster() {
+        let data = random_ctx(23, 20, 1);
+        let asg = LoraServePlacer::new().place(&data.ctx());
+        asg.validate(1).unwrap();
+        for a in 0..20u32 {
+            assert_eq!(asg.servers_of(a), &[(0usize, 1.0)]);
+        }
+    }
+
+    #[test]
+    fn budgets_repair_to_cluster_size() {
+        let mut budget: BTreeMap<u32, usize> = BTreeMap::new();
+        budget.insert(8, 3);
+        budget.insert(128, 3);
+        let mut util = BTreeMap::new();
+        util.insert(8u32, 2.6);
+        util.insert(128u32, 2.9);
+        repair_budgets(&mut budget, &util, 1.0, 4);
+        assert_eq!(budget.values().sum::<usize>(), 4);
+        // the rank with more residual util keeps more servers
+        assert!(budget[&128] >= budget[&8]);
+    }
+}

@@ -1,0 +1,318 @@
+//! Adapter placement: the paper's contribution (Algorithm 1) and the
+//! baselines it is evaluated against (§V-D).
+//!
+//! A placement maps every adapter to one or more servers with
+//! fractional load shares φ (Σφ = 1 per adapter) — the tuples
+//! `(adapter_id, server_id, φ)` of the paper's routing table.
+
+pub mod baselines;
+pub mod binpack;
+pub mod loraserve;
+
+use crate::workload::{AdapterId, AdapterSet, ServerId};
+use std::collections::BTreeMap;
+
+/// Per-adapter server shares. Invariants (checked by `validate`):
+/// every adapter appears, shares are positive, Σφ = 1.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Assignment {
+    /// Indexed by adapter id (dense).
+    pub shares: Vec<Vec<(ServerId, f64)>>,
+}
+
+impl Assignment {
+    pub fn new(n_adapters: usize) -> Self {
+        Assignment {
+            shares: vec![Vec::new(); n_adapters],
+        }
+    }
+
+    pub fn add(&mut self, adapter: AdapterId, server: ServerId, phi: f64) {
+        debug_assert!(phi > 0.0);
+        let entry = &mut self.shares[adapter as usize];
+        if let Some(e) = entry.iter_mut().find(|(s, _)| *s == server) {
+            e.1 += phi;
+        } else {
+            entry.push((server, phi));
+        }
+    }
+
+    /// Servers hosting the adapter.
+    pub fn servers_of(&self, adapter: AdapterId) -> &[(ServerId, f64)] {
+        &self.shares[adapter as usize]
+    }
+
+    /// Set of adapters assigned to `server`.
+    pub fn adapters_on(&self, server: ServerId) -> Vec<AdapterId> {
+        self.shares
+            .iter()
+            .enumerate()
+            .filter(|(_, ss)| ss.iter().any(|(s, _)| *s == server))
+            .map(|(a, _)| a as AdapterId)
+            .collect()
+    }
+
+    /// Check the routing-table invariants. Returns an error string
+    /// describing the first violation.
+    pub fn validate(&self, n_servers: usize) -> Result<(), String> {
+        for (a, ss) in self.shares.iter().enumerate() {
+            if ss.is_empty() {
+                return Err(format!("adapter {a} unassigned"));
+            }
+            let mut total = 0.0;
+            for &(s, phi) in ss {
+                if s >= n_servers {
+                    return Err(format!("adapter {a}: bad server {s}"));
+                }
+                if phi <= 0.0 || phi > 1.0 + 1e-9 {
+                    return Err(format!("adapter {a}: bad phi {phi}"));
+                }
+                total += phi;
+            }
+            if (total - 1.0).abs() > 1e-6 {
+                return Err(format!("adapter {a}: Σφ = {total}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Normalize shares so Σφ = 1 exactly (fixes rounding drift).
+    pub fn normalize(&mut self) {
+        for ss in self.shares.iter_mut() {
+            let total: f64 = ss.iter().map(|(_, p)| p).sum();
+            if total > 0.0 {
+                for e in ss.iter_mut() {
+                    e.1 /= total;
+                }
+            }
+        }
+    }
+
+    /// Expected utilization per server given demands + operating points
+    /// (util of adapter a on server s = φ · demand_a / oppoint[rank_a]).
+    pub fn server_utils(
+        &self,
+        n_servers: usize,
+        adapters: &AdapterSet,
+        demand_tps: &BTreeMap<AdapterId, f64>,
+        oppoints: &BTreeMap<u32, f64>,
+    ) -> Vec<f64> {
+        let mut utils = vec![0.0; n_servers];
+        for (a, ss) in self.shares.iter().enumerate() {
+            let adapter = adapters.get(a as AdapterId);
+            let demand =
+                demand_tps.get(&(a as AdapterId)).copied().unwrap_or(0.0);
+            let op = oppoints.get(&adapter.rank).copied().unwrap_or(1.0);
+            for &(s, phi) in ss {
+                utils[s] += phi * demand / op;
+            }
+        }
+        utils
+    }
+
+    /// Max adapter rank hosted per server (u32::MIN=0 if none).
+    pub fn max_rank_per_server(
+        &self,
+        n_servers: usize,
+        adapters: &AdapterSet,
+    ) -> Vec<u32> {
+        let mut max_rank = vec![0u32; n_servers];
+        for (a, ss) in self.shares.iter().enumerate() {
+            let rank = adapters.get(a as AdapterId).rank;
+            for &(s, _) in ss {
+                max_rank[s] = max_rank[s].max(rank);
+            }
+        }
+        max_rank
+    }
+
+    /// Rank-heterogeneity score per server: number of distinct ranks
+    /// hosted (1 = perfectly homogeneous). Used by the Fig 12 harness.
+    pub fn heterogeneity(
+        &self,
+        n_servers: usize,
+        adapters: &AdapterSet,
+    ) -> Vec<usize> {
+        let mut ranks: Vec<std::collections::BTreeSet<u32>> =
+            vec![Default::default(); n_servers];
+        for (a, ss) in self.shares.iter().enumerate() {
+            let rank = adapters.get(a as AdapterId).rank;
+            for &(s, _) in ss {
+                ranks[s].insert(rank);
+            }
+        }
+        ranks.into_iter().map(|r| r.len()).collect()
+    }
+
+    /// Total bytes that must move to go from `prev` to `self`:
+    /// adapters newly appearing on a server they weren't on.
+    pub fn migration_bytes(&self, prev: &Assignment, adapters: &AdapterSet) -> u64 {
+        let mut bytes = 0;
+        for (a, ss) in self.shares.iter().enumerate() {
+            let old: Vec<ServerId> = prev
+                .shares
+                .get(a)
+                .map(|v| v.iter().map(|(s, _)| *s).collect())
+                .unwrap_or_default();
+            for &(s, _) in ss {
+                if !old.contains(&s) {
+                    bytes += adapters.get(a as AdapterId).size_bytes;
+                }
+            }
+        }
+        bytes
+    }
+}
+
+/// Inputs to a placement decision at one time step.
+pub struct PlacementCtx<'a> {
+    pub adapters: &'a AdapterSet,
+    pub n_servers: usize,
+    /// Projected tokens/sec demand per adapter (Algorithm 1 step 1).
+    pub demand_tps: &'a BTreeMap<AdapterId, f64>,
+    /// Profiled operating point (tokens/sec under SLO) per rank.
+    pub operating_points: &'a BTreeMap<u32, f64>,
+    /// Previous assignment, for churn minimization (step 5).
+    pub prev: Option<&'a Assignment>,
+}
+
+pub trait Placer {
+    fn name(&self) -> &'static str;
+    fn place(&mut self, ctx: &PlacementCtx) -> Assignment;
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::util::rng::Pcg32;
+    use crate::workload::RANK_CLASSES;
+
+    /// Random but reproducible placement context for property tests.
+    pub struct CtxData {
+        pub adapters: AdapterSet,
+        pub demand: BTreeMap<AdapterId, f64>,
+        pub oppoints: BTreeMap<u32, f64>,
+        pub n_servers: usize,
+    }
+
+    pub fn random_ctx(seed: u64, n_adapters: usize, n_servers: usize) -> CtxData {
+        let mut rng = Pcg32::new(seed);
+        let adapters = AdapterSet::power_law_counts(
+            n_adapters,
+            &RANK_CLASSES,
+            1.0,
+            &ModelSpec::LLAMA_7B,
+        );
+        let mut demand = BTreeMap::new();
+        for a in adapters.iter() {
+            // heavy-tailed demand incl. zero-demand adapters
+            let d = if rng.f64() < 0.2 {
+                0.0
+            } else {
+                rng.lognormal((200.0f64).ln(), 1.5)
+            };
+            demand.insert(a.id, d);
+        }
+        let oppoints = crate::costmodel::operating_points(
+            &crate::config::ServerConfig::default(),
+            &RANK_CLASSES,
+        );
+        CtxData {
+            adapters,
+            demand,
+            oppoints,
+            n_servers,
+        }
+    }
+
+    impl CtxData {
+        pub fn ctx(&self) -> PlacementCtx<'_> {
+            PlacementCtx {
+                adapters: &self.adapters,
+                n_servers: self.n_servers,
+                demand_tps: &self.demand,
+                operating_points: &self.oppoints,
+                prev: None,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+
+    fn tiny_adapters() -> AdapterSet {
+        AdapterSet::uniform_per_rank(4, &[8, 128], &ModelSpec::LLAMA_7B)
+    }
+
+    #[test]
+    fn add_merges_duplicate_servers() {
+        let mut a = Assignment::new(1);
+        a.add(0, 2, 0.5);
+        a.add(0, 2, 0.5);
+        assert_eq!(a.servers_of(0), &[(2, 1.0)]);
+    }
+
+    #[test]
+    fn validate_catches_violations() {
+        let mut a = Assignment::new(2);
+        a.add(0, 0, 1.0);
+        assert!(a.validate(4).unwrap_err().contains("unassigned"));
+        a.add(1, 0, 0.5);
+        assert!(a.validate(4).unwrap_err().contains("Σφ"));
+        a.add(1, 1, 0.5);
+        assert!(a.validate(4).is_ok());
+        assert!(a.validate(1).unwrap_err().contains("bad server"));
+    }
+
+    #[test]
+    fn normalize_fixes_drift() {
+        let mut a = Assignment::new(1);
+        a.add(0, 0, 0.3);
+        a.add(0, 1, 0.3);
+        a.normalize();
+        assert!(a.validate(2).is_ok());
+    }
+
+    #[test]
+    fn utils_and_ranks() {
+        let adapters = tiny_adapters(); // ids 0,1 rank 8; 2,3 rank 128
+        let mut asg = Assignment::new(4);
+        asg.add(0, 0, 1.0);
+        asg.add(1, 0, 1.0);
+        asg.add(2, 1, 0.5);
+        asg.add(2, 0, 0.5);
+        asg.add(3, 1, 1.0);
+        let mut demand = BTreeMap::new();
+        for id in 0..4 {
+            demand.insert(id, 100.0);
+        }
+        let mut op = BTreeMap::new();
+        op.insert(8u32, 100.0);
+        op.insert(128u32, 50.0);
+        let utils = asg.server_utils(2, &adapters, &demand, &op);
+        // server0: 1 + 1 + 0.5*(100/50)=1 => 3; server1: 1 + 2 = 3
+        assert!((utils[0] - 3.0).abs() < 1e-9);
+        assert!((utils[1] - 3.0).abs() < 1e-9);
+        assert_eq!(asg.max_rank_per_server(2, &adapters), vec![128, 128]);
+        assert_eq!(asg.heterogeneity(2, &adapters), vec![2, 1]);
+        assert_eq!(asg.adapters_on(0), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn migration_bytes_counts_new_copies() {
+        let adapters = tiny_adapters();
+        let mut prev = Assignment::new(4);
+        for id in 0..4 {
+            prev.add(id, 0, 1.0);
+        }
+        let mut next = prev.clone();
+        next.shares[3] = vec![(1, 1.0)]; // adapter 3 moves 0 -> 1
+        let bytes = next.migration_bytes(&prev, &adapters);
+        assert_eq!(bytes, adapters.get(3).size_bytes);
+        assert_eq!(prev.migration_bytes(&prev, &adapters), 0);
+    }
+}

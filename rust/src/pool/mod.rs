@@ -1,0 +1,361 @@
+//! Distributed adapter pool (§IV-B, Fig 13).
+//!
+//! Each server keeps only its assigned adapters in local host memory;
+//! the union across servers is the universal adapter set. On a routing
+//! miss the adapter is fetched from a peer over GPUDirect-RDMA and
+//! becomes resident; when a rebalance removes an adapter from a
+//! server's assignment it is deleted locally — but never while it is
+//! the last copy in the cluster (the coverage invariant).
+
+use crate::costmodel::{fetch_time, FetchSource};
+use crate::config::GpuSpec;
+use crate::workload::{AdapterId, AdapterSet, ServerId};
+use std::collections::BTreeSet;
+
+#[derive(Debug, Clone)]
+pub struct AdapterPool {
+    n_servers: usize,
+    /// resident[s] = adapters in server s's host memory.
+    resident: Vec<BTreeSet<AdapterId>>,
+    /// in-flight fetches per server.
+    fetching: Vec<BTreeSet<AdapterId>>,
+    /// desired state from the latest placement.
+    assigned: Vec<BTreeSet<AdapterId>>,
+    /// high-water mark of resident+fetching per server (Fig 18 bottom).
+    max_resident: Vec<usize>,
+    pub total_fetches: u64,
+    pub total_fetch_bytes: u64,
+}
+
+impl AdapterPool {
+    /// `initial` assigns each adapter's starting replicas (typically
+    /// from the first placement); those are resident immediately (the
+    /// paper's deployment loads the initial subset at startup).
+    pub fn new(n_servers: usize, initial: &[Vec<ServerId>]) -> Self {
+        let mut resident = vec![BTreeSet::new(); n_servers];
+        for (a, servers) in initial.iter().enumerate() {
+            assert!(!servers.is_empty(), "adapter {a} has no home");
+            for &s in servers {
+                resident[s].insert(a as AdapterId);
+            }
+        }
+        let max_resident = resident.iter().map(|r| r.len()).collect();
+        AdapterPool {
+            n_servers,
+            assigned: resident.clone(),
+            resident,
+            fetching: vec![BTreeSet::new(); n_servers],
+            max_resident,
+            total_fetches: 0,
+            total_fetch_bytes: 0,
+        }
+    }
+
+    /// Replicate everything everywhere (the Toppings baseline).
+    pub fn fully_replicated(n_servers: usize, n_adapters: usize) -> Self {
+        let initial: Vec<Vec<ServerId>> = (0..n_adapters)
+            .map(|_| (0..n_servers).collect())
+            .collect();
+        AdapterPool::new(n_servers, &initial)
+    }
+
+    pub fn is_resident(&self, server: ServerId, adapter: AdapterId) -> bool {
+        self.resident[server].contains(&adapter)
+    }
+
+    pub fn is_fetching(&self, server: ServerId, adapter: AdapterId) -> bool {
+        self.fetching[server].contains(&adapter)
+    }
+
+    pub fn resident_count(&self, server: ServerId) -> usize {
+        self.resident[server].len()
+    }
+
+    pub fn max_resident(&self, server: ServerId) -> usize {
+        self.max_resident[server]
+    }
+
+    /// Begin fetching `adapter` into `server`. Returns the transfer
+    /// time (the caller schedules the completion event), or None if it
+    /// is already resident/in flight. Panics if no replica exists
+    /// anywhere (coverage invariant broken upstream).
+    pub fn start_fetch(
+        &mut self,
+        server: ServerId,
+        adapter: AdapterId,
+        adapters: &AdapterSet,
+        gpu: &GpuSpec,
+    ) -> Option<f64> {
+        if self.is_resident(server, adapter) || self.is_fetching(server, adapter)
+        {
+            return None;
+        }
+        let source = self.find_replica(adapter).unwrap_or_else(|| {
+            panic!("adapter {adapter}: no replica left in cluster")
+        });
+        debug_assert_ne!(source, server);
+        let bytes = adapters.get(adapter).size_bytes;
+        self.fetching[server].insert(adapter);
+        self.bump_watermark(server);
+        self.total_fetches += 1;
+        self.total_fetch_bytes += bytes;
+        Some(fetch_time(gpu, FetchSource::RemoteRdma, bytes))
+    }
+
+    /// Complete an in-flight fetch: the adapter becomes resident and,
+    /// per Fig 13, source copies that are no longer assigned anywhere
+    /// can now be garbage collected.
+    pub fn finish_fetch(&mut self, server: ServerId, adapter: AdapterId) {
+        let was = self.fetching[server].remove(&adapter);
+        debug_assert!(was, "finish_fetch without start_fetch");
+        self.resident[server].insert(adapter);
+        self.bump_watermark(server);
+        // The freshly fetched copy is in active use (a request routed
+        // here), so it survives GC even if a rebalance has since moved
+        // the assignment; stale *source* copies are collected now.
+        self.gc_adapter_keeping(adapter, Some(server));
+    }
+
+    /// Apply a new placement: update desired sets and GC copies that
+    /// are neither assigned nor the last replica. New assignments are
+    /// *not* prefetched — the paper fetches on first access.
+    pub fn apply_assignment(&mut self, assigned: &[Vec<ServerId>]) {
+        for set in self.assigned.iter_mut() {
+            set.clear();
+        }
+        for (a, servers) in assigned.iter().enumerate() {
+            for &s in servers {
+                self.assigned[s].insert(a as AdapterId);
+            }
+        }
+        for a in 0..assigned.len() {
+            self.gc_adapter(a as AdapterId);
+        }
+    }
+
+    /// Drop unassigned copies of `adapter`, keeping at least one copy
+    /// cluster-wide (prefer keeping an assigned one; else keep the
+    /// lowest-id holder until a fetch lands elsewhere).
+    fn gc_adapter(&mut self, adapter: AdapterId) {
+        self.gc_adapter_keeping(adapter, None);
+    }
+
+    fn gc_adapter_keeping(
+        &mut self,
+        adapter: AdapterId,
+        extra_keep: Option<ServerId>,
+    ) {
+        let holders: Vec<ServerId> = (0..self.n_servers)
+            .filter(|&s| self.resident[s].contains(&adapter))
+            .collect();
+        if holders.is_empty() {
+            return; // still only in flight; nothing to GC
+        }
+        let assigned_holders: Vec<ServerId> = holders
+            .iter()
+            .copied()
+            .filter(|&s| self.assigned[s].contains(&adapter))
+            .collect();
+        let mut keep: BTreeSet<ServerId> = if assigned_holders.is_empty()
+            && extra_keep.is_none()
+        {
+            // keep one survivor until the new home fetches it
+            std::iter::once(holders[0]).collect()
+        } else {
+            assigned_holders.iter().copied().collect()
+        };
+        if let Some(s) = extra_keep {
+            keep.insert(s);
+        }
+        for s in holders {
+            if !keep.contains(&s) {
+                self.resident[s].remove(&adapter);
+            }
+        }
+    }
+
+    /// Any server currently holding a resident copy.
+    pub fn find_replica(&self, adapter: AdapterId) -> Option<ServerId> {
+        (0..self.n_servers).find(|&s| self.resident[s].contains(&adapter))
+    }
+
+    /// Coverage invariant: every adapter id < n has ≥ 1 replica
+    /// (resident or in flight — an in-flight copy still has its source
+    /// resident because GC keeps survivors until `finish_fetch`).
+    pub fn check_coverage(&self, n_adapters: usize) -> Result<(), String> {
+        for a in 0..n_adapters as AdapterId {
+            if self.find_replica(a).is_none() {
+                return Err(format!("adapter {a} lost (no replica)"));
+            }
+        }
+        Ok(())
+    }
+
+    fn bump_watermark(&mut self, server: ServerId) {
+        let now =
+            self.resident[server].len() + self.fetching[server].len();
+        if now > self.max_resident[server] {
+            self.max_resident[server] = now;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, ModelSpec};
+    use crate::workload::AdapterSet;
+
+    fn setup() -> (AdapterPool, AdapterSet) {
+        let adapters = AdapterSet::uniform_per_rank(
+            4,
+            &[8, 128],
+            &ModelSpec::LLAMA_7B,
+        );
+        // adapters 0,1 on server 0; 2,3 on server 1
+        let initial = vec![vec![0], vec![0], vec![1], vec![1]];
+        (AdapterPool::new(3, &initial), adapters)
+    }
+
+    #[test]
+    fn fetch_lifecycle() {
+        let (mut pool, adapters) = setup();
+        let g = GpuSpec::A100_40G;
+        assert!(!pool.is_resident(2, 0));
+        let t = pool.start_fetch(2, 0, &adapters, &g).unwrap();
+        assert!(t > 0.0);
+        // duplicate fetch coalesces
+        assert!(pool.start_fetch(2, 0, &adapters, &g).is_none());
+        assert!(pool.is_fetching(2, 0));
+        pool.finish_fetch(2, 0);
+        assert!(pool.is_resident(2, 0));
+        assert_eq!(pool.total_fetches, 1);
+        pool.check_coverage(4).unwrap();
+    }
+
+    #[test]
+    fn resident_fetch_is_noop() {
+        let (mut pool, adapters) = setup();
+        let g = GpuSpec::A100_40G;
+        assert!(pool.start_fetch(0, 0, &adapters, &g).is_none());
+    }
+
+    #[test]
+    fn reassignment_moves_and_gcs() {
+        let (mut pool, adapters) = setup();
+        let g = GpuSpec::A100_40G;
+        // move adapter 0 from server 0 to server 2
+        pool.apply_assignment(&[
+            vec![2],
+            vec![0],
+            vec![1],
+            vec![1],
+        ]);
+        // not yet copied: server 0 must keep the survivor copy
+        assert!(pool.is_resident(0, 0));
+        pool.check_coverage(4).unwrap();
+        // first access on server 2 triggers the fetch; after it lands,
+        // the old unassigned copy is GC'd
+        pool.start_fetch(2, 0, &adapters, &g).unwrap();
+        pool.finish_fetch(2, 0);
+        assert!(pool.is_resident(2, 0));
+        assert!(!pool.is_resident(0, 0), "old copy must be deleted");
+        pool.check_coverage(4).unwrap();
+    }
+
+    #[test]
+    fn replicated_assignment_keeps_all_copies() {
+        let (mut pool, adapters) = setup();
+        let g = GpuSpec::A100_40G;
+        pool.apply_assignment(&[
+            vec![0, 2],
+            vec![0],
+            vec![1],
+            vec![1],
+        ]);
+        pool.start_fetch(2, 0, &adapters, &g).unwrap();
+        pool.finish_fetch(2, 0);
+        assert!(pool.is_resident(0, 0) && pool.is_resident(2, 0));
+    }
+
+    #[test]
+    fn watermark_tracks_high_water() {
+        let (mut pool, adapters) = setup();
+        let g = GpuSpec::A100_40G;
+        assert_eq!(pool.max_resident(2), 0);
+        pool.start_fetch(2, 0, &adapters, &g).unwrap();
+        pool.start_fetch(2, 2, &adapters, &g).unwrap();
+        pool.finish_fetch(2, 0);
+        pool.finish_fetch(2, 2);
+        assert_eq!(pool.max_resident(2), 2);
+        // deleting later never lowers the watermark
+        pool.apply_assignment(&[
+            vec![0],
+            vec![0],
+            vec![1],
+            vec![1],
+        ]);
+        assert!(pool.max_resident(2) >= 2);
+    }
+
+    #[test]
+    fn fully_replicated_counts() {
+        let pool = AdapterPool::fully_replicated(4, 10);
+        for s in 0..4 {
+            assert_eq!(pool.resident_count(s), 10);
+        }
+        pool.check_coverage(10).unwrap();
+    }
+
+    #[test]
+    fn property_random_churn_never_loses_coverage() {
+        use crate::util::rng::Pcg32;
+        let adapters = AdapterSet::uniform_per_rank(
+            12,
+            &[8, 16, 32, 64, 128],
+            &ModelSpec::LLAMA_7B,
+        );
+        let g = GpuSpec::A100_40G;
+        let mut rng = Pcg32::new(42);
+        let n_servers = 4;
+        let initial: Vec<Vec<ServerId>> = (0..12)
+            .map(|_| vec![rng.below(n_servers as u64) as usize])
+            .collect();
+        let mut pool = AdapterPool::new(n_servers, &initial);
+        let mut in_flight: Vec<(ServerId, AdapterId)> = Vec::new();
+        for _step in 0..500 {
+            match rng.below(3) {
+                0 => {
+                    // random reassignment
+                    let asg: Vec<Vec<ServerId>> = (0..12)
+                        .map(|_| {
+                            let k = 1 + rng.below(2) as usize;
+                            let mut v: Vec<usize> = (0..n_servers).collect();
+                            rng.shuffle(&mut v);
+                            v.truncate(k);
+                            v
+                        })
+                        .collect();
+                    pool.apply_assignment(&asg);
+                }
+                1 => {
+                    let s = rng.below(n_servers as u64) as usize;
+                    let a = rng.below(12) as AdapterId;
+                    if pool.start_fetch(s, a, &adapters, &g).is_some() {
+                        in_flight.push((s, a));
+                    }
+                }
+                _ => {
+                    if !in_flight.is_empty() {
+                        let i = rng.below(in_flight.len() as u64) as usize;
+                        let (s, a) = in_flight.swap_remove(i);
+                        pool.finish_fetch(s, a);
+                    }
+                }
+            }
+            pool.check_coverage(12).unwrap_or_else(|e| {
+                panic!("step {_step}: {e}")
+            });
+        }
+    }
+}

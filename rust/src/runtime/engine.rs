@@ -1,0 +1,341 @@
+//! The PJRT model engine: loads the AOT artifacts and executes real
+//! prefill/decode batches on the CPU PJRT client. This is the compute
+//! backend of the *real* mini-cluster (`server/`) — Python is never on
+//! this path.
+
+use super::manifest::{load_manifest, Manifest};
+use super::tensorfile::read_tensor_map;
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// One adapter's weights from the bank (row-major host copies — these
+/// are the bytes the distributed pool moves between servers).
+#[derive(Debug, Clone)]
+pub struct BankAdapter {
+    pub rank: u32,
+    pub alpha: f32,
+    /// A: [d_model][rank]
+    pub a: Vec<f32>,
+    /// B: [rank][d_model]
+    pub b: Vec<f32>,
+}
+
+impl BankAdapter {
+    pub fn size_bytes(&self) -> u64 {
+        ((self.a.len() + self.b.len()) * 4) as u64
+    }
+}
+
+/// KV cache state between prefill and decode calls (host literals;
+/// shapes are [L, B, Lmax, H, Dh]).
+pub struct KvState {
+    pub k: Literal,
+    pub v: Literal,
+    pub batch: usize,
+}
+
+pub struct ModelEngine {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    params: Vec<Literal>,
+    prefill_exes: Vec<(usize, usize, PjRtLoadedExecutable)>,
+    decode_exes: Vec<(usize, PjRtLoadedExecutable)>,
+}
+
+impl ModelEngine {
+    /// Load manifest + params and compile every artifact.
+    pub fn load(dir: &str) -> Result<ModelEngine> {
+        let manifest = load_manifest(dir)?;
+        let client = PjRtClient::cpu()?;
+        let params_map = read_tensor_map(&format!("{dir}/params.bin"))?;
+        let mut params = Vec::new();
+        for name in &manifest.param_names {
+            let t = params_map
+                .get(name)
+                .ok_or_else(|| anyhow!("params.bin missing {name}"))?;
+            params.push(t.to_literal()?);
+        }
+        let mut prefill_exes = Vec::new();
+        let mut decode_exes = Vec::new();
+        for a in &manifest.artifacts {
+            let path = format!("{dir}/{}", a.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("load {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", a.name))?;
+            match a.kind.as_str() {
+                "prefill" => prefill_exes.push((a.batch, a.prompt_len, exe)),
+                _ => decode_exes.push((a.batch, exe)),
+            }
+        }
+        prefill_exes.sort_by_key(|(b, l, _)| (*b, *l));
+        decode_exes.sort_by_key(|(b, _)| *b);
+        Ok(ModelEngine {
+            manifest,
+            client,
+            params,
+            prefill_exes,
+            decode_exes,
+        })
+    }
+
+    /// Load the deterministic adapter bank emitted by aot.py.
+    pub fn load_bank(dir: &str) -> Result<Vec<BankAdapter>> {
+        let map = read_tensor_map(&format!("{dir}/adapters.bin"))?;
+        let mut bank = Vec::new();
+        for i in 0.. {
+            let Some(a) = map.get(&format!("adapter{i}.a")) else {
+                break;
+            };
+            let b = map
+                .get(&format!("adapter{i}.b"))
+                .ok_or_else(|| anyhow!("adapter{i}.b missing"))?;
+            let alpha = map
+                .get(&format!("adapter{i}.alpha"))
+                .ok_or_else(|| anyhow!("adapter{i}.alpha missing"))?
+                .as_f32()?[0];
+            let rank = a.dims[1] as u32;
+            bank.push(BankAdapter {
+                rank,
+                alpha,
+                a: a.as_f32()?,
+                b: b.as_f32()?,
+            });
+        }
+        if bank.is_empty() {
+            bail!("adapters.bin holds no adapters");
+        }
+        Ok(bank)
+    }
+
+    /// Available (batch, prompt_len) prefill shapes.
+    pub fn prefill_shapes(&self) -> Vec<(usize, usize)> {
+        self.prefill_exes.iter().map(|(b, l, _)| (*b, *l)).collect()
+    }
+
+    pub fn decode_batches(&self) -> Vec<usize> {
+        self.decode_exes.iter().map(|(b, _)| *b).collect()
+    }
+
+    /// Smallest prefill shape fitting `n` requests of max prompt `lp`
+    /// that also has a matching decode artifact.
+    pub fn pick_shape(&self, n: usize, lp: usize) -> Option<(usize, usize)> {
+        self.prefill_exes
+            .iter()
+            .filter(|(b, l, _)| {
+                *b >= n
+                    && *l >= lp
+                    && self.decode_exes.iter().any(|(db, _)| db == b)
+            })
+            .map(|(b, l, _)| (*b, *l))
+            .min()
+    }
+
+    /// Build the stacked [slots, d, r_max] / [slots, r_max, d] /
+    /// [slots] literals from per-slot adapters (None = zero slot).
+    pub fn stack_adapters(
+        &self,
+        slots: &[Option<&BankAdapter>],
+    ) -> Result<(Literal, Literal, Literal)> {
+        let s = self.manifest.batch_slots;
+        let d = self.manifest.model.d_model;
+        let rm = self.manifest.model.r_max;
+        if slots.len() > s {
+            bail!("{} adapters > {s} batch slots", slots.len());
+        }
+        let mut la = vec![0f32; s * d * rm];
+        let mut lb = vec![0f32; s * rm * d];
+        let mut sc = vec![0f32; s];
+        for (i, slot) in slots.iter().enumerate() {
+            let Some(ad) = slot else { continue };
+            let r = ad.rank as usize;
+            // A [d][r] into [d][rm] zero-padded
+            for row in 0..d {
+                la[i * d * rm + row * rm..i * d * rm + row * rm + r]
+                    .copy_from_slice(&ad.a[row * r..(row + 1) * r]);
+            }
+            // B [r][d] into [rm][d]
+            lb[i * rm * d..i * rm * d + r * d]
+                .copy_from_slice(&ad.b[..r * d]);
+            sc[i] = ad.alpha / ad.rank as f32;
+        }
+        Ok((
+            Literal::vec1(&la).reshape(&[s as i64, d as i64, rm as i64])?,
+            Literal::vec1(&lb).reshape(&[s as i64, rm as i64, d as i64])?,
+            Literal::vec1(&sc),
+        ))
+    }
+
+    /// Run one prefill batch. `prompts[i]` is request i's token ids,
+    /// `slot_of_req[i]` its adapter slot in the stack. Rows beyond
+    /// `prompts.len()` are padded (slot 0, len 1) and their outputs
+    /// ignored. Returns per-request logits and the KV state.
+    pub fn prefill(
+        &self,
+        shape: (usize, usize),
+        prompts: &[Vec<i32>],
+        slot_of_req: &[usize],
+        stack: &(Literal, Literal, Literal),
+    ) -> Result<(Vec<Vec<f32>>, KvState)> {
+        let (b, lp) = shape;
+        let bt = self.manifest.model.block_tokens;
+        let exe = self
+            .prefill_exes
+            .iter()
+            .find(|(eb, el, _)| (*eb, *el) == shape)
+            .map(|(_, _, e)| e)
+            .ok_or_else(|| anyhow!("no prefill artifact {shape:?}"))?;
+        if prompts.len() > b || prompts.len() != slot_of_req.len() {
+            bail!("bad batch: {} prompts for shape {shape:?}", prompts.len());
+        }
+        let mut tokens = vec![0i32; b * lp];
+        let mut lens = vec![1i32; b];
+        let mut bseg = vec![0i32; b * lp / bt];
+        for (i, p) in prompts.iter().enumerate() {
+            if p.is_empty() || p.len() > lp {
+                bail!("prompt {i} len {} out of range (lp={lp})", p.len());
+            }
+            tokens[i * lp..i * lp + p.len()].copy_from_slice(p);
+            lens[i] = p.len() as i32;
+            for blk in 0..lp / bt {
+                bseg[i * (lp / bt) + blk] = slot_of_req[i] as i32;
+            }
+        }
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        let tokens_l = Literal::vec1(&tokens)
+            .reshape(&[b as i64, lp as i64])?;
+        let bseg_l = Literal::vec1(&bseg);
+        let lens_l = Literal::vec1(&lens);
+        args.push(&stack.0);
+        args.push(&stack.1);
+        args.push(&stack.2);
+        args.push(&tokens_l);
+        args.push(&bseg_l);
+        args.push(&lens_l);
+
+        let result = exe.execute::<&Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (logits, k, v) = result.to_tuple3()?;
+        let logits = split_rows(&logits, b, self.manifest.model.vocab)?;
+        Ok((
+            logits[..prompts.len()].to_vec(),
+            KvState { k, v, batch: b },
+        ))
+    }
+
+    /// One decode step over the whole KV batch. `tokens[i]`/`pos[i]`
+    /// apply to row i; inactive rows pass token 0 / their last pos and
+    /// are ignored by the caller.
+    pub fn decode(
+        &self,
+        kv: KvState,
+        tokens: &[i32],
+        slot_of_row: &[usize],
+        pos: &[i32],
+        stack: &(Literal, Literal, Literal),
+    ) -> Result<(Vec<Vec<f32>>, KvState)> {
+        let b = kv.batch;
+        if tokens.len() != b || pos.len() != b || slot_of_row.len() != b {
+            bail!("decode arity mismatch (batch {b})");
+        }
+        let exe = self
+            .decode_exes
+            .iter()
+            .find(|(eb, _)| *eb == b)
+            .map(|(_, e)| e)
+            .ok_or_else(|| anyhow!("no decode artifact for batch {b}"))?;
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        let bseg: Vec<i32> =
+            slot_of_row.iter().map(|&s| s as i32).collect();
+        let tokens_l = Literal::vec1(tokens);
+        let bseg_l = Literal::vec1(&bseg);
+        let pos_l = Literal::vec1(pos);
+        args.push(&stack.0);
+        args.push(&stack.1);
+        args.push(&stack.2);
+        args.push(&kv.k);
+        args.push(&kv.v);
+        args.push(&tokens_l);
+        args.push(&bseg_l);
+        args.push(&pos_l);
+        let result = exe.execute::<&Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (logits, k, v) = result.to_tuple3()?;
+        let logits = split_rows(&logits, b, self.manifest.model.vocab)?;
+        Ok((logits, KvState { k, v, batch: b }))
+    }
+
+    /// Convenience: greedy generation for one prompt — used by the
+    /// quickstart example and the golden-file integration test.
+    pub fn generate(
+        &self,
+        prompt: &[i32],
+        adapter: &BankAdapter,
+        steps: usize,
+    ) -> Result<Vec<i32>> {
+        let stack = self.stack_adapters(&[Some(adapter)])?;
+        let lp = self
+            .manifest
+            .model
+            .block_tokens
+            .max(prompt.len().div_ceil(self.manifest.model.block_tokens)
+                * self.manifest.model.block_tokens);
+        let shape = self
+            .pick_shape(1, lp)
+            .ok_or_else(|| anyhow!("no artifact fits prompt {}", prompt.len()))?;
+        let (logits, mut kv) =
+            self.prefill(shape, &[prompt.to_vec()], &[0], &stack)?;
+        let mut out = vec![argmax(&logits[0])];
+        let mut pos = prompt.len() as i32;
+        for _ in 1..steps {
+            let mut tokens = vec![0i32; kv.batch];
+            tokens[0] = *out.last().unwrap();
+            let mut posv = vec![0i32; kv.batch];
+            posv[0] = pos;
+            let slots = vec![0usize; kv.batch];
+            let (logits, nkv) =
+                self.decode(kv, &tokens, &slots, &posv, &stack)?;
+            kv = nkv;
+            out.push(argmax(&logits[0]));
+            pos += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+fn split_rows(lit: &Literal, rows: usize, cols: usize) -> Result<Vec<Vec<f32>>> {
+    let flat = lit.to_vec::<f32>()?;
+    if flat.len() != rows * cols {
+        bail!("logits shape mismatch: {} != {rows}x{cols}", flat.len());
+    }
+    Ok(flat.chunks(cols).map(|c| c.to_vec()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+        // first max wins on ties
+        assert_eq!(argmax(&[5.0, 5.0]), 0);
+    }
+}

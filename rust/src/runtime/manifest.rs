@@ -1,0 +1,222 @@
+//! Parser for `artifacts/manifest.json` — the ABI contract between
+//! `python/compile/aot.py` and the PJRT engine.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "float32" | "int32"
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String, // "prefill" | "decode"
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub r_max: usize,
+    pub block_tokens: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub model: ModelDims,
+    pub batch_slots: usize,
+    pub param_names: Vec<String>,
+    pub bank_ranks: Vec<u32>,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub seed: u64,
+}
+
+fn need_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest: missing numeric '{key}'"))
+}
+
+pub fn parse_manifest(text: &str) -> Result<Manifest> {
+    let v = json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+    let m = v
+        .get("model")
+        .ok_or_else(|| anyhow!("manifest: missing model"))?;
+    let model = ModelDims {
+        vocab: need_usize(m, "vocab")?,
+        d_model: need_usize(m, "d_model")?,
+        n_heads: need_usize(m, "n_heads")?,
+        n_layers: need_usize(m, "n_layers")?,
+        d_ff: need_usize(m, "d_ff")?,
+        max_seq: need_usize(m, "max_seq")?,
+        r_max: need_usize(m, "r_max")?,
+        block_tokens: need_usize(m, "block_tokens")?,
+    };
+    let param_names = v
+        .get("param_names")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("manifest: missing param_names"))?
+        .iter()
+        .map(|x| x.as_str().unwrap_or_default().to_string())
+        .collect();
+    let bank_ranks = v
+        .get("bank_ranks")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("manifest: missing bank_ranks"))?
+        .iter()
+        .map(|x| x.as_f64().unwrap_or(0.0) as u32)
+        .collect();
+    let mut artifacts = Vec::new();
+    for a in v
+        .get("artifacts")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("manifest: missing artifacts"))?
+    {
+        let args = a
+            .get("args")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("artifact missing args"))?
+            .iter()
+            .map(|arg| -> Result<ArgSpec> {
+                Ok(ArgSpec {
+                    name: arg
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .context("arg name")?
+                        .to_string(),
+                    shape: arg
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .context("arg shape")?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    dtype: arg
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .context("arg dtype")?
+                        .to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let spec = ArtifactSpec {
+            name: a
+                .get("name")
+                .and_then(Json::as_str)
+                .context("artifact name")?
+                .to_string(),
+            kind: a
+                .get("kind")
+                .and_then(Json::as_str)
+                .context("artifact kind")?
+                .to_string(),
+            batch: need_usize(a, "batch")?,
+            prompt_len: need_usize(a, "prompt_len")?,
+            file: a
+                .get("file")
+                .and_then(Json::as_str)
+                .context("artifact file")?
+                .to_string(),
+            args,
+        };
+        if spec.kind != "prefill" && spec.kind != "decode" {
+            bail!("artifact {}: unknown kind {}", spec.name, spec.kind);
+        }
+        artifacts.push(spec);
+    }
+    Ok(Manifest {
+        model,
+        batch_slots: need_usize(&v, "batch_slots")?,
+        param_names,
+        bank_ranks,
+        artifacts,
+        seed: v.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+    })
+}
+
+pub fn load_manifest(dir: &str) -> Result<Manifest> {
+    let path = format!("{dir}/manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("read {path} (run `make artifacts`)"))?;
+    parse_manifest(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"vocab": 512, "d_model": 256, "n_heads": 4,
+                "n_layers": 2, "d_ff": 1024, "max_seq": 160,
+                "r_max": 128, "block_tokens": 32},
+      "batch_slots": 8,
+      "param_names": ["embed", "unembed"],
+      "bank_ranks": [8, 128],
+      "seed": 42,
+      "artifacts": [
+        {"name": "prefill_b1_l32", "kind": "prefill", "batch": 1,
+         "prompt_len": 32, "file": "prefill_b1_l32.hlo.txt",
+         "args": [{"name": "param:embed", "shape": [512, 256],
+                   "dtype": "float32"}],
+         "outputs": ["logits", "k_cache", "v_cache"]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = parse_manifest(SAMPLE).unwrap();
+        assert_eq!(m.model.d_model, 256);
+        assert_eq!(m.batch_slots, 8);
+        assert_eq!(m.bank_ranks, vec![8, 128]);
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.kind, "prefill");
+        assert_eq!(a.args[0].shape, vec![512, 256]);
+        assert_eq!(m.seed, 42);
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        let bad = SAMPLE.replace("\"prefill\"", "\"training\"");
+        assert!(parse_manifest(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(parse_manifest("{}").is_err());
+        let no_model = SAMPLE.replace("\"model\"", "\"not_model\"");
+        assert!(parse_manifest(&no_model).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let path =
+            concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if !std::path::Path::new(path).exists() {
+            return;
+        }
+        let m = load_manifest(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+            .unwrap();
+        assert!(!m.artifacts.is_empty());
+        assert!(m.artifacts.iter().any(|a| a.kind == "prefill"));
+        assert!(m.artifacts.iter().any(|a| a.kind == "decode"));
+        // ABI: every artifact's first args are the params in order
+        for a in &m.artifacts {
+            for (i, p) in m.param_names.iter().enumerate() {
+                assert_eq!(a.args[i].name, format!("param:{p}"));
+            }
+        }
+    }
+}

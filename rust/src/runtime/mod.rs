@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
+//! the CPU PJRT client (`xla` crate). The interchange is HLO *text* —
+//! xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit ids);
+//! the text parser reassigns ids and round-trips cleanly.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensorfile;
+
+pub use engine::{argmax, BankAdapter, KvState, ModelEngine};
+pub use manifest::{load_manifest, Manifest};

@@ -1,0 +1,205 @@
+//! Reader for the `LSTF` binary tensor container written by
+//! `python/compile/tensorfile.py` (params.bin / adapters.bin).
+//! The byte layout is pinned by `python/tests/test_tensorfile.py`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Read;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    /// Raw little-endian data (len = product(dims) * 4).
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("{}: not f32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("{}: not i32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Convert to an XLA literal of the right shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        let lit = match self.dtype {
+            DType::F32 => {
+                xla::Literal::vec1(&self.as_f32()?).reshape(&dims)?
+            }
+            DType::I32 => {
+                xla::Literal::vec1(&self.as_i32()?).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// Read every tensor in the file, preserving order.
+pub fn read_tensors(path: &str) -> Result<Vec<Tensor>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {path}"))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    parse_tensors(&buf).with_context(|| format!("parse {path}"))
+}
+
+pub fn read_tensor_map(path: &str) -> Result<BTreeMap<String, Tensor>> {
+    Ok(read_tensors(path)?
+        .into_iter()
+        .map(|t| (t.name.clone(), t))
+        .collect())
+}
+
+fn parse_tensors(buf: &[u8]) -> Result<Vec<Tensor>> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > buf.len() {
+            bail!("truncated at byte {pos}");
+        }
+        let s = &buf[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    if take(&mut pos, 4)? != b"LSTF" {
+        bail!("bad magic");
+    }
+    let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+    if version != 1 {
+        bail!("unsupported version {version}");
+    }
+    let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+    let mut out = Vec::with_capacity(count as usize);
+    for _ in 0..count {
+        let name_len =
+            u16::from_le_bytes(take(&mut pos, 2)?.try_into()?) as usize;
+        let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())?;
+        let dt = take(&mut pos, 1)?[0];
+        let ndim = take(&mut pos, 1)?[0] as usize;
+        let dtype = match dt {
+            0 => DType::F32,
+            1 => DType::I32,
+            other => bail!("{name}: unknown dtype {other}"),
+        };
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(
+                u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize,
+            );
+        }
+        let n: usize = dims.iter().product::<usize>().max(1);
+        // 0-dim tensors carry one element
+        let n = if ndim == 0 { 1 } else { n };
+        let data = take(&mut pos, n * 4)?.to_vec();
+        out.push(Tensor {
+            name,
+            dtype,
+            dims,
+            data,
+        });
+    }
+    if pos != buf.len() {
+        bail!("trailing garbage: {} bytes", buf.len() - pos);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file_with(tensors: &[(&str, DType, &[usize], &[u8])]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"LSTF");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for (name, dt, dims, data) in tensors {
+            buf.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.push(match dt {
+                DType::F32 => 0,
+                DType::I32 => 1,
+            });
+            buf.push(dims.len() as u8);
+            for &d in *dims {
+                buf.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            buf.extend_from_slice(data);
+        }
+        buf
+    }
+
+    #[test]
+    fn parses_roundtrip() {
+        let data: Vec<u8> = [1.5f32, -2.0]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        let idata: Vec<u8> =
+            [7i32].iter().flat_map(|x| x.to_le_bytes()).collect();
+        let buf = file_with(&[
+            ("w", DType::F32, &[2], &data),
+            ("i", DType::I32, &[1], &idata),
+        ]);
+        let ts = parse_tensors(&buf).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].as_f32().unwrap(), vec![1.5, -2.0]);
+        assert_eq!(ts[1].as_i32().unwrap(), vec![7]);
+        assert!(ts[0].as_i32().is_err());
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        assert!(parse_tensors(b"NOPE").is_err());
+        let buf = file_with(&[("w", DType::F32, &[2], &[0u8; 8])]);
+        assert!(parse_tensors(&buf[..buf.len() - 1]).is_err());
+        let mut extra = buf.clone();
+        extra.push(0);
+        assert!(parse_tensors(&extra).is_err());
+        let mut badver = buf;
+        badver[4] = 9;
+        assert!(parse_tensors(&badver).is_err());
+    }
+
+    #[test]
+    fn reads_real_params_if_built() {
+        // only runs when `make artifacts` has produced the file
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/params.bin");
+        if !std::path::Path::new(path).exists() {
+            return;
+        }
+        let map = read_tensor_map(path).unwrap();
+        assert!(map.contains_key("embed"));
+        let embed = &map["embed"];
+        assert_eq!(embed.dims.len(), 2);
+        assert_eq!(embed.data.len(), embed.element_count() * 4);
+    }
+}

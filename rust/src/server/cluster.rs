@@ -1,0 +1,309 @@
+//! Real mini-cluster driver: spawns N PJRT-backed server threads,
+//! routes a timed workload through the coordinator, rebalances
+//! periodically (LORASERVE), and reports wall-clock latencies.
+
+use super::store::AdapterStore;
+use super::{serve_loop, ServeRequest, ServeResult};
+use crate::coordinator::{DemandTracker, Router, RoutingTable};
+use crate::placement::baselines::{ContiguousPlacer, RandomPlacer};
+use crate::placement::loraserve::LoraServePlacer;
+use crate::placement::{Assignment, PlacementCtx, Placer};
+use crate::runtime::ModelEngine;
+use crate::sim::SystemKind;
+use crate::util::rng::Pcg32;
+use crate::util::stats::Samples;
+use crate::workload::{Adapter, AdapterId, AdapterSet, ServerId};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct RealClusterConfig {
+    pub n_servers: usize,
+    pub artifacts_dir: String,
+    pub system: SystemKind,
+    /// Wall-clock seconds between rebalances (LORASERVE only).
+    pub rebalance_period: f64,
+    pub seed: u64,
+}
+
+impl Default for RealClusterConfig {
+    fn default() -> Self {
+        RealClusterConfig {
+            n_servers: 2,
+            artifacts_dir: "artifacts".into(),
+            system: SystemKind::LoraServe,
+            rebalance_period: 5.0,
+            seed: 0,
+        }
+    }
+}
+
+/// A timed request for the real cluster.
+#[derive(Debug, Clone)]
+pub struct TimedRequest {
+    /// Seconds after workload start.
+    pub at: f64,
+    pub adapter: AdapterId,
+    pub prompt: Vec<i32>,
+    pub output_len: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct RealReport {
+    pub system: String,
+    pub ttft: Samples,
+    pub tbt: Samples,
+    pub completed: u64,
+    pub wall_secs: f64,
+    pub fetches: u64,
+    pub fetch_bytes: u64,
+    pub per_server_completed: Vec<u64>,
+    pub per_server_resident: Vec<usize>,
+    pub rebalances: u64,
+}
+
+impl RealReport {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.wall_secs
+        }
+    }
+}
+
+pub struct RealCluster {
+    cfg: RealClusterConfig,
+    pub adapters: AdapterSet,
+    store: AdapterStore,
+    senders: Vec<mpsc::Sender<ServeRequest>>,
+    results: mpsc::Receiver<ServeResult>,
+    handles: Vec<thread::JoinHandle<Result<()>>>,
+    router: Router,
+    placer: LoraServePlacer,
+    assignment: Assignment,
+    oppoints: BTreeMap<u32, f64>,
+    rng: Pcg32,
+}
+
+impl RealCluster {
+    /// Spawn the server threads (each compiles its own engine) and
+    /// compute the initial placement.
+    pub fn start(cfg: RealClusterConfig) -> Result<RealCluster> {
+        let bank = ModelEngine::load_bank(&cfg.artifacts_dir)
+            .context("load adapter bank")?;
+        let adapters = AdapterSet::new(
+            bank.iter()
+                .enumerate()
+                .map(|(i, a)| Adapter {
+                    id: i as AdapterId,
+                    rank: a.rank,
+                    size_bytes: a.size_bytes(),
+                })
+                .collect(),
+        );
+        // operating points: relative capacity per rank from the real
+        // engine's own cost structure is unknown a priori; use the
+        // analytic model's relative shape (rank-monotone), which is all
+        // Algorithm 1 needs.
+        let oppoints = crate::costmodel::operating_points(
+            &crate::config::ServerConfig::default(),
+            &adapters.unique_ranks(),
+        );
+        let uniform: BTreeMap<AdapterId, f64> =
+            adapters.iter().map(|a| (a.id, 100.0)).collect();
+        let ctx = PlacementCtx {
+            adapters: &adapters,
+            n_servers: cfg.n_servers,
+            demand_tps: &uniform,
+            operating_points: &oppoints,
+            prev: None,
+        };
+        let mut placer = LoraServePlacer::new();
+        let assignment = match cfg.system {
+            SystemKind::LoraServe => placer.place(&ctx),
+            SystemKind::SLoraRandom => {
+                RandomPlacer::new(cfg.seed).place(&ctx)
+            }
+            SystemKind::SLoraContiguous => {
+                ContiguousPlacer::new().place(&ctx)
+            }
+            SystemKind::Toppings => {
+                let mut a = Assignment::new(adapters.len());
+                for ad in adapters.iter() {
+                    for s in 0..cfg.n_servers {
+                        a.add(ad.id, s, 1.0 / cfg.n_servers as f64);
+                    }
+                }
+                a
+            }
+        };
+        let homes: Vec<Vec<ServerId>> = assignment
+            .shares
+            .iter()
+            .map(|ss| ss.iter().map(|(s, _)| *s).collect())
+            .collect();
+        let store = AdapterStore::new(cfg.n_servers, &bank, &homes);
+
+        let (res_tx, results) = mpsc::channel::<ServeResult>();
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        for s in 0..cfg.n_servers {
+            let (tx, rx) = mpsc::channel::<ServeRequest>();
+            senders.push(tx);
+            let store = store.clone();
+            let res_tx = res_tx.clone();
+            let dir = cfg.artifacts_dir.clone();
+            handles.push(thread::spawn(move || {
+                serve_loop(s, &dir, store, rx, res_tx)
+            }));
+        }
+        let router = match cfg.system {
+            SystemKind::Toppings => Router::Toppings {
+                n_servers: cfg.n_servers,
+            },
+            _ => Router::Table(RoutingTable::from_assignment(&assignment)),
+        };
+        let rng = Pcg32::with_stream(cfg.seed, 0x2ea1);
+        Ok(RealCluster {
+            cfg,
+            adapters,
+            store,
+            senders,
+            results,
+            handles,
+            router,
+            placer,
+            assignment,
+            oppoints,
+            rng,
+        })
+    }
+
+    /// Replay a timed workload and gather completions.
+    pub fn run(&mut self, workload: &[TimedRequest]) -> Result<RealReport> {
+        let n = self.cfg.n_servers;
+        let mut report = RealReport {
+            system: self.cfg.system.label().to_string(),
+            per_server_completed: vec![0; n],
+            ..Default::default()
+        };
+        let mut demand =
+            DemandTracker::new(self.cfg.rebalance_period.max(0.1), 16);
+        let mut outstanding = vec![0.0f64; n];
+        let start = Instant::now();
+        let mut next_rebalance = self.cfg.rebalance_period;
+        let mut sent = 0u64;
+        let dynamic =
+            matches!(self.cfg.system, SystemKind::LoraServe);
+
+        let mut workload: Vec<&TimedRequest> = workload.iter().collect();
+        workload.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+
+        for (i, req) in workload.iter().enumerate() {
+            // absorb completions opportunistically (keeps outstanding
+            // estimates fresh for Toppings)
+            while let Ok(r) = self.results.try_recv() {
+                absorb(&mut report, &mut outstanding, r);
+            }
+            let now = start.elapsed().as_secs_f64();
+            if req.at > now {
+                thread::sleep(Duration::from_secs_f64(req.at - now));
+            }
+            let now = start.elapsed().as_secs_f64();
+            if dynamic && now >= next_rebalance {
+                self.rebalance(&mut demand);
+                report.rebalances += 1;
+                next_rebalance = now + self.cfg.rebalance_period;
+            }
+            demand.record(
+                req.adapter,
+                (req.prompt.len() + req.output_len) as u64,
+            );
+            let target = self.router.route(
+                req.adapter,
+                &outstanding,
+                &mut self.rng,
+            );
+            let est = 0.001
+                * (req.prompt.len() as f64
+                    + 4.0 * req.output_len as f64);
+            outstanding[target] += est;
+            self.senders[target]
+                .send(ServeRequest {
+                    id: i as u64,
+                    adapter: req.adapter,
+                    prompt: req.prompt.clone(),
+                    output_len: req.output_len,
+                    submitted: Instant::now(),
+                })
+                .context("server thread died")?;
+            sent += 1;
+        }
+        while report.completed < sent {
+            let r = self
+                .results
+                .recv_timeout(Duration::from_secs(120))
+                .context("timed out waiting for completions")?;
+            absorb(&mut report, &mut outstanding, r);
+        }
+        report.wall_secs = start.elapsed().as_secs_f64();
+        let (f, fb) = self.store.fetch_stats();
+        report.fetches = f;
+        report.fetch_bytes = fb;
+        report.per_server_resident =
+            (0..n).map(|s| self.store.resident_count(s)).collect();
+        self.store
+            .check_coverage(self.adapters.len())
+            .map_err(|e| anyhow::anyhow!(e))?;
+        Ok(report)
+    }
+
+    fn rebalance(&mut self, demand: &mut DemandTracker) {
+        demand.roll_window();
+        let projected = demand.projected_tps();
+        let ctx = PlacementCtx {
+            adapters: &self.adapters,
+            n_servers: self.cfg.n_servers,
+            demand_tps: &projected,
+            operating_points: &self.oppoints,
+            prev: Some(&self.assignment),
+        };
+        let next = self.placer.place(&ctx);
+        self.router
+            .update_table(RoutingTable::from_assignment(&next));
+        let homes: Vec<Vec<ServerId>> = next
+            .shares
+            .iter()
+            .map(|ss| ss.iter().map(|(s, _)| *s).collect())
+            .collect();
+        self.store.apply_assignment(&homes);
+        self.assignment = next;
+    }
+
+    /// Shut down server threads.
+    pub fn shutdown(mut self) {
+        self.senders.clear(); // closes channels; serve loops exit
+        for h in self.handles.drain(..) {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => eprintln!("server thread error: {e:#}"),
+                Err(_) => eprintln!("server thread panicked"),
+            }
+        }
+    }
+}
+
+fn absorb(report: &mut RealReport, outstanding: &mut [f64], r: ServeResult) {
+    report.ttft.push(r.ttft);
+    if r.tbt.is_finite() {
+        report.tbt.push(r.tbt);
+    }
+    report.completed += 1;
+    report.per_server_completed[r.server] += 1;
+    let est = 0.001 * (r.tokens.len() as f64 * 4.0);
+    outstanding[r.server] = (outstanding[r.server] - est).max(0.0);
+}

@@ -1,0 +1,16 @@
+//! Discrete-event cluster simulator.
+//!
+//! Reproduces the paper's testbed dynamics (queueing, continuous
+//! batching, rank interference, adapter fetches, rebalancing) at paper
+//! scale, with per-batch service times from `costmodel`. The *real*
+//! PJRT-backed mini-cluster lives in `server/`; both share the
+//! coordinator/placement/pool code.
+
+pub mod cluster;
+pub mod event;
+pub mod profile;
+pub mod report;
+pub mod server;
+
+pub use cluster::{run, LoraServeOpts, SimConfig, SystemKind};
+pub use report::SimReport;

@@ -1,0 +1,99 @@
+//! Simulation outcome: the metrics every figure harness consumes.
+
+use crate::util::stats::Samples;
+use crate::workload::AdapterId;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    pub system: String,
+    pub trace: String,
+    /// End-to-end time to first token (queueing + fetch + prefill).
+    pub ttft: Samples,
+    /// Mean time between tokens per request.
+    pub tbt: Samples,
+    pub completed: u64,
+    pub timeouts: u64,
+    /// Time of the last completion.
+    pub makespan: f64,
+    pub offered_rps: f64,
+    pub per_server_ttft: Vec<Samples>,
+    pub per_adapter_ttft: BTreeMap<AdapterId, Samples>,
+    pub per_server_busy: Vec<f64>,
+    pub per_server_max_adapters: Vec<usize>,
+    pub migration_bytes: u64,
+    pub fetches: u64,
+    pub fetch_bytes: u64,
+    /// Host->GPU adapter pagings (S-LoRA unified-paging misses).
+    pub gpu_loads: u64,
+    pub gpu_load_bytes: u64,
+    /// Fraction of iterations whose batch contained rank >= 64 work.
+    pub per_server_highrank_frac: Vec<f64>,
+    pub rebalances: u64,
+}
+
+impl SimReport {
+    /// Completed-request throughput over the active window.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.makespan
+    }
+
+    /// Fraction of *offered* requests that completed (1 - drop rate).
+    pub fn completion_rate(&self) -> f64 {
+        let offered = self.completed + self.timeouts;
+        if offered == 0 {
+            return f64::NAN;
+        }
+        self.completed as f64 / offered as f64
+    }
+
+    /// The paper's SLA check: P95 TTFT within the SLO and (almost) no
+    /// timeouts.
+    pub fn meets_slo(&mut self, ttft_p95_slo: f64) -> bool {
+        self.completed > 0
+            && self.ttft.p95() <= ttft_p95_slo
+            && self.completion_rate() >= 0.99
+    }
+
+    pub fn ttft_p95(&mut self) -> f64 {
+        self.ttft.p95()
+    }
+
+    pub fn tbt_p95(&mut self) -> f64 {
+        self.tbt.p95()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_and_slo() {
+        let mut r = SimReport {
+            completed: 99,
+            timeouts: 1,
+            makespan: 10.0,
+            ..Default::default()
+        };
+        for i in 0..100 {
+            r.ttft.push(i as f64 / 100.0);
+            r.tbt.push(0.01);
+        }
+        assert!((r.throughput_rps() - 9.9).abs() < 1e-9);
+        assert!((r.completion_rate() - 0.99).abs() < 1e-9);
+        assert!(r.meets_slo(1.0));
+        assert!(!r.meets_slo(0.5));
+    }
+
+    #[test]
+    fn empty_report_fails_slo() {
+        let mut r = SimReport::default();
+        assert!(!r.meets_slo(10.0));
+        assert!(r.completion_rate().is_nan());
+        assert_eq!(r.throughput_rps(), 0.0);
+    }
+}

@@ -1,0 +1,534 @@
+//! Simulated LLM inference server: admission queue + iteration-level
+//! continuous batching with prefill priority (the vLLM/S-LoRA-style
+//! engine the paper's cluster is made of).
+//!
+//! The rank-interference mechanism is first-class here: every
+//! iteration's service time is computed with the **maximum adapter rank
+//! present in that batch** (`costmodel::prefill_time`/`decode_time`),
+//! exactly the pad-to-max-rank behaviour of the BGMV/MBGMV kernels.
+
+use crate::costmodel::CostModel;
+use crate::workload::{AdapterId, Request};
+use std::collections::VecDeque;
+
+/// A request resident on a server.
+#[derive(Debug, Clone, Copy)]
+pub struct SimReq {
+    pub req: Request,
+    pub rank: u32,
+    /// Adapter weight bytes (GPU paging cost on a cache miss).
+    pub adapter_bytes: u64,
+    /// Routed-time service estimate (for Toppings' outstanding-work).
+    pub est: f64,
+}
+
+/// S-LoRA-style GPU adapter cache: active adapter slices live in a
+/// fixed HBM pool; a batch whose adapter is not resident pages it in
+/// from host memory over PCIe before the iteration can run. LRU
+/// eviction, with adapters of currently-active sequences pinned.
+#[derive(Debug, Default)]
+pub struct GpuAdapterCache {
+    budget: u64,
+    used: u64,
+    /// adapter -> (bytes, last-use tick)
+    entries: std::collections::BTreeMap<AdapterId, (u64, u64)>,
+    tick: u64,
+    pub loads: u64,
+    pub load_bytes: u64,
+}
+
+impl GpuAdapterCache {
+    pub fn new(budget: u64) -> Self {
+        GpuAdapterCache {
+            budget,
+            ..Default::default()
+        }
+    }
+
+    /// Ensure `adapter` is resident; returns the PCIe paging time
+    /// (0 on hit). `pinned` adapters are never evicted.
+    pub fn touch(
+        &mut self,
+        adapter: AdapterId,
+        bytes: u64,
+        pcie_bw: f64,
+        pinned: &std::collections::BTreeSet<AdapterId>,
+    ) -> f64 {
+        self.tick += 1;
+        if let Some(e) = self.entries.get_mut(&adapter) {
+            e.1 = self.tick;
+            return 0.0;
+        }
+        // evict LRU until it fits (pinned entries skipped)
+        while self.used + bytes > self.budget && !self.entries.is_empty()
+        {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(a, _)| !pinned.contains(a))
+                .min_by_key(|(_, (_, t))| *t)
+                .map(|(a, _)| *a);
+            match victim {
+                Some(a) => {
+                    let (b, _) = self.entries.remove(&a).unwrap();
+                    self.used -= b;
+                }
+                None => break, // everything pinned; overcommit
+            }
+        }
+        self.entries.insert(adapter, (bytes, self.tick));
+        self.used += bytes;
+        self.loads += 1;
+        self.load_bytes += bytes;
+        100e-6 + bytes as f64 / pcie_bw
+    }
+
+    pub fn resident(&self, adapter: AdapterId) -> bool {
+        self.entries.contains_key(&adapter)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ActiveReq {
+    pub sreq: SimReq,
+    /// Tokens produced so far (>= 1 once prefilled).
+    pub produced: u32,
+    pub first_token_at: f64,
+}
+
+/// What the server is currently executing.
+#[derive(Debug, Clone)]
+pub enum Iteration {
+    Idle,
+    Prefill { batch: Vec<SimReq> },
+    Decode,
+}
+
+/// Outcome of one finished request.
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    pub req: Request,
+    pub server: usize,
+    pub ttft: f64,
+    /// Mean time between tokens (NaN for single-token outputs).
+    pub tbt: f64,
+    pub finished_at: f64,
+}
+
+#[derive(Debug)]
+pub struct SimServer {
+    pub id: usize,
+    pub cm: CostModel,
+    /// Ready-to-prefill FIFO.
+    pub queue: VecDeque<SimReq>,
+    /// Requests waiting for their adapter to be fetched.
+    pub waiting_fetch: Vec<SimReq>,
+    pub active: Vec<ActiveReq>,
+    pub running: Iteration,
+    /// Outstanding-work estimate in seconds (Toppings' signal).
+    pub outstanding: f64,
+    pub gpu_cache: GpuAdapterCache,
+    pub busy_until: f64,
+    pub busy_time: f64,
+    /// Per-server TTFT samples (queueing+prefill, Fig 18 top).
+    pub ttft_samples: Vec<f64>,
+    pub timeouts: u64,
+    /// Mixing diagnostics: iterations total / iterations whose batch
+    /// max rank was >= 64 (the interference tax indicator).
+    pub iters: u64,
+    pub iters_highrank: u64,
+}
+
+impl SimServer {
+    pub fn new(id: usize, cm: CostModel) -> Self {
+        SimServer {
+            id,
+            cm,
+            queue: VecDeque::new(),
+            waiting_fetch: Vec::new(),
+            active: Vec::new(),
+            running: Iteration::Idle,
+            outstanding: 0.0,
+            gpu_cache: GpuAdapterCache::new(
+                cm.server.gpu_adapter_cache_bytes,
+            ),
+            busy_until: 0.0,
+            busy_time: 0.0,
+            ttft_samples: Vec::new(),
+            timeouts: 0,
+            iters: 0,
+            iters_highrank: 0,
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        matches!(self.running, Iteration::Idle)
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.active.is_empty()
+    }
+
+    /// Requests queued, waiting, or decoding on this server — the
+    /// count-granularity load signal the Toppings router inspects.
+    pub fn pending_count(&self) -> usize {
+        self.queue.len() + self.waiting_fetch.len() + self.active.len()
+    }
+
+    /// Estimated service seconds a request adds to this server.
+    pub fn estimate(cm: &CostModel, req: &Request, rank: u32) -> f64 {
+        let prefill = cm.prefill(req.prompt_len as u64, rank);
+        // decode share: assume a typical batch of half max_batch_size
+        let b = (cm.server.max_batch_size / 2).max(1);
+        let step = cm.decode(b, b as u64 * 640, rank);
+        prefill + step / b as f64 * req.output_len as f64
+    }
+
+    pub fn enqueue_ready(&mut self, sreq: SimReq) {
+        self.outstanding += sreq.est;
+        self.queue.push_back(sreq);
+    }
+
+    pub fn enqueue_waiting(&mut self, sreq: SimReq) {
+        self.outstanding += sreq.est;
+        self.waiting_fetch.push(sreq);
+    }
+
+    /// Move requests whose adapter just became resident into the ready
+    /// queue (ordered by arrival to preserve FIFO fairness).
+    pub fn release_waiting(&mut self, adapter: AdapterId) {
+        let mut released: Vec<SimReq> = Vec::new();
+        self.waiting_fetch.retain(|r| {
+            if r.req.adapter == adapter {
+                released.push(*r);
+                false
+            } else {
+                true
+            }
+        });
+        released.sort_by(|a, b| {
+            a.req.arrival.partial_cmp(&b.req.arrival).unwrap()
+        });
+        for r in released {
+            self.queue.push_back(r);
+        }
+    }
+
+    /// Drop queued requests older than `timeout` (frontend gives up).
+    ///
+    /// The ready queue is FIFO by arrival, so expired requests cluster
+    /// at the front: a front-only scan is O(dropped) instead of the
+    /// O(queue-depth) full retain this used to be — which dominated
+    /// 90% of simulation time under backlog (EXPERIMENTS.md §Perf).
+    /// Requests re-queued out of order by `release_waiting` are at
+    /// worst dropped a little late, when they reach the front.
+    pub fn purge_timeouts(&mut self, now: f64, timeout: f64) -> u64 {
+        let mut dropped = 0;
+        while let Some(front) = self.queue.front() {
+            if now - front.req.arrival > timeout {
+                let r = self.queue.pop_front().unwrap();
+                self.outstanding -= r.est;
+                dropped += 1;
+            } else {
+                break;
+            }
+        }
+        // the waiting-fetch list is short (adapters in flight); keep
+        // the exact scan but skip it when empty
+        if !self.waiting_fetch.is_empty() {
+            let outstanding = &mut self.outstanding;
+            self.waiting_fetch.retain(|r| {
+                if now - r.req.arrival > timeout {
+                    *outstanding -= r.est;
+                    dropped += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        self.timeouts += dropped;
+        dropped
+    }
+
+    /// Start the next iteration if idle and work exists. Returns the
+    /// iteration's service time (caller schedules IterationDone).
+    ///
+    /// Policy: prefill-prioritized iteration-level scheduling — admit a
+    /// prefill batch (token budget + slot limited) if any request is
+    /// queued, otherwise run one decode step over all active sequences.
+    pub fn start_iteration(&mut self, now: f64) -> Option<f64> {
+        if !self.is_idle() {
+            return None;
+        }
+        // admit prefills
+        let mut batch: Vec<SimReq> = Vec::new();
+        let mut tokens = 0u64;
+        let slots = self
+            .cm
+            .server
+            .max_batch_size
+            .saturating_sub(self.active.len());
+        while let Some(head) = self.queue.front() {
+            if batch.len() >= slots {
+                break;
+            }
+            let t = head.req.prompt_len as u64;
+            if !batch.is_empty()
+                && tokens + t > self.cm.server.max_batch_tokens as u64
+            {
+                break;
+            }
+            tokens += t;
+            batch.push(self.queue.pop_front().unwrap());
+        }
+        if !batch.is_empty() {
+            let max_rank =
+                batch.iter().map(|r| r.rank).max().unwrap_or(0);
+            // page this batch's adapters into the GPU pool (S-LoRA
+            // unified paging); active sequences' adapters are pinned
+            let pinned: std::collections::BTreeSet<AdapterId> = self
+                .active
+                .iter()
+                .map(|a| a.sreq.req.adapter)
+                .chain(batch.iter().map(|r| r.req.adapter))
+                .collect();
+            let mut load_time = 0.0;
+            let pcie = self.cm.server.gpu.pcie_bw;
+            for r in &batch {
+                load_time += self.gpu_cache.touch(
+                    r.req.adapter,
+                    r.adapter_bytes,
+                    pcie,
+                    &pinned,
+                );
+            }
+            let time = self.cm.prefill(tokens, max_rank) + load_time;
+            self.iters += 1;
+            self.iters_highrank += (max_rank >= 64) as u64;
+            self.running = Iteration::Prefill { batch };
+            self.busy_until = now + time;
+            self.busy_time += time;
+            return Some(time);
+        }
+        if !self.active.is_empty() {
+            let b = self.active.len();
+            let cached: u64 = self
+                .active
+                .iter()
+                .map(|a| {
+                    a.sreq.req.prompt_len as u64 + a.produced as u64
+                })
+                .sum();
+            let max_rank =
+                self.active.iter().map(|a| a.sreq.rank).max().unwrap();
+            let time = self.cm.decode(b, cached, max_rank);
+            self.iters += 1;
+            self.iters_highrank += (max_rank >= 64) as u64;
+            self.running = Iteration::Decode;
+            self.busy_until = now + time;
+            self.busy_time += time;
+            return Some(time);
+        }
+        None
+    }
+
+    /// Finish the running iteration; returns completed requests.
+    pub fn finish_iteration(&mut self, now: f64) -> Vec<Completion> {
+        let mut done = Vec::new();
+        match std::mem::replace(&mut self.running, Iteration::Idle) {
+            Iteration::Idle => {}
+            Iteration::Prefill { batch } => {
+                for sreq in batch {
+                    let ttft = now - sreq.req.arrival;
+                    self.ttft_samples.push(ttft);
+                    if sreq.req.output_len <= 1 {
+                        self.outstanding -= sreq.est;
+                        done.push(Completion {
+                            req: sreq.req,
+                            server: self.id,
+                            ttft,
+                            tbt: f64::NAN,
+                            finished_at: now,
+                        });
+                    } else {
+                        self.active.push(ActiveReq {
+                            sreq,
+                            produced: 1,
+                            first_token_at: now,
+                        });
+                    }
+                }
+            }
+            Iteration::Decode => {
+                let id = self.id;
+                let outstanding = &mut self.outstanding;
+                self.active.retain_mut(|a| {
+                    a.produced += 1;
+                    if a.produced >= a.sreq.req.output_len {
+                        *outstanding -= a.sreq.est;
+                        done.push(Completion {
+                            req: a.sreq.req,
+                            server: id,
+                            ttft: a.first_token_at - a.sreq.req.arrival,
+                            tbt: (now - a.first_token_at)
+                                / (a.sreq.req.output_len - 1).max(1) as f64,
+                            finished_at: now,
+                        });
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+        }
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServerConfig;
+
+    fn server() -> SimServer {
+        SimServer::new(0, CostModel::new(ServerConfig::default()))
+    }
+
+    fn req(arrival: f64, adapter: AdapterId, prompt: u32, output: u32) -> SimReq {
+        let r = Request {
+            id: 0,
+            adapter,
+            prompt_len: prompt,
+            output_len: output,
+            arrival,
+        };
+        SimReq {
+            req: r,
+            rank: 8,
+            adapter_bytes: 17 << 20,
+            est: 0.1,
+        }
+    }
+
+    #[test]
+    fn prefill_then_decode_lifecycle() {
+        let mut s = server();
+        s.enqueue_ready(req(0.0, 0, 100, 3));
+        let t1 = s.start_iteration(0.0).unwrap();
+        assert!(t1 > 0.0);
+        let done = s.finish_iteration(t1);
+        assert!(done.is_empty());
+        assert_eq!(s.active.len(), 1);
+        assert_eq!(s.ttft_samples.len(), 1);
+        // two decode steps to finish output_len=3
+        let t2 = s.start_iteration(t1).unwrap();
+        assert!(s.finish_iteration(t1 + t2).is_empty());
+        let t3 = s.start_iteration(t1 + t2).unwrap();
+        let done = s.finish_iteration(t1 + t2 + t3);
+        assert_eq!(done.len(), 1);
+        let c = done[0];
+        assert!((c.ttft - t1).abs() < 1e-12);
+        assert!((c.tbt - (t2 + t3) / 2.0).abs() < 1e-12);
+        assert!(!s.has_work());
+        assert!(s.outstanding.abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_token_output_completes_at_prefill() {
+        let mut s = server();
+        s.enqueue_ready(req(0.0, 0, 50, 1));
+        let t = s.start_iteration(0.0).unwrap();
+        let done = s.finish_iteration(t);
+        assert_eq!(done.len(), 1);
+        assert!(done[0].tbt.is_nan());
+        assert!(s.active.is_empty());
+    }
+
+    #[test]
+    fn batch_respects_token_budget() {
+        let mut s = server();
+        let budget = s.cm.server.max_batch_tokens as u32;
+        s.enqueue_ready(req(0.0, 0, budget - 10, 2));
+        s.enqueue_ready(req(0.0, 1, 100, 2));
+        s.start_iteration(0.0).unwrap();
+        if let Iteration::Prefill { batch } = &s.running {
+            assert_eq!(batch.len(), 1, "second prompt must not fit");
+        } else {
+            panic!("expected prefill");
+        }
+        assert_eq!(s.queue.len(), 1);
+    }
+
+    #[test]
+    fn oversized_prompt_still_admitted_alone() {
+        let mut s = server();
+        let budget = s.cm.server.max_batch_tokens as u32;
+        s.enqueue_ready(req(0.0, 0, budget * 2, 2));
+        assert!(s.start_iteration(0.0).is_some());
+    }
+
+    #[test]
+    fn mixed_rank_batch_pays_max_rank() {
+        let mut s = server();
+        let mut lo = req(0.0, 0, 500, 2);
+        lo.rank = 8;
+        let mut hi = req(0.0, 1, 500, 2);
+        hi.rank = 128;
+        // homogeneous low-rank batch
+        let mut s1 = server();
+        s1.enqueue_ready(lo);
+        s1.enqueue_ready({
+            let mut x = lo;
+            x.req.adapter = 2;
+            x
+        });
+        let t_lo = s1.start_iteration(0.0).unwrap();
+        // mixed batch of the same token count
+        s.enqueue_ready(lo);
+        s.enqueue_ready(hi);
+        let t_mixed = s.start_iteration(0.0).unwrap();
+        assert!(
+            t_mixed > t_lo * 1.2,
+            "mixed {t_mixed} vs homogeneous {t_lo}"
+        );
+    }
+
+    #[test]
+    fn waiting_fetch_released_in_arrival_order() {
+        let mut s = server();
+        s.enqueue_waiting(req(2.0, 5, 10, 1));
+        s.enqueue_waiting(req(1.0, 5, 10, 1));
+        s.enqueue_waiting(req(1.5, 6, 10, 1));
+        s.release_waiting(5);
+        assert_eq!(s.queue.len(), 2);
+        assert_eq!(s.queue[0].req.arrival, 1.0);
+        assert_eq!(s.waiting_fetch.len(), 1);
+    }
+
+    #[test]
+    fn purge_timeouts_counts_and_restores_outstanding() {
+        let mut s = server();
+        s.enqueue_ready(req(0.0, 0, 10, 1));
+        s.enqueue_waiting(req(0.5, 1, 10, 1));
+        let before = s.outstanding;
+        assert!(before > 0.0);
+        let dropped = s.purge_timeouts(100.0, 10.0);
+        assert_eq!(dropped, 2);
+        assert_eq!(s.timeouts, 2);
+        assert!(s.outstanding.abs() < 1e-9);
+        assert_eq!(s.purge_timeouts(100.0, 1000.0), 0);
+    }
+
+    #[test]
+    fn decode_only_when_no_prefill_queued() {
+        let mut s = server();
+        s.enqueue_ready(req(0.0, 0, 10, 5));
+        let t = s.start_iteration(0.0).unwrap();
+        s.finish_iteration(t);
+        // now one active decode; enqueue a new prefill — prefill wins
+        s.enqueue_ready(req(t, 1, 10, 2));
+        s.start_iteration(t).unwrap();
+        assert!(matches!(s.running, Iteration::Prefill { .. }));
+    }
+}

@@ -1,0 +1,341 @@
+//! Azure-Public-Dataset-style derived traces (§V-E).
+//!
+//! The paper annotates the (timestamp-free) Azure traces with arrival
+//! times and adapter names, producing six traces from the cross product
+//!
+//!   arrival  ∈ {Uniform, Poisson}
+//!   rank-popularity ∈ {Uniform, ShiftingSkew, Exponential}
+//!
+//! over 25 adapters (5 per rank class 8/16/32/64/128), matching prior
+//! work (Chameleon, Toppings). Within a rank class the adapter is chosen
+//! uniformly.
+
+use super::{LengthModel, Trace};
+use crate::config::ModelSpec;
+use crate::util::rng::Pcg32;
+use crate::workload::{AdapterSet, Request, RANK_CLASSES};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// Request times i.i.d. uniform over the duration.
+    Uniform,
+    /// Homogeneous Poisson process.
+    Poisson,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RankPopularity {
+    /// Every rank class equally likely.
+    Uniform,
+    /// Fig 16: at t=0 the largest rank gets 50% (rest uniform); the
+    /// skew shifts linearly until at t=T the smallest rank gets 50%.
+    ShiftingSkew,
+    /// Rank-class popularity exponentially distributed, smaller ranks
+    /// more popular (Chameleon's setting).
+    Exponential,
+}
+
+impl RankPopularity {
+    /// Probability of each rank class at normalized time f ∈ [0,1].
+    pub fn class_probs(&self, n_classes: usize, f: f64) -> Vec<f64> {
+        match self {
+            RankPopularity::Uniform => {
+                vec![1.0 / n_classes as f64; n_classes]
+            }
+            RankPopularity::ShiftingSkew => {
+                // class order: index 0 = smallest rank. Interpolate
+                // between "largest gets 0.5" and "smallest gets 0.5";
+                // the remaining mass is uniform over the other classes.
+                let rest = 0.5 / (n_classes - 1) as f64;
+                let mut probs = vec![0.0; n_classes];
+                for (k, p) in probs.iter_mut().enumerate() {
+                    let at_start =
+                        if k == n_classes - 1 { 0.5 } else { rest };
+                    let at_end = if k == 0 { 0.5 } else { rest };
+                    *p = at_start * (1.0 - f) + at_end * f;
+                }
+                probs
+            }
+            RankPopularity::Exponential => {
+                let raw: Vec<f64> =
+                    (0..n_classes).map(|k| (-(k as f64)).exp()).collect();
+                let total: f64 = raw.iter().sum();
+                raw.into_iter().map(|x| x / total).collect()
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RankPopularity::Uniform => "uniform",
+            RankPopularity::ShiftingSkew => "shifting",
+            RankPopularity::Exponential => "exponential",
+        }
+    }
+}
+
+impl Arrival {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Arrival::Uniform => "uniform-arrival",
+            Arrival::Poisson => "poisson-arrival",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AzureConfig {
+    pub arrival: Arrival,
+    pub popularity: RankPopularity,
+    /// 25 adapters: 5 per rank class, as in prior work.
+    pub adapters_per_rank: usize,
+    pub rps: f64,
+    pub duration: f64,
+    pub lengths: LengthModel,
+    pub model: ModelSpec,
+    pub seed: u64,
+}
+
+impl Default for AzureConfig {
+    fn default() -> Self {
+        AzureConfig {
+            arrival: Arrival::Poisson,
+            popularity: RankPopularity::Uniform,
+            adapters_per_rank: 5,
+            rps: 8.0,
+            duration: 600.0,
+            lengths: LengthModel::default(),
+            model: ModelSpec::LLAMA_7B,
+            seed: 0,
+        }
+    }
+}
+
+/// All six (arrival × popularity) combinations, Fig 19/20's x-axis.
+pub fn six_trace_matrix() -> Vec<(Arrival, RankPopularity)> {
+    let mut out = Vec::new();
+    for arrival in [Arrival::Uniform, Arrival::Poisson] {
+        for pop in [
+            RankPopularity::Uniform,
+            RankPopularity::ShiftingSkew,
+            RankPopularity::Exponential,
+        ] {
+            out.push((arrival, pop));
+        }
+    }
+    out
+}
+
+pub fn generate(cfg: &AzureConfig) -> Trace {
+    let mut rng = Pcg32::with_stream(cfg.seed, 0xa27e);
+    let n_classes = RANK_CLASSES.len();
+    let adapters = AdapterSet::uniform_per_rank(
+        cfg.adapters_per_rank * n_classes,
+        &RANK_CLASSES,
+        &cfg.model,
+    );
+    let mut class_members: Vec<Vec<u32>> = vec![Vec::new(); n_classes];
+    for a in adapters.iter() {
+        let k = RANK_CLASSES.iter().position(|&r| r == a.rank).unwrap();
+        class_members[k].push(a.id);
+    }
+
+    // arrival times
+    let n = (cfg.rps * cfg.duration).round() as usize;
+    let mut times = Vec::with_capacity(n);
+    match cfg.arrival {
+        Arrival::Uniform => {
+            for _ in 0..n {
+                times.push(rng.f64() * cfg.duration);
+            }
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        Arrival::Poisson => {
+            let mut t = 0.0;
+            while times.len() < n {
+                t += rng.exponential(cfg.rps);
+                if t > cfg.duration {
+                    break;
+                }
+                times.push(t);
+            }
+        }
+    }
+
+    let requests: Vec<Request> = times
+        .into_iter()
+        .map(|t| {
+            let f = t / cfg.duration;
+            let probs = cfg.popularity.class_probs(n_classes, f);
+            let k = rng.weighted_index(&probs);
+            let members = &class_members[k];
+            let adapter = members[rng.below(members.len() as u64) as usize];
+            let (p, o) = cfg.lengths.sample(&mut rng);
+            Request {
+                id: 0,
+                adapter,
+                prompt_len: p,
+                output_len: o,
+                arrival: t,
+            }
+        })
+        .collect();
+
+    Trace::new(
+        &format!(
+            "azure-{}-{}",
+            cfg.arrival.label(),
+            cfg.popularity.label()
+        ),
+        adapters,
+        requests,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::characterize;
+
+    #[test]
+    fn class_probs_sum_to_one() {
+        for pop in [
+            RankPopularity::Uniform,
+            RankPopularity::ShiftingSkew,
+            RankPopularity::Exponential,
+        ] {
+            for f in [0.0, 0.3, 1.0] {
+                let p = pop.class_probs(5, f);
+                let sum: f64 = p.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-9, "{pop:?} f={f}");
+                assert!(p.iter().all(|&x| x >= 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn shifting_skew_endpoints() {
+        let p0 = RankPopularity::ShiftingSkew.class_probs(5, 0.0);
+        assert!((p0[4] - 0.5).abs() < 1e-9); // largest rank 50% at start
+        assert!((p0[0] - 0.125).abs() < 1e-9);
+        let p1 = RankPopularity::ShiftingSkew.class_probs(5, 1.0);
+        assert!((p1[0] - 0.5).abs() < 1e-9); // smallest rank 50% at end
+        assert!((p1[4] - 0.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exponential_prefers_small_ranks() {
+        let p = RankPopularity::Exponential.class_probs(5, 0.5);
+        for w in p.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+        assert!(p[0] > 0.5);
+    }
+
+    #[test]
+    fn poisson_arrival_rate() {
+        let cfg = AzureConfig {
+            rps: 20.0,
+            duration: 300.0,
+            ..Default::default()
+        };
+        let t = generate(&cfg);
+        let rps = t.requests.len() as f64 / 300.0;
+        assert!((rps - 20.0).abs() < 2.0, "rps={rps}");
+        // inter-arrival CV ≈ 1 for Poisson
+        let gaps: Vec<f64> = t
+            .requests
+            .windows(2)
+            .map(|w| w[1].arrival - w[0].arrival)
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>()
+            / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.15, "cv={cv}");
+    }
+
+    #[test]
+    fn uniform_arrival_sorted_and_in_range() {
+        let cfg = AzureConfig {
+            arrival: Arrival::Uniform,
+            rps: 10.0,
+            duration: 100.0,
+            ..Default::default()
+        };
+        let t = generate(&cfg);
+        for w in t.requests.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        assert!(t.duration() <= 100.0);
+    }
+
+    #[test]
+    fn shifting_skew_moves_traffic() {
+        let cfg = AzureConfig {
+            popularity: RankPopularity::ShiftingSkew,
+            rps: 50.0,
+            duration: 600.0,
+            seed: 3,
+            ..Default::default()
+        };
+        let t = generate(&cfg);
+        let half = 300.0;
+        let (mut hi_first, mut hi_second) = (0usize, 0usize);
+        let (mut n_first, mut n_second) = (0usize, 0usize);
+        for r in &t.requests {
+            let rank = t.adapters.get(r.adapter).rank;
+            if r.arrival < half {
+                n_first += 1;
+                if rank == 128 {
+                    hi_first += 1;
+                }
+            } else {
+                n_second += 1;
+                if rank == 128 {
+                    hi_second += 1;
+                }
+            }
+        }
+        let f1 = hi_first as f64 / n_first as f64;
+        let f2 = hi_second as f64 / n_second as f64;
+        // analytic halves: mean of (0.5, 0.3125) vs (0.3125, 0.125)
+        assert!((f1 - 0.406).abs() < 0.04, "first-half r128 share {f1}");
+        assert!((f2 - 0.219).abs() < 0.04, "second-half r128 share {f2}");
+    }
+
+    #[test]
+    fn six_traces_distinct() {
+        let combos = six_trace_matrix();
+        assert_eq!(combos.len(), 6);
+        let names: std::collections::BTreeSet<String> = combos
+            .iter()
+            .map(|(a, p)| {
+                let cfg = AzureConfig {
+                    arrival: *a,
+                    popularity: *p,
+                    rps: 5.0,
+                    duration: 60.0,
+                    ..Default::default()
+                };
+                generate(&cfg).name
+            })
+            .collect();
+        assert_eq!(names.len(), 6);
+    }
+
+    #[test]
+    fn adapters_within_class_roughly_uniform() {
+        let cfg = AzureConfig {
+            rps: 100.0,
+            duration: 200.0,
+            ..Default::default()
+        };
+        let t = generate(&cfg);
+        let shares = characterize::adapter_request_shares(&t);
+        // 25 adapters, uniform popularity => each ~4%
+        for &(_, s) in &shares {
+            assert!(s < 0.10, "share={s}");
+        }
+    }
+}

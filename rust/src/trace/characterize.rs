@@ -1,0 +1,220 @@
+//! Trace characterization: the statistics behind Figs 7-10 and 15-16.
+
+use super::Trace;
+use crate::util::stats::moving_average;
+use crate::workload::AdapterId;
+use std::collections::BTreeMap;
+
+/// Request share per adapter, sorted descending (Fig 8).
+pub fn adapter_request_shares(trace: &Trace) -> Vec<(AdapterId, f64)> {
+    let mut counts: BTreeMap<AdapterId, u64> = BTreeMap::new();
+    for r in &trace.requests {
+        *counts.entry(r.adapter).or_insert(0) += 1;
+    }
+    let total = trace.requests.len().max(1) as f64;
+    let mut shares: Vec<(AdapterId, f64)> = counts
+        .into_iter()
+        .map(|(a, c)| (a, c as f64 / total))
+        .collect();
+    shares.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    shares
+}
+
+/// Combined request share of the top-k adapters (paper: top 5 > 70%).
+pub fn top_k_request_share(trace: &Trace, k: usize) -> f64 {
+    adapter_request_shares(trace)
+        .iter()
+        .take(k)
+        .map(|(_, s)| s)
+        .sum()
+}
+
+/// Request share per rank class (Fig 15 left).
+pub fn rank_request_shares(trace: &Trace) -> Vec<(u32, f64)> {
+    let mut counts: BTreeMap<u32, u64> = BTreeMap::new();
+    for r in &trace.requests {
+        let rank = trace.adapters.get(r.adapter).rank;
+        *counts.entry(rank).or_insert(0) += 1;
+    }
+    let total = trace.requests.len().max(1) as f64;
+    counts
+        .into_iter()
+        .map(|(r, c)| (r, c as f64 / total))
+        .collect()
+}
+
+/// Token share per rank class (Fig 15 right).
+pub fn rank_token_shares(trace: &Trace) -> Vec<(u32, f64)> {
+    let mut counts: BTreeMap<u32, u64> = BTreeMap::new();
+    let mut total = 0u64;
+    for r in &trace.requests {
+        let rank = trace.adapters.get(r.adapter).rank;
+        let toks = r.total_tokens();
+        *counts.entry(rank).or_insert(0) += toks;
+        total += toks;
+    }
+    counts
+        .into_iter()
+        .map(|(r, c)| (r, c as f64 / total.max(1) as f64))
+        .collect()
+}
+
+/// Requests-per-minute series for one adapter, optionally smoothed with
+/// a moving average (Fig 10's presentation).
+pub fn requests_per_minute(
+    trace: &Trace,
+    adapter: AdapterId,
+    smooth_window: usize,
+) -> Vec<f64> {
+    let minutes = (trace.duration() / 60.0).ceil().max(1.0) as usize;
+    let mut counts = vec![0.0; minutes];
+    for r in &trace.requests {
+        if r.adapter == adapter {
+            let m = ((r.arrival / 60.0) as usize).min(minutes - 1);
+            counts[m] += 1.0;
+        }
+    }
+    if smooth_window > 1 {
+        moving_average(&counts, smooth_window)
+    } else {
+        counts
+    }
+}
+
+/// Rank popularity in consecutive windows — visualizes the shifting
+/// skew (Fig 16): returns, per window, the share of each unique rank.
+pub fn rank_share_over_time(
+    trace: &Trace,
+    n_windows: usize,
+) -> Vec<BTreeMap<u32, f64>> {
+    let duration = trace.duration().max(1e-9);
+    let mut wins: Vec<BTreeMap<u32, u64>> =
+        vec![BTreeMap::new(); n_windows];
+    let mut totals = vec![0u64; n_windows];
+    for r in &trace.requests {
+        let w = ((r.arrival / duration * n_windows as f64) as usize)
+            .min(n_windows - 1);
+        let rank = trace.adapters.get(r.adapter).rank;
+        *wins[w].entry(rank).or_insert(0) += 1;
+        totals[w] += 1;
+    }
+    wins.into_iter()
+        .zip(totals)
+        .map(|(m, tot)| {
+            m.into_iter()
+                .map(|(r, c)| (r, c as f64 / tot.max(1) as f64))
+                .collect()
+        })
+        .collect()
+}
+
+/// Estimated tokens-per-second demand per adapter over a window —
+/// the signal Algorithm 1 consumes (GETPREVTIMESTEPTPS).
+pub fn adapter_tps_in_window(
+    trace: &Trace,
+    t0: f64,
+    t1: f64,
+) -> BTreeMap<AdapterId, f64> {
+    assert!(t1 > t0);
+    let mut toks: BTreeMap<AdapterId, u64> = BTreeMap::new();
+    for r in &trace.requests {
+        if r.arrival >= t0 && r.arrival < t1 {
+            *toks.entry(r.adapter).or_insert(0) += r.total_tokens();
+        }
+    }
+    toks.into_iter()
+        .map(|(a, t)| (a, t as f64 / (t1 - t0)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::workload::{AdapterSet, Request};
+
+    fn trace_with(counts: &[(u32, usize)]) -> Trace {
+        // counts: (adapter id, n requests); 4 adapters ranks 8/8/64/128
+        let adapters = AdapterSet::new(vec![
+            crate::workload::Adapter { id: 0, rank: 8, size_bytes: 1 },
+            crate::workload::Adapter { id: 1, rank: 8, size_bytes: 1 },
+            crate::workload::Adapter { id: 2, rank: 64, size_bytes: 1 },
+            crate::workload::Adapter { id: 3, rank: 128, size_bytes: 1 },
+        ]);
+        let mut reqs = Vec::new();
+        let mut t = 0.0;
+        for &(a, n) in counts {
+            for _ in 0..n {
+                t += 1.0;
+                reqs.push(Request {
+                    id: 0,
+                    adapter: a,
+                    prompt_len: 100,
+                    output_len: 10,
+                    arrival: t,
+                });
+            }
+        }
+        Trace::new("t", adapters, reqs)
+    }
+
+    #[test]
+    fn shares_sorted_and_sum_to_one() {
+        let t = trace_with(&[(0, 10), (1, 30), (2, 40), (3, 20)]);
+        let shares = adapter_request_shares(&t);
+        assert_eq!(shares[0].0, 2);
+        assert!((shares.iter().map(|(_, s)| s).sum::<f64>() - 1.0).abs()
+            < 1e-9);
+        assert!((top_k_request_share(&t, 2) - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_shares() {
+        let t = trace_with(&[(0, 10), (1, 10), (2, 60), (3, 20)]);
+        let rs = rank_request_shares(&t);
+        assert_eq!(rs, vec![(8, 0.2), (64, 0.6), (128, 0.2)]);
+        // equal lengths => token shares match request shares
+        let ts = rank_token_shares(&t);
+        for ((r1, s1), (r2, s2)) in rs.iter().zip(ts.iter()) {
+            assert_eq!(r1, r2);
+            assert!((s1 - s2).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rpm_series_counts() {
+        let t = trace_with(&[(0, 120)]); // one per second for 2 minutes
+        let rpm = requests_per_minute(&t, 0, 1);
+        assert_eq!(rpm.len(), 2);
+        assert!((rpm[0] - 59.0).abs() <= 1.0); // arrivals start at t=1
+        assert_eq!(requests_per_minute(&t, 3, 1).iter().sum::<f64>(), 0.0);
+    }
+
+    #[test]
+    fn rank_share_windows() {
+        // first half adapter 3 (rank 128), second half adapter 0 (rank 8)
+        let adapters = trace_with(&[]).adapters.clone();
+        let mut reqs = Vec::new();
+        for i in 0..100 {
+            reqs.push(Request {
+                id: 0,
+                adapter: if i < 50 { 3 } else { 0 },
+                prompt_len: 10,
+                output_len: 1,
+                arrival: i as f64,
+            });
+        }
+        let t = Trace::new("w", adapters, reqs);
+        let wins = rank_share_over_time(&t, 2);
+        assert!(wins[0].get(&128).copied().unwrap_or(0.0) > 0.9);
+        assert!(wins[1].get(&8).copied().unwrap_or(0.0) > 0.9);
+    }
+
+    #[test]
+    fn tps_window() {
+        let t = trace_with(&[(0, 10)]); // 110 tokens each, t=1..10
+        let tps = adapter_tps_in_window(&t, 0.0, 11.0);
+        assert!((tps[&0] - 10.0 * 110.0 / 11.0).abs() < 1e-9);
+        assert!(adapter_tps_in_window(&t, 100.0, 101.0).is_empty());
+    }
+}

@@ -1,0 +1,387 @@
+//! Production-like trace synthesis (the "Company X" substitute).
+//!
+//! Matches the published marginals of the paper's production trace
+//! (§III-B, §V-E):
+//!  * 5 base production adapters, one per rank class {8,…,128}, with a
+//!    heavy-tailed request share (top adapters dominate — Fig 8/15);
+//!  * 250,138 requests over 8 hours (default; configurable);
+//!  * distinct arrival shapes per adapter over time — rising/falling
+//!    drift, diurnal, stable, late surge (Fig 10);
+//!  * annotation into N ∈ {50,100,200} adapters by splitting each rank
+//!    class's traffic across same-rank adapters with a power law (α=1).
+
+use super::{LengthModel, Trace};
+use crate::config::ModelSpec;
+use crate::util::rng::{Pcg32, PowerLaw};
+use crate::workload::{AdapterSet, Request, RANK_CLASSES};
+
+/// Request share per rank class in the production trace, mirroring
+/// Fig 15's skewed rank-wise distribution (most traffic on small ranks).
+pub const RANK_REQUEST_SHARE: [f64; 5] = [0.38, 0.27, 0.17, 0.11, 0.07];
+
+/// Arrival-shape archetypes observed in Fig 10.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalShape {
+    /// Gradual upward drift (adapter 1 in Fig 10).
+    DriftUp,
+    /// Gradual downward drift (adapter 3).
+    DriftDown,
+    /// Day/night cycle (adapter 5).
+    Diurnal,
+    /// Flat demand (adapter 4, early part).
+    Stable,
+    /// Stable then a sudden load surge near the end (adapter 2).
+    LateSurge,
+}
+
+pub const SHAPES: [ArrivalShape; 5] = [
+    ArrivalShape::DriftUp,
+    ArrivalShape::LateSurge,
+    ArrivalShape::DriftDown,
+    ArrivalShape::Stable,
+    ArrivalShape::Diurnal,
+];
+
+impl ArrivalShape {
+    /// Relative intensity at normalized time f ∈ [0,1]; mean ≈ 1.
+    pub fn intensity(&self, f: f64) -> f64 {
+        match self {
+            ArrivalShape::DriftUp => 0.5 + 1.0 * f,
+            ArrivalShape::DriftDown => 1.5 - 1.0 * f,
+            ArrivalShape::Diurnal => {
+                1.0 + 0.6 * (2.0 * std::f64::consts::PI * (f * 2.0 - 0.25))
+                    .sin()
+            }
+            ArrivalShape::Stable => 1.0,
+            ArrivalShape::LateSurge => {
+                if f < 0.8 {
+                    0.85
+                } else {
+                    0.85 + 2.4 * (f - 0.8) / 0.2
+                }
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ProductionConfig {
+    /// Total adapters after annotation (paper: 50 / 100 / 200).
+    pub n_adapters: usize,
+    pub n_requests: usize,
+    pub duration: f64,
+    /// Power-law exponent over adapter *counts* per rank class (§V-E:
+    /// α = 1).
+    pub alpha: f64,
+    /// Power-law exponent splitting *traffic* across the same-rank
+    /// adapters. The paper leaves this implicit, but its own Fig 8
+    /// (top-5 adapters > 70% of requests) requires a much steeper head
+    /// than α=1; 2.0 reproduces the published head share.
+    pub alpha_traffic: f64,
+    pub lengths: LengthModel,
+    pub model: ModelSpec,
+    pub seed: u64,
+}
+
+impl Default for ProductionConfig {
+    fn default() -> Self {
+        ProductionConfig {
+            n_adapters: 100,
+            n_requests: 250_138,
+            duration: 8.0 * 3600.0,
+            alpha: 1.0,
+            alpha_traffic: 2.0,
+            lengths: LengthModel::default(),
+            model: ModelSpec::LLAMA_7B,
+            seed: 0,
+        }
+    }
+}
+
+/// Synthesize the production-like trace.
+pub fn generate(cfg: &ProductionConfig) -> Trace {
+    let mut rng = Pcg32::with_stream(cfg.seed, 0x9d0d);
+    let adapters = AdapterSet::power_law_counts(
+        cfg.n_adapters,
+        &RANK_CLASSES,
+        cfg.alpha,
+        &cfg.model,
+    );
+
+    // Members of each rank class, and a power-law splitter within it.
+    let mut class_members: Vec<Vec<u32>> = vec![Vec::new(); RANK_CLASSES.len()];
+    for a in adapters.iter() {
+        let k = RANK_CLASSES.iter().position(|&r| r == a.rank).unwrap();
+        class_members[k].push(a.id);
+    }
+    let splitters: Vec<PowerLaw> = class_members
+        .iter()
+        .map(|m| PowerLaw::new(m.len().max(1), cfg.alpha_traffic))
+        .collect();
+
+    // Per-minute Poisson thinning: rank class k's rate at minute m is
+    // share_k * shape_k(m/M) * base, normalized so the expected total is
+    // n_requests.
+    let minutes = (cfg.duration / 60.0).ceil() as usize;
+    let mut norm = 0.0;
+    for (k, share) in RANK_REQUEST_SHARE.iter().enumerate() {
+        for m in 0..minutes {
+            let f = m as f64 / minutes.max(1) as f64;
+            norm += share * SHAPES[k].intensity(f);
+        }
+    }
+    let base = cfg.n_requests as f64 / norm;
+
+    let mut requests = Vec::with_capacity(cfg.n_requests + 1024);
+    for m in 0..minutes {
+        let f = m as f64 / minutes as f64;
+        for (k, share) in RANK_REQUEST_SHARE.iter().enumerate() {
+            let lambda = share * SHAPES[k].intensity(f) * base;
+            let count = rng.poisson(lambda);
+            for _ in 0..count {
+                let t = (m as f64 + rng.f64()) * 60.0;
+                if t > cfg.duration {
+                    continue;
+                }
+                let within = splitters[k].sample(&mut rng);
+                let adapter = class_members[k][within];
+                let (p, o) = cfg.lengths.sample(&mut rng);
+                requests.push(Request {
+                    id: 0,
+                    adapter,
+                    prompt_len: p,
+                    output_len: o,
+                    arrival: t,
+                });
+            }
+        }
+    }
+    Trace::new(
+        &format!("prod-n{}-s{}", cfg.n_adapters, cfg.seed),
+        adapters,
+        requests,
+    )
+}
+
+/// Raw fleet-level adapter request shares for the Fig 8 characterization:
+/// the top-5 of 1000+ production adapters take > 70% of traffic, the
+/// rest share the remainder with a power-law tail, each ≪ 1%.
+pub fn raw_adapter_shares(n_adapters: usize, seed: u64) -> Vec<f64> {
+    assert!(n_adapters > 5);
+    let mut rng = Pcg32::with_stream(seed, 0xf18);
+    // head shares mirroring Fig 8's reported ~72.4% top-5 total
+    let head = [0.28, 0.17, 0.12, 0.09, 0.064];
+    let head_total: f64 = head.iter().sum();
+    let tail_n = n_adapters - head.len();
+    // power-law tail with mild multiplicative noise
+    let mut tail: Vec<f64> = (0..tail_n)
+        .map(|k| ((k + 2) as f64).powf(-1.1) * rng.lognormal(0.0, 0.25))
+        .collect();
+    let tail_sum: f64 = tail.iter().sum();
+    for x in tail.iter_mut() {
+        *x *= (1.0 - head_total) / tail_sum;
+    }
+    let mut shares: Vec<f64> = head.to_vec();
+    shares.extend(tail);
+    shares.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    shares
+}
+
+/// Per-minute request counts over a week for the five busiest adapters —
+/// the Fig 10 characterization series (week-long, diurnal period = 1 day).
+pub fn week_rpm_series(seed: u64) -> Vec<(ArrivalShape, Vec<f64>)> {
+    let mut rng = Pcg32::with_stream(seed, 0x5ee7);
+    let minutes = 7 * 24 * 60;
+    let base_rpm = [120.0, 90.0, 70.0, 50.0, 30.0];
+    SHAPES
+        .iter()
+        .zip(base_rpm.iter())
+        .map(|(&shape, &base)| {
+            let series: Vec<f64> = (0..minutes)
+                .map(|m| {
+                    // diurnal repeats daily over the week; drift spans
+                    // the whole week
+                    let f_week = m as f64 / minutes as f64;
+                    let f_day = (m % (24 * 60)) as f64 / (24.0 * 60.0);
+                    let shape_f = match shape {
+                        ArrivalShape::Diurnal => {
+                            ArrivalShape::Diurnal.intensity(f_day)
+                        }
+                        s => s.intensity(f_week),
+                    };
+                    rng.poisson(base * shape_f) as f64
+                })
+                .collect();
+            (shape, series)
+        })
+        .collect()
+}
+
+/// Synthesized fleet snapshot for Figs 7 & 9: per-base-model adapter
+/// counts / memory footprints and server shares per model and region.
+pub struct FleetSnapshot {
+    pub models: Vec<(&'static str, usize, f64)>, // (name, n_adapters, GB)
+    pub server_share_by_model: Vec<(&'static str, f64)>,
+    pub server_share_by_region: Vec<(&'static str, f64)>,
+}
+
+pub fn fleet_snapshot(seed: u64) -> FleetSnapshot {
+    let mut rng = Pcg32::with_stream(seed, 0xf1ee7);
+    // Three base models with heavy concentration on Model A (Fig 7):
+    let counts = [620usize, 310, 140];
+    let names = ["model-a", "model-b", "model-c"];
+    let mut models = Vec::new();
+    for (name, &n) in names.iter().zip(counts.iter()) {
+        // mean adapter ≈ 0.6 GB (mix of ranks on a large base model)
+        let gb: f64 = (0..n)
+            .map(|_| rng.lognormal((0.45f64).ln(), 0.7))
+            .sum();
+        models.push((*name, n, gb));
+    }
+    FleetSnapshot {
+        models,
+        server_share_by_model: vec![
+            ("model-a", 0.55),
+            ("model-b", 0.27),
+            ("model-c", 0.18),
+        ],
+        server_share_by_region: vec![
+            ("region-1", 0.42),
+            ("region-2", 0.25),
+            ("region-3", 0.14),
+            ("region-4", 0.11),
+            ("other", 0.08),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::characterize;
+
+    fn small_cfg() -> ProductionConfig {
+        ProductionConfig {
+            n_adapters: 50,
+            n_requests: 20_000,
+            duration: 3600.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn request_count_close_to_target() {
+        let t = generate(&small_cfg());
+        let n = t.requests.len() as f64;
+        assert!(
+            (n - 20_000.0).abs() < 20_000.0 * 0.05,
+            "n={n}"
+        );
+        assert!(t.duration() <= 3600.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let t1 = generate(&small_cfg());
+        let t2 = generate(&small_cfg());
+        assert_eq!(t1.requests.len(), t2.requests.len());
+        assert_eq!(t1.requests[100], t2.requests[100]);
+        let mut cfg = small_cfg();
+        cfg.seed = 1;
+        let t3 = generate(&cfg);
+        assert_ne!(t1.requests.len(), t3.requests.len());
+    }
+
+    #[test]
+    fn rank_shares_match_spec() {
+        let t = generate(&small_cfg());
+        let shares = characterize::rank_request_shares(&t);
+        for (k, &r) in RANK_CLASSES.iter().enumerate() {
+            let got = shares.iter().find(|(rr, _)| *rr == r).unwrap().1;
+            assert!(
+                (got - RANK_REQUEST_SHARE[k]).abs() < 0.05,
+                "rank {r}: got {got}, want {}",
+                RANK_REQUEST_SHARE[k]
+            );
+        }
+    }
+
+    #[test]
+    fn top5_share_is_heavy_tailed() {
+        // With α=1 within classes + skewed class shares, the top-5
+        // adapters take far more than a uniform share of requests.
+        let mut cfg = small_cfg();
+        cfg.n_adapters = 100;
+        let t = generate(&cfg);
+        let top5 = characterize::top_k_request_share(&t, 5);
+        // head-heavy within-class traffic: top-5 carries ~half of all
+        // requests even after annotation to 100 adapters (Fig 8 shows
+        // >70% in the raw >1000-adapter fleet)
+        assert!(top5 > 0.40, "top5={top5}");
+    }
+
+    #[test]
+    fn raw_fleet_top5_over_70_percent() {
+        // Fig 8: in the raw production workload (1000+ adapters) the
+        // top-5 adapters exceed 70% of requests.
+        let shares = raw_adapter_shares(1000, 0);
+        assert_eq!(shares.len(), 1000);
+        let total: f64 = shares.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        let top5: f64 = shares.iter().take(5).sum();
+        assert!(top5 > 0.70 && top5 < 0.85, "top5={top5}");
+        // the tail adapters each get well under 1%
+        assert!(shares[50] < 0.01);
+    }
+
+    #[test]
+    fn shapes_mean_about_one() {
+        for s in SHAPES {
+            let mean: f64 = (0..1000)
+                .map(|i| s.intensity(i as f64 / 1000.0))
+                .sum::<f64>()
+                / 1000.0;
+            assert!((mean - 1.0).abs() < 0.15, "{s:?} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn late_surge_actually_surges() {
+        let s = ArrivalShape::LateSurge;
+        assert!(s.intensity(0.99) > 2.0 * s.intensity(0.5));
+    }
+
+    #[test]
+    fn week_series_shapes() {
+        let series = week_rpm_series(0);
+        assert_eq!(series.len(), 5);
+        for (_, xs) in &series {
+            assert_eq!(xs.len(), 7 * 24 * 60);
+        }
+        // diurnal series has within-day oscillation: compare first-day
+        // max/min of the hourly means
+        let diurnal = &series
+            .iter()
+            .find(|(s, _)| *s == ArrivalShape::Diurnal)
+            .unwrap()
+            .1;
+        let hours: Vec<f64> = (0..24)
+            .map(|h| {
+                diurnal[h * 60..(h + 1) * 60].iter().sum::<f64>() / 60.0
+            })
+            .collect();
+        let max = hours.iter().cloned().fold(f64::MIN, f64::max);
+        let min = hours.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max > 1.5 * min, "max={max} min={min}");
+    }
+
+    #[test]
+    fn fleet_concentrated() {
+        let f = fleet_snapshot(0);
+        assert!(f.models[0].1 > f.models[2].1 * 3);
+        let total: f64 =
+            f.server_share_by_model.iter().map(|(_, s)| s).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!(f.server_share_by_region[0].1 > 0.3);
+    }
+}

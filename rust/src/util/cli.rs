@@ -1,0 +1,166 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Subcommands are handled by the caller peeling the first positional.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Flag names that may appear without a value (parser hint).
+    known_flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name). `known_flags` lists
+    /// options that never take a value (e.g. "--fast").
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut args = Args {
+            known_flags: known_flags.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" terminator: rest is positional
+                    args.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if args.known_flags.iter().any(|f| f == body) {
+                    args.flags.push(body.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    args.options
+                        .insert(body.to_string(), it.next().unwrap());
+                } else {
+                    // option with no value and not a known flag: treat
+                    // as a flag anyway (lenient)
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name}={v}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{name}={v}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{name}={v}: {e}")),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--servers 4,8,12`.
+    pub fn get_usize_list(
+        &self,
+        name: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|e| format!("--{name}={v}: {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str], flags: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(
+            &["figures", "--fig", "17", "--fast", "--rps=30", "extra"],
+            &["fast"],
+        );
+        assert_eq!(a.subcommand(), Some("figures"));
+        assert_eq!(a.get("fig"), Some("17"));
+        assert_eq!(a.get("rps"), Some("30"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["figures", "extra"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--n", "42", "--x", "2.5", "--list", "1,2,3"], &[]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize_list("list", &[]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(parse(&["--n", "abc"], &[]).get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_option_without_value_is_flag() {
+        let a = parse(&["--verbose", "--k", "v"], &[]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("k"), Some("v"));
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["--a", "1", "--", "--not-an-option"], &[]);
+        assert_eq!(a.get("a"), Some("1"));
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+}

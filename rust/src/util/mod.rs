@@ -1,0 +1,13 @@
+//! Self-contained substrates: PRNG + distributions, exact statistics,
+//! minimal JSON, CLI parsing, table/CSV emission.
+//!
+//! These exist because the build environment is fully offline — only the
+//! `xla` crate's dependency closure is vendored — so the usual crates
+//! (rand, serde, clap, criterion) are rebuilt here at the scale this
+//! project needs, with their own tests.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

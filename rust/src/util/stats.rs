@@ -1,0 +1,325 @@
+//! Latency/throughput statistics: percentile recorders, histograms,
+//! moving averages. Exact (sort-based) percentiles — experiment sample
+//! counts are bounded (≤ millions), so we keep every sample rather than
+//! approximate with a sketch; property tests compare against a naive
+//! oracle anyway.
+
+/// Collects raw samples; computes exact order statistics on demand.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        debug_assert!(x.is_finite(), "non-finite sample {x}");
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend_from(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile with linear interpolation (same convention as
+    /// numpy.percentile's default). `p` in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        self.ensure_sorted();
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.xs.len();
+        if n == 1 {
+            return self.xs[0];
+        }
+        let rank = p / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.xs.first().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.xs.last().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.xs.iter().sum()
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.xs.len() < 2 {
+            return 0.0;
+        }
+        let mean = self.mean();
+        let var = self.xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / (self.xs.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    /// Fraction of samples ≤ threshold (SLO attainment).
+    pub fn frac_leq(&self, threshold: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().filter(|&&x| x <= threshold).count() as f64
+            / self.xs.len() as f64
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+
+    /// Box-plot summary (min, p25, p50, p75, max) — Fig 1 style.
+    pub fn box_summary(&mut self) -> [f64; 5] {
+        [
+            self.min(),
+            self.percentile(25.0),
+            self.percentile(50.0),
+            self.percentile(75.0),
+            self.max(),
+        ]
+    }
+}
+
+/// Fixed-bucket histogram over [lo, hi) with `n` equal bins + overflow.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    overflow: u64,
+    underflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            overflow: 0,
+            underflow: 0,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let bin = ((x - self.lo) / (self.hi - self.lo)
+                * self.counts.len() as f64) as usize;
+            let last = self.counts.len() - 1;
+            self.counts[bin.min(last)] += 1;
+        }
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.overflow + self.underflow
+    }
+
+    pub fn bin_edges(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..=self.counts.len())
+            .map(|i| self.lo + w * i as f64)
+            .collect()
+    }
+}
+
+/// Moving average over a fixed window — Fig 10's requests-per-minute
+/// smoothing.
+pub fn moving_average(xs: &[f64], window: usize) -> Vec<f64> {
+    assert!(window > 0);
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = 0.0;
+    for i in 0..xs.len() {
+        acc += xs[i];
+        if i >= window {
+            acc -= xs[i - window];
+        }
+        let n = (i + 1).min(window);
+        out.push(acc / n as f64);
+    }
+    out
+}
+
+/// Simple least-squares linear fit: returns (slope, intercept).
+/// Used by the demand extrapolator (Algorithm 1 step 1).
+pub fn linear_fit(ys: &[f64]) -> (f64, f64) {
+    let n = ys.len();
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    if n == 1 {
+        return (0.0, ys[0]);
+    }
+    let nf = n as f64;
+    let sx = (nf - 1.0) * nf / 2.0;
+    let sxx = (nf - 1.0) * nf * (2.0 * nf - 1.0) / 6.0;
+    let sy: f64 = ys.iter().sum();
+    let sxy: f64 = ys.iter().enumerate().map(|(i, y)| i as f64 * y).sum();
+    let denom = nf * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (0.0, sy / nf);
+    }
+    let slope = (nf * sxy - sx * sy) / denom;
+    let intercept = (sy - slope * sx) / nf;
+    (slope, intercept)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn percentile_against_naive_oracle() {
+        let mut rng = Pcg32::new(5);
+        for trial in 0..20 {
+            let n = 1 + rng.below(500) as usize;
+            let xs: Vec<f64> =
+                (0..n).map(|_| rng.range_f64(-100.0, 100.0)).collect();
+            let mut s = Samples::new();
+            for &x in &xs {
+                s.push(x);
+            }
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for p in [0.0, 25.0, 50.0, 95.0, 99.0, 100.0] {
+                let rank = p / 100.0 * (n - 1) as f64;
+                let (lo, hi) = (rank.floor() as usize, rank.ceil() as usize);
+                let frac = rank - lo as f64;
+                let want = sorted[lo] * (1.0 - frac) + sorted[hi] * frac;
+                let got = s.percentile(p);
+                assert!(
+                    (got - want).abs() < 1e-9,
+                    "trial={trial} p={p} got={got} want={want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn percentile_small_cases() {
+        let mut s = Samples::new();
+        assert!(s.p50().is_nan());
+        s.push(3.0);
+        assert_eq!(s.p50(), 3.0);
+        assert_eq!(s.percentile(95.0), 3.0);
+        s.push(1.0);
+        assert_eq!(s.p50(), 2.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+    }
+
+    #[test]
+    fn mean_std_frac() {
+        let mut s = Samples::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935).abs() < 1e-6);
+        assert!((s.frac_leq(5.0) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.0, 0.5, 9.99, 10.0, -1.0, 5.0] {
+            h.record(x);
+        }
+        assert_eq!(h.counts()[0], 2);
+        assert_eq!(h.counts()[9], 1);
+        assert_eq!(h.counts()[5], 1);
+        assert_eq!(h.total(), 6);
+        assert_eq!(h.bin_edges().len(), 11);
+    }
+
+    #[test]
+    fn moving_average_window() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ma = moving_average(&xs, 2);
+        assert_eq!(ma, vec![1.0, 1.5, 2.5, 3.5]);
+        let ma1 = moving_average(&xs, 1);
+        assert_eq!(ma1, xs.to_vec());
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let ys: Vec<f64> = (0..10).map(|i| 2.5 * i as f64 + 1.0).collect();
+        let (m, b) = linear_fit(&ys);
+        assert!((m - 2.5).abs() < 1e-9);
+        assert!((b - 1.0).abs() < 1e-9);
+        let (m0, b0) = linear_fit(&[7.0]);
+        assert_eq!((m0, b0), (0.0, 7.0));
+    }
+
+    #[test]
+    fn box_summary_ordering() {
+        let mut rng = Pcg32::new(77);
+        let mut s = Samples::new();
+        for _ in 0..100 {
+            s.push(rng.f64());
+        }
+        let b = s.box_summary();
+        for w in b.windows(2) {
+            assert!(w[0] <= w[1], "{b:?}");
+        }
+    }
+}

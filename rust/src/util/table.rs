@@ -1,0 +1,182 @@
+//! Console/markdown table + CSV emission for figure harnesses.
+//!
+//! Every figure harness produces one `Table`; it is printed to the
+//! console as aligned markdown and written to `results/<name>.csv` so
+//! EXPERIMENTS.md can reference stable outputs.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.columns.len(),
+            "row arity mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = format!("### {}\n\n", self.title);
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:width$} |", c, width = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.columns));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&csv_line(&self.columns));
+        for row in &self.rows {
+            out.push_str(&csv_line(row));
+        }
+        out
+    }
+
+    /// Write CSV to `results/<name>.csv` (creating the dir) and print
+    /// the markdown to stdout.
+    pub fn emit(&self, results_dir: &str, name: &str) -> std::io::Result<()> {
+        println!("{}", self.to_markdown());
+        fs::create_dir_all(results_dir)?;
+        let path = Path::new(results_dir).join(format!("{name}.csv"));
+        let mut f = fs::File::create(&path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        println!("[written {}]", path.display());
+        Ok(())
+    }
+}
+
+fn csv_line(cells: &[String]) -> String {
+    let mut out = String::new();
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if c.contains(',') || c.contains('"') || c.contains('\n') {
+            out.push('"');
+            out.push_str(&c.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(c);
+        }
+    }
+    out.push('\n');
+    out
+}
+
+/// Format seconds for human output: "1.23 ms", "4.5 s".
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return "-".into();
+    }
+    if s < 1e-3 {
+        format!("{:.1} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.2} s")
+    }
+}
+
+pub fn fmt_f(x: f64, digits: usize) -> String {
+    if x.is_finite() {
+        format!("{x:.digits$}")
+    } else {
+        "-".into()
+    }
+}
+
+/// Format byte counts: "2.0 GB" etc.
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = b as f64;
+    if b >= K * K * K {
+        format!("{:.1} GiB", b / (K * K * K))
+    } else if b >= K * K {
+        format!("{:.1} MiB", b / (K * K))
+    } else if b >= K {
+        format!("{:.1} KiB", b / K)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_alignment() {
+        let mut t = Table::new("t", &["a", "long_col"]);
+        t.row(vec!["xx".into(), "1".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a  | long_col |"));
+        assert!(md.contains("| xx | 1        |"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,b\n\"x,y\",\"q\"\"z\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("t", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_secs(0.5e-6 * 100.0), "50.0 us");
+        assert_eq!(fmt_secs(0.002), "2.00 ms");
+        assert_eq!(fmt_secs(3.0), "3.00 s");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MiB");
+        assert_eq!(fmt_f(f64::NAN, 2), "-");
+    }
+}

@@ -1,0 +1,283 @@
+//! Workload primitives: adapters, requests, and adapter-set generators.
+//!
+//! The paper's workloads are defined by (a) a registry of adapters with
+//! heterogeneous ranks and (b) a stream of requests, each naming an
+//! adapter and carrying prompt/output lengths. Trace synthesis lives in
+//! `trace/`; this module owns the types and the registry generators.
+
+use crate::config::ModelSpec;
+use crate::util::rng::{Pcg32, PowerLaw};
+
+/// The paper's five production rank classes (§V-E).
+pub const RANK_CLASSES: [u32; 5] = [8, 16, 32, 64, 128];
+
+pub type AdapterId = u32;
+pub type ServerId = usize;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Adapter {
+    pub id: AdapterId,
+    pub rank: u32,
+    pub size_bytes: u64,
+}
+
+/// Registry of all adapters deployed on a cluster.
+#[derive(Debug, Clone, Default)]
+pub struct AdapterSet {
+    pub adapters: Vec<Adapter>,
+}
+
+impl AdapterSet {
+    pub fn new(adapters: Vec<Adapter>) -> Self {
+        for (i, a) in adapters.iter().enumerate() {
+            assert_eq!(a.id as usize, i, "adapter ids must be dense 0..n");
+        }
+        AdapterSet { adapters }
+    }
+
+    pub fn len(&self) -> usize {
+        self.adapters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.adapters.is_empty()
+    }
+
+    pub fn get(&self, id: AdapterId) -> &Adapter {
+        &self.adapters[id as usize]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Adapter> {
+        self.adapters.iter()
+    }
+
+    pub fn unique_ranks(&self) -> Vec<u32> {
+        let mut ranks: Vec<u32> =
+            self.adapters.iter().map(|a| a.rank).collect();
+        ranks.sort_unstable();
+        ranks.dedup();
+        ranks
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.adapters.iter().map(|a| a.size_bytes).sum()
+    }
+
+    /// Uniform counts per rank class: `n_total` adapters split evenly
+    /// over `ranks` (Fig 22's "100 adapters, 20 of each rank").
+    pub fn uniform_per_rank(
+        n_total: usize,
+        ranks: &[u32],
+        model: &ModelSpec,
+    ) -> AdapterSet {
+        let per = n_total / ranks.len();
+        let mut extra = n_total % ranks.len();
+        let mut adapters = Vec::with_capacity(n_total);
+        for &rank in ranks {
+            let mut count = per;
+            if extra > 0 {
+                count += 1;
+                extra -= 1;
+            }
+            for _ in 0..count {
+                let id = adapters.len() as AdapterId;
+                adapters.push(Adapter {
+                    id,
+                    rank,
+                    size_bytes: model.adapter_bytes(rank),
+                });
+            }
+        }
+        AdapterSet::new(adapters)
+    }
+
+    /// Power-law adapter *counts within each rank class* (the paper's
+    /// production-trace annotation: α=1 over adapter counts, §V-E),
+    /// totalling `n_total` across the five classes.
+    pub fn power_law_counts(
+        n_total: usize,
+        ranks: &[u32],
+        alpha: f64,
+        model: &ModelSpec,
+    ) -> AdapterSet {
+        assert!(!ranks.is_empty() && n_total >= ranks.len());
+        // weight class k by (k+1)^-alpha, give each class >= 1 adapter
+        let weights: Vec<f64> = (0..ranks.len())
+            .map(|k| ((k + 1) as f64).powf(-alpha))
+            .collect();
+        let total_w: f64 = weights.iter().sum();
+        let mut counts: Vec<usize> = weights
+            .iter()
+            .map(|w| ((w / total_w) * n_total as f64).round() as usize)
+            .map(|c| c.max(1))
+            .collect();
+        // fix rounding drift
+        loop {
+            let sum: usize = counts.iter().sum();
+            if sum == n_total {
+                break;
+            }
+            if sum > n_total {
+                let i = counts
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, &c)| c)
+                    .unwrap()
+                    .0;
+                counts[i] -= 1;
+            } else {
+                counts[0] += 1;
+            }
+        }
+        let mut adapters = Vec::with_capacity(n_total);
+        for (k, &rank) in ranks.iter().enumerate() {
+            for _ in 0..counts[k] {
+                let id = adapters.len() as AdapterId;
+                adapters.push(Adapter {
+                    id,
+                    rank,
+                    size_bytes: model.adapter_bytes(rank),
+                });
+            }
+        }
+        AdapterSet::new(adapters)
+    }
+}
+
+/// One inference request, as carried by the traces (§V-E: request_id,
+/// adapter, prompt_length, output_length, timestamp).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub adapter: AdapterId,
+    pub prompt_len: u32,
+    pub output_len: u32,
+    /// Arrival time in seconds from trace start.
+    pub arrival: f64,
+}
+
+impl Request {
+    pub fn total_tokens(&self) -> u64 {
+        self.prompt_len as u64 + self.output_len as u64
+    }
+}
+
+/// Popularity model over adapters: maps a random draw to an adapter id.
+#[derive(Debug, Clone)]
+pub enum Popularity {
+    /// All adapters equally likely.
+    Uniform,
+    /// Power law over adapter index (idx 0 most popular).
+    PowerLaw(PowerLaw),
+    /// Explicit weights per adapter (e.g. measured shares).
+    Weighted(Vec<f64>),
+}
+
+impl Popularity {
+    pub fn sample(&self, n: usize, rng: &mut Pcg32) -> AdapterId {
+        match self {
+            Popularity::Uniform => rng.below(n as u64) as AdapterId,
+            Popularity::PowerLaw(pl) => {
+                debug_assert_eq!(pl.len(), n);
+                pl.sample(rng) as AdapterId
+            }
+            Popularity::Weighted(w) => {
+                debug_assert_eq!(w.len(), n);
+                rng.weighted_index(w) as AdapterId
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+
+    const M: ModelSpec = ModelSpec::LLAMA_7B;
+
+    #[test]
+    fn uniform_per_rank_counts() {
+        let s = AdapterSet::uniform_per_rank(100, &RANK_CLASSES, &M);
+        assert_eq!(s.len(), 100);
+        for &r in &RANK_CLASSES {
+            let c = s.iter().filter(|a| a.rank == r).count();
+            assert_eq!(c, 20, "rank {r}");
+        }
+        // uneven split distributes the remainder
+        let s = AdapterSet::uniform_per_rank(7, &RANK_CLASSES, &M);
+        assert_eq!(s.len(), 7);
+        assert_eq!(s.unique_ranks(), RANK_CLASSES.to_vec());
+    }
+
+    #[test]
+    fn power_law_counts_sum_and_skew() {
+        for alpha in [1.0 / 3.0, 1.0, 3.0] {
+            let s =
+                AdapterSet::power_law_counts(50, &RANK_CLASSES, alpha, &M);
+            assert_eq!(s.len(), 50, "alpha={alpha}");
+            let c8 = s.iter().filter(|a| a.rank == 8).count();
+            let c128 = s.iter().filter(|a| a.rank == 128).count();
+            assert!(c8 >= c128, "alpha={alpha} c8={c8} c128={c128}");
+            assert!(c128 >= 1);
+        }
+        // higher alpha concentrates more adapters in the first class
+        let lo = AdapterSet::power_law_counts(200, &RANK_CLASSES, 1.0 / 3.0, &M);
+        let hi = AdapterSet::power_law_counts(200, &RANK_CLASSES, 3.0, &M);
+        let count8 = |s: &AdapterSet| s.iter().filter(|a| a.rank == 8).count();
+        assert!(count8(&hi) > count8(&lo));
+    }
+
+    #[test]
+    fn ids_dense_and_sizes_set() {
+        let s = AdapterSet::uniform_per_rank(10, &[8, 128], &M);
+        for (i, a) in s.iter().enumerate() {
+            assert_eq!(a.id as usize, i);
+            assert_eq!(a.size_bytes, M.adapter_bytes(a.rank));
+        }
+        assert!(s.total_bytes() > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "dense")]
+    fn non_dense_ids_rejected() {
+        AdapterSet::new(vec![Adapter {
+            id: 3,
+            rank: 8,
+            size_bytes: 1,
+        }]);
+    }
+
+    #[test]
+    fn popularity_sampling() {
+        let mut rng = Pcg32::new(1);
+        let u = Popularity::Uniform;
+        for _ in 0..100 {
+            assert!(u.sample(5, &mut rng) < 5);
+        }
+        let w = Popularity::Weighted(vec![0.0, 1.0, 0.0]);
+        for _ in 0..50 {
+            assert_eq!(w.sample(3, &mut rng), 1);
+        }
+        let pl = Popularity::PowerLaw(PowerLaw::new(4, 2.0));
+        let mut zero = 0;
+        for _ in 0..1000 {
+            if pl.sample(4, &mut rng) == 0 {
+                zero += 1;
+            }
+        }
+        assert!(zero > 500);
+    }
+
+    #[test]
+    fn request_tokens() {
+        let r = Request {
+            id: 0,
+            adapter: 1,
+            prompt_len: 512,
+            output_len: 128,
+            arrival: 0.0,
+        };
+        assert_eq!(r.total_tokens(), 640);
+    }
+}

@@ -1,0 +1,135 @@
+//! Integration: the full AOT bridge. Loads the real artifacts
+//! (`make artifacts`), compiles them on the PJRT CPU client, and checks
+//! that greedy generation matches the goldens computed by the L2 jax
+//! model — proving L1 (pallas) ⊂ L2 (jax) ⊂ L3 (rust) compose exactly.
+//!
+//! Tests are skipped (not failed) when artifacts/ hasn't been built.
+
+use loraserve::runtime::{argmax, ModelEngine};
+use loraserve::util::json;
+
+const DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn engine() -> Option<ModelEngine> {
+    if !std::path::Path::new(&format!("{DIR}/manifest.json")).exists() {
+        eprintln!("artifacts/ missing; run `make artifacts` — skipping");
+        return None;
+    }
+    Some(ModelEngine::load(DIR).expect("engine load"))
+}
+
+#[test]
+fn generation_matches_python_goldens() {
+    let Some(engine) = engine() else { return };
+    let bank = ModelEngine::load_bank(DIR).expect("bank");
+    let text = std::fs::read_to_string(format!("{DIR}/golden.json")).unwrap();
+    let goldens = json::parse(&text).unwrap();
+    let cases = goldens.as_arr().expect("golden array");
+    assert!(!cases.is_empty());
+    for (i, case) in cases.iter().enumerate() {
+        let prompt: Vec<i32> = case
+            .get("prompt")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as i32)
+            .collect();
+        let adapter_id = case.get("adapter").unwrap().as_usize().unwrap();
+        let steps = case.get("steps").unwrap().as_usize().unwrap();
+        let want: Vec<i32> = case
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as i32)
+            .collect();
+        let got = engine
+            .generate(&prompt, &bank[adapter_id], steps)
+            .expect("generate");
+        assert_eq!(got, want, "golden case {i} (adapter {adapter_id})");
+    }
+}
+
+#[test]
+fn batched_prefill_matches_single() {
+    // co-batching two requests with different adapters must yield the
+    // same logits as running each alone (row independence through the
+    // SGMV kernel's block routing).
+    let Some(engine) = engine() else { return };
+    let bank = ModelEngine::load_bank(DIR).unwrap();
+    let p1: Vec<i32> = (1..20).collect();
+    let p2: Vec<i32> = (5..12).collect();
+
+    let stack_both = engine
+        .stack_adapters(&[Some(&bank[0]), Some(&bank[4])])
+        .unwrap();
+    let shape = engine.pick_shape(2, 32).expect("batch-2-capable shape");
+    let (batched, _) = engine
+        .prefill(shape, &[p1.clone(), p2.clone()], &[0, 1], &stack_both)
+        .unwrap();
+
+    let s1 = engine.stack_adapters(&[Some(&bank[0])]).unwrap();
+    let shape1 = engine.pick_shape(1, 32).unwrap();
+    let (solo1, _) = engine.prefill(shape1, &[p1], &[0], &s1).unwrap();
+    let s2 = engine.stack_adapters(&[Some(&bank[4])]).unwrap();
+    let (solo2, _) = engine.prefill(shape1, &[p2], &[0], &s2).unwrap();
+
+    for (a, b) in batched[0].iter().zip(solo1[0].iter()) {
+        assert!((a - b).abs() < 1e-3, "row0: {a} vs {b}");
+    }
+    for (a, b) in batched[1].iter().zip(solo2[0].iter()) {
+        assert!((a - b).abs() < 1e-3, "row1: {a} vs {b}");
+    }
+    // and the two rows genuinely used different adapters
+    assert_ne!(argmax(&batched[0]), {
+        // (may coincide; check raw logits differ instead)
+        let d: f32 = batched[0]
+            .iter()
+            .zip(batched[1].iter())
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(d > 1e-3, "rows identical");
+        i32::MIN
+    });
+}
+
+#[test]
+fn adapter_swap_changes_logits() {
+    let Some(engine) = engine() else { return };
+    let bank = ModelEngine::load_bank(DIR).unwrap();
+    let prompt: Vec<i32> = (10..25).collect();
+    let shape = engine.pick_shape(1, 32).unwrap();
+    let sa = engine.stack_adapters(&[Some(&bank[0])]).unwrap();
+    let sb = engine.stack_adapters(&[Some(&bank[4])]).unwrap();
+    let (la, _) = engine
+        .prefill(shape, &[prompt.clone()], &[0], &sa)
+        .unwrap();
+    let (lb, _) = engine.prefill(shape, &[prompt], &[0], &sb).unwrap();
+    let diff: f32 = la[0]
+        .iter()
+        .zip(lb[0].iter())
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    assert!(diff > 1e-3, "adapters 0 and 4 gave identical logits");
+}
+
+#[test]
+fn engine_reports_shapes() {
+    let Some(engine) = engine() else { return };
+    assert!(!engine.prefill_shapes().is_empty());
+    assert!(!engine.decode_batches().is_empty());
+    // every prefill batch has a decode twin (ABI requirement)
+    for (b, _) in engine.prefill_shapes() {
+        assert!(
+            engine.decode_batches().contains(&b),
+            "no decode artifact for batch {b}"
+        );
+    }
+    let bank = ModelEngine::load_bank(DIR).unwrap();
+    assert_eq!(bank.len(), engine.manifest.bank_ranks.len());
+    for (a, &r) in bank.iter().zip(engine.manifest.bank_ranks.iter()) {
+        assert_eq!(a.rank, r);
+    }
+}

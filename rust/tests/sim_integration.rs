@@ -1,0 +1,215 @@
+//! Cross-module integration tests: coordinator + placement + pool +
+//! simulator end-to-end, plus system-level invariants the paper's
+//! claims rest on. (Runtime/PJRT integration lives in
+//! runtime_integration.rs.)
+
+use loraserve::config::ClusterConfig;
+use loraserve::sim::{run, LoraServeOpts, SimConfig, SystemKind};
+use loraserve::trace::azure::{self, AzureConfig, RankPopularity};
+use loraserve::trace::production::{self, ProductionConfig};
+use loraserve::trace::{LengthModel, Trace};
+
+fn cluster(n: usize) -> ClusterConfig {
+    ClusterConfig {
+        n_servers: n,
+        ..Default::default()
+    }
+}
+
+fn shifting_trace(rps: f64, seed: u64) -> Trace {
+    azure::generate(&AzureConfig {
+        popularity: RankPopularity::ShiftingSkew,
+        rps,
+        duration: 600.0,
+        seed,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn conservation_every_request_accounted() {
+    // completed + timeouts == offered, for every system, on a drifting
+    // trace with rebalances and fetches in flight
+    let trace = shifting_trace(12.0, 3);
+    for system in SystemKind::all() {
+        let rep = run(&trace, &SimConfig::new(cluster(4), system));
+        assert_eq!(
+            rep.completed + rep.timeouts,
+            trace.requests.len() as u64,
+            "{}",
+            system.label()
+        );
+    }
+}
+
+#[test]
+fn loraserve_beats_static_baselines_under_drift() {
+    // the paper's core qualitative claim (Fig 19, shifting skew):
+    // dynamic rank-aware placement sustains load that static
+    // placements cannot
+    let trace = shifting_trace(18.0, 1);
+    let mut ls = run(
+        &trace,
+        &SimConfig::new(cluster(4), SystemKind::LoraServe)
+            .with_warmup(120.0),
+    );
+    let mut rnd = run(
+        &trace,
+        &SimConfig::new(cluster(4), SystemKind::SLoraRandom)
+            .with_warmup(120.0),
+    );
+    let ls_p95 = ls.ttft_p95();
+    let rnd_p95 = rnd.ttft_p95();
+    assert!(
+        ls_p95 < rnd_p95 || rnd.timeouts > ls.timeouts,
+        "loraserve p95 {ls_p95} vs random {rnd_p95} \
+         (timeouts {} vs {})",
+        ls.timeouts,
+        rnd.timeouts
+    );
+}
+
+#[test]
+fn loraserve_memory_footprint_below_replication() {
+    // Fig 18 bottom: the distributed pool keeps far fewer adapters
+    // resident than Toppings' full replication
+    let trace = production::generate(&ProductionConfig {
+        n_adapters: 100,
+        n_requests: 8000,
+        duration: 500.0,
+        seed: 0,
+        ..Default::default()
+    });
+    let ls = run(
+        &trace,
+        &SimConfig::new(cluster(4), SystemKind::LoraServe),
+    );
+    let tp = run(
+        &trace,
+        &SimConfig::new(cluster(4), SystemKind::Toppings),
+    );
+    let ls_max = *ls.per_server_max_adapters.iter().max().unwrap();
+    let tp_max = *tp.per_server_max_adapters.iter().max().unwrap();
+    assert_eq!(tp_max, 100);
+    assert!(ls_max < 70, "loraserve resident {ls_max}");
+}
+
+#[test]
+fn rank_aware_beats_rank_agnostic_ablation() {
+    // A4: with operating points flattened, placement balances load but
+    // mixes ranks; the rank-aware variant must not be worse
+    let trace = shifting_trace(18.0, 5);
+    let mut aware = SimConfig::new(cluster(4), SystemKind::LoraServe);
+    aware.warmup = 120.0;
+    let mut agnostic = aware.clone();
+    agnostic.opts = LoraServeOpts {
+        rank_agnostic: true,
+        ..Default::default()
+    };
+    let mut rep_aware = run(&trace, &aware);
+    let mut rep_agnostic = run(&trace, &agnostic);
+    let a = rep_aware.ttft_p95();
+    let b = rep_agnostic.ttft_p95();
+    assert!(
+        a <= b * 1.5 + 0.2,
+        "rank-aware {a} much worse than agnostic {b}"
+    );
+}
+
+#[test]
+fn higher_load_never_lowers_latency() {
+    // sanity on the whole stack: p95 TTFT is (weakly) monotone in RPS
+    let base = shifting_trace(8.0, 7);
+    let mut last = 0.0;
+    for rps in [6.0, 12.0, 24.0] {
+        let t = base.scale_to_rps(rps);
+        let mut rep = run(
+            &t,
+            &SimConfig::new(cluster(2), SystemKind::SLoraContiguous),
+        );
+        let p95 = rep.ttft_p95();
+        assert!(
+            p95 >= last * 0.5,
+            "p95 collapsed from {last} to {p95} at {rps} rps"
+        );
+        last = p95;
+    }
+    assert!(last > 0.2, "heaviest load too fast: {last}");
+}
+
+#[test]
+fn fixed_shape_workload_matches_fig6_shape() {
+    // single-rank 512/128 at 4 RPS on one server: small ranks fine,
+    // rank 128 violates — the crossover the whole paper hangs on
+    let mk = |rank: u32| -> Trace {
+        let mut cfgt = AzureConfig {
+            adapters_per_rank: 1,
+            rps: 4.0,
+            duration: 600.0,
+            lengths: LengthModel::fixed(512, 128),
+            ..Default::default()
+        };
+        cfgt.seed = 11;
+        let mut t = azure::generate(&cfgt);
+        let target = t
+            .adapters
+            .iter()
+            .find(|a| a.rank == rank)
+            .unwrap()
+            .id;
+        for r in t.requests.iter_mut() {
+            r.adapter = target;
+        }
+        t
+    };
+    let mut small = run(
+        &mk(8),
+        &SimConfig::new(cluster(1), SystemKind::SLoraContiguous),
+    );
+    let mut big = run(
+        &mk(128),
+        &SimConfig::new(cluster(1), SystemKind::SLoraContiguous),
+    );
+    assert!(small.ttft_p95() < 5.0, "rank8 p95 {}", small.ttft_p95());
+    assert!(big.ttft_p95() > 20.0, "rank128 p95 {}", big.ttft_p95());
+}
+
+#[test]
+fn deterministic_end_to_end() {
+    let trace = shifting_trace(14.0, 9);
+    let cfg = SimConfig::new(cluster(4), SystemKind::LoraServe);
+    let mut a = run(&trace, &cfg);
+    let mut b = run(&trace, &cfg);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.timeouts, b.timeouts);
+    assert_eq!(a.ttft_p95(), b.ttft_p95());
+    assert_eq!(a.tbt_p95(), b.tbt_p95());
+    assert_eq!(a.fetches, b.fetches);
+    assert_eq!(a.migration_bytes, b.migration_bytes);
+}
+
+#[test]
+fn weak_scaling_carries_proportional_load() {
+    // Fig 21's shape: 2x servers sustain ~2x the traffic
+    let mk = |per_rank: usize, rps: f64, seed: u64| {
+        azure::generate(&AzureConfig {
+            adapters_per_rank: per_rank,
+            rps,
+            duration: 500.0,
+            seed,
+            ..Default::default()
+        })
+    };
+    let mut small = run(
+        &mk(5, 10.0, 13),
+        &SimConfig::new(cluster(2), SystemKind::LoraServe)
+            .with_warmup(120.0),
+    );
+    let mut big = run(
+        &mk(10, 20.0, 13),
+        &SimConfig::new(cluster(4), SystemKind::LoraServe)
+            .with_warmup(120.0),
+    );
+    assert!(small.meets_slo(10.0), "2srv@10rps violates SLO");
+    assert!(big.meets_slo(10.0), "4srv@20rps violates SLO");
+}
