@@ -8,11 +8,12 @@
 //! optimizes: router sampling, placement epoch, DES event loop,
 //! demand tracking, trace generation, and percentile computation.
 
-use loraserve::config::ClusterConfig;
+use loraserve::autoscale::{ScaleController, ScaleDecision, ScaleSignals};
+use loraserve::config::{AutoscaleConfig, ClusterConfig};
 use loraserve::coordinator::{DemandTracker, Router, RoutingTable};
 use loraserve::costmodel;
 use loraserve::placement::loraserve::LoraServePlacer;
-use loraserve::placement::{Placer, PlacementCtx};
+use loraserve::placement::{place_onto, Placer, PlacementCtx};
 use loraserve::sim::{self, SimConfig, SystemKind};
 use loraserve::trace::azure::{self, AzureConfig};
 use loraserve::trace::LengthModel;
@@ -128,6 +129,50 @@ fn main() {
     b.run("placement: epoch + permutation", || {
         let mut placer = LoraServePlacer::new();
         black_box(placer.place(&ctx_prev));
+        1
+    });
+
+    // --- autoscaler decision path: signal evaluation (per tick) and
+    // re-placement on a topology change (the drain/scale-up hot path)
+    let mut ctl = ScaleController::new(AutoscaleConfig {
+        max_servers: 128,
+        ..Default::default()
+    });
+    let cand: Vec<(usize, f64)> =
+        (0..64).map(|s| (s, (s % 7) as f64)).collect();
+    let sig = ScaleSignals {
+        busy_frac: 0.95,
+        violation_rate: 0.1,
+        queue_depth: 512,
+        projected_tps: 1.0e5,
+    };
+    let mut tick_t = 0.0f64;
+    b.run("autoscale: decide (64 srv)", || {
+        let mut ups = 0u64;
+        for _ in 0..1024 {
+            tick_t += 120.0;
+            if matches!(
+                ctl.decide(tick_t, &sig, &cand, 0),
+                ScaleDecision::Up(_)
+            ) {
+                ups += 1;
+            }
+        }
+        black_box(ups);
+        1024
+    });
+    b.run("autoscale: re-place 1000x63", || {
+        // drain one of 64 servers: project prev, re-pack, remap
+        let active: Vec<usize> = (0..63).collect();
+        let mut placer = LoraServePlacer::new();
+        black_box(place_onto(
+            &mut placer,
+            &adapters,
+            &active,
+            &demand,
+            &oppoints,
+            Some(&prev),
+        ));
         1
     });
 

@@ -1,0 +1,312 @@
+//! The scale controller: fleet signals in, scaling decisions out.
+//!
+//! Pure decision logic — it never touches servers, pools, or queues,
+//! so the DES loop, the real cluster, and the benches can all drive
+//! it. Topology mechanics (provisioning delay, drain-and-migrate) are
+//! the caller's job.
+
+use crate::config::AutoscaleConfig;
+use crate::workload::ServerId;
+
+/// One decision window's worth of fleet signals, as gathered by the
+/// simulation loop between autoscaler ticks.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScaleSignals {
+    /// Mean busy fraction across active servers over the window
+    /// (can exceed 1.0 slightly: iteration time is booked at start).
+    pub busy_frac: f64,
+    /// Fraction of the window's completions whose TTFT broke the SLO.
+    pub violation_rate: f64,
+    /// Requests queued/waiting/decoding across the active fleet.
+    /// Vetoes scale-down: a momentarily cool fleet with a real
+    /// backlog must not shrink.
+    pub queue_depth: usize,
+    /// Cluster-wide projected tokens/sec from the demand tracker.
+    /// Not yet part of the policy — reserved for predictive step
+    /// sizing against the fleet's operating points (see ROADMAP).
+    pub projected_tps: f64,
+}
+
+/// What the controller wants done to the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// Provision `k` more servers.
+    Up(usize),
+    /// Drain-and-retire this server.
+    Down(ServerId),
+}
+
+/// SLO-aware scale controller with hysteresis.
+///
+/// * **Up** when the fleet is hot (`busy_frac > scale_up_util`) or the
+///   SLO is already bleeding (`violation_rate > violation_rate_up`).
+///   The step size aims the fleet at the midpoint of the up/down
+///   thresholds so one decision is usually enough.
+/// * **Down** only after two consecutive calm windows
+///   (`busy_frac < scale_down_util`, zero violations, no backlog, and
+///   nothing still provisioning) — the victim is the active server
+///   with the least outstanding work, which drains fastest.
+/// * A `cooldown` gates *all* actions, and capacity that is already
+///   provisioning counts against further scale-ups, so a cold-starting
+///   server is never ordered twice.
+#[derive(Debug, Clone)]
+pub struct ScaleController {
+    cfg: AutoscaleConfig,
+    last_scale: f64,
+    calm_windows: u32,
+}
+
+impl ScaleController {
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        ScaleController {
+            cfg,
+            last_scale: f64::NEG_INFINITY,
+            calm_windows: 0,
+        }
+    }
+
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// Evaluate one decision window. `active` lists the routable
+    /// servers with their outstanding-work estimates (seconds);
+    /// `provisioning` counts servers already cold-starting — capacity
+    /// that is on the way and must not be ordered twice (with a long
+    /// `provision_delay` the cooldown alone can expire before the
+    /// first batch joins).
+    pub fn decide(
+        &mut self,
+        now: f64,
+        sig: &ScaleSignals,
+        active: &[(ServerId, f64)],
+        provisioning: usize,
+    ) -> ScaleDecision {
+        let n = active.len();
+        if n == 0 || now - self.last_scale < self.cfg.cooldown {
+            return ScaleDecision::Hold;
+        }
+        let hot = sig.busy_frac > self.cfg.scale_up_util
+            || sig.violation_rate > self.cfg.violation_rate_up;
+        if hot {
+            self.calm_windows = 0;
+            let inbound = n + provisioning;
+            if inbound >= self.cfg.max_servers {
+                return ScaleDecision::Hold;
+            }
+            // aim the post-scale fleet at the threshold midpoint,
+            // counting capacity that is already provisioning
+            let target =
+                0.5 * (self.cfg.scale_up_util + self.cfg.scale_down_util);
+            let desired = (n as f64
+                * sig.busy_frac.max(self.cfg.scale_up_util)
+                / target.max(1e-9))
+            .ceil() as usize;
+            if desired <= inbound {
+                return ScaleDecision::Hold; // enough already inbound
+            }
+            let k = (desired - inbound)
+                .clamp(1, self.cfg.max_servers - inbound);
+            self.last_scale = now;
+            return ScaleDecision::Up(k);
+        }
+        let calm = sig.busy_frac < self.cfg.scale_down_util
+            && sig.violation_rate <= 0.0
+            // backlog veto: ≲1 in-flight request per server
+            && sig.queue_depth <= n;
+        if calm && provisioning == 0 && n > self.cfg.min_servers {
+            self.calm_windows += 1;
+            if self.calm_windows >= 2 {
+                self.calm_windows = 0;
+                self.last_scale = now;
+                let victim = active
+                    .iter()
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .map(|&(s, _)| s)
+                    .unwrap();
+                return ScaleDecision::Down(victim);
+            }
+            return ScaleDecision::Hold;
+        }
+        self.calm_windows = 0;
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_servers: 1,
+            max_servers: 8,
+            decision_period: 10.0,
+            scale_up_util: 0.8,
+            scale_down_util: 0.3,
+            violation_rate_up: 0.05,
+            cooldown: 30.0,
+            provision_delay: 15.0,
+        }
+    }
+
+    fn fleet(n: usize) -> Vec<(ServerId, f64)> {
+        (0..n).map(|s| (s, s as f64)).collect()
+    }
+
+    fn sig(busy: f64, viol: f64) -> ScaleSignals {
+        ScaleSignals {
+            busy_frac: busy,
+            violation_rate: viol,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn scales_up_on_hot_utilization() {
+        let mut c = ScaleController::new(cfg());
+        match c.decide(100.0, &sig(0.95, 0.0), &fleet(2), 0) {
+            ScaleDecision::Up(k) => assert!(k >= 1, "k={k}"),
+            other => panic!("expected Up, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scales_up_on_violations_even_when_cool() {
+        let mut c = ScaleController::new(cfg());
+        // queueing can violate the SLO while busy_frac looks moderate
+        assert!(matches!(
+            c.decide(100.0, &sig(0.5, 0.2), &fleet(2), 0),
+            ScaleDecision::Up(_)
+        ));
+    }
+
+    #[test]
+    fn up_step_sized_by_overload() {
+        let mut c = ScaleController::new(cfg());
+        // 4 servers at 1.4 busy vs target 0.55 => desired ~11, capped 8
+        match c.decide(100.0, &sig(1.4, 0.0), &fleet(4), 0) {
+            ScaleDecision::Up(k) => assert_eq!(k, 4),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn cooldown_gates_consecutive_actions() {
+        let mut c = ScaleController::new(cfg());
+        assert!(matches!(
+            c.decide(100.0, &sig(0.95, 0.0), &fleet(2), 0),
+            ScaleDecision::Up(_)
+        ));
+        assert_eq!(
+            c.decide(110.0, &sig(0.95, 0.0), &fleet(2), 0),
+            ScaleDecision::Hold
+        );
+        assert!(matches!(
+            c.decide(140.0, &sig(0.95, 0.0), &fleet(2), 0),
+            ScaleDecision::Up(_)
+        ));
+    }
+
+    #[test]
+    fn respects_max_servers() {
+        let mut c = ScaleController::new(cfg());
+        assert_eq!(
+            c.decide(100.0, &sig(0.99, 0.5), &fleet(8), 0),
+            ScaleDecision::Hold
+        );
+        // inbound provisioning counts against the cap too
+        assert_eq!(
+            c.decide(200.0, &sig(0.99, 0.5), &fleet(5), 3),
+            ScaleDecision::Hold
+        );
+    }
+
+    #[test]
+    fn provisioning_capacity_not_ordered_twice() {
+        let mut c = ScaleController::new(cfg());
+        // 2 active at 0.95 busy => desired 4; with 2 already
+        // provisioning the order book is full, even past the cooldown
+        assert_eq!(
+            c.decide(100.0, &sig(0.95, 0.0), &fleet(2), 2),
+            ScaleDecision::Hold
+        );
+        // desired 4 with only 1 inbound => top up the difference
+        assert_eq!(
+            c.decide(200.0, &sig(0.95, 0.0), &fleet(2), 1),
+            ScaleDecision::Up(1)
+        );
+    }
+
+    #[test]
+    fn backlog_vetoes_scale_down() {
+        let mut c = ScaleController::new(cfg());
+        let mut calm = sig(0.1, 0.0);
+        calm.queue_depth = 50; // deep backlog, momentarily cool fleet
+        assert_eq!(
+            c.decide(100.0, &calm, &fleet(3), 0),
+            ScaleDecision::Hold
+        );
+        assert_eq!(
+            c.decide(110.0, &calm, &fleet(3), 0),
+            ScaleDecision::Hold
+        );
+        // backlog cleared: the two-calm-window streak starts fresh
+        assert_eq!(
+            c.decide(120.0, &sig(0.1, 0.0), &fleet(3), 0),
+            ScaleDecision::Hold
+        );
+        assert!(matches!(
+            c.decide(130.0, &sig(0.1, 0.0), &fleet(3), 0),
+            ScaleDecision::Down(_)
+        ));
+    }
+
+    #[test]
+    fn scale_down_needs_two_calm_windows_and_picks_idlest() {
+        let mut c = ScaleController::new(cfg());
+        let active = vec![(3usize, 5.0), (5usize, 0.5), (7usize, 9.0)];
+        assert_eq!(
+            c.decide(100.0, &sig(0.1, 0.0), &active, 0),
+            ScaleDecision::Hold
+        );
+        assert_eq!(
+            c.decide(110.0, &sig(0.1, 0.0), &active, 0),
+            ScaleDecision::Down(5)
+        );
+    }
+
+    #[test]
+    fn violations_reset_calm_streak() {
+        let mut c = ScaleController::new(cfg());
+        assert_eq!(
+            c.decide(100.0, &sig(0.1, 0.0), &fleet(3), 0),
+            ScaleDecision::Hold
+        );
+        // a violated window breaks the streak (moderate busy => Hold)
+        assert_eq!(
+            c.decide(110.0, &sig(0.5, 0.0), &fleet(3), 0),
+            ScaleDecision::Hold
+        );
+        assert_eq!(
+            c.decide(120.0, &sig(0.1, 0.0), &fleet(3), 0),
+            ScaleDecision::Hold
+        );
+        assert!(matches!(
+            c.decide(130.0, &sig(0.1, 0.0), &fleet(3), 0),
+            ScaleDecision::Down(_)
+        ));
+    }
+
+    #[test]
+    fn never_shrinks_below_min() {
+        let mut c = ScaleController::new(cfg());
+        for t in 0..10 {
+            assert_eq!(
+                c.decide(100.0 * t as f64, &sig(0.0, 0.0), &fleet(1), 0),
+                ScaleDecision::Hold
+            );
+        }
+    }
+}

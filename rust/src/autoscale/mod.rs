@@ -1,0 +1,35 @@
+//! Elastic capacity subsystem: SLO-aware autoscaling + minimum-GPU
+//! capacity planning.
+//!
+//! The paper's headline claim is that rank-aware placement meets SLOs
+//! with **up to 50% fewer GPUs**; this module turns the fixed-fleet
+//! reproduction into an elastic, SLO-driven system with two parts:
+//!
+//! * [`controller`] — the **scale controller**: every
+//!   `AutoscaleConfig::decision_period` seconds the DES loop feeds it
+//!   fleet signals (busy fraction, TTFT-SLO violation rate, queue
+//!   depth, projected demand) and it answers `ScaleUp(k)` /
+//!   `ScaleDown(victim)` / `Hold`, with hysteresis and a cooldown so
+//!   the fleet doesn't flap. Scale-downs trigger the
+//!   **drain-and-migrate protocol** in `sim::cluster`: the victim
+//!   leaves the routing table immediately, its queued/waiting work is
+//!   re-routed through the swapped table, its adapters are re-placed
+//!   onto the survivors, and any *last-copy* adapters are
+//!   RDMA-migrated before the server retires — the pool coverage
+//!   invariant holds at every step of a shrink.
+//!
+//! * [`planner`] — the **capacity planner**: bisects the minimum
+//!   server count whose fixed-fleet simulation meets a configurable
+//!   TTFT/E2E SLO percentile, per `SystemKind` — reproducing the
+//!   ≤50%-fewer-GPUs comparison as `min_fleet(LORASERVE)` vs
+//!   `min_fleet(baseline)`.
+//!
+//! Fleet accounting (GPU-seconds, scale-event counters, fleet-size
+//! timeline) lives in [`crate::metrics::FleetMetrics`]; the CLI entry
+//! point is the `autoscale` subcommand.
+
+pub mod controller;
+pub mod planner;
+
+pub use controller::{ScaleController, ScaleDecision, ScaleSignals};
+pub use planner::{plan_min_fleet, PlanResult, SloMetric, SloSpec};

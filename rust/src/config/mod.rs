@@ -130,10 +130,13 @@ impl GpuSpec {
 
 /// Latency SLOs (the paper uses P95 TTFT ≤ 10 s for scalability,
 /// 20 s for Fig 6; requests past `timeout` count as violations and are
-/// dropped by the simulated frontends).
+/// dropped by the simulated frontends). `e2e_p95` is an optional
+/// end-to-end latency objective consumed by the capacity planner —
+/// infinite (disabled) by default because the paper's SLA is on TTFT.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SloConfig {
     pub ttft_p95: f64,
+    pub e2e_p95: f64,
     pub timeout: f64,
 }
 
@@ -141,7 +144,45 @@ impl Default for SloConfig {
     fn default() -> Self {
         SloConfig {
             ttft_p95: 10.0,
+            e2e_p95: f64::INFINITY,
             timeout: 120.0,
+        }
+    }
+}
+
+/// Knobs of the SLO-aware autoscaler (`autoscale::ScaleController`).
+///
+/// The controller evaluates fleet signals every `decision_period`
+/// seconds: it grows the fleet when mean busy fraction exceeds
+/// `scale_up_util` or the window's TTFT-SLO violation rate exceeds
+/// `violation_rate_up`, and shrinks (after two consecutive calm
+/// windows, drain-and-migrate protocol) when busy fraction falls below
+/// `scale_down_util`. `cooldown` seconds must elapse between scaling
+/// actions; a new server takes `provision_delay` seconds of cold start
+/// before it joins the routable fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleConfig {
+    pub min_servers: usize,
+    pub max_servers: usize,
+    pub decision_period: f64,
+    pub scale_up_util: f64,
+    pub scale_down_util: f64,
+    pub violation_rate_up: f64,
+    pub cooldown: f64,
+    pub provision_delay: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_servers: 1,
+            max_servers: 16,
+            decision_period: 15.0,
+            scale_up_util: 0.85,
+            scale_down_util: 0.35,
+            violation_rate_up: 0.05,
+            cooldown: 60.0,
+            provision_delay: 30.0,
         }
     }
 }
@@ -192,6 +233,9 @@ pub struct ClusterConfig {
     /// Placement rebalance period in seconds (the paper's "time step",
     /// cluster-admin configurable, §IV).
     pub rebalance_period: f64,
+    /// Elastic-capacity knobs; only consulted when a simulation is run
+    /// with autoscaling enabled (`SimConfig::with_autoscale`).
+    pub autoscale: AutoscaleConfig,
     pub seed: u64,
 }
 
@@ -202,6 +246,7 @@ impl Default for ClusterConfig {
             server: ServerConfig::default(),
             slo: SloConfig::default(),
             rebalance_period: 60.0,
+            autoscale: AutoscaleConfig::default(),
             seed: 0,
         }
     }
@@ -245,11 +290,65 @@ impl ClusterConfig {
         if let Some(x) = v.get("ttft_slo").and_then(Json::as_f64) {
             cfg.slo.ttft_p95 = x;
         }
+        if let Some(x) = v.get("e2e_slo").and_then(Json::as_f64) {
+            cfg.slo.e2e_p95 = x;
+        }
         if let Some(x) = v.get("timeout").and_then(Json::as_f64) {
             cfg.slo.timeout = x;
         }
         if let Some(x) = v.get("rebalance_period").and_then(Json::as_f64) {
             cfg.rebalance_period = x;
+        }
+        if let Some(a) = v.get("autoscale") {
+            let au = &mut cfg.autoscale;
+            if let Some(x) = a.get("min_servers").and_then(Json::as_usize) {
+                au.min_servers = x;
+            }
+            if let Some(x) = a.get("max_servers").and_then(Json::as_usize) {
+                au.max_servers = x;
+            }
+            if let Some(x) = a.get("decision_period").and_then(Json::as_f64) {
+                au.decision_period = x;
+            }
+            if let Some(x) = a.get("scale_up_util").and_then(Json::as_f64) {
+                au.scale_up_util = x;
+            }
+            if let Some(x) = a.get("scale_down_util").and_then(Json::as_f64) {
+                au.scale_down_util = x;
+            }
+            if let Some(x) = a.get("violation_rate_up").and_then(Json::as_f64)
+            {
+                au.violation_rate_up = x;
+            }
+            if let Some(x) = a.get("cooldown").and_then(Json::as_f64) {
+                au.cooldown = x;
+            }
+            if let Some(x) = a.get("provision_delay").and_then(Json::as_f64) {
+                au.provision_delay = x;
+            }
+            if au.min_servers == 0
+                || au.max_servers < au.min_servers
+                || au.decision_period <= 0.0
+                || au.scale_down_util >= au.scale_up_util
+                || au.cooldown < 0.0
+                || au.provision_delay < 0.0
+                || au.violation_rate_up < 0.0
+            {
+                return Err(format!(
+                    "bad autoscale config: min={} max={} period={} \
+                     up={} down={} cooldown={} delay={} violations={} \
+                     (need min>=1, max>=min, period>0, down<up, \
+                     non-negative times/rates)",
+                    au.min_servers,
+                    au.max_servers,
+                    au.decision_period,
+                    au.scale_up_util,
+                    au.scale_down_util,
+                    au.cooldown,
+                    au.provision_delay,
+                    au.violation_rate_up
+                ));
+            }
         }
         if let Some(x) = v.get("seed").and_then(Json::as_f64) {
             cfg.seed = x as u64;
@@ -325,6 +424,47 @@ mod tests {
         assert!(ClusterConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"model": "nope"}"#).unwrap();
         assert!(ClusterConfig::from_json(&v).is_err());
+        let v = json::parse(
+            r#"{"autoscale": {"min_servers": 4, "max_servers": 2}}"#,
+        )
+        .unwrap();
+        assert!(ClusterConfig::from_json(&v).is_err());
+        // inverted hysteresis thresholds make the controller oscillate
+        let v = json::parse(
+            r#"{"autoscale": {"scale_up_util": 0.3,
+                              "scale_down_util": 0.8}}"#,
+        )
+        .unwrap();
+        assert!(ClusterConfig::from_json(&v).is_err());
+        let v =
+            json::parse(r#"{"autoscale": {"cooldown": -5.0}}"#).unwrap();
+        assert!(ClusterConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn autoscale_config_from_json() {
+        let v = json::parse(
+            r#"{"e2e_slo": 30.0,
+                "autoscale": {"min_servers": 2, "max_servers": 10,
+                              "decision_period": 5.0, "cooldown": 45.0,
+                              "scale_up_util": 0.9,
+                              "provision_delay": 12.0}}"#,
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.slo.e2e_p95, 30.0);
+        assert_eq!(cfg.autoscale.min_servers, 2);
+        assert_eq!(cfg.autoscale.max_servers, 10);
+        assert_eq!(cfg.autoscale.decision_period, 5.0);
+        assert_eq!(cfg.autoscale.cooldown, 45.0);
+        assert_eq!(cfg.autoscale.scale_up_util, 0.9);
+        assert_eq!(cfg.autoscale.provision_delay, 12.0);
+        // untouched knobs keep defaults
+        assert_eq!(
+            cfg.autoscale.scale_down_util,
+            AutoscaleConfig::default().scale_down_util
+        );
+        assert!(SloConfig::default().e2e_p95.is_infinite());
     }
 
     #[test]

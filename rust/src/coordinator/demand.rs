@@ -82,6 +82,13 @@ impl DemandTracker {
             .map(|(&id, h)| (id, *h.last().unwrap_or(&0.0)))
             .collect()
     }
+
+    /// Cluster-wide projected tokens/sec for the next time step — the
+    /// autoscaler's demand-side load signal
+    /// (`autoscale::ScaleSignals::projected_tps`).
+    pub fn total_projected_tps(&self) -> f64 {
+        self.projected_tps().values().sum()
+    }
 }
 
 #[cfg(test)]
@@ -136,6 +143,16 @@ mod tests {
             d.roll_window();
         }
         assert!(d.projected_tps()[&0] >= 0.0);
+    }
+
+    #[test]
+    fn aggregate_signal() {
+        let mut d = DemandTracker::new(10.0, 8);
+        d.record(0, 500);
+        d.record(1, 300);
+        assert_eq!(d.total_projected_tps(), 0.0); // nothing rolled yet
+        d.roll_window();
+        assert!((d.total_projected_tps() - 80.0).abs() < 1e-9);
     }
 
     #[test]

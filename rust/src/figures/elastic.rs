@@ -1,0 +1,131 @@
+//! Elastic-capacity figures: the GPUs-under-SLO comparison (the
+//! paper's "up to 50% fewer GPUs" claim as a minimum-fleet search per
+//! system) and the autoscaler fleet-size timeline on a drifting trace.
+
+use super::helpers::{FigOpts, RESULTS_DIR};
+use crate::autoscale::{plan_min_fleet, SloSpec};
+use crate::config::{AutoscaleConfig, ClusterConfig};
+use crate::sim::{self, SimConfig, SystemKind};
+use crate::trace::azure::{self, AzureConfig, RankPopularity};
+use crate::trace::production::{self, ProductionConfig};
+use crate::trace::Trace;
+use crate::util::table::{fmt_secs, Table};
+
+fn planning_trace(opts: &FigOpts, rps: f64) -> Trace {
+    production::generate(&ProductionConfig {
+        n_adapters: 100,
+        n_requests: (rps * opts.scale(600.0)) as usize,
+        duration: opts.scale(600.0),
+        seed: opts.seed,
+        ..Default::default()
+    })
+    .scale_to_rps(rps)
+}
+
+/// GPUs needed under the SLO, per system: the minimum fleet whose
+/// fixed-fleet run keeps P95 TTFT within the SLA at the trace's rate.
+pub fn gpus_under_slo(opts: &FigOpts) -> std::io::Result<()> {
+    let base = ClusterConfig::default();
+    let rps = if opts.fast { 16.0 } else { 24.0 };
+    let trace = planning_trace(opts, rps);
+    let spec = SloSpec::ttft_p95(base.slo.ttft_p95);
+    let max_servers = 12;
+    let mut table = Table::new(
+        &format!(
+            "GPUs under SLO — min fleet @ {rps:.0} RPS, p95 TTFT ≤ {}",
+            fmt_secs(base.slo.ttft_p95)
+        ),
+        &["system", "min servers", "gpus", "p95 ttft @min", "vs loraserve"],
+    );
+    let mut plans = Vec::new();
+    for system in SystemKind::all() {
+        plans.push(plan_min_fleet(&trace, &base, system, &spec, max_servers));
+    }
+    let ls_min = plans
+        .iter()
+        .find(|p| p.system == SystemKind::LoraServe)
+        .and_then(|p| p.min_servers);
+    for plan in &plans {
+        let ratio = match (plan.min_servers, ls_min) {
+            (Some(n), Some(l)) if l > 0 => {
+                format!("{:.2}x", n as f64 / l as f64)
+            }
+            _ => "-".into(),
+        };
+        table.row(vec![
+            plan.system.label().to_string(),
+            plan.min_servers
+                .map(|n| n.to_string())
+                .unwrap_or_else(|| format!(">{max_servers}")),
+            plan.gpus(base.server.tp)
+                .map(|g| g.to_string())
+                .unwrap_or_else(|| "-".into()),
+            plan.observed_at_min()
+                .map(fmt_secs)
+                .unwrap_or_else(|| "-".into()),
+            ratio,
+        ]);
+    }
+    table.emit(RESULTS_DIR, "gpus_under_slo")
+}
+
+/// SLO-aware autoscaler on the shifting-skew trace: fleet-size
+/// timeline + GPU-seconds accounting.
+pub fn fleet_timeline(opts: &FigOpts) -> std::io::Result<()> {
+    let trace = azure::generate(&AzureConfig {
+        popularity: RankPopularity::ShiftingSkew,
+        rps: 18.0,
+        duration: opts.scale(1200.0),
+        seed: opts.seed,
+        ..Default::default()
+    });
+    let cluster = ClusterConfig {
+        n_servers: 2,
+        ..Default::default()
+    };
+    let acfg = AutoscaleConfig {
+        min_servers: 1,
+        max_servers: 8,
+        ..Default::default()
+    };
+    let mut rep = sim::run(
+        &trace,
+        &SimConfig::new(cluster.clone(), SystemKind::LoraServe)
+            .with_autoscale(acfg),
+    );
+    let ttft_p95 = rep.ttft_p95();
+    let mut timeline = Table::new(
+        "autoscaler fleet timeline (shifting skew, 18 RPS)",
+        &["t (s)", "active servers"],
+    );
+    for &(t, n) in &rep.fleet.timeline {
+        timeline.row(vec![format!("{t:.1}"), n.to_string()]);
+    }
+    timeline.emit(RESULTS_DIR, "fleet_timeline")?;
+    let mut summary = Table::new(
+        "elastic run summary",
+        &["metric", "value"],
+    );
+    for (k, v) in [
+        ("scale-ups", rep.fleet.scale_ups.to_string()),
+        ("scale-downs", rep.fleet.scale_downs.to_string()),
+        ("peak fleet", rep.fleet.peak_servers().to_string()),
+        ("mean fleet", format!("{:.2}", rep.fleet.mean_fleet())),
+        ("gpu-seconds", format!("{:.0}", rep.fleet.gpu_seconds)),
+        (
+            "fixed-fleet gpu-seconds",
+            format!(
+                "{:.0}",
+                (acfg.max_servers * cluster.server.tp) as f64
+                    * rep.fleet.duration()
+            ),
+        ),
+        ("slo violation rate", format!("{:.4}", rep.fleet.violation_rate())),
+        ("ttft p95", fmt_secs(ttft_p95)),
+        ("completed", rep.completed.to_string()),
+        ("timeouts", rep.timeouts.to_string()),
+    ] {
+        summary.row(vec![k.to_string(), v]);
+    }
+    summary.emit(RESULTS_DIR, "fleet_summary")
+}

@@ -91,22 +91,23 @@ pub fn max_rps_under_slo(
 
 /// Smallest server count (1..=max) meeting the SLO at the trace's
 /// native rate — the "GPUs needed" metric behind the paper's
-/// "up to 50% fewer GPUs" claim.
+/// "up to 50% fewer GPUs" claim. Thin wrapper over the capacity
+/// planner's bisection (O(log n) simulations instead of the old
+/// linear scan).
 pub fn min_servers_under_slo(
     trace: &Trace,
     base: &ClusterConfig,
     system: SystemKind,
     max_servers: usize,
 ) -> Option<usize> {
-    for n in 1..=max_servers {
-        let mut cluster = base.clone();
-        cluster.n_servers = n;
-        let mut rep = run_system(trace, &cluster, system);
-        if rep.meets_slo(cluster.slo.ttft_p95) {
-            return Some(n);
-        }
-    }
-    None
+    crate::autoscale::plan_min_fleet(
+        trace,
+        base,
+        system,
+        &crate::autoscale::SloSpec::ttft_p95(base.slo.ttft_p95),
+        max_servers,
+    )
+    .min_servers
 }
 
 #[cfg(test)]

@@ -10,6 +10,7 @@
 pub mod ablations;
 pub mod characterization;
 pub mod design;
+pub mod elastic;
 pub mod eval;
 pub mod helpers;
 pub mod motivation;
@@ -58,6 +59,10 @@ pub fn registry() -> Vec<(&'static str, &'static str, FigFn)> {
          eval::storage_summary),
         ("ablations", "Algorithm 1 design-choice ablations",
          ablations::ablations),
+        ("gpus", "min fleet under SLO per system (GPU savings)",
+         elastic::gpus_under_slo),
+        ("fleet", "SLO-aware autoscaler fleet-size timeline",
+         elastic::fleet_timeline),
     ]
 }
 

@@ -58,6 +58,7 @@ pub fn fig1(opts: &FigOpts) -> std::io::Result<()> {
             slo: crate::config::SloConfig {
                 ttft_p95: 20.0,
                 timeout: 600.0,
+                ..Default::default()
             },
             ..Default::default()
         };
@@ -213,6 +214,7 @@ pub fn fig6(opts: &FigOpts) -> std::io::Result<()> {
             slo: crate::config::SloConfig {
                 ttft_p95: 20.0,
                 timeout: 300.0,
+                ..Default::default()
             },
             ..Default::default()
         };

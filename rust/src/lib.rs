@@ -6,9 +6,12 @@
 //!
 //! * **L3 (this crate)** — cluster orchestrator: the placement
 //!   algorithm (Algorithm 1), probabilistic routing table, distributed
-//!   adapter pool, discrete-event cluster simulator, and a *real*
-//!   mini-cluster whose servers execute AOT-compiled XLA artifacts via
-//!   PJRT ([`runtime`], [`server`]).
+//!   adapter pool, discrete-event cluster simulator, the elastic
+//!   capacity subsystem ([`autoscale`]: SLO-aware scale controller,
+//!   drain-and-migrate protocol, minimum-GPU capacity planner), and a
+//!   *real* mini-cluster whose servers execute AOT-compiled XLA
+//!   artifacts via PJRT (`runtime`/`server`, behind the `pjrt`
+//!   feature).
 //! * **L2 (python/compile/model.py)** — a LoRA transformer (prefill +
 //!   decode) lowered once to HLO text at build time.
 //! * **L1 (python/compile/kernels/sgmv.py)** — the Pallas
@@ -18,13 +21,20 @@
 //! See DESIGN.md for the full inventory and EXPERIMENTS.md for the
 //! paper-vs-measured results of every figure.
 
+pub mod autoscale;
 pub mod config;
 pub mod costmodel;
 pub mod placement;
 pub mod coordinator;
 pub mod pool;
 pub mod sim;
+// The real PJRT mini-cluster needs the vendored `xla` + `anyhow`
+// crates, which the offline build image does not carry; the modules
+// (and the `serve` subcommand) are gated behind the `pjrt` feature so
+// the default build stays self-contained.
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod figures;
 pub mod metrics;

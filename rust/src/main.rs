@@ -3,14 +3,18 @@
 //! Subcommands:
 //!   figures   regenerate paper tables/figures (`--all` or `--fig N`)
 //!   simulate  run one trace × system on the DES cluster
+//!   autoscale search the minimum fleet meeting an SLO and replay the
+//!             trace under the SLO-aware autoscaler (fleet timeline)
 //!   trace     synthesize + characterize traces (writes CSV)
 //!   profile   print operating points for a server config
 //!   serve     run the real PJRT mini-cluster on a synthetic workload
+//!             (needs the `pjrt` feature)
 
+use loraserve::autoscale::{plan_min_fleet, SloMetric, SloSpec};
 use loraserve::config::ClusterConfig;
 use loraserve::figures::{self, FigOpts};
 use loraserve::sim::{self, SystemKind};
-use loraserve::trace::{azure, production};
+use loraserve::trace::{azure, production, Trace};
 use loraserve::util::cli::Args;
 use loraserve::util::table::{fmt_bytes, fmt_secs, Table};
 
@@ -29,6 +33,7 @@ fn main() {
     let result = match args.subcommand().unwrap() {
         "figures" => cmd_figures(&args),
         "simulate" => cmd_simulate(&args),
+        "autoscale" => cmd_autoscale(&args),
         "trace" => cmd_trace(&args),
         "profile" => cmd_profile(&args),
         "serve" => cmd_serve(&args),
@@ -54,9 +59,15 @@ fn usage() {
          toppings>\n         \
          [--trace prod|shifting|uniform] [--rps R] [--servers N]\n         \
          [--adapters N] [--duration S] [--seed S] [--config file.json]\n\
+         autoscale [--system <kind>|--all] [--slo-ttft MS] \
+         [--slo-e2e MS]\n         \
+         [--metric ttft|e2e] [--percentile P] [--max-servers N]\n         \
+         [--trace prod|shifting|uniform] [--rps R] [--duration S]\n         \
+         [--adapters N] [--seed S]\n\
          trace    --kind prod|azure [--adapters N] [--out file.csv]\n\
          profile  [--model 7b|13b|30b|70b] [--tp N]\n\
-         serve    [--servers N] [--requests N] [--duration S]"
+         serve    [--servers N] [--requests N] [--duration S]   \
+         (feature pjrt)"
     );
 }
 
@@ -207,6 +218,176 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Capacity planning + elastic replay: search the minimum fleet per
+/// system meeting the configured SLO percentile, then run the trace
+/// under the SLO-aware autoscaler and report the fleet-size timeline
+/// with GPU-seconds accounting.
+fn cmd_autoscale(args: &Args) -> Result<(), String> {
+    let mut cluster = build_cluster(args)?;
+    // SLO knobs arrive in milliseconds on the CLI, seconds internally
+    let ttft_ms = args.get_f64("slo-ttft", cluster.slo.ttft_p95 * 1e3)?;
+    cluster.slo.ttft_p95 = ttft_ms / 1e3;
+    if args.get("slo-e2e").is_some() {
+        cluster.slo.e2e_p95 = args.get_f64("slo-e2e", 0.0)? / 1e3;
+    }
+    let percentile = args.get_f64("percentile", 95.0)?;
+    let metric = match args.get_or("metric", "ttft") {
+        "ttft" => SloMetric::Ttft,
+        "e2e" => SloMetric::E2e,
+        other => return Err(format!("unknown metric '{other}'")),
+    };
+    let threshold = match metric {
+        SloMetric::Ttft => cluster.slo.ttft_p95,
+        SloMetric::E2e => {
+            if !cluster.slo.e2e_p95.is_finite() {
+                return Err("--metric e2e needs --slo-e2e <ms>".into());
+            }
+            cluster.slo.e2e_p95
+        }
+    };
+    let spec = SloSpec {
+        metric,
+        percentile,
+        threshold,
+    };
+    let max_servers = args.get_usize("max-servers", 12)?;
+    let rps = args.get_f64("rps", 24.0)?;
+    let duration = args.get_f64("duration", 600.0)?;
+    let n_adapters = args.get_usize("adapters", 100)?;
+    let seed = args.get_u64("seed", cluster.seed)?;
+    let trace: Trace = match args.get_or("trace", "prod") {
+        "prod" => production::generate(&production::ProductionConfig {
+            n_adapters,
+            n_requests: (rps * duration) as usize,
+            duration,
+            seed,
+            ..Default::default()
+        })
+        .scale_to_rps(rps),
+        "shifting" => azure::generate(&azure::AzureConfig {
+            popularity: azure::RankPopularity::ShiftingSkew,
+            rps,
+            duration,
+            seed,
+            ..Default::default()
+        }),
+        "uniform" => azure::generate(&azure::AzureConfig {
+            rps,
+            duration,
+            seed,
+            ..Default::default()
+        }),
+        other => return Err(format!("unknown trace kind '{other}'")),
+    };
+    let systems: Vec<SystemKind> =
+        if args.flag("all") || args.get("system") == Some("all") {
+            SystemKind::all().to_vec()
+        } else {
+            vec![parse_system(args.get_or("system", "loraserve"))?]
+        };
+    println!(
+        "capacity planning on '{}' ({} reqs, {:.1} rps): {} p{:.0} ≤ {} \
+         over ≤{} servers",
+        trace.name,
+        trace.requests.len(),
+        trace.mean_rps(),
+        match metric {
+            SloMetric::Ttft => "ttft",
+            SloMetric::E2e => "e2e",
+        },
+        percentile,
+        fmt_secs(threshold),
+        max_servers,
+    );
+    let mut table = Table::new(
+        "minimum fleet meeting the SLO",
+        &["system", "min servers", "gpus", "observed", "sims"],
+    );
+    let mut plans = Vec::new();
+    for &system in &systems {
+        let plan =
+            plan_min_fleet(&trace, &cluster, system, &spec, max_servers);
+        table.row(vec![
+            system.label().to_string(),
+            plan.min_servers
+                .map(|n| n.to_string())
+                .unwrap_or_else(|| format!(">{max_servers}")),
+            plan.gpus(cluster.server.tp)
+                .map(|g| g.to_string())
+                .unwrap_or_else(|| "-".into()),
+            plan.observed_at_min()
+                .map(fmt_secs)
+                .unwrap_or_else(|| "-".into()),
+            plan.probes.len().to_string(),
+        ]);
+        plans.push(plan);
+    }
+    println!("{}", table.to_markdown());
+    if plans.len() > 1 {
+        let ls = plans
+            .iter()
+            .find(|p| p.system == SystemKind::LoraServe)
+            .and_then(|p| p.min_servers);
+        let best_baseline = plans
+            .iter()
+            .filter(|p| p.system != SystemKind::LoraServe)
+            .filter_map(|p| p.min_servers)
+            .min();
+        if let (Some(a), Some(b)) = (ls, best_baseline) {
+            println!(
+                "loraserve {a} servers vs best baseline {b} \
+                 ({:.0}% fewer GPUs)\n",
+                (1.0 - a as f64 / b as f64) * 100.0
+            );
+        }
+    }
+
+    // ---- elastic replay: fleet-size-over-time under the autoscaler
+    let primary = systems[0];
+    let start = plans[0].min_servers.unwrap_or(1).min(max_servers);
+    let mut acfg = cluster.autoscale;
+    acfg.max_servers = max_servers;
+    acfg.min_servers = acfg.min_servers.clamp(1, max_servers);
+    let mut elastic = cluster.clone();
+    elastic.n_servers = start;
+    let mut rep = sim::run(
+        &trace,
+        &sim::SimConfig::new(elastic, primary).with_autoscale(acfg),
+    );
+    let ttft_p95 = rep.ttft_p95();
+    println!(
+        "fleet timeline ({}, start {start} servers, autoscaler on):",
+        primary.label()
+    );
+    for &(t, n) in rep.fleet.timeline.iter().take(50) {
+        println!("  t={t:8.1}s  active={n}");
+    }
+    if rep.fleet.timeline.len() > 50 {
+        println!("  ... {} more changes", rep.fleet.timeline.len() - 50);
+    }
+    let mut summary = Table::new(
+        "elastic replay summary",
+        &["metric", "value"],
+    );
+    let rows: Vec<(&str, String)> = vec![
+        ("completed", rep.completed.to_string()),
+        ("timeouts", rep.timeouts.to_string()),
+        ("ttft p95", fmt_secs(ttft_p95)),
+        ("slo violation rate", format!("{:.4}", rep.fleet.violation_rate())),
+        ("scale-ups", rep.fleet.scale_ups.to_string()),
+        ("scale-downs", rep.fleet.scale_downs.to_string()),
+        ("peak fleet", rep.fleet.peak_servers().to_string()),
+        ("mean fleet", format!("{:.2}", rep.fleet.mean_fleet())),
+        ("gpu-seconds", format!("{:.0}", rep.fleet.gpu_seconds)),
+        ("migrated", fmt_bytes(rep.migration_bytes)),
+    ];
+    for (k, v) in rows {
+        summary.row(vec![k.to_string(), v]);
+    }
+    println!("{}", summary.to_markdown());
+    Ok(())
+}
+
 fn cmd_trace(args: &Args) -> Result<(), String> {
     let kind = args.get_or("kind", "prod");
     let n_adapters = args.get_usize("adapters", 100)?;
@@ -270,6 +451,15 @@ fn cmd_profile(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &Args) -> Result<(), String> {
+    Err("the `serve` subcommand needs the real PJRT mini-cluster; \
+         rebuild with `--features pjrt` in an environment that \
+         provides the vendored `xla` dependency closure"
+        .into())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args) -> Result<(), String> {
     // thin wrapper over the E2E example path
     let n_servers = args.get_usize("servers", 2)?;

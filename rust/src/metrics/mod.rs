@@ -1,5 +1,193 @@
-//! Re-exports of the metric primitives (kept as a stable public path;
-//! the implementations live in `util::stats` and `sim::report`).
+//! Cluster-level metrics: the fleet accounting behind the elastic
+//! capacity subsystem (GPU-seconds, scale-event counters, fleet-size
+//! timeline, SLO-violation rate), plus re-exports of the metric
+//! primitives (`util::stats`) and the per-run report (`sim::report`).
 
 pub use crate::sim::report::SimReport;
 pub use crate::util::stats::{Histogram, Samples};
+
+/// Fleet-level accounting for one simulation run. Maintained by the
+/// DES loop (`sim::cluster`) and consumed by `sim::report`, the
+/// `autoscale` CLI subcommand, and the GPUs-under-SLO figures.
+///
+/// Two step functions of time are tracked: the **routable** fleet
+/// (what the router can send traffic to — the `timeline`) and the
+/// **billed** fleet (provisioning + active + draining — servers that
+/// occupy GPUs whether or not they take new work). `gpu_seconds`
+/// integrates the *billed* count scaled by GPUs per server (TP
+/// degree) — the resource the paper's "up to 50% fewer GPUs" claim
+/// counts, generalized to a fleet that changes size at runtime: a
+/// draining server is still burning GPUs until it retires, and a
+/// provisioning one is billed from the scale-up decision (cloud
+/// instances bill from launch, not from readiness).
+#[derive(Debug, Clone, Default)]
+pub struct FleetMetrics {
+    /// ∫ billed_servers(t) · gpus_per_server dt.
+    pub gpu_seconds: f64,
+    /// ∫ billed_servers(t) dt.
+    pub server_seconds: f64,
+    /// Scale-up decisions that provisioned a server.
+    pub scale_ups: u64,
+    /// Scale-down decisions that started a drain.
+    pub scale_downs: u64,
+    /// Step function of the *routable* fleet size: (time, active).
+    pub timeline: Vec<(f64, usize)>,
+    /// Measured completions whose TTFT exceeded the SLO.
+    pub slo_violations: u64,
+    /// Measured completions total.
+    pub measured: u64,
+    gpus_per_server: usize,
+    cur_active: usize,
+    cur_billed: usize,
+    last_t: f64,
+    end_t: f64,
+}
+
+impl FleetMetrics {
+    pub fn new(gpus_per_server: usize, initial_active: usize) -> Self {
+        FleetMetrics {
+            gpus_per_server,
+            cur_active: initial_active,
+            cur_billed: initial_active,
+            timeline: vec![(0.0, initial_active)],
+            ..Default::default()
+        }
+    }
+
+    /// Integrate the current billed fleet size up to `now`.
+    fn advance(&mut self, now: f64) {
+        let dt = (now - self.last_t).max(0.0);
+        self.server_seconds += dt * self.cur_billed as f64;
+        self.gpu_seconds +=
+            dt * (self.cur_billed * self.gpus_per_server) as f64;
+        self.last_t = self.last_t.max(now);
+    }
+
+    /// Record a fleet change. `routable` is what the router can
+    /// target (drives the timeline); `billed` is provisioning +
+    /// active + draining (drives the GPU-seconds integral). The
+    /// timeline only records routable-size *changes*, so pure billing
+    /// transitions (provision start, retirement) don't add steps.
+    pub fn set_fleet(&mut self, now: f64, routable: usize, billed: usize) {
+        self.advance(now);
+        self.cur_billed = billed;
+        if routable != self.cur_active {
+            self.cur_active = routable;
+            self.timeline.push((now, routable));
+        }
+    }
+
+    /// Record one measured completion and whether it violated the SLO.
+    pub fn record_completion(&mut self, violated: bool) {
+        self.measured += 1;
+        if violated {
+            self.slo_violations += 1;
+        }
+    }
+
+    /// Close the accounting interval at the end of the run.
+    pub fn finish(&mut self, now: f64) {
+        self.advance(now);
+        self.end_t = now;
+    }
+
+    /// Length of the accounted interval (set by `finish`).
+    pub fn duration(&self) -> f64 {
+        self.end_t
+    }
+
+    pub fn peak_servers(&self) -> usize {
+        self.timeline.iter().map(|&(_, n)| n).max().unwrap_or(0)
+    }
+
+    pub fn min_servers(&self) -> usize {
+        self.timeline.iter().map(|&(_, n)| n).min().unwrap_or(0)
+    }
+
+    /// Time-weighted mean *billed* fleet size.
+    pub fn mean_fleet(&self) -> f64 {
+        if self.end_t > 0.0 {
+            self.server_seconds / self.end_t
+        } else {
+            self.cur_billed as f64
+        }
+    }
+
+    /// Fraction of measured completions past the SLO (NaN if none).
+    pub fn violation_rate(&self) -> f64 {
+        if self.measured == 0 {
+            return f64::NAN;
+        }
+        self.slo_violations as f64 / self.measured as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_fleet_integral() {
+        let mut f = FleetMetrics::new(4, 3);
+        f.finish(100.0);
+        assert!((f.gpu_seconds - 3.0 * 4.0 * 100.0).abs() < 1e-9);
+        assert!((f.server_seconds - 300.0).abs() < 1e-9);
+        assert!((f.mean_fleet() - 3.0).abs() < 1e-9);
+        assert_eq!(f.peak_servers(), 3);
+        assert_eq!(f.min_servers(), 3);
+        assert_eq!(f.duration(), 100.0);
+    }
+
+    #[test]
+    fn step_function_integral() {
+        // billed: 2 for 10 s, 4 for 20 s, 1 for 30 s (1 GPU each)
+        let mut f = FleetMetrics::new(1, 2);
+        f.set_fleet(10.0, 4, 4);
+        f.scale_ups += 2;
+        f.set_fleet(30.0, 1, 1);
+        f.scale_downs += 3;
+        f.finish(60.0);
+        let want = 2.0 * 10.0 + 4.0 * 20.0 + 1.0 * 30.0;
+        assert!((f.gpu_seconds - want).abs() < 1e-9, "{}", f.gpu_seconds);
+        assert_eq!(f.peak_servers(), 4);
+        assert_eq!(f.min_servers(), 1);
+        assert!((f.mean_fleet() - want / 60.0).abs() < 1e-9);
+        assert_eq!(f.timeline.len(), 3);
+    }
+
+    #[test]
+    fn billed_fleet_diverges_from_routable() {
+        // a drain: routable drops at t=10, billing continues until
+        // the victim retires at t=40
+        let mut f = FleetMetrics::new(2, 3);
+        f.set_fleet(10.0, 2, 3); // drain start: victim still billed
+        f.set_fleet(40.0, 2, 2); // retired: billing drops, no step
+        f.finish(100.0);
+        let want_servers = 3.0 * 40.0 + 2.0 * 60.0;
+        assert!((f.server_seconds - want_servers).abs() < 1e-9);
+        assert!((f.gpu_seconds - 2.0 * want_servers).abs() < 1e-9);
+        // the timeline only shows the routable change
+        assert_eq!(f.timeline, vec![(0.0, 3), (10.0, 2)]);
+        assert_eq!(f.peak_servers(), 3);
+    }
+
+    #[test]
+    fn violation_rate() {
+        let mut f = FleetMetrics::new(1, 1);
+        assert!(f.violation_rate().is_nan());
+        for i in 0..10 {
+            f.record_completion(i % 5 == 0);
+        }
+        assert!((f.violation_rate() - 0.2).abs() < 1e-12);
+        assert_eq!(f.measured, 10);
+        assert_eq!(f.slo_violations, 2);
+    }
+
+    #[test]
+    fn default_is_inert() {
+        let f = FleetMetrics::default();
+        assert_eq!(f.peak_servers(), 0);
+        assert_eq!(f.mean_fleet(), 0.0);
+        assert_eq!(f.gpu_seconds, 0.0);
+    }
+}

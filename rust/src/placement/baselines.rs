@@ -11,8 +11,10 @@ use crate::util::rng::Pcg32;
 #[derive(Debug, Clone)]
 pub struct RandomPlacer {
     rng: Pcg32,
-    /// Static: place once, then keep returning the same assignment.
-    cached: Option<Assignment>,
+    /// Static *per topology*: place once per (server count, adapter
+    /// count), then keep returning the same assignment — the elastic
+    /// subsystem re-invokes placers when the fleet grows or shrinks.
+    cached: Option<(usize, Assignment)>,
 }
 
 impl RandomPlacer {
@@ -30,8 +32,8 @@ impl Placer for RandomPlacer {
     }
 
     fn place(&mut self, ctx: &PlacementCtx) -> Assignment {
-        if let Some(a) = &self.cached {
-            if a.shares.len() == ctx.adapters.len() {
+        if let Some((n, a)) = &self.cached {
+            if *n == ctx.n_servers && a.shares.len() == ctx.adapters.len() {
                 return a.clone();
             }
         }
@@ -40,7 +42,7 @@ impl Placer for RandomPlacer {
             let s = self.rng.below(ctx.n_servers as u64) as usize;
             asg.add(a.id, s, 1.0);
         }
-        self.cached = Some(asg.clone());
+        self.cached = Some((ctx.n_servers, asg.clone()));
         asg
     }
 }
@@ -50,7 +52,7 @@ impl Placer for RandomPlacer {
 /// similar ranks but ignores demand.
 #[derive(Debug, Clone, Default)]
 pub struct ContiguousPlacer {
-    cached: Option<Assignment>,
+    cached: Option<(usize, Assignment)>,
 }
 
 impl ContiguousPlacer {
@@ -65,8 +67,8 @@ impl Placer for ContiguousPlacer {
     }
 
     fn place(&mut self, ctx: &PlacementCtx) -> Assignment {
-        if let Some(a) = &self.cached {
-            if a.shares.len() == ctx.adapters.len() {
+        if let Some((n, a)) = &self.cached {
+            if *n == ctx.n_servers && a.shares.len() == ctx.adapters.len() {
                 return a.clone();
             }
         }
@@ -80,7 +82,7 @@ impl Placer for ContiguousPlacer {
             let s = (i / per.max(1)).min(n - 1);
             asg.add(a, s, 1.0);
         }
-        self.cached = Some(asg.clone());
+        self.cached = Some((ctx.n_servers, asg.clone()));
         asg
     }
 }
@@ -116,6 +118,23 @@ mod tests {
             let c = a.adapters_on(s).len();
             assert!((60..=140).contains(&c), "server {s}: {c}");
         }
+    }
+
+    #[test]
+    fn cache_invalidated_on_topology_change() {
+        // elastic path: the same placer re-places when the fleet size
+        // changes, and the result fits the smaller virtual cluster
+        let data = random_ctx(13, 30, 4);
+        let mut p = RandomPlacer::new(3);
+        let a4 = p.place(&data.ctx());
+        a4.validate(4).unwrap();
+        let mut ctx3 = data.ctx();
+        ctx3.n_servers = 3;
+        let a3 = p.place(&ctx3);
+        a3.validate(3).unwrap();
+        let mut c = ContiguousPlacer::new();
+        c.place(&data.ctx()).validate(4).unwrap();
+        c.place(&ctx3).validate(3).unwrap();
     }
 
     #[test]

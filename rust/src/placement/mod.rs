@@ -144,6 +144,40 @@ impl Assignment {
         ranks.into_iter().map(|r| r.len()).collect()
     }
 
+    /// Relabel virtual server indices to physical ids: entry
+    /// `(i, φ)` becomes `(map[i], φ)`. `map` must cover every virtual
+    /// id used by `self` (panics otherwise). Used when a placer that
+    /// thinks in dense `0..k` bins places onto an elastic fleet whose
+    /// active server ids are sparse.
+    pub fn remap_servers(&self, map: &[ServerId]) -> Assignment {
+        let mut out = Assignment::new(self.shares.len());
+        for (a, ss) in self.shares.iter().enumerate() {
+            for &(s, phi) in ss {
+                out.add(a as AdapterId, map[s], phi);
+            }
+        }
+        out
+    }
+
+    /// Project onto a physical→virtual server mapping, dropping
+    /// entries on servers outside the map (e.g. draining ones). The
+    /// result can violate Σφ = 1 — it is only meant as the
+    /// churn-matching `prev` of a re-placement onto the mapped subset.
+    pub fn project_onto(
+        &self,
+        phys_to_virt: &BTreeMap<ServerId, usize>,
+    ) -> Assignment {
+        let mut out = Assignment::new(self.shares.len());
+        for (a, ss) in self.shares.iter().enumerate() {
+            for &(s, phi) in ss {
+                if let Some(&v) = phys_to_virt.get(&s) {
+                    out.add(a as AdapterId, v, phi);
+                }
+            }
+        }
+        out
+    }
+
     /// Total bytes that must move to go from `prev` to `self`:
     /// adapters newly appearing on a server they weren't on.
     pub fn migration_bytes(&self, prev: &Assignment, adapters: &AdapterSet) -> u64 {
@@ -179,6 +213,36 @@ pub struct PlacementCtx<'a> {
 pub trait Placer {
     fn name(&self) -> &'static str;
     fn place(&mut self, ctx: &PlacementCtx) -> Assignment;
+}
+
+/// Run `placer` against an arbitrary *active* subset of physical
+/// servers — the elastic topology-change path. The placer sees a dense
+/// virtual cluster `0..active.len()`, with `prev` projected into that
+/// space for churn minimization (entries on servers outside the active
+/// set — e.g. a draining victim — simply vanish from the overlap
+/// matrix, so their adapters land wherever packing puts them). The
+/// returned assignment is in physical server ids and satisfies the
+/// routing-table invariants over the active set.
+pub fn place_onto(
+    placer: &mut dyn Placer,
+    adapters: &AdapterSet,
+    active: &[ServerId],
+    demand_tps: &BTreeMap<AdapterId, f64>,
+    operating_points: &BTreeMap<u32, f64>,
+    prev: Option<&Assignment>,
+) -> Assignment {
+    assert!(!active.is_empty(), "placement needs at least one server");
+    let phys_to_virt: BTreeMap<ServerId, usize> =
+        active.iter().enumerate().map(|(v, &p)| (p, v)).collect();
+    let prev_virt = prev.map(|p| p.project_onto(&phys_to_virt));
+    let ctx = PlacementCtx {
+        adapters,
+        n_servers: active.len(),
+        demand_tps,
+        operating_points,
+        prev: prev_virt.as_ref(),
+    };
+    placer.place(&ctx).remap_servers(active)
 }
 
 #[cfg(test)]
@@ -300,6 +364,64 @@ mod tests {
         assert_eq!(asg.max_rank_per_server(2, &adapters), vec![128, 128]);
         assert_eq!(asg.heterogeneity(2, &adapters), vec![2, 1]);
         assert_eq!(asg.adapters_on(0), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn remap_and_project() {
+        let mut a = Assignment::new(2);
+        a.add(0, 0, 0.4);
+        a.add(0, 1, 0.6);
+        a.add(1, 2, 1.0);
+        // virtual 0,1,2 -> physical 5,7,9
+        let phys = a.remap_servers(&[5, 7, 9]);
+        assert_eq!(phys.servers_of(0), &[(5, 0.4), (7, 0.6)]);
+        assert_eq!(phys.servers_of(1), &[(9, 1.0)]);
+        assert!(phys.validate(10).is_ok());
+        // project back onto {5, 9} only: server 7's share drops
+        let map: BTreeMap<ServerId, usize> =
+            [(5, 0), (9, 1)].into_iter().collect();
+        let virt = phys.project_onto(&map);
+        assert_eq!(virt.servers_of(0), &[(0, 0.4)]);
+        assert_eq!(virt.servers_of(1), &[(1, 1.0)]);
+    }
+
+    #[test]
+    fn place_onto_sparse_active_set() {
+        use crate::placement::loraserve::LoraServePlacer;
+        let data = testutil::random_ctx(31, 40, 8);
+        // elastic fleet: only physical servers 1, 4, 6 are active
+        let active = [1usize, 4, 6];
+        let mut placer = LoraServePlacer::new();
+        let asg = place_onto(
+            &mut placer,
+            &data.adapters,
+            &active,
+            &data.demand,
+            &data.oppoints,
+            None,
+        );
+        asg.validate(8).unwrap();
+        for ss in &asg.shares {
+            for &(s, _) in ss {
+                assert!(active.contains(&s), "placed on inactive {s}");
+            }
+        }
+        // churn matching across a topology change stays valid
+        let smaller = [1usize, 6];
+        let asg2 = place_onto(
+            &mut placer,
+            &data.adapters,
+            &smaller,
+            &data.demand,
+            &data.oppoints,
+            Some(&asg),
+        );
+        asg2.validate(8).unwrap();
+        for ss in &asg2.shares {
+            for &(s, _) in ss {
+                assert!(smaller.contains(&s), "placed on inactive {s}");
+            }
+        }
     }
 
     #[test]

@@ -179,6 +179,75 @@ impl AdapterPool {
         (0..self.n_servers).find(|&s| self.resident[s].contains(&adapter))
     }
 
+    pub fn n_servers(&self) -> usize {
+        self.n_servers
+    }
+
+    pub fn fetching_count(&self, server: ServerId) -> usize {
+        self.fetching[server].len()
+    }
+
+    /// Grow the pool by one empty server slot; returns its id. The new
+    /// server receives adapters lazily (fetch on first access) or via
+    /// `replicate_all_to`.
+    pub fn add_server(&mut self) -> ServerId {
+        self.resident.push(BTreeSet::new());
+        self.fetching.push(BTreeSet::new());
+        self.assigned.push(BTreeSet::new());
+        self.max_resident.push(0);
+        self.n_servers += 1;
+        self.n_servers - 1
+    }
+
+    /// Adapters whose *only* resident copy lives on `server` — the set
+    /// the drain-and-migrate protocol must RDMA-copy elsewhere before
+    /// the server can leave the fleet.
+    pub fn evacuations(&self, server: ServerId) -> Vec<AdapterId> {
+        self.resident[server]
+            .iter()
+            .copied()
+            .filter(|&a| {
+                (0..self.n_servers)
+                    .all(|s| s == server || !self.resident[s].contains(&a))
+            })
+            .collect()
+    }
+
+    /// Drop `server`'s copy of `adapter`, but only if at least one
+    /// other resident replica exists. Returns true when the server no
+    /// longer holds a copy (dropped or never had one); false means the
+    /// copy is the cluster's last and must be migrated instead.
+    pub fn drop_copy(&mut self, server: ServerId, adapter: AdapterId) -> bool {
+        if !self.resident[server].contains(&adapter) {
+            return true;
+        }
+        let covered = (0..self.n_servers)
+            .any(|s| s != server && self.resident[s].contains(&adapter));
+        if covered {
+            self.resident[server].remove(&adapter);
+        }
+        covered
+    }
+
+    /// Make every adapter resident (and assigned) on `server` — the
+    /// full-replication (Toppings) path when a new server joins the
+    /// fleet. Returns the bytes copied over the fabric.
+    pub fn replicate_all_to(
+        &mut self,
+        server: ServerId,
+        adapters: &AdapterSet,
+    ) -> u64 {
+        let mut bytes = 0;
+        for a in adapters.iter() {
+            if self.resident[server].insert(a.id) {
+                bytes += a.size_bytes;
+            }
+            self.assigned[server].insert(a.id);
+        }
+        self.bump_watermark(server);
+        bytes
+    }
+
     /// Coverage invariant: every adapter id < n has ≥ 1 replica
     /// (resident or in flight — an in-flight copy still has its source
     /// resident because GC keeps survivors until `finish_fetch`).
@@ -305,6 +374,40 @@ mod tests {
             assert_eq!(pool.resident_count(s), 10);
         }
         pool.check_coverage(10).unwrap();
+    }
+
+    #[test]
+    fn add_server_and_replicate() {
+        let (mut pool, adapters) = setup();
+        let s = pool.add_server();
+        assert_eq!(s, 3);
+        assert_eq!(pool.n_servers(), 4);
+        assert_eq!(pool.resident_count(s), 0);
+        let bytes = pool.replicate_all_to(s, &adapters);
+        assert_eq!(bytes, adapters.total_bytes());
+        assert_eq!(pool.resident_count(s), 4);
+        // already resident: copying again moves no bytes
+        assert_eq!(pool.replicate_all_to(s, &adapters), 0);
+        pool.check_coverage(4).unwrap();
+    }
+
+    #[test]
+    fn drop_copy_refuses_last_replica() {
+        let (mut pool, adapters) = setup();
+        let g = GpuSpec::A100_40G;
+        // adapter 0 only on server 0 — dropping it must be refused
+        assert!(!pool.drop_copy(0, 0));
+        assert!(pool.is_resident(0, 0));
+        assert_eq!(pool.evacuations(0), vec![0, 1]);
+        // replicate to server 2, then the drop succeeds
+        pool.start_fetch(2, 0, &adapters, &g).unwrap();
+        pool.finish_fetch(2, 0);
+        assert!(pool.drop_copy(0, 0));
+        assert!(!pool.is_resident(0, 0));
+        assert_eq!(pool.evacuations(0), vec![1]);
+        // dropping a copy the server never had is a no-op success
+        assert!(pool.drop_copy(1, 0));
+        pool.check_coverage(4).unwrap();
     }
 
     #[test]

@@ -1,20 +1,33 @@
 //! The cluster simulation: arrivals → coordinator routing → per-server
 //! continuous batching → completions, with periodic LORASERVE
-//! rebalancing and the distributed adapter pool in the loop.
+//! rebalancing, the distributed adapter pool, and (optionally) the
+//! elastic-capacity subsystem in the loop.
+//!
+//! Elastic mode (`SimConfig::with_autoscale`) adds three topology
+//! events to the alphabet: `AutoscaleTick` feeds fleet signals to the
+//! `autoscale::ScaleController`; `ServerReady` joins a provisioned
+//! server and re-places onto the grown fleet; a `ScaleDown` decision
+//! runs the **drain-and-migrate protocol** — the victim leaves the
+//! routing table at once, its queued/waiting work is re-routed, its
+//! adapters are re-placed onto the survivors, last-copy adapters are
+//! RDMA-migrated, and only a fully quiesced, copy-free server retires
+//! (`DrainCheck`). The pool coverage invariant holds at every step.
 
-use super::event::EventQueue;
+use super::event::{EventQueue, SimEvent};
 use super::report::SimReport;
 use super::server::{SimReq, SimServer};
-use crate::config::ClusterConfig;
+use crate::autoscale::{ScaleController, ScaleDecision, ScaleSignals};
+use crate::config::{AutoscaleConfig, ClusterConfig, GpuSpec};
 use crate::coordinator::{DemandTracker, Router, RoutingTable};
 use crate::costmodel::{operating_points, CostModel};
+use crate::metrics::FleetMetrics;
 use crate::placement::baselines::{ContiguousPlacer, RandomPlacer};
 use crate::placement::loraserve::LoraServePlacer;
-use crate::placement::{Assignment, PlacementCtx, Placer};
+use crate::placement::{place_onto, Assignment, Placer};
 use crate::pool::AdapterPool;
 use crate::trace::Trace;
 use crate::util::rng::Pcg32;
-use crate::workload::{AdapterId, ServerId};
+use crate::workload::{AdapterId, AdapterSet, ServerId};
 use std::collections::BTreeMap;
 
 /// The four systems of §V-D.
@@ -72,6 +85,10 @@ pub struct SimConfig {
     pub warmup: f64,
     /// Hard cap on simulated events (runaway guard).
     pub max_events: u64,
+    /// Elastic capacity: run the SLO-aware autoscaler with these
+    /// knobs. None (the default) keeps the fleet fixed at
+    /// `cluster.n_servers` — the paper's original setting.
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl SimConfig {
@@ -82,6 +99,7 @@ impl SimConfig {
             opts: LoraServeOpts::default(),
             warmup: 0.0,
             max_events: 500_000_000,
+            autoscale: None,
         }
     }
 
@@ -89,20 +107,166 @@ impl SimConfig {
         self.warmup = warmup;
         self
     }
+
+    pub fn with_autoscale(mut self, autoscale: AutoscaleConfig) -> Self {
+        self.autoscale = Some(autoscale);
+        self
+    }
 }
 
-#[derive(Debug)]
-enum Event {
-    Arrive(usize),
-    IterDone(ServerId),
-    FetchDone(ServerId, AdapterId),
-    Rebalance,
+/// Lifecycle of one server slot in the elastic fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SrvState {
+    /// Slot exists but was never provisioned (or was retired and can
+    /// be re-provisioned).
+    Cold,
+    /// Scale-up decided; cold start in progress.
+    Provisioning,
+    /// Routable member of the fleet.
+    Active,
+    /// Scale-down decided; finishing decodes + migrating last copies.
+    Draining,
+    /// Fully quiesced and copy-free; reusable by a later scale-up.
+    Retired,
+}
+
+fn collect_active(state: &[SrvState]) -> Vec<ServerId> {
+    state
+        .iter()
+        .enumerate()
+        .filter(|&(_, &st)| st == SrvState::Active)
+        .map(|(s, _)| s)
+        .collect()
+}
+
+/// Servers occupying GPUs: provisioning + active + draining. This is
+/// what `FleetMetrics::gpu_seconds` integrates — a draining victim
+/// keeps burning its GPUs until it retires.
+fn count_billed(state: &[SrvState]) -> usize {
+    state
+        .iter()
+        .filter(|&&st| {
+            matches!(
+                st,
+                SrvState::Provisioning | SrvState::Active | SrvState::Draining
+            )
+        })
+        .count()
+}
+
+fn count_provisioning(state: &[SrvState]) -> usize {
+    state
+        .iter()
+        .filter(|&&st| st == SrvState::Provisioning)
+        .count()
+}
+
+fn homes_of(asg: &Assignment) -> Vec<Vec<ServerId>> {
+    asg.shares
+        .iter()
+        .map(|ss| ss.iter().map(|&(s, _)| s).collect())
+        .collect()
+}
+
+/// Hand one request to `target`: enqueue (starting an adapter fetch on
+/// a pool miss) and kick the server if idle. Shared by fresh arrivals
+/// and drain-time re-routing.
+#[allow(clippy::too_many_arguments)]
+fn deliver(
+    target: ServerId,
+    sreq: SimReq,
+    now: f64,
+    servers: &mut [SimServer],
+    pool: &mut AdapterPool,
+    q: &mut EventQueue<SimEvent>,
+    adapters: &AdapterSet,
+    gpu: &GpuSpec,
+) {
+    let a = sreq.req.adapter;
+    if pool.is_resident(target, a) {
+        servers[target].enqueue_ready(sreq);
+    } else {
+        servers[target].enqueue_waiting(sreq);
+        if let Some(dt) = pool.start_fetch(target, a, adapters, gpu) {
+            q.push(now + dt, SimEvent::FetchDone(target, a));
+        }
+    }
+    if let Some(dt) = servers[target].start_iteration(now) {
+        q.push(now + dt, SimEvent::IterDone(target));
+    }
+}
+
+/// Re-place the adapter universe onto `active` for the given system.
+/// LORASERVE and the static S-LoRA placers run through `place_onto`
+/// (dense virtual cluster + churn matching); Toppings has no placement
+/// — its assignment is a marker and the pool is fully replicated.
+#[allow(clippy::too_many_arguments)]
+fn replace_assignment(
+    system: SystemKind,
+    ls: &mut LoraServePlacer,
+    st: &mut dyn Placer,
+    adapters: &AdapterSet,
+    active: &[ServerId],
+    demand: &BTreeMap<AdapterId, f64>,
+    oppoints: &BTreeMap<u32, f64>,
+    prev: Option<&Assignment>,
+) -> Assignment {
+    match system {
+        SystemKind::LoraServe => {
+            place_onto(ls, adapters, active, demand, oppoints, prev)
+        }
+        SystemKind::SLoraRandom | SystemKind::SLoraContiguous => {
+            place_onto(st, adapters, active, demand, oppoints, prev)
+        }
+        SystemKind::Toppings => {
+            let mut a = Assignment::new(adapters.len());
+            let home = active.first().copied().unwrap_or(0);
+            for ad in adapters.iter() {
+                a.add(ad.id, home, 1.0);
+            }
+            a
+        }
+    }
+}
+
+/// A draining server retires once it holds no work *and* no adapter
+/// copies (so no last copy can ever be lost to a shrink). Retirement
+/// ends the server's GPU billing.
+fn try_retire(
+    s: ServerId,
+    now: f64,
+    state: &mut [SrvState],
+    servers: &[SimServer],
+    pool: &AdapterPool,
+    fleet: &mut FleetMetrics,
+) -> bool {
+    if state[s] == SrvState::Draining
+        && servers[s].quiesced()
+        && pool.resident_count(s) == 0
+        && pool.fetching_count(s) == 0
+    {
+        state[s] = SrvState::Retired;
+        fleet.set_fleet(
+            now,
+            collect_active(state).len(),
+            count_billed(state),
+        );
+        true
+    } else {
+        false
+    }
 }
 
 /// Run one trace through one system. Deterministic per (trace, config,
 /// seed).
 pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
-    let n = cfg.cluster.n_servers;
+    let n0 = cfg.cluster.n_servers;
+    assert!(n0 >= 1, "need at least one server");
+    // elastic fleets can grow to max_servers; fixed fleets stay at n0
+    let max_n = cfg
+        .autoscale
+        .map(|a| a.max_servers.max(n0))
+        .unwrap_or(n0);
     let cm = CostModel::new(cfg.cluster.server);
     let mut rng = Pcg32::with_stream(cfg.cluster.seed, 0x51u64);
     let ranks = trace.adapters.unique_ranks();
@@ -142,46 +306,41 @@ pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
         _ => Box::new(ContiguousPlacer::new()),
     };
 
-    let initial_ctx = PlacementCtx {
-        adapters: &trace.adapters,
-        n_servers: n,
-        demand_tps: &uniform_demand,
-        operating_points: &oppoints,
-        prev: None,
-    };
-    let mut assignment: Assignment = match cfg.system {
-        SystemKind::LoraServe => loraserve_placer.place(&initial_ctx),
-        SystemKind::SLoraRandom | SystemKind::SLoraContiguous => {
-            static_placer.place(&initial_ctx)
-        }
-        SystemKind::Toppings => {
-            // placement is irrelevant; full replication
-            let mut a = Assignment::new(trace.adapters.len());
-            for ad in trace.adapters.iter() {
-                a.add(ad.id, 0, 1.0);
-            }
-            a
-        }
-    };
+    let mut state: Vec<SrvState> = (0..max_n)
+        .map(|s| if s < n0 { SrvState::Active } else { SrvState::Cold })
+        .collect();
+    let active0: Vec<ServerId> = (0..n0).collect();
+    let mut assignment: Assignment = replace_assignment(
+        cfg.system,
+        &mut loraserve_placer,
+        &mut *static_placer,
+        &trace.adapters,
+        &active0,
+        &uniform_demand,
+        &oppoints,
+        None,
+    );
     assignment
-        .validate(n)
+        .validate(max_n)
         .expect("initial placement invalid");
 
     let replicate = matches!(cfg.system, SystemKind::Toppings)
         || cfg.opts.full_replication;
+    // Toppings routes per-request (least outstanding work); everything
+    // else routes through the φ table and must swap it on every
+    // topology change.
+    let table_routed = !matches!(cfg.system, SystemKind::Toppings);
     let mut pool = if replicate {
-        AdapterPool::fully_replicated(n, trace.adapters.len())
-    } else {
-        let homes: Vec<Vec<ServerId>> = assignment
-            .shares
-            .iter()
-            .map(|ss| ss.iter().map(|(s, _)| *s).collect())
+        let initial: Vec<Vec<ServerId>> = (0..trace.adapters.len())
+            .map(|_| active0.clone())
             .collect();
-        AdapterPool::new(n, &homes)
+        AdapterPool::new(max_n, &initial)
+    } else {
+        AdapterPool::new(max_n, &homes_of(&assignment))
     };
 
     let mut router = match cfg.system {
-        SystemKind::Toppings => Router::Toppings { n_servers: n },
+        SystemKind::Toppings => Router::Toppings { n_servers: max_n },
         _ => Router::Table(RoutingTable::from_assignment(&assignment)),
     };
 
@@ -190,19 +349,20 @@ pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
     demand.last_value_only = cfg.opts.last_value_demand;
 
     let mut servers: Vec<SimServer> =
-        (0..n).map(|s| SimServer::new(s, cm)).collect();
+        (0..max_n).map(|s| SimServer::new(s, cm)).collect();
 
     // ---- event loop
     let mut report = SimReport {
         system: cfg.system.label().to_string(),
         trace: trace.name.clone(),
         offered_rps: trace.mean_rps(),
-        per_server_ttft: vec![Default::default(); n],
+        per_server_ttft: vec![Default::default(); max_n],
+        fleet: FleetMetrics::new(cfg.cluster.server.tp, n0),
         ..Default::default()
     };
-    let mut q: EventQueue<Event> = EventQueue::new();
+    let mut q: EventQueue<SimEvent> = EventQueue::new();
     for (i, r) in trace.requests.iter().enumerate() {
-        q.push(r.arrival, Event::Arrive(i));
+        q.push(r.arrival, SimEvent::Arrive(i));
     }
     let trace_end = trace.duration();
     let dynamic = matches!(cfg.system, SystemKind::LoraServe);
@@ -212,10 +372,20 @@ pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
         // cold-start backlog at near-critical utilization otherwise
         // takes many minutes to drain. Production deployments persist
         // demand state across restarts; this approximates that.
-        q.push(cfg.cluster.rebalance_period / 4.0, Event::Rebalance);
+        q.push(cfg.cluster.rebalance_period / 4.0, SimEvent::Rebalance);
     }
+    let mut controller: Option<ScaleController> =
+        cfg.autoscale.map(ScaleController::new);
+    if let Some(a) = cfg.autoscale {
+        q.push(a.decision_period, SimEvent::AutoscaleTick);
+    }
+    // autoscaler signal window: busy-time snapshots + SLO accounting
+    let mut busy_snap = vec![0.0f64; max_n];
+    let mut last_tick = 0.0f64;
+    let mut win_completed = 0u64;
+    let mut win_violations = 0u64;
 
-    let mut outstanding_buf = vec![0.0f64; n];
+    let mut outstanding_buf = vec![0.0f64; max_n];
     let mut events = 0u64;
     while let Some((now, ev)) = q.pop() {
         events += 1;
@@ -228,17 +398,24 @@ pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
             );
         }
         match ev {
-            Event::Arrive(i) => {
+            SimEvent::Arrive(i) => {
                 let req = trace.requests[i];
                 demand.record(req.adapter, req.total_tokens());
                 // Toppings balances on request *counts* ("requests
                 // currently being served and queued", §V-D) — blind to
                 // token lengths and ranks; the table policies ignore
-                // the signal entirely.
+                // the signal entirely. Non-routable (cold, draining,
+                // retired) servers are masked out.
                 for (s, srv) in servers.iter().enumerate() {
-                    outstanding_buf[s] = match cfg.system {
-                        SystemKind::Toppings => srv.pending_count() as f64,
-                        _ => srv.outstanding,
+                    outstanding_buf[s] = if state[s] == SrvState::Active {
+                        match cfg.system {
+                            SystemKind::Toppings => {
+                                srv.pending_count() as f64
+                            }
+                            _ => srv.outstanding,
+                        }
+                    } else {
+                        f64::INFINITY
                     };
                 }
                 let target =
@@ -258,35 +435,31 @@ pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
                     adapter_bytes: trace.adapters.get(req.adapter).size_bytes,
                     est: SimServer::estimate(&cm, &req, est_rank),
                 };
-                if pool.is_resident(target, req.adapter) {
-                    servers[target].enqueue_ready(sreq);
-                } else {
-                    servers[target].enqueue_waiting(sreq);
-                    if let Some(dt) = pool.start_fetch(
-                        target,
-                        req.adapter,
-                        &trace.adapters,
-                        &cfg.cluster.server.gpu,
-                    ) {
-                        q.push(
-                            now + dt,
-                            Event::FetchDone(target, req.adapter),
-                        );
-                    }
-                }
-                if let Some(dt) = servers[target].start_iteration(now) {
-                    q.push(now + dt, Event::IterDone(target));
-                }
+                deliver(
+                    target,
+                    sreq,
+                    now,
+                    &mut servers,
+                    &mut pool,
+                    &mut q,
+                    &trace.adapters,
+                    &cfg.cluster.server.gpu,
+                );
             }
-            Event::IterDone(s) => {
+            SimEvent::IterDone(s) => {
                 let completions = servers[s].finish_iteration(now);
                 for c in completions {
                     report.completed += 1;
                     report.makespan = report.makespan.max(c.finished_at);
+                    let violated = c.ttft > cfg.cluster.slo.ttft_p95;
+                    win_completed += 1;
+                    win_violations += violated as u64;
                     if c.req.arrival < cfg.warmup {
                         continue; // simulated, but not measured
                     }
                     report.ttft.push(c.ttft);
+                    report.e2e.push(c.finished_at - c.req.arrival);
+                    report.fleet.record_completion(violated);
                     if c.tbt.is_finite() {
                         report.tbt.push(c.tbt);
                     }
@@ -299,37 +472,82 @@ pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
                 }
                 servers[s].purge_timeouts(now, cfg.cluster.slo.timeout);
                 if let Some(dt) = servers[s].start_iteration(now) {
-                    q.push(now + dt, Event::IterDone(s));
+                    q.push(now + dt, SimEvent::IterDone(s));
+                }
+                if state[s] == SrvState::Draining {
+                    try_retire(
+                        s,
+                        now,
+                        &mut state,
+                        &servers,
+                        &pool,
+                        &mut report.fleet,
+                    );
                 }
             }
-            Event::FetchDone(s, a) => {
+            SimEvent::FetchDone(s, a) => {
                 pool.finish_fetch(s, a);
-                servers[s].release_waiting(a);
-                if let Some(dt) = servers[s].start_iteration(now) {
-                    q.push(now + dt, Event::IterDone(s));
+                if state[s] == SrvState::Draining {
+                    // a fetch that raced the drain decision: discard
+                    // the fresh copy if covered elsewhere, otherwise
+                    // it *is* the last copy — migrate it to its new
+                    // home before this server can go.
+                    if !pool.drop_copy(s, a) {
+                        if let Some(&(tgt, _)) =
+                            assignment.shares[a as usize].first()
+                        {
+                            if let Some(dt) = pool.start_fetch(
+                                tgt,
+                                a,
+                                &trace.adapters,
+                                &cfg.cluster.server.gpu,
+                            ) {
+                                q.push(
+                                    now + dt,
+                                    SimEvent::FetchDone(tgt, a),
+                                );
+                            }
+                        }
+                    }
+                } else {
+                    servers[s].release_waiting(a);
+                    if let Some(dt) = servers[s].start_iteration(now) {
+                        q.push(now + dt, SimEvent::IterDone(s));
+                    }
+                }
+                // a migration landing anywhere may complete a drain
+                for s2 in 0..max_n {
+                    if state[s2] == SrvState::Draining {
+                        try_retire(
+                            s2,
+                            now,
+                            &mut state,
+                            &servers,
+                            &pool,
+                            &mut report.fleet,
+                        );
+                    }
                 }
             }
-            Event::Rebalance => {
+            SimEvent::Rebalance => {
                 demand.roll_window();
                 let projected = demand.projected_tps();
-                let ctx = PlacementCtx {
-                    adapters: &trace.adapters,
-                    n_servers: n,
-                    demand_tps: &projected,
-                    operating_points: &oppoints,
-                    prev: Some(&assignment),
-                };
-                let next = loraserve_placer.place(&ctx);
+                let active_ids = collect_active(&state);
+                let next = replace_assignment(
+                    cfg.system,
+                    &mut loraserve_placer,
+                    &mut *static_placer,
+                    &trace.adapters,
+                    &active_ids,
+                    &projected,
+                    &oppoints,
+                    Some(&assignment),
+                );
                 report.migration_bytes +=
                     next.migration_bytes(&assignment, &trace.adapters);
                 router.update_table(RoutingTable::from_assignment(&next));
                 if !replicate {
-                    let homes: Vec<Vec<ServerId>> = next
-                        .shares
-                        .iter()
-                        .map(|ss| ss.iter().map(|(x, _)| *x).collect())
-                        .collect();
-                    pool.apply_assignment(&homes);
+                    pool.apply_assignment(&homes_of(&next));
                 }
                 assignment = next;
                 report.rebalances += 1;
@@ -339,8 +557,258 @@ pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
                     cfg.cluster.rebalance_period
                 };
                 if now + next_in <= trace_end {
-                    q.push(now + next_in, Event::Rebalance);
+                    q.push(now + next_in, SimEvent::Rebalance);
                 }
+                debug_assert!(
+                    pool.check_coverage(trace.adapters.len()).is_ok(),
+                    "rebalance lost coverage"
+                );
+            }
+            SimEvent::AutoscaleTick => {
+                let (Some(acfg), Some(ctl)) =
+                    (cfg.autoscale, controller.as_mut())
+                else {
+                    continue;
+                };
+                let active_ids = collect_active(&state);
+                let window = (now - last_tick).max(1e-9);
+                let mut busy = 0.0;
+                for &s in &active_ids {
+                    busy += (servers[s].busy_time - busy_snap[s]).max(0.0);
+                }
+                for (snap, srv) in
+                    busy_snap.iter_mut().zip(servers.iter())
+                {
+                    *snap = srv.busy_time;
+                }
+                let sig = ScaleSignals {
+                    busy_frac: busy
+                        / (window * active_ids.len().max(1) as f64),
+                    violation_rate: if win_completed > 0 {
+                        win_violations as f64 / win_completed as f64
+                    } else {
+                        0.0
+                    },
+                    queue_depth: active_ids
+                        .iter()
+                        .map(|&s| servers[s].pending_count())
+                        .sum(),
+                    projected_tps: demand.total_projected_tps(),
+                };
+                win_completed = 0;
+                win_violations = 0;
+                last_tick = now;
+                let cand: Vec<(ServerId, f64)> = active_ids
+                    .iter()
+                    .map(|&s| (s, servers[s].outstanding))
+                    .collect();
+                let provisioning = count_provisioning(&state);
+                match ctl.decide(now, &sig, &cand, provisioning) {
+                    ScaleDecision::Hold => {}
+                    ScaleDecision::Up(k) => {
+                        for _ in 0..k {
+                            let Some(slot) = (0..max_n).find(|&s| {
+                                matches!(
+                                    state[s],
+                                    SrvState::Cold | SrvState::Retired
+                                )
+                            }) else {
+                                break;
+                            };
+                            state[slot] = SrvState::Provisioning;
+                            servers[slot].draining = false;
+                            report.fleet.scale_ups += 1;
+                            q.push(
+                                now + acfg.provision_delay,
+                                SimEvent::ServerReady(slot),
+                            );
+                        }
+                        // billing starts at provisioning (cloud
+                        // instances bill from launch)
+                        report.fleet.set_fleet(
+                            now,
+                            active_ids.len(),
+                            count_billed(&state),
+                        );
+                    }
+                    ScaleDecision::Down(victim) => {
+                        // ---- drain-and-migrate protocol
+                        state[victim] = SrvState::Draining;
+                        servers[victim].draining = true;
+                        report.fleet.scale_downs += 1;
+                        let survivors = collect_active(&state);
+                        // routable drops now; the victim stays billed
+                        // until it retires
+                        report.fleet.set_fleet(
+                            now,
+                            survivors.len(),
+                            count_billed(&state),
+                        );
+                        if table_routed {
+                            // swap the table: the victim stops
+                            // receiving traffic *now*
+                            let mut projected = demand.projected_tps();
+                            if projected.is_empty() {
+                                projected = uniform_demand.clone();
+                            }
+                            let next = replace_assignment(
+                                cfg.system,
+                                &mut loraserve_placer,
+                                &mut *static_placer,
+                                &trace.adapters,
+                                &survivors,
+                                &projected,
+                                &oppoints,
+                                Some(&assignment),
+                            );
+                            if !replicate {
+                                report.migration_bytes += next
+                                    .migration_bytes(
+                                        &assignment,
+                                        &trace.adapters,
+                                    );
+                                // the pool GC keeps any last copy on
+                                // the victim alive until its
+                                // migration lands
+                                pool.apply_assignment(&homes_of(&next));
+                            }
+                            router.update_table(
+                                RoutingTable::from_assignment(&next),
+                            );
+                            assignment = next;
+                        }
+                        if replicate {
+                            // fully replicated: every copy exists on
+                            // the survivors; just release the victim's
+                            for a in 0..trace.adapters.len() as AdapterId
+                            {
+                                pool.drop_copy(victim, a);
+                            }
+                        } else {
+                            // RDMA-migrate the victim's last copies to
+                            // their newly assigned homes
+                            for a in pool.evacuations(victim) {
+                                let Some(&(tgt, _)) =
+                                    assignment.shares[a as usize].first()
+                                else {
+                                    continue;
+                                };
+                                if let Some(dt) = pool.start_fetch(
+                                    tgt,
+                                    a,
+                                    &trace.adapters,
+                                    &cfg.cluster.server.gpu,
+                                ) {
+                                    q.push(
+                                        now + dt,
+                                        SimEvent::FetchDone(tgt, a),
+                                    );
+                                }
+                            }
+                        }
+                        // re-route not-yet-running work through the
+                        // swapped table (active decodes finish here)
+                        let pending = servers[victim].extract_pending();
+                        for sreq in pending {
+                            for (s, srv) in servers.iter().enumerate() {
+                                outstanding_buf[s] = if state[s]
+                                    == SrvState::Active
+                                {
+                                    match cfg.system {
+                                        SystemKind::Toppings => {
+                                            srv.pending_count() as f64
+                                        }
+                                        _ => srv.outstanding,
+                                    }
+                                } else {
+                                    f64::INFINITY
+                                };
+                            }
+                            let target = router.route(
+                                sreq.req.adapter,
+                                &outstanding_buf,
+                                &mut rng,
+                            );
+                            deliver(
+                                target,
+                                sreq,
+                                now,
+                                &mut servers,
+                                &mut pool,
+                                &mut q,
+                                &trace.adapters,
+                                &cfg.cluster.server.gpu,
+                            );
+                        }
+                        q.push(now, SimEvent::DrainCheck(victim));
+                        debug_assert!(
+                            pool.check_coverage(trace.adapters.len())
+                                .is_ok(),
+                            "drain lost coverage"
+                        );
+                    }
+                }
+                if now + acfg.decision_period <= trace_end {
+                    q.push(
+                        now + acfg.decision_period,
+                        SimEvent::AutoscaleTick,
+                    );
+                }
+            }
+            SimEvent::ServerReady(s) => {
+                if state[s] != SrvState::Provisioning {
+                    continue; // stale (slot repurposed)
+                }
+                state[s] = SrvState::Active;
+                let active_ids = collect_active(&state);
+                report.fleet.set_fleet(
+                    now,
+                    active_ids.len(),
+                    count_billed(&state),
+                );
+                if replicate {
+                    report.migration_bytes +=
+                        pool.replicate_all_to(s, &trace.adapters);
+                }
+                if table_routed {
+                    let mut projected = demand.projected_tps();
+                    if projected.is_empty() {
+                        projected = uniform_demand.clone();
+                    }
+                    let next = replace_assignment(
+                        cfg.system,
+                        &mut loraserve_placer,
+                        &mut *static_placer,
+                        &trace.adapters,
+                        &active_ids,
+                        &projected,
+                        &oppoints,
+                        Some(&assignment),
+                    );
+                    if !replicate {
+                        report.migration_bytes += next
+                            .migration_bytes(&assignment, &trace.adapters);
+                        pool.apply_assignment(&homes_of(&next));
+                    }
+                    router.update_table(RoutingTable::from_assignment(
+                        &next,
+                    ));
+                    assignment = next;
+                }
+                debug_assert!(
+                    pool.check_coverage(trace.adapters.len()).is_ok(),
+                    "scale-up lost coverage"
+                );
+            }
+            SimEvent::DrainCheck(s) => {
+                try_retire(
+                    s,
+                    now,
+                    &mut state,
+                    &servers,
+                    &pool,
+                    &mut report.fleet,
+                );
             }
         }
     }
@@ -349,6 +817,7 @@ pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
         pool.check_coverage(trace.adapters.len()).is_ok(),
         "pool lost coverage"
     );
+    report.fleet.finish(report.makespan.max(trace_end));
     for (s, srv) in servers.iter().enumerate() {
         report.per_server_busy.push(srv.busy_time);
         report.per_server_max_adapters.push(pool.max_resident(s));
@@ -413,6 +882,11 @@ mod tests {
             );
             assert!(rep.ttft_p95() > 0.0);
             assert!(rep.ttft.len() as u64 == rep.completed);
+            // fixed fleet: e2e measured alongside ttft, fleet constant
+            assert_eq!(rep.e2e.len(), rep.ttft.len());
+            assert_eq!(rep.fleet.peak_servers(), 4);
+            assert_eq!(rep.fleet.min_servers(), 4);
+            assert!(rep.fleet.gpu_seconds > 0.0);
         }
     }
 
@@ -505,5 +979,36 @@ mod tests {
                 rep.makespan
             );
         }
+    }
+
+    #[test]
+    fn elastic_run_grows_and_accounts_gpu_seconds() {
+        let trace = small_trace(25.0, 8);
+        let mut c = cluster();
+        c.n_servers = 1;
+        let acfg = AutoscaleConfig {
+            min_servers: 1,
+            max_servers: 5,
+            decision_period: 10.0,
+            cooldown: 15.0,
+            provision_delay: 5.0,
+            ..Default::default()
+        };
+        let rep = run(
+            &trace,
+            &SimConfig::new(c, SystemKind::LoraServe)
+                .with_autoscale(acfg),
+        );
+        assert_eq!(
+            rep.completed + rep.timeouts,
+            trace.requests.len() as u64
+        );
+        assert!(rep.fleet.scale_ups >= 1, "no scale-up under burst");
+        assert!(rep.fleet.peak_servers() > 1);
+        assert!(rep.fleet.peak_servers() <= 5);
+        // GPU-seconds bounded by the peak fleet running the whole time
+        let bound = (5 * 4) as f64 * rep.fleet.duration() + 1e-6;
+        assert!(rep.fleet.gpu_seconds <= bound);
+        assert!(rep.fleet.gpu_seconds > 0.0);
     }
 }

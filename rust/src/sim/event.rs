@@ -1,7 +1,32 @@
-//! Discrete-event machinery: a deterministic time-ordered event heap.
+//! Discrete-event machinery: the simulator's event alphabet and a
+//! deterministic time-ordered event heap.
 
+use crate::workload::{AdapterId, ServerId};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+
+/// Everything that can happen in the cluster simulation — the request
+/// path (arrive/iterate/fetch), the control plane (rebalance), and the
+/// elastic-capacity subsystem's topology-change events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimEvent {
+    /// Request `trace.requests[i]` reaches the coordinator.
+    Arrive(usize),
+    /// A server finishes its running prefill/decode iteration.
+    IterDone(ServerId),
+    /// An RDMA adapter fetch lands on its destination server.
+    FetchDone(ServerId, AdapterId),
+    /// Periodic LORASERVE re-placement (Algorithm 1 time step).
+    Rebalance,
+    /// Autoscaler signal-evaluation tick (`AutoscaleConfig`
+    /// `decision_period`).
+    AutoscaleTick,
+    /// A provisioned server finishes cold start and joins the fleet.
+    ServerReady(ServerId),
+    /// Re-check whether a draining server has fully quiesced
+    /// (drain-and-migrate protocol).
+    DrainCheck(ServerId),
+}
 
 /// Events are ordered by time, then by insertion sequence (FIFO among
 /// simultaneous events) — this makes runs bit-reproducible.

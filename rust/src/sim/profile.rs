@@ -85,6 +85,7 @@ pub fn empirical_operating_point(
         slo: SloConfig {
             ttft_p95: slo,
             timeout: 10.0 * slo,
+            ..Default::default()
         },
         server: *server,
         rebalance_period: 1e9, // static; single adapter anyway

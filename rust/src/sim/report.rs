@@ -1,5 +1,6 @@
 //! Simulation outcome: the metrics every figure harness consumes.
 
+use crate::metrics::FleetMetrics;
 use crate::util::stats::Samples;
 use crate::workload::AdapterId;
 use std::collections::BTreeMap;
@@ -12,6 +13,9 @@ pub struct SimReport {
     pub ttft: Samples,
     /// Mean time between tokens per request.
     pub tbt: Samples,
+    /// End-to-end request latency (arrival → last token) — the E2E
+    /// SLO the capacity planner can constrain.
+    pub e2e: Samples,
     pub completed: u64,
     pub timeouts: u64,
     /// Time of the last completion.
@@ -30,6 +34,10 @@ pub struct SimReport {
     /// Fraction of iterations whose batch contained rank >= 64 work.
     pub per_server_highrank_frac: Vec<f64>,
     pub rebalances: u64,
+    /// Fleet accounting (GPU-seconds, scale events, size timeline,
+    /// SLO-violation rate). For fixed-fleet runs the timeline is the
+    /// constant `n_servers`.
+    pub fleet: FleetMetrics,
 }
 
 impl SimReport {
@@ -64,6 +72,10 @@ impl SimReport {
 
     pub fn tbt_p95(&mut self) -> f64 {
         self.tbt.p95()
+    }
+
+    pub fn e2e_p95(&mut self) -> f64 {
+        self.e2e.p95()
     }
 }
 

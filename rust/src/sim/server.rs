@@ -127,6 +127,9 @@ pub struct SimServer {
     pub running: Iteration,
     /// Outstanding-work estimate in seconds (Toppings' signal).
     pub outstanding: f64,
+    /// Drain state: no new work is routed here; active decodes finish
+    /// and last-copy adapters migrate before the server retires.
+    pub draining: bool,
     pub gpu_cache: GpuAdapterCache,
     pub busy_until: f64,
     pub busy_time: f64,
@@ -149,6 +152,7 @@ impl SimServer {
             active: Vec::new(),
             running: Iteration::Idle,
             outstanding: 0.0,
+            draining: false,
             gpu_cache: GpuAdapterCache::new(
                 cm.server.gpu_adapter_cache_bytes,
             ),
@@ -212,6 +216,34 @@ impl SimServer {
         for r in released {
             self.queue.push_back(r);
         }
+    }
+
+    /// Pull every not-yet-running request off this server (drain
+    /// protocol step 1: queued + waiting-for-fetch work gets re-routed
+    /// through the swapped table), restoring the outstanding-work
+    /// estimate. Sorted by arrival so re-delivery preserves FIFO
+    /// fairness. Active (already prefilled) sequences stay and finish
+    /// here.
+    pub fn extract_pending(&mut self) -> Vec<SimReq> {
+        let mut out: Vec<SimReq> = self.queue.drain(..).collect();
+        out.extend(self.waiting_fetch.drain(..));
+        for r in &out {
+            self.outstanding -= r.est;
+        }
+        out.sort_by(|a, b| {
+            a.req.arrival.partial_cmp(&b.req.arrival).unwrap()
+        });
+        out
+    }
+
+    /// True once a draining server holds no work at all — the compute
+    /// half of the retire condition (the pool half is that it holds no
+    /// last-copy adapters).
+    pub fn quiesced(&self) -> bool {
+        self.queue.is_empty()
+            && self.waiting_fetch.is_empty()
+            && self.active.is_empty()
+            && self.is_idle()
     }
 
     /// Drop queued requests older than `timeout` (frontend gives up).
@@ -518,6 +550,38 @@ mod tests {
         assert_eq!(s.timeouts, 2);
         assert!(s.outstanding.abs() < 1e-9);
         assert_eq!(s.purge_timeouts(100.0, 1000.0), 0);
+    }
+
+    #[test]
+    fn extract_pending_drains_queues_in_arrival_order() {
+        let mut s = server();
+        s.enqueue_ready(req(2.0, 0, 10, 1));
+        s.enqueue_waiting(req(1.0, 1, 10, 1));
+        s.enqueue_ready(req(3.0, 2, 10, 1));
+        assert!(s.outstanding > 0.0);
+        let pending = s.extract_pending();
+        assert_eq!(pending.len(), 3);
+        assert_eq!(pending[0].req.arrival, 1.0);
+        assert_eq!(pending[2].req.arrival, 3.0);
+        assert!(s.outstanding.abs() < 1e-9);
+        assert!(s.quiesced());
+    }
+
+    #[test]
+    fn quiesced_tracks_active_work() {
+        let mut s = server();
+        assert!(s.quiesced());
+        s.enqueue_ready(req(0.0, 0, 10, 3));
+        assert!(!s.quiesced());
+        let t = s.start_iteration(0.0).unwrap();
+        s.finish_iteration(t);
+        // one active decode sequence keeps the server busy
+        assert!(!s.quiesced());
+        let t2 = s.start_iteration(t).unwrap();
+        s.finish_iteration(t + t2);
+        let t3 = s.start_iteration(t + t2).unwrap();
+        s.finish_iteration(t + t2 + t3);
+        assert!(s.quiesced());
     }
 
     #[test]

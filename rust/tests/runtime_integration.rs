@@ -4,6 +4,9 @@
 //! model — proving L1 (pallas) ⊂ L2 (jax) ⊂ L3 (rust) compose exactly.
 //!
 //! Tests are skipped (not failed) when artifacts/ hasn't been built.
+//! The whole suite is gated on the `pjrt` feature (the offline build
+//! image has no vendored `xla` crate).
+#![cfg(feature = "pjrt")]
 
 use loraserve::runtime::{argmax, ModelEngine};
 use loraserve::util::json;
