@@ -204,6 +204,23 @@ fn main() {
         1
     });
 
+    // --- rank-aware batch scheduling (admission is on the DES hot
+    // path: one policy call per iteration)
+    b.run("sim: rank-bucketed admission run", || {
+        let cfg = SimConfig::new(
+            cluster.clone(),
+            SystemKind::SLoraRandom,
+        )
+        .with_batch_policy(
+            loraserve::config::BatchPolicyKind::RankBucketed {
+                max_wait_iters: 8,
+            },
+        );
+        let rep = sim::run(&trace, &cfg);
+        black_box(rep.completed);
+        1
+    });
+
     // --- cost model evaluations (per-iteration hot path in DES)
     let server = loraserve::config::ServerConfig::default();
     b.run("costmodel: prefill_time", || {

@@ -187,6 +187,89 @@ impl Default for AutoscaleConfig {
     }
 }
 
+/// Prefill admission policy of a server's continuous batching — the
+/// *scheduler* half of the heterogeneous-rank design space (placement
+/// is the other half). Every request in a batch pays the batch's
+/// maximum adapter rank (the BGMV/MBGMV pad-to-max-rank kernels), so
+/// what the admission loop lets into one iteration decides the
+/// interference tax as much as where adapters live.
+///
+/// Implementations live in `sim::server` (the `BatchPolicy` trait);
+/// this enum is the serializable knob threaded through configs, the
+/// CLI (`--batch-policy`), the capacity planner, and the figure
+/// harnesses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchPolicyKind {
+    /// Strict arrival order (the S-LoRA/vLLM default; the pre-refactor
+    /// simulator behavior, bit for bit).
+    #[default]
+    Fifo,
+    /// Admit prefills from a single rank class per iteration, keeping
+    /// batches rank-homogeneous. A queued head request is never passed
+    /// over more than `max_wait_iters` consecutive prefill iterations
+    /// (the bounded-wait starvation guard).
+    RankBucketed { max_wait_iters: u32 },
+    /// Admit in arrival order but skip requests whose rank would raise
+    /// the batch maximum beyond `factor ×` the head request's rank.
+    /// The head is always admitted, so nothing starves.
+    RankCap { factor: u32 },
+}
+
+impl BatchPolicyKind {
+    pub const DEFAULT_MAX_WAIT_ITERS: u32 = 8;
+    pub const DEFAULT_CAP_FACTOR: u32 = 2;
+
+    /// Parse `fifo`, `rank-bucketed[:W]`, or `rank-cap[:F]`.
+    pub fn parse(s: &str) -> Result<BatchPolicyKind, String> {
+        let (name, param) = match s.split_once(':') {
+            Some((n, p)) => (n, Some(p)),
+            None => (s, None),
+        };
+        let num = |p: Option<&str>, default: u32| -> Result<u32, String> {
+            match p {
+                None => Ok(default),
+                Some(x) => x
+                    .parse::<u32>()
+                    .map_err(|e| format!("batch-policy param '{x}': {e}")),
+            }
+        };
+        match name {
+            "fifo" => {
+                if param.is_some() {
+                    return Err("fifo takes no parameter".into());
+                }
+                Ok(BatchPolicyKind::Fifo)
+            }
+            "rank-bucketed" | "bucketed" => Ok(BatchPolicyKind::RankBucketed {
+                max_wait_iters: num(param, Self::DEFAULT_MAX_WAIT_ITERS)?,
+            }),
+            "rank-cap" | "cap" => {
+                let factor = num(param, Self::DEFAULT_CAP_FACTOR)?;
+                if factor == 0 {
+                    return Err("rank-cap factor must be >= 1".into());
+                }
+                Ok(BatchPolicyKind::RankCap { factor })
+            }
+            other => Err(format!(
+                "unknown batch policy '{other}' \
+                 (fifo | rank-bucketed[:wait] | rank-cap[:factor])"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            BatchPolicyKind::Fifo => "fifo".into(),
+            BatchPolicyKind::RankBucketed { max_wait_iters } => {
+                format!("rank-bucketed:{max_wait_iters}")
+            }
+            BatchPolicyKind::RankCap { factor } => {
+                format!("rank-cap:{factor}")
+            }
+        }
+    }
+}
+
 /// One LLM inference server (one base-model instance, possibly TP over
 /// several GPUs) — the unit LORASERVE places adapters onto.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -236,6 +319,9 @@ pub struct ClusterConfig {
     /// Elastic-capacity knobs; only consulted when a simulation is run
     /// with autoscaling enabled (`SimConfig::with_autoscale`).
     pub autoscale: AutoscaleConfig,
+    /// Prefill admission policy of every simulated server's continuous
+    /// batching (threaded into `SimConfig` and the capacity planner).
+    pub batch_policy: BatchPolicyKind,
     pub seed: u64,
 }
 
@@ -247,6 +333,7 @@ impl Default for ClusterConfig {
             slo: SloConfig::default(),
             rebalance_period: 60.0,
             autoscale: AutoscaleConfig::default(),
+            batch_policy: BatchPolicyKind::default(),
             seed: 0,
         }
     }
@@ -298,6 +385,9 @@ impl ClusterConfig {
         }
         if let Some(x) = v.get("rebalance_period").and_then(Json::as_f64) {
             cfg.rebalance_period = x;
+        }
+        if let Some(s) = v.get("batch_policy").and_then(Json::as_str) {
+            cfg.batch_policy = BatchPolicyKind::parse(s)?;
         }
         if let Some(a) = v.get("autoscale") {
             let au = &mut cfg.autoscale;
@@ -465,6 +555,54 @@ mod tests {
             AutoscaleConfig::default().scale_down_util
         );
         assert!(SloConfig::default().e2e_p95.is_infinite());
+    }
+
+    #[test]
+    fn batch_policy_parse_and_label() {
+        assert_eq!(
+            BatchPolicyKind::parse("fifo").unwrap(),
+            BatchPolicyKind::Fifo
+        );
+        assert_eq!(
+            BatchPolicyKind::parse("rank-bucketed").unwrap(),
+            BatchPolicyKind::RankBucketed {
+                max_wait_iters: BatchPolicyKind::DEFAULT_MAX_WAIT_ITERS
+            }
+        );
+        assert_eq!(
+            BatchPolicyKind::parse("rank-bucketed:3").unwrap(),
+            BatchPolicyKind::RankBucketed { max_wait_iters: 3 }
+        );
+        assert_eq!(
+            BatchPolicyKind::parse("rank-cap:4").unwrap(),
+            BatchPolicyKind::RankCap { factor: 4 }
+        );
+        assert!(BatchPolicyKind::parse("rank-cap:0").is_err());
+        assert!(BatchPolicyKind::parse("fifo:1").is_err());
+        assert!(BatchPolicyKind::parse("lifo").is_err());
+        assert!(BatchPolicyKind::parse("rank-cap:x").is_err());
+        // labels round-trip through parse
+        for k in [
+            BatchPolicyKind::Fifo,
+            BatchPolicyKind::RankBucketed { max_wait_iters: 5 },
+            BatchPolicyKind::RankCap { factor: 2 },
+        ] {
+            assert_eq!(BatchPolicyKind::parse(&k.label()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn batch_policy_from_json() {
+        let v = json::parse(r#"{"batch_policy": "rank-cap:3"}"#).unwrap();
+        let cfg = ClusterConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.batch_policy, BatchPolicyKind::RankCap { factor: 3 });
+        let v = json::parse(r#"{"batch_policy": "nope"}"#).unwrap();
+        assert!(ClusterConfig::from_json(&v).is_err());
+        // default is fifo (the paper's baseline scheduler)
+        assert_eq!(
+            ClusterConfig::default().batch_policy,
+            BatchPolicyKind::Fifo
+        );
     }
 
     #[test]

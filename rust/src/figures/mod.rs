@@ -14,6 +14,7 @@ pub mod elastic;
 pub mod eval;
 pub mod helpers;
 pub mod motivation;
+pub mod sched;
 pub mod sensitivity;
 
 pub use helpers::FigOpts;
@@ -59,6 +60,8 @@ pub fn registry() -> Vec<(&'static str, &'static str, FigFn)> {
          eval::storage_summary),
         ("ablations", "Algorithm 1 design-choice ablations",
          ablations::ablations),
+        ("sched", "batch scheduling × placement ablation",
+         sched::sched),
         ("gpus", "min fleet under SLO per system (GPU savings)",
          elastic::gpus_under_slo),
         ("fleet", "SLO-aware autoscaler fleet-size timeline",

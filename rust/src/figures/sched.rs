@@ -1,0 +1,83 @@
+//! The `sched` ablation: batch scheduling × placement.
+//!
+//! The paper fixes the scheduler (FIFO continuous batching) and varies
+//! *placement*; CaraServe-style rank-aware scheduling is the other
+//! half of the heterogeneous-rank design space. This harness runs
+//! every system under each `BatchPolicyKind` on a mixed-rank trace:
+//! rank-agnostic placement + `fifo` is "neither", rank-agnostic
+//! placement + `rank-bucketed` is "scheduling-only", LORASERVE +
+//! `fifo` is "placement-only", LORASERVE + `rank-bucketed` is "both".
+//! The high-rank iteration share and the padded-token volume are the
+//! interference-tax indicators the policies trade against latency.
+
+use super::helpers::{FigOpts, RESULTS_DIR};
+use crate::config::{BatchPolicyKind, ClusterConfig};
+use crate::sim::{run, SimConfig, SystemKind};
+use crate::trace::azure::{self, AzureConfig};
+use crate::trace::{LengthModel, Trace};
+use crate::util::table::{fmt_secs, Table};
+
+/// Systems × batch policies on one trace. Split from [`sched`] so the
+/// test suite can smoke-run it on a tiny trace.
+pub fn sched_table(trace: &Trace, cluster: &ClusterConfig) -> Table {
+    let policies = [
+        BatchPolicyKind::Fifo,
+        BatchPolicyKind::RankBucketed {
+            max_wait_iters: BatchPolicyKind::DEFAULT_MAX_WAIT_ITERS,
+        },
+        BatchPolicyKind::RankCap {
+            factor: BatchPolicyKind::DEFAULT_CAP_FACTOR,
+        },
+    ];
+    let mut table = Table::new(
+        "sched — placement × batch-policy ablation (mixed ranks)",
+        &[
+            "system",
+            "batch policy",
+            "p95 ttft",
+            "p95 tbt",
+            "drops",
+            "hi-rank iters",
+            "mixed prefills",
+            "padded tokens",
+        ],
+    );
+    for system in SystemKind::all() {
+        for &policy in &policies {
+            let cfg = SimConfig::new(cluster.clone(), system)
+                .with_batch_policy(policy);
+            let mut rep = run(trace, &cfg);
+            table.row(vec![
+                system.label().to_string(),
+                policy.label(),
+                fmt_secs(rep.ttft_p95()),
+                fmt_secs(rep.tbt_p95()),
+                rep.timeouts.to_string(),
+                format!("{:.1}%", rep.highrank_iter_share() * 100.0),
+                format!("{:.1}%", rep.mixed_prefill_share() * 100.0),
+                rep.pad_rank_tokens.to_string(),
+            ]);
+        }
+    }
+    table
+}
+
+pub fn sched(opts: &FigOpts) -> std::io::Result<()> {
+    // Mixed ranks with short outputs: prefill iterations dominate, so
+    // batch *composition* (not decode-set mixing) drives the
+    // iteration mix; the load keeps queues deep enough that admission
+    // actually has choices to make.
+    let trace = azure::generate(&AzureConfig {
+        rps: 24.0,
+        duration: opts.scale(480.0),
+        seed: opts.seed,
+        lengths: LengthModel::fixed(512, 4),
+        ..Default::default()
+    });
+    let cluster = ClusterConfig {
+        n_servers: 4,
+        rebalance_period: 30.0,
+        ..Default::default()
+    };
+    sched_table(&trace, &cluster).emit(RESULTS_DIR, "sched")
+}

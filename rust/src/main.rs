@@ -58,12 +58,13 @@ fn usage() {
          simulate --system <loraserve|slora-random|slora-contiguous|\
          toppings>\n         \
          [--trace prod|shifting|uniform] [--rps R] [--servers N]\n         \
-         [--adapters N] [--duration S] [--seed S] [--config file.json]\n\
+         [--adapters N] [--duration S] [--seed S] [--config file.json]\n         \
+         [--batch-policy fifo|rank-bucketed[:W]|rank-cap[:F]]\n\
          autoscale [--system <kind>|--all] [--slo-ttft MS] \
          [--slo-e2e MS]\n         \
          [--metric ttft|e2e] [--percentile P] [--max-servers N]\n         \
          [--trace prod|shifting|uniform] [--rps R] [--duration S]\n         \
-         [--adapters N] [--seed S]\n\
+         [--adapters N] [--seed S] [--batch-policy P]\n\
          trace    --kind prod|azure [--adapters N] [--out file.csv]\n\
          profile  [--model 7b|13b|30b|70b] [--tp N]\n\
          serve    [--servers N] [--requests N] [--duration S]   \
@@ -121,6 +122,10 @@ fn build_cluster(args: &Args) -> Result<ClusterConfig, String> {
             .ok_or_else(|| format!("unknown model '{m}'"))?;
     }
     cluster.server.tp = args.get_usize("tp", cluster.server.tp)?;
+    if let Some(bp) = args.get("batch-policy") {
+        cluster.batch_policy =
+            loraserve::config::BatchPolicyKind::parse(bp)?;
+    }
     Ok(cluster)
 }
 
@@ -186,6 +191,15 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         ("tbt p50", fmt_secs(rep.tbt.p50())),
         ("tbt p95", fmt_secs(rep.tbt_p95())),
         ("meets slo", meets.to_string()),
+        ("batch policy", rep.batch_policy.clone()),
+        (
+            "hi-rank iter share",
+            format!("{:.1}%", rep.highrank_iter_share() * 100.0),
+        ),
+        (
+            "mixed prefill share",
+            format!("{:.1}%", rep.mixed_prefill_share() * 100.0),
+        ),
         ("rebalances", rep.rebalances.to_string()),
         ("migrated", fmt_bytes(rep.migration_bytes)),
         ("fetches", rep.fetches.to_string()),

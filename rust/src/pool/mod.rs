@@ -102,6 +102,46 @@ impl AdapterPool {
         Some(fetch_time(gpu, FetchSource::RemoteRdma, bytes))
     }
 
+    /// Begin fetching a *group* of adapters into `server` as one
+    /// RDMA stream — the drain protocol's batched last-copy migration.
+    /// Already-resident / already-in-flight adapters are skipped.
+    /// Returns the single transfer time for the group's total bytes
+    /// (one per-transfer latency, amortized) plus the adapters
+    /// actually started, or None if nothing needed to move. The caller
+    /// schedules ONE completion event and then calls `finish_fetch`
+    /// for each started adapter.
+    pub fn start_fetch_batch(
+        &mut self,
+        server: ServerId,
+        ids: &[AdapterId],
+        adapters: &AdapterSet,
+        gpu: &GpuSpec,
+    ) -> Option<(f64, Vec<AdapterId>)> {
+        let mut bytes = 0u64;
+        let mut started = Vec::new();
+        for &a in ids {
+            if self.is_resident(server, a) || self.is_fetching(server, a)
+            {
+                continue;
+            }
+            // same release-mode invariant as the serial start_fetch:
+            // never fabricate a copy of an adapter nobody holds
+            if self.find_replica(a).is_none() {
+                panic!("adapter {a}: no replica left in cluster");
+            }
+            self.fetching[server].insert(a);
+            bytes += adapters.get(a).size_bytes;
+            started.push(a);
+            self.total_fetches += 1;
+        }
+        if started.is_empty() {
+            return None;
+        }
+        self.bump_watermark(server);
+        self.total_fetch_bytes += bytes;
+        Some((fetch_time(gpu, FetchSource::RemoteRdma, bytes), started))
+    }
+
     /// Complete an in-flight fetch: the adapter becomes resident and,
     /// per Fig 13, source copies that are no longer assigned anywhere
     /// can now be garbage collected.
@@ -408,6 +448,51 @@ mod tests {
         // dropping a copy the server never had is a no-op success
         assert!(pool.drop_copy(1, 0));
         pool.check_coverage(4).unwrap();
+    }
+
+    #[test]
+    fn batched_fetch_amortizes_latency_and_coalesces() {
+        let (mut pool, adapters) = setup();
+        let g = GpuSpec::A100_40G;
+        // serial: two separate transfers pay two latency floors
+        let t0 = pool.start_fetch(2, 0, &adapters, &g).unwrap();
+        let t1 = pool.start_fetch(2, 1, &adapters, &g).unwrap();
+        pool.finish_fetch(2, 0);
+        pool.finish_fetch(2, 1);
+        // batched from a fresh pool: one transfer over the total bytes
+        let (mut pool2, _) = setup();
+        let (tb, started) = pool2
+            .start_fetch_batch(2, &[0, 1], &adapters, &g)
+            .unwrap();
+        assert_eq!(started, vec![0, 1]);
+        assert!(
+            tb < t0 + t1,
+            "batched {tb} should beat serial {}",
+            t0 + t1
+        );
+        assert!(tb > t0.max(t1), "still moves all the bytes");
+        assert!(pool2.is_fetching(2, 0) && pool2.is_fetching(2, 1));
+        for &a in &started {
+            pool2.finish_fetch(2, a);
+        }
+        assert!(pool2.is_resident(2, 0) && pool2.is_resident(2, 1));
+        assert_eq!(pool2.total_fetches, 2);
+        assert_eq!(
+            pool2.total_fetch_bytes,
+            adapters.get(0).size_bytes + adapters.get(1).size_bytes
+        );
+        pool2.check_coverage(4).unwrap();
+        // already-resident / in-flight members are skipped; an
+        // all-skipped batch is a no-op
+        let (_, started) = pool2
+            .start_fetch_batch(2, &[0, 1, 2], &adapters, &g)
+            .unwrap();
+        assert_eq!(started, vec![2]);
+        assert!(pool2
+            .start_fetch_batch(2, &[0, 1, 2], &adapters, &g)
+            .is_none());
+        pool2.finish_fetch(2, 2);
+        pool2.check_coverage(4).unwrap();
     }
 
     #[test]

@@ -1,34 +1,21 @@
-//! The cluster simulation: arrivals → coordinator routing → per-server
-//! continuous batching → completions, with periodic LORASERVE
-//! rebalancing, the distributed adapter pool, and (optionally) the
-//! elastic-capacity subsystem in the loop.
+//! The paper's systems as configuration: `SystemKind` (the four
+//! evaluated systems of §V-D), the LORASERVE ablation knobs, and
+//! `SimConfig` — plus the thin `run` entry point that composes a
+//! [`SystemSpec`](super::engine::SystemSpec) and hands it to the
+//! [`SimEngine`](super::engine::SimEngine).
 //!
-//! Elastic mode (`SimConfig::with_autoscale`) adds three topology
-//! events to the alphabet: `AutoscaleTick` feeds fleet signals to the
-//! `autoscale::ScaleController`; `ServerReady` joins a provisioned
-//! server and re-places onto the grown fleet; a `ScaleDown` decision
-//! runs the **drain-and-migrate protocol** — the victim leaves the
-//! routing table at once, its queued/waiting work is re-routed, its
-//! adapters are re-placed onto the survivors, last-copy adapters are
-//! RDMA-migrated, and only a fully quiesced, copy-free server retires
-//! (`DrainCheck`). The pool coverage invariant holds at every step.
+//! The event loop itself lives in `sim/engine.rs`; the fleet lifecycle
+//! in `sim/topology.rs`; batch admission policies in `sim/server.rs`.
+//! Each canned `SystemKind` is nothing more than a `SystemSpec` value
+//! (`SystemKind::spec`) — new systems compose their own spec and call
+//! [`run_spec`](super::engine::run_spec) without touching the loop.
 
-use super::event::{EventQueue, SimEvent};
+use super::engine::{
+    LoadSignal, PlacementPolicy, PoolMode, RoutingPolicy, SystemSpec,
+};
 use super::report::SimReport;
-use super::server::{SimReq, SimServer};
-use crate::autoscale::{ScaleController, ScaleDecision, ScaleSignals};
-use crate::config::{AutoscaleConfig, ClusterConfig, GpuSpec};
-use crate::coordinator::{DemandTracker, Router, RoutingTable};
-use crate::costmodel::{operating_points, CostModel};
-use crate::metrics::FleetMetrics;
-use crate::placement::baselines::{ContiguousPlacer, RandomPlacer};
-use crate::placement::loraserve::LoraServePlacer;
-use crate::placement::{place_onto, Assignment, Placer};
-use crate::pool::AdapterPool;
+use crate::config::{AutoscaleConfig, BatchPolicyKind, ClusterConfig};
 use crate::trace::Trace;
-use crate::util::rng::Pcg32;
-use crate::workload::{AdapterId, AdapterSet, ServerId};
-use std::collections::BTreeMap;
 
 /// The four systems of §V-D.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -56,6 +43,58 @@ impl SystemKind {
             SystemKind::SLoraContiguous,
             SystemKind::Toppings,
         ]
+    }
+
+    /// The canned [`SystemSpec`] this kind names — the four systems of
+    /// §V-D expressed as policy compositions. The ablation knobs fold
+    /// in here (they tweak the spec, not the engine).
+    pub fn spec(
+        &self,
+        opts: &LoraServeOpts,
+        batch: BatchPolicyKind,
+    ) -> SystemSpec {
+        // (the Toppings arm below forces Replicated regardless)
+        let pool = if opts.full_replication {
+            PoolMode::Replicated
+        } else {
+            PoolMode::Distributed
+        };
+        let base = SystemSpec {
+            label: self.label().to_string(),
+            placement: PlacementPolicy::Contiguous,
+            routing: RoutingPolicy::Table,
+            pool,
+            batch,
+            periodic_rebalance: false,
+            empirical_oppoints: false,
+            rank_agnostic: opts.rank_agnostic,
+            last_value_demand: opts.last_value_demand,
+            load_signal: LoadSignal::ServiceSeconds,
+            rank_blind_cost: false,
+        };
+        match self {
+            SystemKind::LoraServe => SystemSpec {
+                placement: PlacementPolicy::LoraServe {
+                    skip_permutation: opts.skip_permutation,
+                },
+                periodic_rebalance: true,
+                empirical_oppoints: true,
+                ..base
+            },
+            SystemKind::SLoraRandom => SystemSpec {
+                placement: PlacementPolicy::Random,
+                ..base
+            },
+            SystemKind::SLoraContiguous => base,
+            SystemKind::Toppings => SystemSpec {
+                placement: PlacementPolicy::ReplicateAll,
+                routing: RoutingPolicy::LeastLoaded,
+                pool: PoolMode::Replicated,
+                load_signal: LoadSignal::RequestCount,
+                rank_blind_cost: true,
+                ..base
+            },
+        }
     }
 }
 
@@ -89,10 +128,15 @@ pub struct SimConfig {
     /// knobs. None (the default) keeps the fleet fixed at
     /// `cluster.n_servers` — the paper's original setting.
     pub autoscale: Option<AutoscaleConfig>,
+    /// Prefill admission policy of every simulated server. Seeded from
+    /// `ClusterConfig::batch_policy` so the CLI/config knob threads
+    /// through every consumer (figures, planner, autoscale replay).
+    pub batch: BatchPolicyKind,
 }
 
 impl SimConfig {
     pub fn new(cluster: ClusterConfig, system: SystemKind) -> Self {
+        let batch = cluster.batch_policy;
         SimConfig {
             cluster,
             system,
@@ -100,6 +144,7 @@ impl SimConfig {
             warmup: 0.0,
             max_events: 500_000_000,
             autoscale: None,
+            batch,
         }
     }
 
@@ -112,725 +157,20 @@ impl SimConfig {
         self.autoscale = Some(autoscale);
         self
     }
-}
 
-/// Lifecycle of one server slot in the elastic fleet.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum SrvState {
-    /// Slot exists but was never provisioned (or was retired and can
-    /// be re-provisioned).
-    Cold,
-    /// Scale-up decided; cold start in progress.
-    Provisioning,
-    /// Routable member of the fleet.
-    Active,
-    /// Scale-down decided; finishing decodes + migrating last copies.
-    Draining,
-    /// Fully quiesced and copy-free; reusable by a later scale-up.
-    Retired,
-}
-
-fn collect_active(state: &[SrvState]) -> Vec<ServerId> {
-    state
-        .iter()
-        .enumerate()
-        .filter(|&(_, &st)| st == SrvState::Active)
-        .map(|(s, _)| s)
-        .collect()
-}
-
-/// Servers occupying GPUs: provisioning + active + draining. This is
-/// what `FleetMetrics::gpu_seconds` integrates — a draining victim
-/// keeps burning its GPUs until it retires.
-fn count_billed(state: &[SrvState]) -> usize {
-    state
-        .iter()
-        .filter(|&&st| {
-            matches!(
-                st,
-                SrvState::Provisioning | SrvState::Active | SrvState::Draining
-            )
-        })
-        .count()
-}
-
-fn count_provisioning(state: &[SrvState]) -> usize {
-    state
-        .iter()
-        .filter(|&&st| st == SrvState::Provisioning)
-        .count()
-}
-
-fn homes_of(asg: &Assignment) -> Vec<Vec<ServerId>> {
-    asg.shares
-        .iter()
-        .map(|ss| ss.iter().map(|&(s, _)| s).collect())
-        .collect()
-}
-
-/// Hand one request to `target`: enqueue (starting an adapter fetch on
-/// a pool miss) and kick the server if idle. Shared by fresh arrivals
-/// and drain-time re-routing.
-#[allow(clippy::too_many_arguments)]
-fn deliver(
-    target: ServerId,
-    sreq: SimReq,
-    now: f64,
-    servers: &mut [SimServer],
-    pool: &mut AdapterPool,
-    q: &mut EventQueue<SimEvent>,
-    adapters: &AdapterSet,
-    gpu: &GpuSpec,
-) {
-    let a = sreq.req.adapter;
-    if pool.is_resident(target, a) {
-        servers[target].enqueue_ready(sreq);
-    } else {
-        servers[target].enqueue_waiting(sreq);
-        if let Some(dt) = pool.start_fetch(target, a, adapters, gpu) {
-            q.push(now + dt, SimEvent::FetchDone(target, a));
-        }
-    }
-    if let Some(dt) = servers[target].start_iteration(now) {
-        q.push(now + dt, SimEvent::IterDone(target));
+    pub fn with_batch_policy(mut self, batch: BatchPolicyKind) -> Self {
+        self.batch = batch;
+        self
     }
 }
 
-/// Re-place the adapter universe onto `active` for the given system.
-/// LORASERVE and the static S-LoRA placers run through `place_onto`
-/// (dense virtual cluster + churn matching); Toppings has no placement
-/// — its assignment is a marker and the pool is fully replicated.
-#[allow(clippy::too_many_arguments)]
-fn replace_assignment(
-    system: SystemKind,
-    ls: &mut LoraServePlacer,
-    st: &mut dyn Placer,
-    adapters: &AdapterSet,
-    active: &[ServerId],
-    demand: &BTreeMap<AdapterId, f64>,
-    oppoints: &BTreeMap<u32, f64>,
-    prev: Option<&Assignment>,
-) -> Assignment {
-    match system {
-        SystemKind::LoraServe => {
-            place_onto(ls, adapters, active, demand, oppoints, prev)
-        }
-        SystemKind::SLoraRandom | SystemKind::SLoraContiguous => {
-            place_onto(st, adapters, active, demand, oppoints, prev)
-        }
-        SystemKind::Toppings => {
-            let mut a = Assignment::new(adapters.len());
-            let home = active.first().copied().unwrap_or(0);
-            for ad in adapters.iter() {
-                a.add(ad.id, home, 1.0);
-            }
-            a
-        }
-    }
-}
-
-/// A draining server retires once it holds no work *and* no adapter
-/// copies (so no last copy can ever be lost to a shrink). Retirement
-/// ends the server's GPU billing.
-fn try_retire(
-    s: ServerId,
-    now: f64,
-    state: &mut [SrvState],
-    servers: &[SimServer],
-    pool: &AdapterPool,
-    fleet: &mut FleetMetrics,
-) -> bool {
-    if state[s] == SrvState::Draining
-        && servers[s].quiesced()
-        && pool.resident_count(s) == 0
-        && pool.fetching_count(s) == 0
-    {
-        state[s] = SrvState::Retired;
-        fleet.set_fleet(
-            now,
-            collect_active(state).len(),
-            count_billed(state),
-        );
-        true
-    } else {
-        false
-    }
-}
-
-/// Run one trace through one system. Deterministic per (trace, config,
-/// seed).
+/// Run one trace through one canned system. Deterministic per
+/// (trace, config, seed). Composes the kind's [`SystemSpec`] and
+/// drives the [`SimEngine`](super::engine::SimEngine); custom systems
+/// use [`run_spec`](super::engine::run_spec) directly.
 pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
-    let n0 = cfg.cluster.n_servers;
-    assert!(n0 >= 1, "need at least one server");
-    // elastic fleets can grow to max_servers; fixed fleets stay at n0
-    let max_n = cfg
-        .autoscale
-        .map(|a| a.max_servers.max(n0))
-        .unwrap_or(n0);
-    let cm = CostModel::new(cfg.cluster.server);
-    let mut rng = Pcg32::with_stream(cfg.cluster.seed, 0x51u64);
-    let ranks = trace.adapters.unique_ranks();
-    // LORASERVE consumes *profiled* operating points (§IV-A); the
-    // analytic model is only the non-LORASERVE fallback (where the
-    // values are unused anyway — static placers ignore demand).
-    let mut oppoints = if matches!(cfg.system, SystemKind::LoraServe) {
-        super::profile::empirical_operating_points(
-            &cfg.cluster.server,
-            &ranks,
-            cfg.cluster.slo.ttft_p95,
-        )
-    } else {
-        operating_points(&cfg.cluster.server, &ranks)
-    };
-    if cfg.opts.rank_agnostic {
-        let mean: f64 =
-            oppoints.values().sum::<f64>() / oppoints.len() as f64;
-        for v in oppoints.values_mut() {
-            *v = mean;
-        }
-    }
-
-    // ---- initial placement + router + pool
-    let uniform_demand: BTreeMap<AdapterId, f64> = trace
-        .adapters
-        .iter()
-        .map(|a| (a.id, 100.0))
-        .collect();
-    let mut loraserve_placer = LoraServePlacer {
-        skip_permutation: cfg.opts.skip_permutation,
-    };
-    let mut static_placer: Box<dyn Placer> = match cfg.system {
-        SystemKind::SLoraRandom => {
-            Box::new(RandomPlacer::new(cfg.cluster.seed))
-        }
-        _ => Box::new(ContiguousPlacer::new()),
-    };
-
-    let mut state: Vec<SrvState> = (0..max_n)
-        .map(|s| if s < n0 { SrvState::Active } else { SrvState::Cold })
-        .collect();
-    let active0: Vec<ServerId> = (0..n0).collect();
-    let mut assignment: Assignment = replace_assignment(
-        cfg.system,
-        &mut loraserve_placer,
-        &mut *static_placer,
-        &trace.adapters,
-        &active0,
-        &uniform_demand,
-        &oppoints,
-        None,
-    );
-    assignment
-        .validate(max_n)
-        .expect("initial placement invalid");
-
-    let replicate = matches!(cfg.system, SystemKind::Toppings)
-        || cfg.opts.full_replication;
-    // Toppings routes per-request (least outstanding work); everything
-    // else routes through the φ table and must swap it on every
-    // topology change.
-    let table_routed = !matches!(cfg.system, SystemKind::Toppings);
-    let mut pool = if replicate {
-        let initial: Vec<Vec<ServerId>> = (0..trace.adapters.len())
-            .map(|_| active0.clone())
-            .collect();
-        AdapterPool::new(max_n, &initial)
-    } else {
-        AdapterPool::new(max_n, &homes_of(&assignment))
-    };
-
-    let mut router = match cfg.system {
-        SystemKind::Toppings => Router::Toppings { n_servers: max_n },
-        _ => Router::Table(RoutingTable::from_assignment(&assignment)),
-    };
-
-    let mut demand =
-        DemandTracker::new(cfg.cluster.rebalance_period, 16);
-    demand.last_value_only = cfg.opts.last_value_demand;
-
-    let mut servers: Vec<SimServer> =
-        (0..max_n).map(|s| SimServer::new(s, cm)).collect();
-
-    // ---- event loop
-    let mut report = SimReport {
-        system: cfg.system.label().to_string(),
-        trace: trace.name.clone(),
-        offered_rps: trace.mean_rps(),
-        per_server_ttft: vec![Default::default(); max_n],
-        fleet: FleetMetrics::new(cfg.cluster.server.tp, n0),
-        ..Default::default()
-    };
-    let mut q: EventQueue<SimEvent> = EventQueue::new();
-    for (i, r) in trace.requests.iter().enumerate() {
-        q.push(r.arrival, SimEvent::Arrive(i));
-    }
-    let trace_end = trace.duration();
-    let dynamic = matches!(cfg.system, SystemKind::LoraServe);
-    if dynamic {
-        // Bootstrap: the initial placement is demand-blind (uniform
-        // assumption), so the first few rebalances fire early — a
-        // cold-start backlog at near-critical utilization otherwise
-        // takes many minutes to drain. Production deployments persist
-        // demand state across restarts; this approximates that.
-        q.push(cfg.cluster.rebalance_period / 4.0, SimEvent::Rebalance);
-    }
-    let mut controller: Option<ScaleController> =
-        cfg.autoscale.map(ScaleController::new);
-    if let Some(a) = cfg.autoscale {
-        q.push(a.decision_period, SimEvent::AutoscaleTick);
-    }
-    // autoscaler signal window: busy-time snapshots + SLO accounting
-    let mut busy_snap = vec![0.0f64; max_n];
-    let mut last_tick = 0.0f64;
-    let mut win_completed = 0u64;
-    let mut win_violations = 0u64;
-
-    let mut outstanding_buf = vec![0.0f64; max_n];
-    let mut events = 0u64;
-    while let Some((now, ev)) = q.pop() {
-        events += 1;
-        if events > cfg.max_events {
-            panic!(
-                "simulation exceeded {} events (trace {}, system {})",
-                cfg.max_events,
-                trace.name,
-                cfg.system.label()
-            );
-        }
-        match ev {
-            SimEvent::Arrive(i) => {
-                let req = trace.requests[i];
-                demand.record(req.adapter, req.total_tokens());
-                // Toppings balances on request *counts* ("requests
-                // currently being served and queued", §V-D) — blind to
-                // token lengths and ranks; the table policies ignore
-                // the signal entirely. Non-routable (cold, draining,
-                // retired) servers are masked out.
-                for (s, srv) in servers.iter().enumerate() {
-                    outstanding_buf[s] = if state[s] == SrvState::Active {
-                        match cfg.system {
-                            SystemKind::Toppings => {
-                                srv.pending_count() as f64
-                            }
-                            _ => srv.outstanding,
-                        }
-                    } else {
-                        f64::INFINITY
-                    };
-                }
-                let target =
-                    router.route(req.adapter, &outstanding_buf, &mut rng);
-                let rank = trace.adapters.get(req.adapter).rank;
-                // Toppings is load-aware but rank-AGNOSTIC (§V-D): its
-                // outstanding-work signal prices every request as if it
-                // carried no LoRA cost, so high-rank requests are
-                // under-weighted — the imbalance the paper critiques.
-                let est_rank = match cfg.system {
-                    SystemKind::Toppings => 0,
-                    _ => rank,
-                };
-                let sreq = SimReq {
-                    req,
-                    rank,
-                    adapter_bytes: trace.adapters.get(req.adapter).size_bytes,
-                    est: SimServer::estimate(&cm, &req, est_rank),
-                };
-                deliver(
-                    target,
-                    sreq,
-                    now,
-                    &mut servers,
-                    &mut pool,
-                    &mut q,
-                    &trace.adapters,
-                    &cfg.cluster.server.gpu,
-                );
-            }
-            SimEvent::IterDone(s) => {
-                let completions = servers[s].finish_iteration(now);
-                for c in completions {
-                    report.completed += 1;
-                    report.makespan = report.makespan.max(c.finished_at);
-                    let violated = c.ttft > cfg.cluster.slo.ttft_p95;
-                    win_completed += 1;
-                    win_violations += violated as u64;
-                    if c.req.arrival < cfg.warmup {
-                        continue; // simulated, but not measured
-                    }
-                    report.ttft.push(c.ttft);
-                    report.e2e.push(c.finished_at - c.req.arrival);
-                    report.fleet.record_completion(violated);
-                    if c.tbt.is_finite() {
-                        report.tbt.push(c.tbt);
-                    }
-                    report.per_server_ttft[s].push(c.ttft);
-                    report
-                        .per_adapter_ttft
-                        .entry(c.req.adapter)
-                        .or_default()
-                        .push(c.ttft);
-                }
-                servers[s].purge_timeouts(now, cfg.cluster.slo.timeout);
-                if let Some(dt) = servers[s].start_iteration(now) {
-                    q.push(now + dt, SimEvent::IterDone(s));
-                }
-                if state[s] == SrvState::Draining {
-                    try_retire(
-                        s,
-                        now,
-                        &mut state,
-                        &servers,
-                        &pool,
-                        &mut report.fleet,
-                    );
-                }
-            }
-            SimEvent::FetchDone(s, a) => {
-                pool.finish_fetch(s, a);
-                if state[s] == SrvState::Draining {
-                    // a fetch that raced the drain decision: discard
-                    // the fresh copy if covered elsewhere, otherwise
-                    // it *is* the last copy — migrate it to its new
-                    // home before this server can go.
-                    if !pool.drop_copy(s, a) {
-                        if let Some(&(tgt, _)) =
-                            assignment.shares[a as usize].first()
-                        {
-                            if let Some(dt) = pool.start_fetch(
-                                tgt,
-                                a,
-                                &trace.adapters,
-                                &cfg.cluster.server.gpu,
-                            ) {
-                                q.push(
-                                    now + dt,
-                                    SimEvent::FetchDone(tgt, a),
-                                );
-                            }
-                        }
-                    }
-                } else {
-                    servers[s].release_waiting(a);
-                    if let Some(dt) = servers[s].start_iteration(now) {
-                        q.push(now + dt, SimEvent::IterDone(s));
-                    }
-                }
-                // a migration landing anywhere may complete a drain
-                for s2 in 0..max_n {
-                    if state[s2] == SrvState::Draining {
-                        try_retire(
-                            s2,
-                            now,
-                            &mut state,
-                            &servers,
-                            &pool,
-                            &mut report.fleet,
-                        );
-                    }
-                }
-            }
-            SimEvent::Rebalance => {
-                demand.roll_window();
-                let projected = demand.projected_tps();
-                let active_ids = collect_active(&state);
-                let next = replace_assignment(
-                    cfg.system,
-                    &mut loraserve_placer,
-                    &mut *static_placer,
-                    &trace.adapters,
-                    &active_ids,
-                    &projected,
-                    &oppoints,
-                    Some(&assignment),
-                );
-                report.migration_bytes +=
-                    next.migration_bytes(&assignment, &trace.adapters);
-                router.update_table(RoutingTable::from_assignment(&next));
-                if !replicate {
-                    pool.apply_assignment(&homes_of(&next));
-                }
-                assignment = next;
-                report.rebalances += 1;
-                let next_in = if report.rebalances < 4 {
-                    cfg.cluster.rebalance_period / 4.0
-                } else {
-                    cfg.cluster.rebalance_period
-                };
-                if now + next_in <= trace_end {
-                    q.push(now + next_in, SimEvent::Rebalance);
-                }
-                debug_assert!(
-                    pool.check_coverage(trace.adapters.len()).is_ok(),
-                    "rebalance lost coverage"
-                );
-            }
-            SimEvent::AutoscaleTick => {
-                let (Some(acfg), Some(ctl)) =
-                    (cfg.autoscale, controller.as_mut())
-                else {
-                    continue;
-                };
-                let active_ids = collect_active(&state);
-                let window = (now - last_tick).max(1e-9);
-                let mut busy = 0.0;
-                for &s in &active_ids {
-                    busy += (servers[s].busy_time - busy_snap[s]).max(0.0);
-                }
-                for (snap, srv) in
-                    busy_snap.iter_mut().zip(servers.iter())
-                {
-                    *snap = srv.busy_time;
-                }
-                let sig = ScaleSignals {
-                    busy_frac: busy
-                        / (window * active_ids.len().max(1) as f64),
-                    violation_rate: if win_completed > 0 {
-                        win_violations as f64 / win_completed as f64
-                    } else {
-                        0.0
-                    },
-                    queue_depth: active_ids
-                        .iter()
-                        .map(|&s| servers[s].pending_count())
-                        .sum(),
-                    projected_tps: demand.total_projected_tps(),
-                };
-                win_completed = 0;
-                win_violations = 0;
-                last_tick = now;
-                let cand: Vec<(ServerId, f64)> = active_ids
-                    .iter()
-                    .map(|&s| (s, servers[s].outstanding))
-                    .collect();
-                let provisioning = count_provisioning(&state);
-                match ctl.decide(now, &sig, &cand, provisioning) {
-                    ScaleDecision::Hold => {}
-                    ScaleDecision::Up(k) => {
-                        for _ in 0..k {
-                            let Some(slot) = (0..max_n).find(|&s| {
-                                matches!(
-                                    state[s],
-                                    SrvState::Cold | SrvState::Retired
-                                )
-                            }) else {
-                                break;
-                            };
-                            state[slot] = SrvState::Provisioning;
-                            servers[slot].draining = false;
-                            report.fleet.scale_ups += 1;
-                            q.push(
-                                now + acfg.provision_delay,
-                                SimEvent::ServerReady(slot),
-                            );
-                        }
-                        // billing starts at provisioning (cloud
-                        // instances bill from launch)
-                        report.fleet.set_fleet(
-                            now,
-                            active_ids.len(),
-                            count_billed(&state),
-                        );
-                    }
-                    ScaleDecision::Down(victim) => {
-                        // ---- drain-and-migrate protocol
-                        state[victim] = SrvState::Draining;
-                        servers[victim].draining = true;
-                        report.fleet.scale_downs += 1;
-                        let survivors = collect_active(&state);
-                        // routable drops now; the victim stays billed
-                        // until it retires
-                        report.fleet.set_fleet(
-                            now,
-                            survivors.len(),
-                            count_billed(&state),
-                        );
-                        if table_routed {
-                            // swap the table: the victim stops
-                            // receiving traffic *now*
-                            let mut projected = demand.projected_tps();
-                            if projected.is_empty() {
-                                projected = uniform_demand.clone();
-                            }
-                            let next = replace_assignment(
-                                cfg.system,
-                                &mut loraserve_placer,
-                                &mut *static_placer,
-                                &trace.adapters,
-                                &survivors,
-                                &projected,
-                                &oppoints,
-                                Some(&assignment),
-                            );
-                            if !replicate {
-                                report.migration_bytes += next
-                                    .migration_bytes(
-                                        &assignment,
-                                        &trace.adapters,
-                                    );
-                                // the pool GC keeps any last copy on
-                                // the victim alive until its
-                                // migration lands
-                                pool.apply_assignment(&homes_of(&next));
-                            }
-                            router.update_table(
-                                RoutingTable::from_assignment(&next),
-                            );
-                            assignment = next;
-                        }
-                        if replicate {
-                            // fully replicated: every copy exists on
-                            // the survivors; just release the victim's
-                            for a in 0..trace.adapters.len() as AdapterId
-                            {
-                                pool.drop_copy(victim, a);
-                            }
-                        } else {
-                            // RDMA-migrate the victim's last copies to
-                            // their newly assigned homes
-                            for a in pool.evacuations(victim) {
-                                let Some(&(tgt, _)) =
-                                    assignment.shares[a as usize].first()
-                                else {
-                                    continue;
-                                };
-                                if let Some(dt) = pool.start_fetch(
-                                    tgt,
-                                    a,
-                                    &trace.adapters,
-                                    &cfg.cluster.server.gpu,
-                                ) {
-                                    q.push(
-                                        now + dt,
-                                        SimEvent::FetchDone(tgt, a),
-                                    );
-                                }
-                            }
-                        }
-                        // re-route not-yet-running work through the
-                        // swapped table (active decodes finish here)
-                        let pending = servers[victim].extract_pending();
-                        for sreq in pending {
-                            for (s, srv) in servers.iter().enumerate() {
-                                outstanding_buf[s] = if state[s]
-                                    == SrvState::Active
-                                {
-                                    match cfg.system {
-                                        SystemKind::Toppings => {
-                                            srv.pending_count() as f64
-                                        }
-                                        _ => srv.outstanding,
-                                    }
-                                } else {
-                                    f64::INFINITY
-                                };
-                            }
-                            let target = router.route(
-                                sreq.req.adapter,
-                                &outstanding_buf,
-                                &mut rng,
-                            );
-                            deliver(
-                                target,
-                                sreq,
-                                now,
-                                &mut servers,
-                                &mut pool,
-                                &mut q,
-                                &trace.adapters,
-                                &cfg.cluster.server.gpu,
-                            );
-                        }
-                        q.push(now, SimEvent::DrainCheck(victim));
-                        debug_assert!(
-                            pool.check_coverage(trace.adapters.len())
-                                .is_ok(),
-                            "drain lost coverage"
-                        );
-                    }
-                }
-                if now + acfg.decision_period <= trace_end {
-                    q.push(
-                        now + acfg.decision_period,
-                        SimEvent::AutoscaleTick,
-                    );
-                }
-            }
-            SimEvent::ServerReady(s) => {
-                if state[s] != SrvState::Provisioning {
-                    continue; // stale (slot repurposed)
-                }
-                state[s] = SrvState::Active;
-                let active_ids = collect_active(&state);
-                report.fleet.set_fleet(
-                    now,
-                    active_ids.len(),
-                    count_billed(&state),
-                );
-                if replicate {
-                    report.migration_bytes +=
-                        pool.replicate_all_to(s, &trace.adapters);
-                }
-                if table_routed {
-                    let mut projected = demand.projected_tps();
-                    if projected.is_empty() {
-                        projected = uniform_demand.clone();
-                    }
-                    let next = replace_assignment(
-                        cfg.system,
-                        &mut loraserve_placer,
-                        &mut *static_placer,
-                        &trace.adapters,
-                        &active_ids,
-                        &projected,
-                        &oppoints,
-                        Some(&assignment),
-                    );
-                    if !replicate {
-                        report.migration_bytes += next
-                            .migration_bytes(&assignment, &trace.adapters);
-                        pool.apply_assignment(&homes_of(&next));
-                    }
-                    router.update_table(RoutingTable::from_assignment(
-                        &next,
-                    ));
-                    assignment = next;
-                }
-                debug_assert!(
-                    pool.check_coverage(trace.adapters.len()).is_ok(),
-                    "scale-up lost coverage"
-                );
-            }
-            SimEvent::DrainCheck(s) => {
-                try_retire(
-                    s,
-                    now,
-                    &mut state,
-                    &servers,
-                    &pool,
-                    &mut report.fleet,
-                );
-            }
-        }
-    }
-
-    debug_assert!(
-        pool.check_coverage(trace.adapters.len()).is_ok(),
-        "pool lost coverage"
-    );
-    report.fleet.finish(report.makespan.max(trace_end));
-    for (s, srv) in servers.iter().enumerate() {
-        report.per_server_busy.push(srv.busy_time);
-        report.per_server_max_adapters.push(pool.max_resident(s));
-        report.timeouts += srv.timeouts;
-        report.gpu_loads += srv.gpu_cache.loads;
-        report.gpu_load_bytes += srv.gpu_cache.load_bytes;
-        report.per_server_highrank_frac.push(
-            srv.iters_highrank as f64 / srv.iters.max(1) as f64,
-        );
-    }
-    report.fetches = pool.total_fetches;
-    report.fetch_bytes = pool.total_fetch_bytes;
-    report
+    let spec = cfg.system.spec(&cfg.opts, cfg.batch);
+    super::engine::run_spec(trace, cfg, &spec)
 }
 
 #[cfg(test)]

@@ -1,0 +1,903 @@
+//! The composable simulation engine.
+//!
+//! `sim/cluster.rs::run` used to be one ~580-line event loop hard-wired
+//! to the closed four-variant `SystemKind` enum. It is now a
+//! [`SimEngine`]: an explicit [`EngineState`], one handler method per
+//! [`SimEvent`] variant, and a [`SystemSpec`] that *composes* a system
+//! from orthogonal policies —
+//!
+//! * [`PlacementPolicy`] — which placer produces the adapter→server
+//!   assignment (Algorithm 1, the static S-LoRA baselines, full
+//!   replication, or a registered custom placer);
+//! * [`RoutingPolicy`] — the probabilistic φ table vs request-level
+//!   least-loaded routing;
+//! * [`PoolMode`] — distributed adapter pool vs full replication;
+//! * [`crate::config::BatchPolicyKind`] — the per-server prefill
+//!   admission policy (the scheduler half of the design space);
+//!
+//! plus the smaller behavioral switches (periodic rebalancing,
+//! empirical vs analytic operating points, the load signal the router
+//! inspects, rank-blind cost estimates). The four paper systems are
+//! canned specs (`SystemKind::spec`); new systems are new
+//! `SystemSpec` values and never touch the loop. With
+//! `BatchPolicyKind::Fifo` the engine reproduces the pre-refactor
+//! simulator bit for bit (asserted by `tests/sched_policies.rs`).
+
+use super::cluster::SimConfig;
+use super::event::{EventQueue, SimEvent};
+use super::report::SimReport;
+use super::server::{build_policy, SimReq, SimServer};
+use super::topology::{try_retire, FleetTopology, SrvState};
+use crate::autoscale::{ScaleController, ScaleDecision, ScaleSignals};
+use crate::coordinator::{DemandTracker, Router, RoutingTable};
+use crate::costmodel::{operating_points, CostModel};
+use crate::metrics::FleetMetrics;
+use crate::placement::baselines::{ContiguousPlacer, RandomPlacer};
+use crate::placement::loraserve::LoraServePlacer;
+use crate::placement::{place_onto, Assignment, Placer};
+use crate::pool::AdapterPool;
+use crate::trace::Trace;
+use crate::util::rng::Pcg32;
+use crate::workload::{AdapterId, AdapterSet, ServerId};
+use std::collections::BTreeMap;
+
+/// How a system produces its adapter→server assignment.
+#[derive(Debug, Clone)]
+pub enum PlacementPolicy {
+    /// Algorithm 1 (rank- and demand-aware, churn-minimized).
+    LoraServe { skip_permutation: bool },
+    /// S-LoRA Random: one uniformly random home per adapter.
+    Random,
+    /// S-LoRA Contiguous: rank-sorted contiguous chunks.
+    Contiguous,
+    /// No placer at all: a marker assignment (everything on the first
+    /// active server) that routing never consults — pair with
+    /// `PoolMode::Replicated` + `RoutingPolicy::LeastLoaded` for the
+    /// Toppings baseline.
+    ReplicateAll,
+    /// Registration point for new placers: (name, constructor from the
+    /// cluster seed). New systems plug in here without touching the
+    /// engine.
+    Custom(&'static str, fn(u64) -> Box<dyn Placer>),
+}
+
+impl PlacementPolicy {
+    fn build(&self, seed: u64) -> Option<Box<dyn Placer>> {
+        match self {
+            PlacementPolicy::LoraServe { skip_permutation } => {
+                Some(Box::new(LoraServePlacer {
+                    skip_permutation: *skip_permutation,
+                }))
+            }
+            PlacementPolicy::Random => {
+                Some(Box::new(RandomPlacer::new(seed)))
+            }
+            PlacementPolicy::Contiguous => {
+                Some(Box::new(ContiguousPlacer::new()))
+            }
+            PlacementPolicy::ReplicateAll => None,
+            PlacementPolicy::Custom(_, build) => Some(build(seed)),
+        }
+    }
+}
+
+/// How requests pick a server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// The φ routing table of Fig 11, swapped on every placement or
+    /// topology change.
+    Table,
+    /// Request-level least-loaded routing over all active servers
+    /// (the Toppings baseline; requires a replicated pool).
+    LeastLoaded,
+}
+
+/// Where adapter copies live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolMode {
+    /// Each server holds only its assigned adapters; misses fetch over
+    /// RDMA (§IV-B).
+    Distributed,
+    /// Every adapter resident on every active server.
+    Replicated,
+}
+
+/// The load signal a `RoutingPolicy::LeastLoaded` router inspects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadSignal {
+    /// Estimated outstanding service seconds (rank-priced work).
+    ServiceSeconds,
+    /// Plain request counts ("requests being served and queued",
+    /// §V-D) — blind to token lengths and ranks.
+    RequestCount,
+}
+
+/// A fully composed system: what `SimKind` used to hard-wire, as data.
+#[derive(Debug, Clone)]
+pub struct SystemSpec {
+    /// Label reported in `SimReport::system`.
+    pub label: String,
+    pub placement: PlacementPolicy,
+    pub routing: RoutingPolicy,
+    pub pool: PoolMode,
+    pub batch: crate::config::BatchPolicyKind,
+    /// Re-place periodically from projected demand (Algorithm 1's time
+    /// step). Static placements skip this entirely.
+    pub periodic_rebalance: bool,
+    /// Profiled operating points (§IV-A) instead of the analytic model.
+    pub empirical_oppoints: bool,
+    /// Ablation A4: flatten operating points to their mean so
+    /// budgeting balances pure load.
+    pub rank_agnostic: bool,
+    /// Ablation A3: project demand with the last value only.
+    pub last_value_demand: bool,
+    pub load_signal: LoadSignal,
+    /// Price every request as rank 0 in the outstanding-work estimate
+    /// (Toppings' rank-agnostic signal, the imbalance §V-D critiques).
+    pub rank_blind_cost: bool,
+}
+
+/// Run one trace through one composed system. Deterministic per
+/// (trace, config, spec, seed).
+pub fn run_spec(
+    trace: &Trace,
+    cfg: &SimConfig,
+    spec: &SystemSpec,
+) -> SimReport {
+    SimEngine::new(trace, cfg, spec).run()
+}
+
+fn homes_of(asg: &Assignment) -> Vec<Vec<ServerId>> {
+    asg.shares
+        .iter()
+        .map(|ss| ss.iter().map(|&(s, _)| s).collect())
+        .collect()
+}
+
+/// Re-place the adapter universe onto `active`. Placer-backed systems
+/// run through `place_onto` (dense virtual cluster + churn matching);
+/// `ReplicateAll` has no placement — its assignment is a marker and
+/// the pool is fully replicated.
+fn compute_assignment(
+    placer: Option<&mut Box<dyn Placer>>,
+    adapters: &AdapterSet,
+    active: &[ServerId],
+    demand: &BTreeMap<AdapterId, f64>,
+    oppoints: &BTreeMap<u32, f64>,
+    prev: Option<&Assignment>,
+) -> Assignment {
+    match placer {
+        Some(p) => {
+            place_onto(&mut **p, adapters, active, demand, oppoints, prev)
+        }
+        None => {
+            let mut a = Assignment::new(adapters.len());
+            let home = active.first().copied().unwrap_or(0);
+            for ad in adapters.iter() {
+                a.add(ad.id, home, 1.0);
+            }
+            a
+        }
+    }
+}
+
+/// Every mutable piece of a running simulation, explicit in one place:
+/// each event handler reads and writes exactly these fields.
+pub(crate) struct EngineState {
+    pub rng: Pcg32,
+    pub topo: FleetTopology,
+    pub servers: Vec<SimServer>,
+    pub pool: AdapterPool,
+    pub router: Router,
+    pub assignment: Assignment,
+    pub demand: DemandTracker,
+    pub q: EventQueue<SimEvent>,
+    pub report: SimReport,
+    pub controller: Option<ScaleController>,
+    /// Autoscaler signal window: busy-time snapshots + SLO accounting.
+    pub busy_snap: Vec<f64>,
+    pub last_tick: f64,
+    pub win_completed: u64,
+    pub win_violations: u64,
+    /// Scratch buffer for the per-arrival load signal.
+    pub outstanding_buf: Vec<f64>,
+    /// In-flight batched drain migrations; `SimEvent::MigrationDone`
+    /// carries an index into this list.
+    pub migrations: Vec<Vec<AdapterId>>,
+    pub events: u64,
+}
+
+/// The discrete-event cluster simulation: arrivals → routing →
+/// per-server continuous batching → completions, with periodic
+/// re-placement, the distributed adapter pool, and (optionally) the
+/// elastic-capacity subsystem in the loop.
+pub struct SimEngine<'a> {
+    trace: &'a Trace,
+    cfg: &'a SimConfig,
+    spec: &'a SystemSpec,
+    cm: CostModel,
+    oppoints: BTreeMap<u32, f64>,
+    uniform_demand: BTreeMap<AdapterId, f64>,
+    placer: Option<Box<dyn Placer>>,
+    max_n: usize,
+    trace_end: f64,
+    replicate: bool,
+    table_routed: bool,
+    st: EngineState,
+}
+
+impl<'a> SimEngine<'a> {
+    pub fn new(
+        trace: &'a Trace,
+        cfg: &'a SimConfig,
+        spec: &'a SystemSpec,
+    ) -> Self {
+        let n0 = cfg.cluster.n_servers;
+        assert!(n0 >= 1, "need at least one server");
+        // elastic fleets can grow to max_servers; fixed fleets stay
+        // at n0
+        let max_n = cfg
+            .autoscale
+            .map(|a| a.max_servers.max(n0))
+            .unwrap_or(n0);
+        let cm = CostModel::new(cfg.cluster.server);
+        let rng = Pcg32::with_stream(cfg.cluster.seed, 0x51u64);
+        let ranks = trace.adapters.unique_ranks();
+        let mut oppoints = if spec.empirical_oppoints {
+            super::profile::empirical_operating_points(
+                &cfg.cluster.server,
+                &ranks,
+                cfg.cluster.slo.ttft_p95,
+            )
+        } else {
+            operating_points(&cfg.cluster.server, &ranks)
+        };
+        if spec.rank_agnostic {
+            let mean: f64 =
+                oppoints.values().sum::<f64>() / oppoints.len() as f64;
+            for v in oppoints.values_mut() {
+                *v = mean;
+            }
+        }
+
+        // ---- initial placement + router + pool
+        let uniform_demand: BTreeMap<AdapterId, f64> = trace
+            .adapters
+            .iter()
+            .map(|a| (a.id, 100.0))
+            .collect();
+        let mut placer = spec.placement.build(cfg.cluster.seed);
+        let topo = FleetTopology::new(n0, max_n);
+        let active0: Vec<ServerId> = (0..n0).collect();
+        let assignment = compute_assignment(
+            placer.as_mut(),
+            &trace.adapters,
+            &active0,
+            &uniform_demand,
+            &oppoints,
+            None,
+        );
+        assignment
+            .validate(max_n)
+            .expect("initial placement invalid");
+
+        let replicate = spec.pool == PoolMode::Replicated;
+        // Least-loaded routing is per-request; everything else routes
+        // through the φ table and must swap it on every topology
+        // change.
+        let table_routed = spec.routing == RoutingPolicy::Table;
+        let pool = if replicate {
+            let initial: Vec<Vec<ServerId>> = (0..trace.adapters.len())
+                .map(|_| active0.clone())
+                .collect();
+            AdapterPool::new(max_n, &initial)
+        } else {
+            AdapterPool::new(max_n, &homes_of(&assignment))
+        };
+
+        let router = match spec.routing {
+            RoutingPolicy::Table => {
+                Router::Table(RoutingTable::from_assignment(&assignment))
+            }
+            RoutingPolicy::LeastLoaded => {
+                Router::Toppings { n_servers: max_n }
+            }
+        };
+
+        let mut demand =
+            DemandTracker::new(cfg.cluster.rebalance_period, 16);
+        demand.last_value_only = spec.last_value_demand;
+
+        let servers: Vec<SimServer> = (0..max_n)
+            .map(|s| SimServer::with_policy(s, cm, build_policy(spec.batch)))
+            .collect();
+
+        let report = SimReport {
+            system: spec.label.clone(),
+            trace: trace.name.clone(),
+            offered_rps: trace.mean_rps(),
+            batch_policy: spec.batch.label(),
+            per_server_ttft: vec![Default::default(); max_n],
+            fleet: FleetMetrics::new(cfg.cluster.server.tp, n0),
+            ..Default::default()
+        };
+        let mut q: EventQueue<SimEvent> = EventQueue::new();
+        for (i, r) in trace.requests.iter().enumerate() {
+            q.push(r.arrival, SimEvent::Arrive(i));
+        }
+        let trace_end = trace.duration();
+        if spec.periodic_rebalance {
+            // Bootstrap: the initial placement is demand-blind
+            // (uniform assumption), so the first few rebalances fire
+            // early — a cold-start backlog at near-critical
+            // utilization otherwise takes many minutes to drain.
+            // Production deployments persist demand state across
+            // restarts; this approximates that.
+            q.push(
+                cfg.cluster.rebalance_period / 4.0,
+                SimEvent::Rebalance,
+            );
+        }
+        let controller: Option<ScaleController> =
+            cfg.autoscale.map(ScaleController::new);
+        if let Some(a) = cfg.autoscale {
+            q.push(a.decision_period, SimEvent::AutoscaleTick);
+        }
+
+        SimEngine {
+            trace,
+            cfg,
+            spec,
+            cm,
+            oppoints,
+            uniform_demand,
+            placer,
+            max_n,
+            trace_end,
+            replicate,
+            table_routed,
+            st: EngineState {
+                rng,
+                topo,
+                servers,
+                pool,
+                router,
+                assignment,
+                demand,
+                q,
+                report,
+                controller,
+                busy_snap: vec![0.0f64; max_n],
+                last_tick: 0.0,
+                win_completed: 0,
+                win_violations: 0,
+                outstanding_buf: vec![0.0f64; max_n],
+                migrations: Vec::new(),
+                events: 0,
+            },
+        }
+    }
+
+    /// Drain the event queue to completion and emit the report.
+    pub fn run(mut self) -> SimReport {
+        while let Some((now, ev)) = self.st.q.pop() {
+            self.st.events += 1;
+            if self.st.events > self.cfg.max_events {
+                panic!(
+                    "simulation exceeded {} events (trace {}, system {})",
+                    self.cfg.max_events, self.trace.name, self.spec.label
+                );
+            }
+            self.handle(now, ev);
+        }
+        self.finish()
+    }
+
+    /// One dispatch per `SimEvent` variant — the whole alphabet.
+    fn handle(&mut self, now: f64, ev: SimEvent) {
+        match ev {
+            SimEvent::Arrive(i) => self.on_arrive(now, i),
+            SimEvent::IterDone(s) => self.on_iter_done(now, s),
+            SimEvent::FetchDone(s, a) => self.on_fetch_done(now, s, a),
+            SimEvent::MigrationDone(s, m) => {
+                self.on_migration_done(now, s, m)
+            }
+            SimEvent::Rebalance => self.on_rebalance(now),
+            SimEvent::AutoscaleTick => self.on_autoscale_tick(now),
+            SimEvent::ServerReady(s) => self.on_server_ready(now, s),
+            SimEvent::DrainCheck(s) => self.on_drain_check(now, s),
+        }
+    }
+
+    /// Refresh the load-signal buffer the router inspects. Non-routable
+    /// (cold, provisioning, draining, retired) servers are masked out.
+    fn fill_load_signal(&mut self) {
+        for (s, srv) in self.st.servers.iter().enumerate() {
+            self.st.outstanding_buf[s] =
+                if self.st.topo.state(s) == SrvState::Active {
+                    match self.spec.load_signal {
+                        LoadSignal::RequestCount => {
+                            srv.pending_count() as f64
+                        }
+                        LoadSignal::ServiceSeconds => srv.outstanding,
+                    }
+                } else {
+                    f64::INFINITY
+                };
+        }
+    }
+
+    /// Hand one request to `target`: enqueue (starting an adapter
+    /// fetch on a pool miss) and kick the server if idle. Shared by
+    /// fresh arrivals and drain-time re-routing.
+    fn deliver(&mut self, target: ServerId, sreq: SimReq, now: f64) {
+        let a = sreq.req.adapter;
+        if self.st.pool.is_resident(target, a) {
+            self.st.servers[target].enqueue_ready(sreq);
+        } else {
+            self.st.servers[target].enqueue_waiting(sreq);
+            if let Some(dt) = self.st.pool.start_fetch(
+                target,
+                a,
+                &self.trace.adapters,
+                &self.cfg.cluster.server.gpu,
+            ) {
+                self.st.q.push(now + dt, SimEvent::FetchDone(target, a));
+            }
+        }
+        if let Some(dt) = self.st.servers[target].start_iteration(now) {
+            self.st.q.push(now + dt, SimEvent::IterDone(target));
+        }
+    }
+
+    fn replace_assignment(
+        &mut self,
+        active: &[ServerId],
+        demand: &BTreeMap<AdapterId, f64>,
+    ) -> Assignment {
+        compute_assignment(
+            self.placer.as_mut(),
+            &self.trace.adapters,
+            active,
+            demand,
+            &self.oppoints,
+            Some(&self.st.assignment),
+        )
+    }
+
+    fn try_retire(&mut self, s: ServerId, now: f64) -> bool {
+        try_retire(
+            s,
+            now,
+            &mut self.st.topo,
+            &self.st.servers,
+            &self.st.pool,
+            &mut self.st.report.fleet,
+        )
+    }
+
+    /// A fetch or migration landing anywhere may complete a drain.
+    fn retire_sweep(&mut self, now: f64) {
+        for s in 0..self.max_n {
+            if self.st.topo.state(s) == SrvState::Draining {
+                self.try_retire(s, now);
+            }
+        }
+    }
+
+    fn on_arrive(&mut self, now: f64, i: usize) {
+        let req = self.trace.requests[i];
+        self.st.demand.record(req.adapter, req.total_tokens());
+        self.fill_load_signal();
+        let target = self.st.router.route(
+            req.adapter,
+            &self.st.outstanding_buf,
+            &mut self.st.rng,
+        );
+        let rank = self.trace.adapters.get(req.adapter).rank;
+        // A rank-blind estimate prices every request as if it carried
+        // no LoRA cost, so high-rank requests are under-weighted in
+        // the outstanding-work signal.
+        let est_rank = if self.spec.rank_blind_cost { 0 } else { rank };
+        let sreq = SimReq {
+            req,
+            rank,
+            adapter_bytes: self.trace.adapters.get(req.adapter).size_bytes,
+            est: SimServer::estimate(&self.cm, &req, est_rank),
+        };
+        self.deliver(target, sreq, now);
+    }
+
+    fn on_iter_done(&mut self, now: f64, s: ServerId) {
+        let completions = self.st.servers[s].finish_iteration(now);
+        for c in completions {
+            self.st.report.completed += 1;
+            self.st.report.makespan =
+                self.st.report.makespan.max(c.finished_at);
+            let violated = c.ttft > self.cfg.cluster.slo.ttft_p95;
+            self.st.win_completed += 1;
+            self.st.win_violations += violated as u64;
+            if c.req.arrival < self.cfg.warmup {
+                continue; // simulated, but not measured
+            }
+            self.st.report.ttft.push(c.ttft);
+            self.st.report.e2e.push(c.finished_at - c.req.arrival);
+            self.st.report.fleet.record_completion(violated);
+            if c.tbt.is_finite() {
+                self.st.report.tbt.push(c.tbt);
+            }
+            self.st.report.per_server_ttft[s].push(c.ttft);
+            self.st
+                .report
+                .per_adapter_ttft
+                .entry(c.req.adapter)
+                .or_default()
+                .push(c.ttft);
+        }
+        self.st.servers[s]
+            .purge_timeouts(now, self.cfg.cluster.slo.timeout);
+        if let Some(dt) = self.st.servers[s].start_iteration(now) {
+            self.st.q.push(now + dt, SimEvent::IterDone(s));
+        }
+        if self.st.topo.state(s) == SrvState::Draining {
+            self.try_retire(s, now);
+        }
+    }
+
+    fn on_fetch_done(&mut self, now: f64, s: ServerId, a: AdapterId) {
+        self.st.pool.finish_fetch(s, a);
+        if self.st.topo.state(s) == SrvState::Draining {
+            // a fetch that raced the drain decision: discard the fresh
+            // copy if covered elsewhere, otherwise it *is* the last
+            // copy — migrate it to its new home before this server can
+            // go.
+            if !self.st.pool.drop_copy(s, a) {
+                if let Some(&(tgt, _)) =
+                    self.st.assignment.shares[a as usize].first()
+                {
+                    if let Some(dt) = self.st.pool.start_fetch(
+                        tgt,
+                        a,
+                        &self.trace.adapters,
+                        &self.cfg.cluster.server.gpu,
+                    ) {
+                        self.st
+                            .q
+                            .push(now + dt, SimEvent::FetchDone(tgt, a));
+                    }
+                }
+            }
+        } else {
+            self.st.servers[s].release_waiting(a);
+            if let Some(dt) = self.st.servers[s].start_iteration(now) {
+                self.st.q.push(now + dt, SimEvent::IterDone(s));
+            }
+        }
+        self.retire_sweep(now);
+    }
+
+    /// A batched drain migration lands: every adapter in the group
+    /// becomes resident at once (single RDMA stream per destination).
+    fn on_migration_done(&mut self, now: f64, s: ServerId, mid: u32) {
+        let ids = std::mem::take(&mut self.st.migrations[mid as usize]);
+        for &a in &ids {
+            self.st.pool.finish_fetch(s, a);
+        }
+        if self.st.topo.state(s) == SrvState::Draining {
+            // the migration raced a drain of its own destination:
+            // re-home whatever became a last copy here
+            for &a in &ids {
+                if !self.st.pool.drop_copy(s, a) {
+                    if let Some(&(tgt, _)) =
+                        self.st.assignment.shares[a as usize].first()
+                    {
+                        if let Some(dt) = self.st.pool.start_fetch(
+                            tgt,
+                            a,
+                            &self.trace.adapters,
+                            &self.cfg.cluster.server.gpu,
+                        ) {
+                            self.st.q.push(
+                                now + dt,
+                                SimEvent::FetchDone(tgt, a),
+                            );
+                        }
+                    }
+                }
+            }
+        } else {
+            for &a in &ids {
+                self.st.servers[s].release_waiting(a);
+            }
+            if let Some(dt) = self.st.servers[s].start_iteration(now) {
+                self.st.q.push(now + dt, SimEvent::IterDone(s));
+            }
+        }
+        self.retire_sweep(now);
+    }
+
+    fn on_rebalance(&mut self, now: f64) {
+        self.st.demand.roll_window();
+        let projected = self.st.demand.projected_tps();
+        let active_ids = self.st.topo.active();
+        let next = self.replace_assignment(&active_ids, &projected);
+        self.st.report.migration_bytes +=
+            next.migration_bytes(&self.st.assignment, &self.trace.adapters);
+        self.st
+            .router
+            .update_table(RoutingTable::from_assignment(&next));
+        if !self.replicate {
+            self.st.pool.apply_assignment(&homes_of(&next));
+        }
+        self.st.assignment = next;
+        self.st.report.rebalances += 1;
+        let next_in = if self.st.report.rebalances < 4 {
+            self.cfg.cluster.rebalance_period / 4.0
+        } else {
+            self.cfg.cluster.rebalance_period
+        };
+        if now + next_in <= self.trace_end {
+            self.st.q.push(now + next_in, SimEvent::Rebalance);
+        }
+        debug_assert!(
+            self.st.pool.check_coverage(self.trace.adapters.len()).is_ok(),
+            "rebalance lost coverage"
+        );
+    }
+
+    fn on_autoscale_tick(&mut self, now: f64) {
+        let Some(acfg) = self.cfg.autoscale else {
+            return;
+        };
+        if self.st.controller.is_none() {
+            return;
+        }
+        let active_ids = self.st.topo.active();
+        let window = (now - self.st.last_tick).max(1e-9);
+        let mut busy = 0.0;
+        for &s in &active_ids {
+            busy += (self.st.servers[s].busy_time
+                - self.st.busy_snap[s])
+                .max(0.0);
+        }
+        for (snap, srv) in
+            self.st.busy_snap.iter_mut().zip(self.st.servers.iter())
+        {
+            *snap = srv.busy_time;
+        }
+        let sig = ScaleSignals {
+            busy_frac: busy
+                / (window * active_ids.len().max(1) as f64),
+            violation_rate: if self.st.win_completed > 0 {
+                self.st.win_violations as f64
+                    / self.st.win_completed as f64
+            } else {
+                0.0
+            },
+            queue_depth: active_ids
+                .iter()
+                .map(|&s| self.st.servers[s].pending_count())
+                .sum(),
+            projected_tps: self.st.demand.total_projected_tps(),
+        };
+        self.st.win_completed = 0;
+        self.st.win_violations = 0;
+        self.st.last_tick = now;
+        let cand: Vec<(ServerId, f64)> = active_ids
+            .iter()
+            .map(|&s| (s, self.st.servers[s].outstanding))
+            .collect();
+        let provisioning = self.st.topo.provisioning();
+        let decision = self
+            .st
+            .controller
+            .as_mut()
+            .unwrap()
+            .decide(now, &sig, &cand, provisioning);
+        match decision {
+            ScaleDecision::Hold => {}
+            ScaleDecision::Up(k) => {
+                for _ in 0..k {
+                    let Some(slot) = self.st.topo.free_slot() else {
+                        break;
+                    };
+                    self.st.topo.set(slot, SrvState::Provisioning);
+                    self.st.servers[slot].draining = false;
+                    self.st.report.fleet.scale_ups += 1;
+                    self.st.q.push(
+                        now + acfg.provision_delay,
+                        SimEvent::ServerReady(slot),
+                    );
+                }
+                // billing starts at provisioning (cloud instances bill
+                // from launch)
+                self.st.report.fleet.set_fleet(
+                    now,
+                    active_ids.len(),
+                    self.st.topo.billed(),
+                );
+            }
+            ScaleDecision::Down(victim) => {
+                self.on_scale_down(now, victim);
+            }
+        }
+        if now + acfg.decision_period <= self.trace_end {
+            self.st
+                .q
+                .push(now + acfg.decision_period, SimEvent::AutoscaleTick);
+        }
+    }
+
+    /// The drain-and-migrate protocol: the victim leaves the routing
+    /// table at once, its queued/waiting work is re-routed, its
+    /// adapters are re-placed onto the survivors, last-copy adapters
+    /// are RDMA-migrated **in one batched transfer per destination**
+    /// (overlapping the victim's decode tail), and only a fully
+    /// quiesced, copy-free server retires.
+    fn on_scale_down(&mut self, now: f64, victim: ServerId) {
+        self.st.topo.set(victim, SrvState::Draining);
+        self.st.servers[victim].draining = true;
+        self.st.report.fleet.scale_downs += 1;
+        let survivors = self.st.topo.active();
+        // routable drops now; the victim stays billed until it retires
+        self.st.report.fleet.set_fleet(
+            now,
+            survivors.len(),
+            self.st.topo.billed(),
+        );
+        if self.table_routed {
+            // swap the table: the victim stops receiving traffic *now*
+            let mut projected = self.st.demand.projected_tps();
+            if projected.is_empty() {
+                projected = self.uniform_demand.clone();
+            }
+            let next = self.replace_assignment(&survivors, &projected);
+            if !self.replicate {
+                self.st.report.migration_bytes += next
+                    .migration_bytes(
+                        &self.st.assignment,
+                        &self.trace.adapters,
+                    );
+                // the pool GC keeps any last copy on the victim alive
+                // until its migration lands
+                self.st.pool.apply_assignment(&homes_of(&next));
+            }
+            self.st
+                .router
+                .update_table(RoutingTable::from_assignment(&next));
+            self.st.assignment = next;
+        }
+        if self.replicate {
+            // fully replicated: every copy exists on the survivors;
+            // just release the victim's
+            for a in 0..self.trace.adapters.len() as AdapterId {
+                self.st.pool.drop_copy(victim, a);
+            }
+        } else {
+            // Batch the victim's last-copy RDMA migrations per
+            // destination: one scheduled completion per target server,
+            // amortizing the per-transfer latency, instead of one
+            // event per adapter.
+            let mut by_tgt: BTreeMap<ServerId, Vec<AdapterId>> =
+                BTreeMap::new();
+            for a in self.st.pool.evacuations(victim) {
+                let Some(&(tgt, _)) =
+                    self.st.assignment.shares[a as usize].first()
+                else {
+                    continue;
+                };
+                by_tgt.entry(tgt).or_default().push(a);
+            }
+            for (tgt, ids) in by_tgt {
+                if let Some((dt, started)) =
+                    self.st.pool.start_fetch_batch(
+                        tgt,
+                        &ids,
+                        &self.trace.adapters,
+                        &self.cfg.cluster.server.gpu,
+                    )
+                {
+                    let mid = self.st.migrations.len() as u32;
+                    self.st.migrations.push(started);
+                    self.st
+                        .q
+                        .push(now + dt, SimEvent::MigrationDone(tgt, mid));
+                }
+            }
+        }
+        // re-route not-yet-running work through the swapped table
+        // (active decodes finish here)
+        let pending = self.st.servers[victim].extract_pending();
+        for sreq in pending {
+            self.fill_load_signal();
+            let target = self.st.router.route(
+                sreq.req.adapter,
+                &self.st.outstanding_buf,
+                &mut self.st.rng,
+            );
+            self.deliver(target, sreq, now);
+        }
+        self.st.q.push(now, SimEvent::DrainCheck(victim));
+        debug_assert!(
+            self.st.pool.check_coverage(self.trace.adapters.len()).is_ok(),
+            "drain lost coverage"
+        );
+    }
+
+    fn on_server_ready(&mut self, now: f64, s: ServerId) {
+        if self.st.topo.state(s) != SrvState::Provisioning {
+            return; // stale (slot repurposed)
+        }
+        self.st.topo.set(s, SrvState::Active);
+        let active_ids = self.st.topo.active();
+        self.st.report.fleet.set_fleet(
+            now,
+            active_ids.len(),
+            self.st.topo.billed(),
+        );
+        if self.replicate {
+            self.st.report.migration_bytes += self
+                .st
+                .pool
+                .replicate_all_to(s, &self.trace.adapters);
+        }
+        if self.table_routed {
+            let mut projected = self.st.demand.projected_tps();
+            if projected.is_empty() {
+                projected = self.uniform_demand.clone();
+            }
+            let next = self.replace_assignment(&active_ids, &projected);
+            if !self.replicate {
+                self.st.report.migration_bytes += next
+                    .migration_bytes(
+                        &self.st.assignment,
+                        &self.trace.adapters,
+                    );
+                self.st.pool.apply_assignment(&homes_of(&next));
+            }
+            self.st
+                .router
+                .update_table(RoutingTable::from_assignment(&next));
+            self.st.assignment = next;
+        }
+        debug_assert!(
+            self.st.pool.check_coverage(self.trace.adapters.len()).is_ok(),
+            "scale-up lost coverage"
+        );
+    }
+
+    fn on_drain_check(&mut self, now: f64, s: ServerId) {
+        self.try_retire(s, now);
+    }
+
+    fn finish(mut self) -> SimReport {
+        debug_assert!(
+            self.st.pool.check_coverage(self.trace.adapters.len()).is_ok(),
+            "pool lost coverage"
+        );
+        let end = self.st.report.makespan.max(self.trace_end);
+        self.st.report.fleet.finish(end);
+        for (s, srv) in self.st.servers.iter().enumerate() {
+            self.st.report.per_server_busy.push(srv.busy_time);
+            self.st
+                .report
+                .per_server_max_adapters
+                .push(self.st.pool.max_resident(s));
+            self.st.report.timeouts += srv.timeouts;
+            self.st.report.gpu_loads += srv.gpu_cache.loads;
+            self.st.report.gpu_load_bytes += srv.gpu_cache.load_bytes;
+            self.st.report.per_server_highrank_frac.push(
+                srv.iters_highrank as f64 / srv.iters.max(1) as f64,
+            );
+            self.st.report.iters += srv.iters;
+            self.st.report.iters_highrank += srv.iters_highrank;
+            self.st.report.prefill_iters += srv.prefill_iters;
+            self.st.report.mixed_prefill_iters +=
+                srv.mixed_prefill_iters;
+            self.st.report.pad_rank_tokens += srv.pad_rank_tokens;
+        }
+        self.st.report.fetches = self.st.pool.total_fetches;
+        self.st.report.fetch_bytes = self.st.pool.total_fetch_bytes;
+        self.st.report
+    }
+}

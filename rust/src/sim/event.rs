@@ -26,6 +26,10 @@ pub enum SimEvent {
     /// Re-check whether a draining server has fully quiesced
     /// (drain-and-migrate protocol).
     DrainCheck(ServerId),
+    /// A batched drain-time RDMA migration lands on its destination
+    /// server. The engine resolves the adapter group by the carried
+    /// batch id (one event per destination, not per adapter).
+    MigrationDone(ServerId, u32),
 }
 
 /// Events are ordered by time, then by insertion sequence (FIFO among

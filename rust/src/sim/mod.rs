@@ -7,10 +7,16 @@
 //! coordinator/placement/pool code.
 
 pub mod cluster;
+pub mod engine;
 pub mod event;
 pub mod profile;
 pub mod report;
 pub mod server;
+pub mod topology;
 
 pub use cluster::{run, LoraServeOpts, SimConfig, SystemKind};
+pub use engine::{
+    run_spec, LoadSignal, PlacementPolicy, PoolMode, RoutingPolicy,
+    SimEngine, SystemSpec,
+};
 pub use report::SimReport;

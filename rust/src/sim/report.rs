@@ -33,6 +33,20 @@ pub struct SimReport {
     pub gpu_load_bytes: u64,
     /// Fraction of iterations whose batch contained rank >= 64 work.
     pub per_server_highrank_frac: Vec<f64>,
+    /// Cluster-wide iteration counts behind the high-rank fraction:
+    /// every prefill/decode iteration, and those whose batch paid the
+    /// rank ≥ 64 padding tax.
+    pub iters: u64,
+    pub iters_highrank: u64,
+    /// Prefill-composition (batch scheduling) diagnostics: prefill
+    /// iterations, prefill iterations mixing ≥ 2 distinct ranks, and
+    /// Σ (batch_max_rank − rank) × prompt_tokens of pad-to-max-rank
+    /// kernel work.
+    pub prefill_iters: u64,
+    pub mixed_prefill_iters: u64,
+    pub pad_rank_tokens: u64,
+    /// Label of the batch policy the servers admitted with.
+    pub batch_policy: String,
     pub rebalances: u64,
     /// Fleet accounting (GPU-seconds, scale events, size timeline,
     /// SLO-violation rate). For fixed-fleet runs the timeline is the
@@ -64,6 +78,24 @@ impl SimReport {
         self.completed > 0
             && self.ttft.p95() <= ttft_p95_slo
             && self.completion_rate() >= 0.99
+    }
+
+    /// Share of iterations whose batch paid the high-rank (≥ 64)
+    /// padding tax — the interference indicator the `sched` ablation
+    /// compares across batch policies.
+    pub fn highrank_iter_share(&self) -> f64 {
+        if self.iters == 0 {
+            return 0.0;
+        }
+        self.iters_highrank as f64 / self.iters as f64
+    }
+
+    /// Share of prefill iterations that mixed ≥ 2 distinct ranks.
+    pub fn mixed_prefill_share(&self) -> f64 {
+        if self.prefill_iters == 0 {
+            return 0.0;
+        }
+        self.mixed_prefill_iters as f64 / self.prefill_iters as f64
     }
 
     pub fn ttft_p95(&mut self) -> f64 {

@@ -6,7 +6,14 @@
 //! iteration's service time is computed with the **maximum adapter rank
 //! present in that batch** (`costmodel::prefill_time`/`decode_time`),
 //! exactly the pad-to-max-rank behaviour of the BGMV/MBGMV kernels.
+//!
+//! *What* enters a batch is pluggable via [`BatchPolicy`]: [`Fifo`]
+//! reproduces the classic arrival-order admission bit for bit, while
+//! [`RankBucketed`] and [`RankCap`] are rank-aware compositions (the
+//! CaraServe-style scheduler half of the design space) that trade a
+//! little queueing for rank-homogeneous batches.
 
+use crate::config::BatchPolicyKind;
 use crate::costmodel::CostModel;
 use crate::workload::{AdapterId, Request};
 use std::collections::VecDeque;
@@ -88,6 +95,228 @@ impl GpuAdapterCache {
     }
 }
 
+/// Prefill admission: given the ready queue (FIFO by arrival), decide
+/// which requests enter this iteration's prefill batch. Implementations
+/// remove admitted requests from `queue` (preserving the relative order
+/// of everything left behind) and must respect `slots` (free decode
+/// slots) and `max_tokens` (iteration token budget; the first admitted
+/// request is exempt so oversized prompts still run alone).
+pub trait BatchPolicy: std::fmt::Debug {
+    fn name(&self) -> &'static str;
+
+    fn admit(
+        &mut self,
+        queue: &mut VecDeque<SimReq>,
+        slots: usize,
+        max_tokens: u64,
+    ) -> Vec<SimReq>;
+}
+
+/// Build the policy instance a server owns (policies carry per-server
+/// state such as starvation counters, so each server gets its own).
+pub fn build_policy(kind: BatchPolicyKind) -> Box<dyn BatchPolicy> {
+    match kind {
+        BatchPolicyKind::Fifo => Box::new(Fifo),
+        BatchPolicyKind::RankBucketed { max_wait_iters } => {
+            Box::new(RankBucketed::new(max_wait_iters))
+        }
+        BatchPolicyKind::RankCap { factor } => {
+            Box::new(RankCap::new(factor))
+        }
+    }
+}
+
+/// Strict arrival order — the S-LoRA/vLLM admission loop, unchanged:
+/// take from the front while slots remain and the token budget holds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fifo;
+
+impl BatchPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn admit(
+        &mut self,
+        queue: &mut VecDeque<SimReq>,
+        slots: usize,
+        max_tokens: u64,
+    ) -> Vec<SimReq> {
+        let mut batch: Vec<SimReq> = Vec::new();
+        let mut tokens = 0u64;
+        while let Some(head) = queue.front() {
+            if batch.len() >= slots {
+                break;
+            }
+            let t = head.req.prompt_len as u64;
+            if !batch.is_empty() && tokens + t > max_tokens {
+                break;
+            }
+            tokens += t;
+            batch.push(queue.pop_front().unwrap());
+        }
+        batch
+    }
+}
+
+/// One rank class per prefill iteration: the chosen class's requests
+/// are admitted in arrival order; every other class waits. The class
+/// with the most queued requests wins (ties go to the class whose
+/// oldest request arrived first), except that whenever the queue's
+/// head request has been passed over `max_wait_iters` consecutive
+/// prefill iterations, its class is forced — the bounded-wait
+/// starvation guard. Because admission scans from the front, a forced
+/// class always admits the head, so no request waits at the head for
+/// more than `max_wait_iters` admitting iterations.
+#[derive(Debug, Clone, Copy)]
+pub struct RankBucketed {
+    pub max_wait_iters: u32,
+    /// Consecutive admitting iterations the current head request has
+    /// been passed over.
+    waited: u32,
+}
+
+impl RankBucketed {
+    pub fn new(max_wait_iters: u32) -> Self {
+        RankBucketed {
+            max_wait_iters,
+            waited: 0,
+        }
+    }
+}
+
+impl BatchPolicy for RankBucketed {
+    fn name(&self) -> &'static str {
+        "rank-bucketed"
+    }
+
+    fn admit(
+        &mut self,
+        queue: &mut VecDeque<SimReq>,
+        slots: usize,
+        max_tokens: u64,
+    ) -> Vec<SimReq> {
+        if queue.is_empty() || slots == 0 {
+            return Vec::new();
+        }
+        let front_rank = queue.front().unwrap().rank;
+        let chosen = if self.waited >= self.max_wait_iters {
+            front_rank
+        } else {
+            // largest queued class; ties to the oldest head
+            let mut counts: std::collections::BTreeMap<u32, (usize, usize)> =
+                Default::default();
+            for (i, r) in queue.iter().enumerate() {
+                counts.entry(r.rank).or_insert((0, i)).0 += 1;
+            }
+            let mut best = (0usize, usize::MAX, 0u32);
+            for (&rank, &(count, first)) in &counts {
+                if count > best.0 || (count == best.0 && first < best.1) {
+                    best = (count, first, rank);
+                }
+            }
+            best.2
+        };
+        let mut batch: Vec<SimReq> = Vec::new();
+        let mut tokens = 0u64;
+        let mut kept: VecDeque<SimReq> =
+            VecDeque::with_capacity(queue.len());
+        let mut stop = false;
+        for r in queue.drain(..) {
+            if stop || batch.len() >= slots || r.rank != chosen {
+                kept.push_back(r);
+                continue;
+            }
+            let t = r.req.prompt_len as u64;
+            if !batch.is_empty() && tokens + t > max_tokens {
+                // budget full: stop admitting to keep FIFO order
+                // within the class
+                kept.push_back(r);
+                stop = true;
+                continue;
+            }
+            tokens += t;
+            batch.push(r);
+        }
+        *queue = kept;
+        if !batch.is_empty() {
+            if chosen == front_rank {
+                self.waited = 0; // the head was admitted
+            } else {
+                self.waited += 1;
+            }
+        }
+        batch
+    }
+}
+
+/// Arrival order with a rank ceiling: the head request is always
+/// admitted and sets the ceiling at `factor ×` its rank; later
+/// requests whose rank exceeds the ceiling are skipped (they stay
+/// queued, in order) instead of dragging the whole batch up to their
+/// rank. Nothing starves — a skipped request reaches the head in FIFO
+/// time and is then admitted unconditionally.
+#[derive(Debug, Clone, Copy)]
+pub struct RankCap {
+    pub factor: u32,
+}
+
+impl RankCap {
+    pub fn new(factor: u32) -> Self {
+        assert!(factor >= 1, "rank-cap factor must be >= 1");
+        RankCap { factor }
+    }
+}
+
+impl BatchPolicy for RankCap {
+    fn name(&self) -> &'static str {
+        "rank-cap"
+    }
+
+    fn admit(
+        &mut self,
+        queue: &mut VecDeque<SimReq>,
+        slots: usize,
+        max_tokens: u64,
+    ) -> Vec<SimReq> {
+        if queue.is_empty() || slots == 0 {
+            return Vec::new();
+        }
+        let mut batch: Vec<SimReq> = Vec::new();
+        let mut tokens = 0u64;
+        let mut cap = 0u32;
+        let mut kept: VecDeque<SimReq> =
+            VecDeque::with_capacity(queue.len());
+        let mut stop = false;
+        for r in queue.drain(..) {
+            if stop || batch.len() >= slots {
+                kept.push_back(r);
+                continue;
+            }
+            if batch.is_empty() {
+                cap = r.rank.saturating_mul(self.factor);
+                tokens += r.req.prompt_len as u64;
+                batch.push(r);
+                continue;
+            }
+            if r.rank > cap {
+                kept.push_back(r); // rank-skipped; keep scanning
+                continue;
+            }
+            let t = r.req.prompt_len as u64;
+            if tokens + t > max_tokens {
+                kept.push_back(r);
+                stop = true;
+                continue;
+            }
+            tokens += t;
+            batch.push(r);
+        }
+        *queue = kept;
+        batch
+    }
+}
+
 #[derive(Debug, Clone, Copy)]
 pub struct ActiveReq {
     pub sreq: SimReq,
@@ -140,10 +369,29 @@ pub struct SimServer {
     /// max rank was >= 64 (the interference tax indicator).
     pub iters: u64,
     pub iters_highrank: u64,
+    /// Prefill-composition diagnostics (per batch policy): prefill
+    /// iterations, prefill iterations mixing ≥2 distinct ranks, and
+    /// Σ (batch_max_rank − rank) × prompt_tokens — the volume of
+    /// pad-to-max-rank work the kernels burn on mixed batches.
+    pub prefill_iters: u64,
+    pub mixed_prefill_iters: u64,
+    pub pad_rank_tokens: u64,
+    /// Prefill admission policy (owned per server: policies carry
+    /// starvation-guard state).
+    pub policy: Box<dyn BatchPolicy>,
 }
 
 impl SimServer {
+    /// FIFO-admitting server (the classic engine).
     pub fn new(id: usize, cm: CostModel) -> Self {
+        Self::with_policy(id, cm, Box::new(Fifo))
+    }
+
+    pub fn with_policy(
+        id: usize,
+        cm: CostModel,
+        policy: Box<dyn BatchPolicy>,
+    ) -> Self {
         SimServer {
             id,
             cm,
@@ -162,6 +410,10 @@ impl SimServer {
             timeouts: 0,
             iters: 0,
             iters_highrank: 0,
+            prefill_iters: 0,
+            mixed_prefill_iters: 0,
+            pad_rank_tokens: 0,
+            policy,
         }
     }
 
@@ -286,37 +538,41 @@ impl SimServer {
     /// Start the next iteration if idle and work exists. Returns the
     /// iteration's service time (caller schedules IterationDone).
     ///
-    /// Policy: prefill-prioritized iteration-level scheduling — admit a
-    /// prefill batch (token budget + slot limited) if any request is
-    /// queued, otherwise run one decode step over all active sequences.
+    /// Prefill-prioritized iteration-level scheduling: the owned
+    /// [`BatchPolicy`] admits a prefill batch (token budget + slot
+    /// limited) if any request is queued, otherwise one decode step
+    /// runs over all active sequences.
     pub fn start_iteration(&mut self, now: f64) -> Option<f64> {
         if !self.is_idle() {
             return None;
         }
-        // admit prefills
-        let mut batch: Vec<SimReq> = Vec::new();
-        let mut tokens = 0u64;
+        // admit prefills (policy-selected composition)
         let slots = self
             .cm
             .server
             .max_batch_size
             .saturating_sub(self.active.len());
-        while let Some(head) = self.queue.front() {
-            if batch.len() >= slots {
-                break;
-            }
-            let t = head.req.prompt_len as u64;
-            if !batch.is_empty()
-                && tokens + t > self.cm.server.max_batch_tokens as u64
-            {
-                break;
-            }
-            tokens += t;
-            batch.push(self.queue.pop_front().unwrap());
-        }
+        let batch = self.policy.admit(
+            &mut self.queue,
+            slots,
+            self.cm.server.max_batch_tokens as u64,
+        );
         if !batch.is_empty() {
+            let tokens: u64 =
+                batch.iter().map(|r| r.req.prompt_len as u64).sum();
             let max_rank =
                 batch.iter().map(|r| r.rank).max().unwrap_or(0);
+            self.prefill_iters += 1;
+            if batch.iter().any(|r| r.rank != batch[0].rank) {
+                self.mixed_prefill_iters += 1;
+            }
+            self.pad_rank_tokens += batch
+                .iter()
+                .map(|r| {
+                    u64::from(max_rank - r.rank)
+                        * r.req.prompt_len as u64
+                })
+                .sum::<u64>();
             // page this batch's adapters into the GPU pool (S-LoRA
             // unified paging); active sequences' adapters are pinned
             let pinned: std::collections::BTreeSet<AdapterId> = self
@@ -582,6 +838,142 @@ mod tests {
         let t3 = s.start_iteration(t + t2).unwrap();
         s.finish_iteration(t + t2 + t3);
         assert!(s.quiesced());
+    }
+
+    fn ranked(arrival: f64, adapter: AdapterId, rank: u32) -> SimReq {
+        let mut r = req(arrival, adapter, 100, 1);
+        r.rank = rank;
+        r
+    }
+
+    #[test]
+    fn rank_bucketed_admits_single_class() {
+        let mut pol = RankBucketed::new(8);
+        let mut q: VecDeque<SimReq> = VecDeque::new();
+        q.push_back(ranked(0.0, 0, 8));
+        q.push_back(ranked(1.0, 1, 128));
+        q.push_back(ranked(2.0, 2, 128));
+        q.push_back(ranked(3.0, 3, 8));
+        // largest class wins the iteration; the batch is homogeneous
+        let batch = pol.admit(&mut q, 8, 10_000);
+        assert_eq!(batch.len(), 2);
+        assert!(batch.iter().all(|r| r.rank == batch[0].rank));
+        // the other class stays queued, in order
+        assert_eq!(q.len(), 2);
+        let leftover: Vec<u32> = q.iter().map(|r| r.rank).collect();
+        assert!(leftover.iter().all(|&r| r != batch[0].rank));
+        let second = pol.admit(&mut q, 8, 10_000);
+        assert_eq!(second.len(), 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn rank_bucketed_starvation_guard_forces_head() {
+        let bound = 2;
+        let mut pol = RankBucketed::new(bound);
+        let mut q: VecDeque<SimReq> = VecDeque::new();
+        q.push_back(ranked(0.0, 0, 8)); // lone low-rank head
+        for i in 0..3 {
+            q.push_back(ranked(1.0 + i as f64, 10 + i, 128));
+        }
+        for round in 0..bound {
+            let batch = pol.admit(&mut q, 8, 10_000);
+            assert!(
+                batch.iter().all(|r| r.rank == 128),
+                "round {round}: majority class must win"
+            );
+            assert_eq!(q.front().unwrap().rank, 8, "head must remain");
+            for i in 0..3 {
+                q.push_back(ranked(10.0 + i as f64, 20 + i, 128));
+            }
+        }
+        // head has now been passed over `bound` times: forced through
+        let batch = pol.admit(&mut q, 8, 10_000);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].rank, 8);
+        assert!(q.iter().all(|r| r.rank == 128));
+    }
+
+    #[test]
+    fn rank_cap_skips_high_ranks_but_never_the_head() {
+        let mut pol = RankCap::new(2);
+        let mut q: VecDeque<SimReq> = VecDeque::new();
+        q.push_back(ranked(0.0, 0, 8));
+        q.push_back(ranked(1.0, 1, 128));
+        q.push_back(ranked(2.0, 2, 16)); // within 2 × head rank
+        q.push_back(ranked(3.0, 3, 32)); // beyond the cap
+        let batch = pol.admit(&mut q, 8, 10_000);
+        let ranks: Vec<u32> = batch.iter().map(|r| r.rank).collect();
+        assert_eq!(ranks, vec![8, 16]);
+        // skipped requests kept their order; the 128 now heads the
+        // queue and is admitted unconditionally next round
+        let leftover: Vec<u32> = q.iter().map(|r| r.rank).collect();
+        assert_eq!(leftover, vec![128, 32]);
+        let batch = pol.admit(&mut q, 8, 10_000);
+        assert_eq!(batch.len(), 2, "128 admits 32 under its cap");
+        assert_eq!(batch[0].rank, 128);
+    }
+
+    #[test]
+    fn policies_respect_slots_and_token_budget() {
+        for kind in [
+            BatchPolicyKind::Fifo,
+            BatchPolicyKind::RankBucketed { max_wait_iters: 4 },
+            BatchPolicyKind::RankCap { factor: 2 },
+        ] {
+            let mut pol = build_policy(kind);
+            let mut q: VecDeque<SimReq> = VecDeque::new();
+            for i in 0..6 {
+                q.push_back(req(i as f64, i, 100, 1));
+            }
+            let batch = pol.admit(&mut q, 3, 10_000);
+            assert_eq!(batch.len(), 3, "{kind:?}: slot limit");
+            assert_eq!(q.len(), 3);
+            // token budget: second request does not fit
+            let mut q2: VecDeque<SimReq> = VecDeque::new();
+            q2.push_back(req(0.0, 0, 190, 1));
+            q2.push_back(req(1.0, 1, 20, 1));
+            let batch = pol.admit(&mut q2, 8, 200);
+            assert_eq!(batch.len(), 1, "{kind:?}: token budget");
+            // oversized head still admitted alone
+            let mut q3: VecDeque<SimReq> = VecDeque::new();
+            q3.push_back(req(0.0, 0, 500, 1));
+            let batch = pol.admit(&mut q3, 8, 200);
+            assert_eq!(batch.len(), 1, "{kind:?}: oversized head");
+            // zero slots admit nothing
+            let mut q4: VecDeque<SimReq> = VecDeque::new();
+            q4.push_back(req(0.0, 0, 10, 1));
+            assert!(pol.admit(&mut q4, 0, 200).is_empty());
+            assert_eq!(q4.len(), 1);
+        }
+    }
+
+    #[test]
+    fn mixing_metrics_track_padding_tax() {
+        let mut s = server();
+        let mut lo = req(0.0, 0, 500, 1);
+        lo.rank = 8;
+        let mut hi = req(0.0, 1, 500, 1);
+        hi.rank = 128;
+        s.enqueue_ready(lo);
+        s.enqueue_ready(hi);
+        let t = s.start_iteration(0.0).unwrap();
+        assert_eq!(s.prefill_iters, 1);
+        assert_eq!(s.mixed_prefill_iters, 1);
+        assert_eq!(s.pad_rank_tokens, (128 - 8) as u64 * 500);
+        s.finish_iteration(t);
+        // a homogeneous batch adds no padding
+        let mut s2 = server();
+        s2.enqueue_ready(lo);
+        s2.enqueue_ready({
+            let mut x = lo;
+            x.req.adapter = 2;
+            x
+        });
+        s2.start_iteration(0.0).unwrap();
+        assert_eq!(s2.prefill_iters, 1);
+        assert_eq!(s2.mixed_prefill_iters, 0);
+        assert_eq!(s2.pad_rank_tokens, 0);
     }
 
     #[test]

@@ -1,0 +1,159 @@
+//! Fleet topology: the lifecycle of every server slot in an elastic
+//! cluster, factored out of the event loop so the engine handlers can
+//! ask one object "who is routable / billed / free" instead of
+//! re-deriving it from a raw state vector.
+
+use crate::metrics::FleetMetrics;
+use crate::pool::AdapterPool;
+use crate::workload::ServerId;
+
+use super::server::SimServer;
+
+/// Lifecycle of one server slot in the elastic fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SrvState {
+    /// Slot exists but was never provisioned (or was retired and can
+    /// be re-provisioned).
+    Cold,
+    /// Scale-up decided; cold start in progress.
+    Provisioning,
+    /// Routable member of the fleet.
+    Active,
+    /// Scale-down decided; finishing decodes + migrating last copies.
+    Draining,
+    /// Fully quiesced and copy-free; reusable by a later scale-up.
+    Retired,
+}
+
+/// The slot-state vector of the (possibly elastic) fleet. Fixed-fleet
+/// runs simply keep every slot `Active` forever.
+#[derive(Debug, Clone)]
+pub struct FleetTopology {
+    state: Vec<SrvState>,
+}
+
+impl FleetTopology {
+    /// Slots `0..n0` start active; `n0..max_n` are cold spares for the
+    /// autoscaler.
+    pub fn new(n0: usize, max_n: usize) -> Self {
+        FleetTopology {
+            state: (0..max_n)
+                .map(|s| {
+                    if s < n0 {
+                        SrvState::Active
+                    } else {
+                        SrvState::Cold
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.is_empty()
+    }
+
+    pub fn state(&self, s: ServerId) -> SrvState {
+        self.state[s]
+    }
+
+    pub fn set(&mut self, s: ServerId, st: SrvState) {
+        self.state[s] = st;
+    }
+
+    /// Routable members of the fleet, in id order.
+    pub fn active(&self) -> Vec<ServerId> {
+        self.state
+            .iter()
+            .enumerate()
+            .filter(|&(_, &st)| st == SrvState::Active)
+            .map(|(s, _)| s)
+            .collect()
+    }
+
+    /// Servers occupying GPUs: provisioning + active + draining. This
+    /// is what `FleetMetrics::gpu_seconds` integrates — a draining
+    /// victim keeps burning its GPUs until it retires.
+    pub fn billed(&self) -> usize {
+        self.state
+            .iter()
+            .filter(|&&st| {
+                matches!(
+                    st,
+                    SrvState::Provisioning
+                        | SrvState::Active
+                        | SrvState::Draining
+                )
+            })
+            .count()
+    }
+
+    pub fn provisioning(&self) -> usize {
+        self.state
+            .iter()
+            .filter(|&&st| st == SrvState::Provisioning)
+            .count()
+    }
+
+    /// Lowest-id slot a scale-up can (re)provision.
+    pub fn free_slot(&self) -> Option<ServerId> {
+        (0..self.state.len()).find(|&s| {
+            matches!(self.state[s], SrvState::Cold | SrvState::Retired)
+        })
+    }
+}
+
+/// A draining server retires once it holds no work *and* no adapter
+/// copies (so no last copy can ever be lost to a shrink). Retirement
+/// ends the server's GPU billing.
+pub(crate) fn try_retire(
+    s: ServerId,
+    now: f64,
+    topo: &mut FleetTopology,
+    servers: &[SimServer],
+    pool: &AdapterPool,
+    fleet: &mut FleetMetrics,
+) -> bool {
+    if topo.state(s) == SrvState::Draining
+        && servers[s].quiesced()
+        && pool.resident_count(s) == 0
+        && pool.fetching_count(s) == 0
+    {
+        topo.set(s, SrvState::Retired);
+        fleet.set_fleet(now, topo.active().len(), topo.billed());
+        true
+    } else {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_counts() {
+        let mut t = FleetTopology::new(2, 5);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.active(), vec![0, 1]);
+        assert_eq!(t.billed(), 2);
+        assert_eq!(t.provisioning(), 0);
+        assert_eq!(t.free_slot(), Some(2));
+        t.set(2, SrvState::Provisioning);
+        assert_eq!(t.billed(), 3);
+        assert_eq!(t.provisioning(), 1);
+        assert_eq!(t.free_slot(), Some(3));
+        t.set(2, SrvState::Active);
+        assert_eq!(t.active(), vec![0, 1, 2]);
+        t.set(0, SrvState::Draining);
+        assert_eq!(t.active(), vec![1, 2]);
+        assert_eq!(t.billed(), 3, "draining still bills");
+        t.set(0, SrvState::Retired);
+        assert_eq!(t.billed(), 2);
+        assert_eq!(t.free_slot(), Some(0), "retired slots are reusable");
+    }
+}

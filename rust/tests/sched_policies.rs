@@ -1,0 +1,273 @@
+//! Scheduler-layer tests: engine/spec parity (the refactor seam),
+//! batch-policy invariants (starvation bound, homogeneity), the
+//! rank-aware scheduling effect the `sched` ablation reports, and the
+//! `sched` figure smoke-run.
+
+use loraserve::config::{BatchPolicyKind, ClusterConfig};
+use loraserve::figures::sched::sched_table;
+use loraserve::sim::{
+    self, run_spec, LoadSignal, PlacementPolicy, PoolMode,
+    RoutingPolicy, SimConfig, SystemKind, SystemSpec,
+};
+use loraserve::trace::azure::{self, AzureConfig};
+use loraserve::trace::{LengthModel, Trace};
+
+fn cluster(n: usize) -> ClusterConfig {
+    ClusterConfig {
+        n_servers: n,
+        rebalance_period: 20.0,
+        ..Default::default()
+    }
+}
+
+/// Mixed ranks (uniform over the five classes), short outputs so
+/// prefill iterations dominate the iteration mix.
+fn mixed_trace(rps: f64, seed: u64, duration: f64) -> Trace {
+    azure::generate(&AzureConfig {
+        rps,
+        duration,
+        seed,
+        lengths: LengthModel::fixed(512, 2),
+        ..Default::default()
+    })
+}
+
+/// The four §V-D systems, composed *by hand* from the engine's policy
+/// vocabulary — independently of `SystemKind::spec`, so the parity
+/// test below certifies the composition seam rather than tautology.
+fn hand_composed(kind: SystemKind) -> SystemSpec {
+    let base = SystemSpec {
+        label: kind.label().to_string(),
+        placement: PlacementPolicy::Contiguous,
+        routing: RoutingPolicy::Table,
+        pool: PoolMode::Distributed,
+        batch: BatchPolicyKind::Fifo,
+        periodic_rebalance: false,
+        empirical_oppoints: false,
+        rank_agnostic: false,
+        last_value_demand: false,
+        load_signal: LoadSignal::ServiceSeconds,
+        rank_blind_cost: false,
+    };
+    match kind {
+        SystemKind::LoraServe => SystemSpec {
+            placement: PlacementPolicy::LoraServe {
+                skip_permutation: false,
+            },
+            periodic_rebalance: true,
+            empirical_oppoints: true,
+            ..base
+        },
+        SystemKind::SLoraRandom => SystemSpec {
+            placement: PlacementPolicy::Random,
+            ..base
+        },
+        SystemKind::SLoraContiguous => base,
+        SystemKind::Toppings => SystemSpec {
+            placement: PlacementPolicy::ReplicateAll,
+            routing: RoutingPolicy::LeastLoaded,
+            pool: PoolMode::Replicated,
+            load_signal: LoadSignal::RequestCount,
+            rank_blind_cost: true,
+            ..base
+        },
+    }
+}
+
+/// Engine parity: under `BatchPolicy::Fifo` the refactored engine must
+/// produce a bit-identical seeded `SimReport` — completions, latency
+/// samples, fetches, migration bytes — for all four systems, whether
+/// the system arrives as a canned `SystemKind` or a hand-composed
+/// `SystemSpec`.
+#[test]
+fn fifo_engine_parity_all_systems() {
+    let trace = mixed_trace(10.0, 2, 240.0);
+    for kind in SystemKind::all() {
+        let cfg = SimConfig::new(cluster(4), kind);
+        assert_eq!(cfg.batch, BatchPolicyKind::Fifo, "default policy");
+        let r1 = sim::run(&trace, &cfg);
+        let r2 = run_spec(&trace, &cfg, &hand_composed(kind));
+        // and a second canned run for plain determinism
+        let r3 = sim::run(&trace, &cfg);
+        for (a, b) in [(&r1, &r2), (&r1, &r3)] {
+            assert_eq!(a.completed, b.completed, "{}", kind.label());
+            assert_eq!(a.timeouts, b.timeouts, "{}", kind.label());
+            assert_eq!(a.fetches, b.fetches, "{}", kind.label());
+            assert_eq!(a.fetch_bytes, b.fetch_bytes, "{}", kind.label());
+            assert_eq!(
+                a.migration_bytes,
+                b.migration_bytes,
+                "{}",
+                kind.label()
+            );
+            assert_eq!(a.rebalances, b.rebalances, "{}", kind.label());
+            assert_eq!(
+                a.makespan.to_bits(),
+                b.makespan.to_bits(),
+                "{}",
+                kind.label()
+            );
+            assert_eq!(a.ttft.values(), b.ttft.values(), "{}", kind.label());
+            assert_eq!(a.e2e.values(), b.e2e.values(), "{}", kind.label());
+            assert_eq!(a.tbt.values(), b.tbt.values(), "{}", kind.label());
+            assert_eq!(
+                a.per_server_busy,
+                b.per_server_busy,
+                "{}",
+                kind.label()
+            );
+            assert_eq!(a.gpu_loads, b.gpu_loads, "{}", kind.label());
+            assert_eq!(a.iters, b.iters, "{}", kind.label());
+            assert_eq!(
+                a.iters_highrank,
+                b.iters_highrank,
+                "{}",
+                kind.label()
+            );
+            assert_eq!(a.system, b.system, "{}", kind.label());
+        }
+        assert!(r1.iters > 0);
+    }
+}
+
+/// The acceptance check behind the scheduler half of the design space:
+/// under rank-agnostic (random) placement, rank-bucketed admission
+/// keeps prefill batches homogeneous and shrinks the share of
+/// iterations paying the ≥64-rank padding tax.
+#[test]
+fn rank_bucketed_reduces_highrank_share_under_random_placement() {
+    let trace = mixed_trace(24.0, 4, 300.0);
+    let fifo =
+        sim::run(&trace, &SimConfig::new(cluster(2), SystemKind::SLoraRandom));
+    let bucketed = sim::run(
+        &trace,
+        &SimConfig::new(cluster(2), SystemKind::SLoraRandom)
+            .with_batch_policy(BatchPolicyKind::RankBucketed {
+                max_wait_iters: 8,
+            }),
+    );
+    // structural: one rank class per prefill — no mixed batches, no
+    // padded prefill tokens at all
+    assert_eq!(bucketed.mixed_prefill_iters, 0);
+    assert_eq!(bucketed.pad_rank_tokens, 0);
+    assert!(
+        fifo.mixed_prefill_iters > 0,
+        "trace too light to ever mix under fifo"
+    );
+    assert!(fifo.pad_rank_tokens > 0);
+    // behavioral: the high-rank iteration share drops
+    assert!(
+        bucketed.highrank_iter_share() < fifo.highrank_iter_share(),
+        "bucketed {} !< fifo {}",
+        bucketed.highrank_iter_share(),
+        fifo.highrank_iter_share()
+    );
+    // no request is lost to the scheduling change
+    assert_eq!(
+        bucketed.completed + bucketed.timeouts,
+        trace.requests.len() as u64
+    );
+    assert_eq!(bucketed.batch_policy, "rank-bucketed:8");
+}
+
+/// RankCap lowers the padding tax without reordering across classes:
+/// padded prefill tokens strictly shrink vs FIFO on a mixed trace.
+#[test]
+fn rank_cap_shrinks_padding_tax() {
+    let trace = mixed_trace(24.0, 6, 240.0);
+    let fifo =
+        sim::run(&trace, &SimConfig::new(cluster(2), SystemKind::SLoraRandom));
+    let capped = sim::run(
+        &trace,
+        &SimConfig::new(cluster(2), SystemKind::SLoraRandom)
+            .with_batch_policy(BatchPolicyKind::RankCap { factor: 2 }),
+    );
+    assert!(fifo.pad_rank_tokens > 0);
+    assert!(
+        capped.pad_rank_tokens < fifo.pad_rank_tokens,
+        "capped {} !< fifo {}",
+        capped.pad_rank_tokens,
+        fifo.pad_rank_tokens
+    );
+    assert_eq!(
+        capped.completed + capped.timeouts,
+        trace.requests.len() as u64
+    );
+}
+
+/// Property: RankBucketed's bounded-wait guard — no request, once at
+/// the head of the queue, is passed over more than `max_wait_iters`
+/// admitting prefill iterations, under adversarial arrivals and
+/// capacities.
+#[test]
+fn rank_bucketed_starvation_bound_property() {
+    use loraserve::sim::server::{BatchPolicy, RankBucketed, SimReq};
+    use loraserve::util::rng::Pcg32;
+    use loraserve::workload::Request;
+    use std::collections::{BTreeMap, VecDeque};
+    let bound = 3u32;
+    for seed in 0..6u64 {
+        let mut rng = Pcg32::new(100 + seed);
+        let mut pol = RankBucketed::new(bound);
+        let mut queue: VecDeque<SimReq> = VecDeque::new();
+        let mut next_id = 0u64;
+        let mut waits: BTreeMap<u64, u32> = BTreeMap::new();
+        for _iter in 0..500 {
+            for _ in 0..rng.below(4) {
+                let rank = [8u32, 16, 64, 128][rng.below(4) as usize];
+                queue.push_back(SimReq {
+                    req: Request {
+                        id: next_id,
+                        adapter: 0,
+                        prompt_len: 64 + rng.below(400) as u32,
+                        output_len: 1,
+                        arrival: 0.0,
+                    },
+                    rank,
+                    adapter_bytes: 1 << 20,
+                    est: 0.1,
+                });
+                next_id += 1;
+            }
+            let front = queue.front().map(|r| r.req.id);
+            let slots = 1 + rng.below(6) as usize;
+            let batch = pol.admit(&mut queue, slots, 2048);
+            let Some(f) = front else { continue };
+            if batch.iter().any(|r| r.req.id == f) {
+                waits.remove(&f);
+            } else if !batch.is_empty() {
+                let w = waits.entry(f).or_insert(0);
+                *w += 1;
+                assert!(
+                    *w <= bound,
+                    "seed {seed}: request {f} passed over {w} times at \
+                     the head (bound {bound})"
+                );
+            }
+        }
+    }
+}
+
+/// The `sched` figure's harness renders a non-empty table on a tiny
+/// trace (the CI smoke-run for the ablation).
+#[test]
+fn sched_figure_smoke_run() {
+    let trace = mixed_trace(4.0, 1, 60.0);
+    let table = sched_table(&trace, &cluster(2));
+    assert_eq!(
+        table.rows.len(),
+        SystemKind::all().len() * 3,
+        "one row per system × policy"
+    );
+    for row in &table.rows {
+        assert!(!row.is_empty());
+        for cell in row {
+            assert!(!cell.is_empty(), "empty cell in {row:?}");
+        }
+    }
+    let md = table.to_markdown();
+    assert!(md.contains("fifo"));
+    assert!(md.contains("rank-bucketed"));
+    assert!(md.contains("rank-cap"));
+    assert!(md.contains("loraserve") && md.contains("toppings"));
+}
