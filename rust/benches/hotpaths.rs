@@ -145,6 +145,7 @@ fn main() {
         violation_rate: 0.1,
         queue_depth: 512,
         projected_tps: 1.0e5,
+        server_tps_capacity: 700.0,
     };
     let mut tick_t = 0.0f64;
     b.run("autoscale: decide (64 srv)", || {
@@ -214,7 +215,59 @@ fn main() {
         .with_batch_policy(
             loraserve::config::BatchPolicyKind::RankBucketed {
                 max_wait_iters: 8,
+                select: loraserve::config::ClassSelect::LargestQueue,
             },
+        );
+        let rep = sim::run(&trace, &cfg);
+        black_box(rep.completed);
+        1
+    });
+
+    // --- decode-set composition (one compose_decode call per decode
+    // round; partitioned rounds also multiply IterDone events)
+    {
+        use loraserve::sim::server::{
+            ActiveReq, BatchPolicy, Fifo, RankPartitionedDecode, SimReq,
+        };
+        use loraserve::workload::Request;
+        let cm = loraserve::costmodel::CostModel::new(
+            loraserve::config::ServerConfig::default(),
+        );
+        let mut rng = Pcg32::new(9);
+        let active: Vec<ActiveReq> = (0..24)
+            .map(|i| ActiveReq {
+                sreq: SimReq {
+                    req: Request {
+                        id: i as u64,
+                        adapter: i as u32,
+                        prompt_len: 256,
+                        output_len: 64,
+                        arrival: 0.0,
+                    },
+                    rank: RANK_CLASSES[rng.below(5) as usize],
+                    adapter_bytes: 1 << 20,
+                    est: 0.1,
+                },
+                produced: 1 + (i as u32 % 16),
+                first_token_at: 0.0,
+                seq: i as u64,
+            })
+            .collect();
+        let mut pol = RankPartitionedDecode::new(Box::new(Fifo));
+        b.run("sched: compose_decode (24 act.)", || {
+            for _ in 0..1024 {
+                black_box(pol.compose_decode(&active, 24, &cm));
+            }
+            1024
+        });
+    }
+    b.run("sim: rank-partitioned decode run", || {
+        let cfg = SimConfig::new(
+            cluster.clone(),
+            SystemKind::SLoraRandom,
+        )
+        .with_decode_policy(
+            loraserve::config::DecodePolicyKind::RankPartitioned,
         );
         let rep = sim::run(&trace, &cfg);
         black_box(rep.completed);

@@ -22,9 +22,18 @@ pub struct ScaleSignals {
     /// backlog must not shrink.
     pub queue_depth: usize,
     /// Cluster-wide projected tokens/sec from the demand tracker.
-    /// Not yet part of the policy — reserved for predictive step
-    /// sizing against the fleet's operating points (see ROADMAP).
+    /// Sizes scale-ups predictively against the fleet's operating
+    /// points (see `server_tps_capacity`).
     pub projected_tps: f64,
+    /// Tokens/sec one server sustains on the workload's rank mix (the
+    /// DES engine supplies the token-share-weighted harmonic mean of
+    /// the per-class operating points — an unweighted mean would
+    /// mis-size scale-ups on skewed mixes). With both this and
+    /// `projected_tps` known, a hot fleet is sized to carry the
+    /// *projected* demand — not just extrapolated from the current
+    /// busy fraction. 0 (unknown) falls back to busy-fraction-only
+    /// sizing.
+    pub server_tps_capacity: f64,
 }
 
 /// What the controller wants done to the fleet.
@@ -99,10 +108,21 @@ impl ScaleController {
             // counting capacity that is already provisioning
             let target =
                 0.5 * (self.cfg.scale_up_util + self.cfg.scale_down_util);
-            let desired = (n as f64
+            let mut desired = (n as f64
                 * sig.busy_frac.max(self.cfg.scale_up_util)
                 / target.max(1e-9))
             .ceil() as usize;
+            // predictive sizing: when the demand tracker projects a
+            // ramp, size the fleet so projected tokens/sec land at the
+            // same target utilization of the per-server operating
+            // point — the reactive estimate only sees load already
+            // burning GPU time.
+            if sig.server_tps_capacity > 0.0 && sig.projected_tps > 0.0 {
+                let predictive = (sig.projected_tps
+                    / (target.max(1e-9) * sig.server_tps_capacity))
+                    .ceil() as usize;
+                desired = desired.max(predictive);
+            }
             if desired <= inbound {
                 return ScaleDecision::Hold; // enough already inbound
             }
@@ -190,6 +210,50 @@ mod tests {
             ScaleDecision::Up(k) => assert_eq!(k, 4),
             other => panic!("{other:?}"),
         }
+    }
+
+    /// Predictive step sizing on a demand ramp: with the per-server
+    /// operating point known, the scale-up step tracks the *projected*
+    /// tokens/sec instead of only extrapolating busy fraction.
+    #[test]
+    fn predictive_sizing_follows_demand_ramp() {
+        let mut c = ScaleController::new(cfg());
+        let ramp = |tps: f64| ScaleSignals {
+            busy_frac: 0.85, // just hot: reactive sizing alone adds 2
+            projected_tps: tps,
+            server_tps_capacity: 1000.0,
+            ..Default::default()
+        };
+        // target util = (0.8 + 0.3) / 2 = 0.55
+        // reactive: ceil(2 * 0.85 / 0.55) = 4 => k = 2
+        match c.decide(100.0, &ramp(1000.0), &fleet(2), 0) {
+            ScaleDecision::Up(k) => assert_eq!(k, 2),
+            other => panic!("{other:?}"),
+        }
+        // projected 3300 tps / (0.55 * 1000) => 6 servers => k = 4
+        match c.decide(200.0, &ramp(3300.0), &fleet(2), 0) {
+            ScaleDecision::Up(k) => assert_eq!(k, 4),
+            other => panic!("{other:?}"),
+        }
+        // projected 6000 tps => 11 desired, capped at max_servers 8
+        match c.decide(300.0, &ramp(6000.0), &fleet(2), 0) {
+            ScaleDecision::Up(k) => assert_eq!(k, 6),
+            other => panic!("{other:?}"),
+        }
+        // unknown capacity: falls back to busy-fraction-only sizing
+        let mut blind = ramp(6000.0);
+        blind.server_tps_capacity = 0.0;
+        let mut c2 = ScaleController::new(cfg());
+        match c2.decide(100.0, &blind, &fleet(2), 0) {
+            ScaleDecision::Up(k) => assert_eq!(k, 2),
+            other => panic!("{other:?}"),
+        }
+        // predictive demand already covered by inbound capacity: hold
+        let mut c3 = ScaleController::new(cfg());
+        assert_eq!(
+            c3.decide(100.0, &ramp(1000.0), &fleet(2), 2),
+            ScaleDecision::Hold
+        );
     }
 
     #[test]

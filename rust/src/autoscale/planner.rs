@@ -337,6 +337,30 @@ mod tests {
         assert_eq!(probes.len(), calls.len());
     }
 
+    /// The planner inherits every scheduler knob from the cluster
+    /// config, so min-fleet tables reflect decode-aware systems: a
+    /// rank-partitioned plan searches and lands on a sane boundary
+    /// just like the unified baseline.
+    #[test]
+    fn planner_respects_decode_policy() {
+        use crate::config::DecodePolicyKind;
+        let base = ClusterConfig {
+            decode_policy: DecodePolicyKind::RankPartitioned,
+            ..Default::default()
+        };
+        let slo = SloSpec::ttft_p95(base.slo.ttft_p95);
+        let plan = plan_min_fleet(
+            &trace(8.0),
+            &base,
+            SystemKind::LoraServe,
+            &slo,
+            8,
+        );
+        let n = plan.min_servers.expect("8 servers must suffice");
+        assert!((1..=8).contains(&n));
+        assert!(plan.observed_at_min().is_some());
+    }
+
     #[test]
     fn infeasible_load_returns_none() {
         let base = ClusterConfig::default();

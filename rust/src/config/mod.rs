@@ -187,6 +187,22 @@ impl Default for AutoscaleConfig {
     }
 }
 
+/// How `RankBucketed` picks the rank class that owns a prefill
+/// iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ClassSelect {
+    /// The class with the most queued requests (ties to the class
+    /// whose oldest request arrived first) — the original behavior,
+    /// kept for comparison.
+    #[default]
+    LargestQueue,
+    /// Cost-weighted: the class with the most queued *work* wins —
+    /// queued prompt tokens ÷ the class's operating point (tokens/s
+    /// under SLO), so a short queue of expensive high-rank prompts can
+    /// outrank a long queue of cheap ones.
+    CostWeighted,
+}
+
 /// Prefill admission policy of a server's continuous batching — the
 /// *scheduler* half of the heterogeneous-rank design space (placement
 /// is the other half). Every request in a batch pays the batch's
@@ -207,8 +223,12 @@ pub enum BatchPolicyKind {
     /// Admit prefills from a single rank class per iteration, keeping
     /// batches rank-homogeneous. A queued head request is never passed
     /// over more than `max_wait_iters` consecutive prefill iterations
-    /// (the bounded-wait starvation guard).
-    RankBucketed { max_wait_iters: u32 },
+    /// (the bounded-wait starvation guard). `select` chooses how the
+    /// winning class is picked.
+    RankBucketed {
+        max_wait_iters: u32,
+        select: ClassSelect,
+    },
     /// Admit in arrival order but skip requests whose rank would raise
     /// the batch maximum beyond `factor ×` the head request's rank.
     /// The head is always admitted, so nothing starves.
@@ -219,7 +239,8 @@ impl BatchPolicyKind {
     pub const DEFAULT_MAX_WAIT_ITERS: u32 = 8;
     pub const DEFAULT_CAP_FACTOR: u32 = 2;
 
-    /// Parse `fifo`, `rank-bucketed[:W]`, or `rank-cap[:F]`.
+    /// Parse `fifo`, `rank-bucketed[:W]`, `rank-bucketed-cost[:W]`, or
+    /// `rank-cap[:F]`.
     pub fn parse(s: &str) -> Result<BatchPolicyKind, String> {
         let (name, param) = match s.split_once(':') {
             Some((n, p)) => (n, Some(p)),
@@ -242,7 +263,14 @@ impl BatchPolicyKind {
             }
             "rank-bucketed" | "bucketed" => Ok(BatchPolicyKind::RankBucketed {
                 max_wait_iters: num(param, Self::DEFAULT_MAX_WAIT_ITERS)?,
+                select: ClassSelect::LargestQueue,
             }),
+            "rank-bucketed-cost" | "bucketed-cost" => {
+                Ok(BatchPolicyKind::RankBucketed {
+                    max_wait_iters: num(param, Self::DEFAULT_MAX_WAIT_ITERS)?,
+                    select: ClassSelect::CostWeighted,
+                })
+            }
             "rank-cap" | "cap" => {
                 let factor = num(param, Self::DEFAULT_CAP_FACTOR)?;
                 if factor == 0 {
@@ -252,7 +280,8 @@ impl BatchPolicyKind {
             }
             other => Err(format!(
                 "unknown batch policy '{other}' \
-                 (fifo | rank-bucketed[:wait] | rank-cap[:factor])"
+                 (fifo | rank-bucketed[:wait] | rank-bucketed-cost[:wait] \
+                 | rank-cap[:factor])"
             )),
         }
     }
@@ -260,11 +289,104 @@ impl BatchPolicyKind {
     pub fn label(&self) -> String {
         match self {
             BatchPolicyKind::Fifo => "fifo".into(),
-            BatchPolicyKind::RankBucketed { max_wait_iters } => {
-                format!("rank-bucketed:{max_wait_iters}")
-            }
+            BatchPolicyKind::RankBucketed {
+                max_wait_iters,
+                select: ClassSelect::LargestQueue,
+            } => format!("rank-bucketed:{max_wait_iters}"),
+            BatchPolicyKind::RankBucketed {
+                max_wait_iters,
+                select: ClassSelect::CostWeighted,
+            } => format!("rank-bucketed-cost:{max_wait_iters}"),
             BatchPolicyKind::RankCap { factor } => {
                 format!("rank-cap:{factor}")
+            }
+        }
+    }
+}
+
+/// Decode-set composition policy — the *other* phase of the scheduler
+/// seam. Prefill admission decides what becomes active; this knob
+/// decides how the active set is decoded each iteration: as one
+/// pad-to-max-rank batch (the BGMV baseline) or as per-rank-class
+/// sub-batch steps (SGMV-style grouped kernels, each step billed at
+/// its own class's operating point plus a per-sub-batch launch
+/// overhead — see `ServerConfig::decode_launch_overhead`).
+///
+/// Implementations live in `sim::server` (the `BatchPolicy` trait's
+/// `compose_decode`); this enum is the serializable knob threaded
+/// through configs, the CLI (`--decode-policy`), the capacity planner,
+/// and the figure harnesses — symmetric with [`BatchPolicyKind`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DecodePolicyKind {
+    /// One decode step over the whole active set at its maximum rank
+    /// (the pre-refactor behavior, bit for bit).
+    #[default]
+    Unified,
+    /// One sub-batch step per rank class present in the active set,
+    /// every decode round: each class pays only its own rank's
+    /// operating point (plus the launch overhead when the round has
+    /// more than one sub-batch).
+    RankPartitioned,
+    /// At most `max_groups` rank classes decode per round, chosen by a
+    /// cyclic fairness rotor over the classes present, bounding kernel
+    /// launches per round: a non-empty class is never skipped for more
+    /// than ⌈classes/max_groups⌉ − 1 consecutive rounds.
+    ClassSubBatch { max_groups: u32 },
+}
+
+impl DecodePolicyKind {
+    pub const DEFAULT_MAX_GROUPS: u32 = 2;
+
+    /// Parse `unified`, `rank-partitioned`, or `class-subbatch[:G]`.
+    pub fn parse(s: &str) -> Result<DecodePolicyKind, String> {
+        let (name, param) = match s.split_once(':') {
+            Some((n, p)) => (n, Some(p)),
+            None => (s, None),
+        };
+        match name {
+            "unified" => {
+                if param.is_some() {
+                    return Err("unified takes no parameter".into());
+                }
+                Ok(DecodePolicyKind::Unified)
+            }
+            "rank-partitioned" | "partitioned" => {
+                if param.is_some() {
+                    return Err(
+                        "rank-partitioned takes no parameter".into()
+                    );
+                }
+                Ok(DecodePolicyKind::RankPartitioned)
+            }
+            "class-subbatch" | "subbatch" => {
+                let max_groups = match param {
+                    None => Self::DEFAULT_MAX_GROUPS,
+                    Some(x) => x.parse::<u32>().map_err(|e| {
+                        format!("decode-policy param '{x}': {e}")
+                    })?,
+                };
+                if max_groups == 0 {
+                    return Err(
+                        "class-subbatch needs max_groups >= 1".into()
+                    );
+                }
+                Ok(DecodePolicyKind::ClassSubBatch { max_groups })
+            }
+            other => Err(format!(
+                "unknown decode policy '{other}' \
+                 (unified | rank-partitioned | class-subbatch[:groups])"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            DecodePolicyKind::Unified => "unified".into(),
+            DecodePolicyKind::RankPartitioned => {
+                "rank-partitioned".into()
+            }
+            DecodePolicyKind::ClassSubBatch { max_groups } => {
+                format!("class-subbatch:{max_groups}")
             }
         }
     }
@@ -288,6 +410,12 @@ pub struct ServerConfig {
     /// host memory over PCIe before their batch can run — the cost
     /// that punishes scattering a wide working set across every server.
     pub gpu_adapter_cache_bytes: u64,
+    /// Per-sub-batch kernel-launch overhead of grouped (SGMV-style)
+    /// decode, seconds: every sub-batch step of a multi-group decode
+    /// round pays this on top of its class's decode cost. A unified
+    /// (single-group) decode pays nothing. JSON knob:
+    /// `decode_launch_overhead_ms`.
+    pub decode_launch_overhead: f64,
 }
 
 impl Default for ServerConfig {
@@ -303,6 +431,8 @@ impl Default for ServerConfig {
             max_batch_size: 24,
             host_mem_bytes: 900 * (1 << 30), // ND96asr_v4: 900 GiB host
             gpu_adapter_cache_bytes: (3 << 30) / 2, // ~1.5 GiB of HBM after weights+KV
+            decode_launch_overhead:
+                crate::costmodel::calib::DECODE_LAUNCH_OVERHEAD,
         }
     }
 }
@@ -322,6 +452,10 @@ pub struct ClusterConfig {
     /// Prefill admission policy of every simulated server's continuous
     /// batching (threaded into `SimConfig` and the capacity planner).
     pub batch_policy: BatchPolicyKind,
+    /// Decode-set composition policy of every simulated server
+    /// (threaded into `SimConfig` and the capacity planner, symmetric
+    /// with `batch_policy`).
+    pub decode_policy: DecodePolicyKind,
     pub seed: u64,
 }
 
@@ -334,6 +468,7 @@ impl Default for ClusterConfig {
             rebalance_period: 60.0,
             autoscale: AutoscaleConfig::default(),
             batch_policy: BatchPolicyKind::default(),
+            decode_policy: DecodePolicyKind::default(),
             seed: 0,
         }
     }
@@ -388,6 +523,19 @@ impl ClusterConfig {
         }
         if let Some(s) = v.get("batch_policy").and_then(Json::as_str) {
             cfg.batch_policy = BatchPolicyKind::parse(s)?;
+        }
+        if let Some(s) = v.get("decode_policy").and_then(Json::as_str) {
+            cfg.decode_policy = DecodePolicyKind::parse(s)?;
+        }
+        if let Some(x) =
+            v.get("decode_launch_overhead_ms").and_then(Json::as_f64)
+        {
+            if x < 0.0 {
+                return Err(format!(
+                    "decode_launch_overhead_ms must be >= 0, got {x}"
+                ));
+            }
+            cfg.server.decode_launch_overhead = x / 1e3;
         }
         if let Some(a) = v.get("autoscale") {
             let au = &mut cfg.autoscale;
@@ -566,12 +714,23 @@ mod tests {
         assert_eq!(
             BatchPolicyKind::parse("rank-bucketed").unwrap(),
             BatchPolicyKind::RankBucketed {
-                max_wait_iters: BatchPolicyKind::DEFAULT_MAX_WAIT_ITERS
+                max_wait_iters: BatchPolicyKind::DEFAULT_MAX_WAIT_ITERS,
+                select: ClassSelect::LargestQueue,
             }
         );
         assert_eq!(
             BatchPolicyKind::parse("rank-bucketed:3").unwrap(),
-            BatchPolicyKind::RankBucketed { max_wait_iters: 3 }
+            BatchPolicyKind::RankBucketed {
+                max_wait_iters: 3,
+                select: ClassSelect::LargestQueue,
+            }
+        );
+        assert_eq!(
+            BatchPolicyKind::parse("rank-bucketed-cost:6").unwrap(),
+            BatchPolicyKind::RankBucketed {
+                max_wait_iters: 6,
+                select: ClassSelect::CostWeighted,
+            }
         );
         assert_eq!(
             BatchPolicyKind::parse("rank-cap:4").unwrap(),
@@ -584,11 +743,87 @@ mod tests {
         // labels round-trip through parse
         for k in [
             BatchPolicyKind::Fifo,
-            BatchPolicyKind::RankBucketed { max_wait_iters: 5 },
+            BatchPolicyKind::RankBucketed {
+                max_wait_iters: 5,
+                select: ClassSelect::LargestQueue,
+            },
+            BatchPolicyKind::RankBucketed {
+                max_wait_iters: 5,
+                select: ClassSelect::CostWeighted,
+            },
             BatchPolicyKind::RankCap { factor: 2 },
         ] {
             assert_eq!(BatchPolicyKind::parse(&k.label()).unwrap(), k);
         }
+    }
+
+    #[test]
+    fn decode_policy_parse_and_label() {
+        assert_eq!(
+            DecodePolicyKind::parse("unified").unwrap(),
+            DecodePolicyKind::Unified
+        );
+        assert_eq!(
+            DecodePolicyKind::parse("rank-partitioned").unwrap(),
+            DecodePolicyKind::RankPartitioned
+        );
+        assert_eq!(
+            DecodePolicyKind::parse("partitioned").unwrap(),
+            DecodePolicyKind::RankPartitioned
+        );
+        assert_eq!(
+            DecodePolicyKind::parse("class-subbatch").unwrap(),
+            DecodePolicyKind::ClassSubBatch {
+                max_groups: DecodePolicyKind::DEFAULT_MAX_GROUPS
+            }
+        );
+        assert_eq!(
+            DecodePolicyKind::parse("class-subbatch:3").unwrap(),
+            DecodePolicyKind::ClassSubBatch { max_groups: 3 }
+        );
+        assert!(DecodePolicyKind::parse("class-subbatch:0").is_err());
+        assert!(DecodePolicyKind::parse("unified:1").is_err());
+        assert!(DecodePolicyKind::parse("rank-partitioned:2").is_err());
+        assert!(DecodePolicyKind::parse("nope").is_err());
+        assert!(DecodePolicyKind::parse("class-subbatch:x").is_err());
+        // labels round-trip through parse
+        for k in [
+            DecodePolicyKind::Unified,
+            DecodePolicyKind::RankPartitioned,
+            DecodePolicyKind::ClassSubBatch { max_groups: 4 },
+        ] {
+            assert_eq!(DecodePolicyKind::parse(&k.label()).unwrap(), k);
+        }
+        // default is unified (the paper's baseline decode path)
+        assert_eq!(
+            ClusterConfig::default().decode_policy,
+            DecodePolicyKind::Unified
+        );
+    }
+
+    #[test]
+    fn decode_policy_from_json() {
+        let v = json::parse(
+            r#"{"decode_policy": "class-subbatch:3",
+                "decode_launch_overhead_ms": 1.5}"#,
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_json(&v).unwrap();
+        assert_eq!(
+            cfg.decode_policy,
+            DecodePolicyKind::ClassSubBatch { max_groups: 3 }
+        );
+        assert!((cfg.server.decode_launch_overhead - 1.5e-3).abs() < 1e-12);
+        let v = json::parse(r#"{"decode_policy": "nope"}"#).unwrap();
+        assert!(ClusterConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"decode_launch_overhead_ms": -1.0}"#)
+            .unwrap();
+        assert!(ClusterConfig::from_json(&v).is_err());
+        // untouched: the default overhead comes from calib
+        assert_eq!(
+            ClusterConfig::default().server.decode_launch_overhead,
+            crate::costmodel::calib::DECODE_LAUNCH_OVERHEAD
+        );
     }
 
     #[test]

@@ -66,6 +66,18 @@ pub const GAMMA0: f64 = 0.002;
 /// per-step overhead as the Fig 6 fit at the saturated batch size).
 pub const GAMMA_PER_SEQ: f64 = 0.0006;
 
+/// Per-sub-batch kernel-launch overhead of grouped (SGMV-style)
+/// decode, seconds: splitting one decode round into per-rank-class
+/// sub-batch steps launches one kernel sequence per class, and each
+/// extra launch costs scheduler + dispatch time. Punica/S-LoRA report
+/// sub-millisecond grouped-GEMV launch cost at decode batch sizes;
+/// 0.8 ms sits between the bare launch latency and the full per-step
+/// GAMMA0 so grouping is a real tradeoff rather than free. Default of
+/// `ServerConfig::decode_launch_overhead` (JSON
+/// `decode_launch_overhead_ms`); a unified single-group decode pays
+/// nothing.
+pub const DECODE_LAUNCH_OVERHEAD: f64 = 0.0008;
+
 /// Utilization headroom when converting a capacity into an
 /// operating point under SLO (Algorithm 1's profiled "operating
 /// points"): serving at full capacity has unbounded queueing delay, so

@@ -29,6 +29,36 @@ impl CostModel {
         decode_time(&self.server, batch, cached_tokens, max_rank)
     }
 
+    /// Shared forward-pass base of one *grouped* (SGMV-style) decode
+    /// round: weight streaming, KV reads, and per-step/per-sequence
+    /// overheads over the whole round's membership — billed once per
+    /// round regardless of how many rank-class sub-batches the LoRA
+    /// kernels are split into. Equals a unified decode step with no
+    /// LoRA work (`max_rank = 0`).
+    pub fn decode_base(&self, batch: usize, cached_tokens: u64) -> f64 {
+        decode_time(&self.server, batch, cached_tokens, 0)
+    }
+
+    /// Per-class cost of one decode sub-batch: the grouped LoRA kernel
+    /// for `batch` sequences at `rank` (each class pays only its own
+    /// rank's padded-GEMV work), plus — when the round has more than
+    /// one sub-batch (`extra_launch`) — the per-sub-batch kernel
+    /// launch overhead. The shared forward-pass base is *not* included
+    /// (see [`CostModel::decode_base`]).
+    pub fn decode_class(
+        &self,
+        batch: usize,
+        rank: u32,
+        extra_launch: bool,
+    ) -> f64 {
+        decode_lora_time(&self.server, batch, rank)
+            + if extra_launch {
+                self.server.decode_launch_overhead
+            } else {
+                0.0
+            }
+    }
+
     /// Saturation throughput (tokens/s) for a single-rank workload of
     /// the given request shape: the steady-state rate at which the
     /// server can complete requests, counting prompt+output tokens.
@@ -104,6 +134,14 @@ pub fn decode_time(
         / (server.tp as f64 * g.hbm_bw * EFF_BW);
     let lora = KAPPA_DECODE * lora_ideal(server, batch as u64, max_rank);
     weights + kv + lora + GAMMA0 + GAMMA_PER_SEQ * batch as f64
+}
+
+/// Decode-side LoRA kernel time for one rank-class sub-batch: the
+/// padded-GEMV work of `batch` sequences at `rank`, excluding the
+/// shared forward-pass base (weights/KV/overheads, which a grouped
+/// round pays once — `CostModel::decode_base`).
+pub fn decode_lora_time(server: &ServerConfig, batch: usize, rank: u32) -> f64 {
+    KAPPA_DECODE * lora_ideal(server, batch as u64, rank)
 }
 
 #[cfg(test)]
@@ -204,5 +242,43 @@ mod tests {
     fn decode_empty_batch_is_free() {
         let s = server(ModelSpec::LLAMA_7B, 4);
         assert_eq!(decode_time(&s, 0, 0, 128), 0.0);
+    }
+
+    /// Grouped decode cost split: the shared base is a LoRA-free
+    /// unified step; per-class sub-batches add only their own padded
+    /// kernel work plus the launch-overhead knob, so splitting a mixed
+    /// round recovers the low-rank classes' padding without paying the
+    /// forward pass twice.
+    #[test]
+    fn grouped_decode_cost_split() {
+        let cm = CostModel::new(server(ModelSpec::LLAMA_7B, 4));
+        let base = cm.decode_base(8, 8 * 512);
+        assert_eq!(base.to_bits(), cm.decode(8, 8 * 512, 0).to_bits());
+        // single-class sub-batch without launch overhead: base + class
+        // ≈ the unified step of the same membership (same terms, so
+        // well within float noise)
+        let unified = cm.decode(8, 8 * 512, 128);
+        let split = base + cm.decode_class(8, 128, false);
+        assert!((split - unified).abs() < 1e-12 * unified.max(1.0));
+        // the launch-overhead knob is additive and exact
+        let with_launch = cm.decode_class(8, 128, true);
+        assert!(
+            (with_launch
+                - cm.decode_class(8, 128, false)
+                - cm.server.decode_launch_overhead)
+                .abs()
+                < 1e-15
+        );
+        // a class pays its own rank: splitting a half-8/half-128 round
+        // into two sub-batches beats one pad-to-128 round even with
+        // two launch overheads
+        let mixed_unified = cm.decode(16, 16 * 512, 128);
+        let grouped = cm.decode_base(16, 16 * 512)
+            + cm.decode_class(8, 8, true)
+            + cm.decode_class(8, 128, true);
+        assert!(
+            grouped < mixed_unified,
+            "grouped {grouped} !< unified {mixed_unified}"
+        );
     }
 }

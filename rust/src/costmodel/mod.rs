@@ -15,5 +15,5 @@ pub mod latency;
 pub mod oppoint;
 
 pub use fetch::{fetch_time, FetchSource};
-pub use latency::{decode_time, prefill_time, CostModel};
+pub use latency::{decode_lora_time, decode_time, prefill_time, CostModel};
 pub use oppoint::operating_points;

@@ -60,7 +60,8 @@ pub fn registry() -> Vec<(&'static str, &'static str, FigFn)> {
          eval::storage_summary),
         ("ablations", "Algorithm 1 design-choice ablations",
          ablations::ablations),
-        ("sched", "batch scheduling × placement ablation",
+        ("sched", "batch scheduling × placement ablation + \
+                   prefill × decode policy grid",
          sched::sched),
         ("gpus", "min fleet under SLO per system (GPU savings)",
          elastic::gpus_under_slo),

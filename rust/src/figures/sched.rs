@@ -1,19 +1,32 @@
-//! The `sched` ablation: batch scheduling × placement.
+//! The `sched` ablation: batch scheduling × placement, and the
+//! prefill-policy × decode-policy grid.
 //!
 //! The paper fixes the scheduler (FIFO continuous batching) and varies
 //! *placement*; CaraServe-style rank-aware scheduling is the other
-//! half of the heterogeneous-rank design space. This harness runs
-//! every system under each `BatchPolicyKind` on a mixed-rank trace:
-//! rank-agnostic placement + `fifo` is "neither", rank-agnostic
-//! placement + `rank-bucketed` is "scheduling-only", LORASERVE +
-//! `fifo` is "placement-only", LORASERVE + `rank-bucketed` is "both".
-//! The high-rank iteration share and the padded-token volume are the
-//! interference-tax indicators the policies trade against latency.
+//! half of the heterogeneous-rank design space. Two tables:
+//!
+//! * `sched` — every system under each `BatchPolicyKind` on a
+//!   mixed-rank prefill-heavy trace: rank-agnostic placement + `fifo`
+//!   is "neither", rank-agnostic placement + `rank-bucketed` is
+//!   "scheduling-only", LORASERVE + `fifo` is "placement-only",
+//!   LORASERVE + `rank-bucketed` is "both". The high-rank iteration
+//!   share and the padded-token volume are the interference-tax
+//!   indicators the policies trade against latency.
+//! * `sched_decode` — the prefill-policy × decode-policy grid on a
+//!   *skewed-rank, decode-heavy* trace (mostly rank-8 traffic with a
+//!   high-rank minority, long outputs): under unified decode one
+//!   co-resident rank-128 tenant bills every decode step at rank 128
+//!   for the whole tail; `rank-partitioned`/`class-subbatch` decode
+//!   shrink the cluster-wide high-rank decode-step share and the
+//!   low-rank classes' P99 TBT, at the cost of per-sub-batch launch
+//!   overhead.
 
 use super::helpers::{FigOpts, RESULTS_DIR};
-use crate::config::{BatchPolicyKind, ClusterConfig};
+use crate::config::{
+    BatchPolicyKind, ClassSelect, ClusterConfig, DecodePolicyKind,
+};
 use crate::sim::{run, SimConfig, SystemKind};
-use crate::trace::azure::{self, AzureConfig};
+use crate::trace::azure::{self, AzureConfig, RankPopularity};
 use crate::trace::{LengthModel, Trace};
 use crate::util::table::{fmt_secs, Table};
 
@@ -24,6 +37,11 @@ pub fn sched_table(trace: &Trace, cluster: &ClusterConfig) -> Table {
         BatchPolicyKind::Fifo,
         BatchPolicyKind::RankBucketed {
             max_wait_iters: BatchPolicyKind::DEFAULT_MAX_WAIT_ITERS,
+            select: ClassSelect::LargestQueue,
+        },
+        BatchPolicyKind::RankBucketed {
+            max_wait_iters: BatchPolicyKind::DEFAULT_MAX_WAIT_ITERS,
+            select: ClassSelect::CostWeighted,
         },
         BatchPolicyKind::RankCap {
             factor: BatchPolicyKind::DEFAULT_CAP_FACTOR,
@@ -62,6 +80,79 @@ pub fn sched_table(trace: &Trace, cluster: &ClusterConfig) -> Table {
     table
 }
 
+/// Prefill-policy × decode-policy grid on one (skewed-rank,
+/// decode-heavy) trace, placement held rank-agnostic (S-LoRA Random)
+/// so the decode effect is isolated. Split from [`sched`] so the test
+/// suite can smoke-run it on a tiny trace.
+pub fn sched_decode_table(trace: &Trace, cluster: &ClusterConfig) -> Table {
+    let prefills = [
+        BatchPolicyKind::Fifo,
+        BatchPolicyKind::RankBucketed {
+            max_wait_iters: BatchPolicyKind::DEFAULT_MAX_WAIT_ITERS,
+            select: ClassSelect::LargestQueue,
+        },
+    ];
+    let decodes = [
+        DecodePolicyKind::Unified,
+        DecodePolicyKind::RankPartitioned,
+        DecodePolicyKind::ClassSubBatch {
+            max_groups: DecodePolicyKind::DEFAULT_MAX_GROUPS,
+        },
+    ];
+    let mut table = Table::new(
+        "sched_decode — prefill × decode policy grid \
+         (skewed ranks, decode-heavy, slora-random placement)",
+        &[
+            "prefill policy",
+            "decode policy",
+            "p95 ttft",
+            "p99 tbt r8",
+            "p99 tbt r128",
+            "hi-rank decode",
+            "mixed decode",
+            "decode pad",
+            "drops",
+        ],
+    );
+    for &prefill in &prefills {
+        for &decode in &decodes {
+            let cfg =
+                SimConfig::new(cluster.clone(), SystemKind::SLoraRandom)
+                    .with_batch_policy(prefill)
+                    .with_decode_policy(decode);
+            let mut rep = run(trace, &cfg);
+            let tbt_lo = rep.tbt_p99_class(8);
+            let tbt_hi = rep.tbt_p99_class(128);
+            table.row(vec![
+                prefill.label(),
+                decode.label(),
+                fmt_secs(rep.ttft_p95()),
+                fmt_secs(tbt_lo),
+                fmt_secs(tbt_hi),
+                format!("{:.1}%", rep.highrank_decode_share() * 100.0),
+                format!("{:.1}%", rep.mixed_decode_share() * 100.0),
+                rep.decode_pad_rank.to_string(),
+                rep.timeouts.to_string(),
+            ]);
+        }
+    }
+    table
+}
+
+/// The skewed-rank, decode-heavy workload of the decode grid:
+/// exponential rank popularity (most traffic rank-8, a high-rank
+/// minority) with long outputs so the decode tail dominates.
+pub fn skewed_decode_trace(rps: f64, seed: u64, duration: f64) -> Trace {
+    azure::generate(&AzureConfig {
+        popularity: RankPopularity::Exponential,
+        rps,
+        duration,
+        seed,
+        lengths: LengthModel::fixed(256, 64),
+        ..Default::default()
+    })
+}
+
 pub fn sched(opts: &FigOpts) -> std::io::Result<()> {
     // Mixed ranks with short outputs: prefill iterations dominate, so
     // batch *composition* (not decode-set mixing) drives the
@@ -79,5 +170,17 @@ pub fn sched(opts: &FigOpts) -> std::io::Result<()> {
         rebalance_period: 30.0,
         ..Default::default()
     };
-    sched_table(&trace, &cluster).emit(RESULTS_DIR, "sched")
+    sched_table(&trace, &cluster).emit(RESULTS_DIR, "sched")?;
+    // Decode grid: skewed ranks + long outputs on a small fleet, so
+    // active sets mix classes and the decode tail is where the rank
+    // tax lands.
+    let decode_trace =
+        skewed_decode_trace(14.0, opts.seed, opts.scale(480.0));
+    let decode_cluster = ClusterConfig {
+        n_servers: 2,
+        rebalance_period: 30.0,
+        ..Default::default()
+    };
+    sched_decode_table(&decode_trace, &decode_cluster)
+        .emit(RESULTS_DIR, "sched_decode")
 }

@@ -19,6 +19,12 @@ use loraserve::util::cli::Args;
 use loraserve::util::table::{fmt_bytes, fmt_secs, Table};
 
 fn main() {
+    // Demo custom-system registration: any placer registered by name
+    // here resolves from `--system <name>` through the same
+    // composition seam the canned systems use.
+    sim::register_custom_system("round-robin", |_seed| {
+        Box::new(loraserve::placement::baselines::RoundRobinPlacer::new())
+    });
     let args = match Args::from_env(&["all", "fast", "help", "empirical"]) {
         Ok(a) => a,
         Err(e) => {
@@ -56,10 +62,12 @@ fn usage() {
          USAGE: loraserve <subcommand> [options]\n\n\
          figures  --all | --fig <id>   [--fast] [--seed S]\n\
          simulate --system <loraserve|slora-random|slora-contiguous|\
-         toppings>\n         \
+         toppings|round-robin>\n         \
          [--trace prod|shifting|uniform] [--rps R] [--servers N]\n         \
          [--adapters N] [--duration S] [--seed S] [--config file.json]\n         \
-         [--batch-policy fifo|rank-bucketed[:W]|rank-cap[:F]]\n\
+         [--batch-policy fifo|rank-bucketed[:W]|rank-bucketed-cost[:W]|\
+         rank-cap[:F]]\n         \
+         [--decode-policy unified|rank-partitioned|class-subbatch[:G]]\n\
          autoscale [--system <kind>|--all] [--slo-ttft MS] \
          [--slo-e2e MS]\n         \
          [--metric ttft|e2e] [--percentile P] [--max-servers N]\n         \
@@ -72,15 +80,47 @@ fn usage() {
     );
 }
 
-fn parse_system(s: &str) -> Result<SystemKind, String> {
-    match s {
-        "loraserve" => Ok(SystemKind::LoraServe),
-        "slora-random" | "random" => Ok(SystemKind::SLoraRandom),
-        "slora-contiguous" | "contiguous" => {
-            Ok(SystemKind::SLoraContiguous)
+/// A `--system` argument: one of the four canned kinds, or the name of
+/// a placer registered with `sim::register_custom_system`.
+enum SystemChoice {
+    Canned(SystemKind),
+    Custom(String),
+}
+
+impl SystemChoice {
+    fn canned(&self) -> Result<SystemKind, String> {
+        match self {
+            SystemChoice::Canned(k) => Ok(*k),
+            SystemChoice::Custom(name) => Err(format!(
+                "custom system '{name}' is only supported by \
+                 `simulate` (the capacity planner needs a canned kind)"
+            )),
         }
-        "toppings" => Ok(SystemKind::Toppings),
-        other => Err(format!("unknown system '{other}'")),
+    }
+}
+
+fn parse_system(s: &str) -> Result<SystemChoice, String> {
+    match s {
+        "loraserve" => Ok(SystemChoice::Canned(SystemKind::LoraServe)),
+        "slora-random" | "random" => {
+            Ok(SystemChoice::Canned(SystemKind::SLoraRandom))
+        }
+        "slora-contiguous" | "contiguous" => {
+            Ok(SystemChoice::Canned(SystemKind::SLoraContiguous))
+        }
+        "toppings" => Ok(SystemChoice::Canned(SystemKind::Toppings)),
+        other => {
+            let registered = sim::registered_custom_systems();
+            if registered.iter().any(|&n| n == other) {
+                Ok(SystemChoice::Custom(other.to_string()))
+            } else {
+                Err(format!(
+                    "unknown system '{other}' (canned: loraserve | \
+                     slora-random | slora-contiguous | toppings; \
+                     registered custom: {registered:?})"
+                ))
+            }
+        }
     }
 }
 
@@ -126,11 +166,15 @@ fn build_cluster(args: &Args) -> Result<ClusterConfig, String> {
         cluster.batch_policy =
             loraserve::config::BatchPolicyKind::parse(bp)?;
     }
+    if let Some(dp) = args.get("decode-policy") {
+        cluster.decode_policy =
+            loraserve::config::DecodePolicyKind::parse(dp)?;
+    }
     Ok(cluster)
 }
 
 fn cmd_simulate(args: &Args) -> Result<(), String> {
-    let system = parse_system(args.get_or("system", "loraserve"))?;
+    let choice = parse_system(args.get_or("system", "loraserve"))?;
     let cluster = build_cluster(args)?;
     let rps = args.get_f64("rps", 16.0)?;
     let duration = args.get_f64("duration", 600.0)?;
@@ -166,19 +210,45 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         ),
         other => return Err(format!("unknown trace kind '{other}'")),
     };
+    let label = match &choice {
+        SystemChoice::Canned(k) => k.label().to_string(),
+        SystemChoice::Custom(name) => name.clone(),
+    };
     println!(
         "simulating {} on '{}' ({} reqs, {:.1} rps, {} servers)",
-        system.label(),
+        label,
         trace.name,
         trace.requests.len(),
         trace.mean_rps(),
         cluster.n_servers
     );
     let t0 = std::time::Instant::now();
-    let mut rep = sim::run(
-        &trace,
-        &sim::SimConfig::new(cluster.clone(), system),
-    );
+    let mut rep = match &choice {
+        SystemChoice::Canned(k) => sim::run(
+            &trace,
+            &sim::SimConfig::new(cluster.clone(), *k),
+        ),
+        SystemChoice::Custom(name) => {
+            let spec = sim::custom_system_spec(
+                name,
+                cluster.batch_policy,
+                cluster.decode_policy,
+            )
+            .ok_or_else(|| {
+                format!("custom system '{name}' not registered")
+            })?;
+            // the canned kind inside SimConfig is unused by run_spec;
+            // it only carries the cluster/warmup knobs
+            sim::run_spec(
+                &trace,
+                &sim::SimConfig::new(
+                    cluster.clone(),
+                    SystemKind::LoraServe,
+                ),
+                &spec,
+            )
+        }
+    };
     let wall = t0.elapsed().as_secs_f64();
     let mut table = Table::new("simulation report", &["metric", "value"]);
     let meets = rep.meets_slo(cluster.slo.ttft_p95);
@@ -192,6 +262,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         ("tbt p95", fmt_secs(rep.tbt_p95())),
         ("meets slo", meets.to_string()),
         ("batch policy", rep.batch_policy.clone()),
+        ("decode policy", rep.decode_policy.clone()),
         (
             "hi-rank iter share",
             format!("{:.1}%", rep.highrank_iter_share() * 100.0),
@@ -200,6 +271,15 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
             "mixed prefill share",
             format!("{:.1}%", rep.mixed_prefill_share() * 100.0),
         ),
+        (
+            "hi-rank decode share",
+            format!("{:.1}%", rep.highrank_decode_share() * 100.0),
+        ),
+        (
+            "mixed decode share",
+            format!("{:.1}%", rep.mixed_decode_share() * 100.0),
+        ),
+        ("decode pad (rank·tok)", rep.decode_pad_rank.to_string()),
         ("rebalances", rep.rebalances.to_string()),
         ("migrated", fmt_bytes(rep.migration_bytes)),
         ("fetches", rep.fetches.to_string()),
@@ -297,7 +377,8 @@ fn cmd_autoscale(args: &Args) -> Result<(), String> {
         if args.flag("all") || args.get("system") == Some("all") {
             SystemKind::all().to_vec()
         } else {
-            vec![parse_system(args.get_or("system", "loraserve"))?]
+            vec![parse_system(args.get_or("system", "loraserve"))?
+                .canned()?]
         };
     println!(
         "capacity planning on '{}' ({} reqs, {:.1} rps): {} p{:.0} ≤ {} \
@@ -480,7 +561,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let n_requests = args.get_usize("requests", 40)?;
     let duration = args.get_f64("duration", 15.0)?;
     let seed = args.get_u64("seed", 0)?;
-    let system = parse_system(args.get_or("system", "loraserve"))?;
+    let system =
+        parse_system(args.get_or("system", "loraserve"))?.canned()?;
     let dir = args.get_or("artifacts", "artifacts").to_string();
     let mut cluster = loraserve::server::RealCluster::start(
         loraserve::server::RealClusterConfig {

@@ -87,6 +87,34 @@ impl Placer for ContiguousPlacer {
     }
 }
 
+/// Rank- and demand-blind round-robin: adapter `i` lives on server
+/// `i mod n`. Deliberately simple — it is the demo registration target
+/// for the custom-system registry (`sim::register_custom_system`, the
+/// CLI's `--system round-robin`), showing that a new placer plugs into
+/// the composition seam without touching the engine.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundRobinPlacer;
+
+impl RoundRobinPlacer {
+    pub fn new() -> Self {
+        RoundRobinPlacer
+    }
+}
+
+impl Placer for RoundRobinPlacer {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn place(&mut self, ctx: &PlacementCtx) -> Assignment {
+        let mut asg = Assignment::new(ctx.adapters.len());
+        for a in ctx.adapters.iter() {
+            asg.add(a.id, a.id as usize % ctx.n_servers, 1.0);
+        }
+        asg
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,6 +192,23 @@ mod tests {
             x.heterogeneity(5, &data.adapters).iter().sum::<usize>()
         };
         assert!(h(&a) <= h(&r));
+    }
+
+    #[test]
+    fn round_robin_valid_and_spread() {
+        let data = random_ctx(17, 41, 4);
+        let mut p = RoundRobinPlacer::new();
+        let a = p.place(&data.ctx());
+        a.validate(4).unwrap();
+        let counts: Vec<usize> =
+            (0..4).map(|s| a.adapters_on(s).len()).collect();
+        let max = counts.iter().max().unwrap();
+        let min = counts.iter().min().unwrap();
+        assert!(max - min <= 1, "{counts:?}");
+        // shrinks with the topology like every placer
+        let mut ctx2 = data.ctx();
+        ctx2.n_servers = 2;
+        p.place(&ctx2).validate(2).unwrap();
     }
 
     #[test]

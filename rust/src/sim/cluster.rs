@@ -14,8 +14,12 @@ use super::engine::{
     LoadSignal, PlacementPolicy, PoolMode, RoutingPolicy, SystemSpec,
 };
 use super::report::SimReport;
-use crate::config::{AutoscaleConfig, BatchPolicyKind, ClusterConfig};
+use crate::config::{
+    AutoscaleConfig, BatchPolicyKind, ClusterConfig, DecodePolicyKind,
+};
+use crate::placement::Placer;
 use crate::trace::Trace;
+use std::sync::{Mutex, OnceLock};
 
 /// The four systems of §V-D.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,6 +56,7 @@ impl SystemKind {
         &self,
         opts: &LoraServeOpts,
         batch: BatchPolicyKind,
+        decode: DecodePolicyKind,
     ) -> SystemSpec {
         // (the Toppings arm below forces Replicated regardless)
         let pool = if opts.full_replication {
@@ -65,6 +70,7 @@ impl SystemKind {
             routing: RoutingPolicy::Table,
             pool,
             batch,
+            decode,
             periodic_rebalance: false,
             empirical_oppoints: false,
             rank_agnostic: opts.rank_agnostic,
@@ -132,11 +138,16 @@ pub struct SimConfig {
     /// `ClusterConfig::batch_policy` so the CLI/config knob threads
     /// through every consumer (figures, planner, autoscale replay).
     pub batch: BatchPolicyKind,
+    /// Decode-set composition policy of every simulated server. Seeded
+    /// from `ClusterConfig::decode_policy`, threaded exactly like
+    /// `batch`.
+    pub decode: DecodePolicyKind,
 }
 
 impl SimConfig {
     pub fn new(cluster: ClusterConfig, system: SystemKind) -> Self {
         let batch = cluster.batch_policy;
+        let decode = cluster.decode_policy;
         SimConfig {
             cluster,
             system,
@@ -145,6 +156,7 @@ impl SimConfig {
             max_events: 500_000_000,
             autoscale: None,
             batch,
+            decode,
         }
     }
 
@@ -162,6 +174,11 @@ impl SimConfig {
         self.batch = batch;
         self
     }
+
+    pub fn with_decode_policy(mut self, decode: DecodePolicyKind) -> Self {
+        self.decode = decode;
+        self
+    }
 }
 
 /// Run one trace through one canned system. Deterministic per
@@ -169,8 +186,70 @@ impl SimConfig {
 /// drives the [`SimEngine`](super::engine::SimEngine); custom systems
 /// use [`run_spec`](super::engine::run_spec) directly.
 pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
-    let spec = cfg.system.spec(&cfg.opts, cfg.batch);
+    let spec = cfg.system.spec(&cfg.opts, cfg.batch, cfg.decode);
     super::engine::run_spec(trace, cfg, &spec)
+}
+
+// ---------------------------------------------------------------------
+// Custom-system registry: placers registered by name, resolvable from
+// `--system <name>` (and anywhere else a system is named). The engine
+// already accepts `PlacementPolicy::Custom`; this gives it a CLI
+// surface.
+
+type PlacerCtor = fn(u64) -> Box<dyn Placer>;
+
+fn custom_registry() -> &'static Mutex<Vec<(&'static str, PlacerCtor)>> {
+    static REGISTRY: OnceLock<Mutex<Vec<(&'static str, PlacerCtor)>>> =
+        OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Register a custom placer constructor under `name` (keyed by
+/// `&'static str`). After registration, `--system <name>` and
+/// [`custom_system_spec`] resolve it. Re-registering a name replaces
+/// the previous constructor.
+pub fn register_custom_system(name: &'static str, build: PlacerCtor) {
+    let mut reg = custom_registry().lock().unwrap();
+    if let Some(entry) = reg.iter_mut().find(|(n, _)| *n == name) {
+        entry.1 = build;
+    } else {
+        reg.push((name, build));
+    }
+}
+
+/// Names currently registered with [`register_custom_system`] — the
+/// list an unknown-system error reports.
+pub fn registered_custom_systems() -> Vec<&'static str> {
+    custom_registry().lock().unwrap().iter().map(|(n, _)| *n).collect()
+}
+
+/// The [`SystemSpec`] of a registered custom placer: φ-table routing
+/// over a distributed pool with periodic demand-driven re-placement
+/// (the same operating harness as the placer-backed canned systems),
+/// under the given batch/decode policies. `None` if `name` was never
+/// registered.
+pub fn custom_system_spec(
+    name: &str,
+    batch: BatchPolicyKind,
+    decode: DecodePolicyKind,
+) -> Option<SystemSpec> {
+    let reg = custom_registry().lock().unwrap();
+    let &(static_name, build) =
+        reg.iter().find(|(n, _)| *n == name)?;
+    Some(SystemSpec {
+        label: static_name.to_string(),
+        placement: PlacementPolicy::Custom(static_name, build),
+        routing: RoutingPolicy::Table,
+        pool: PoolMode::Distributed,
+        batch,
+        decode,
+        periodic_rebalance: true,
+        empirical_oppoints: false,
+        rank_agnostic: false,
+        last_value_demand: false,
+        load_signal: LoadSignal::ServiceSeconds,
+        rank_blind_cost: false,
+    })
 }
 
 #[cfg(test)]
@@ -319,6 +398,99 @@ mod tests {
                 rep.makespan
             );
         }
+    }
+
+    #[test]
+    fn custom_registry_registers_and_resolves() {
+        use crate::config::DecodePolicyKind;
+        use crate::placement::baselines::RoundRobinPlacer;
+        assert!(custom_system_spec(
+            "definitely-not-registered",
+            BatchPolicyKind::Fifo,
+            DecodePolicyKind::Unified,
+        )
+        .is_none());
+        register_custom_system("rr-test", |_seed| {
+            Box::new(RoundRobinPlacer::new())
+        });
+        assert!(registered_custom_systems().contains(&"rr-test"));
+        let spec = custom_system_spec(
+            "rr-test",
+            BatchPolicyKind::Fifo,
+            DecodePolicyKind::Unified,
+        )
+        .expect("registered name must resolve");
+        assert_eq!(spec.label, "rr-test");
+        // the spec runs end to end through the composition seam
+        let trace = small_trace(4.0, 11);
+        let cfg = SimConfig::new(cluster(), SystemKind::LoraServe);
+        let rep = crate::sim::run_spec(&trace, &cfg, &spec);
+        assert_eq!(
+            rep.completed + rep.timeouts,
+            trace.requests.len() as u64
+        );
+        assert_eq!(rep.system, "rr-test");
+        // re-registering a name replaces, not duplicates
+        register_custom_system("rr-test", |_seed| {
+            Box::new(RoundRobinPlacer::new())
+        });
+        let n = registered_custom_systems()
+            .iter()
+            .filter(|&&x| x == "rr-test")
+            .count();
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn decode_policies_conserve_completions() {
+        use crate::config::DecodePolicyKind;
+        // decode-heavy light load: every request completes under every
+        // decode policy — composition changes latency, never outcomes
+        let trace = azure::generate(&AzureConfig {
+            rps: 3.0,
+            duration: 120.0,
+            seed: 21,
+            lengths: LengthModel::fixed(256, 48),
+            ..Default::default()
+        });
+        let mut completed = Vec::new();
+        for decode in [
+            DecodePolicyKind::Unified,
+            DecodePolicyKind::RankPartitioned,
+            DecodePolicyKind::ClassSubBatch { max_groups: 2 },
+        ] {
+            let cfg = SimConfig::new(cluster(), SystemKind::SLoraRandom)
+                .with_decode_policy(decode);
+            let rep = run(&trace, &cfg);
+            assert_eq!(
+                rep.completed + rep.timeouts,
+                trace.requests.len() as u64,
+                "{}: requests lost",
+                decode.label()
+            );
+            assert_eq!(
+                rep.timeouts,
+                0,
+                "{}: light load must not time out",
+                decode.label()
+            );
+            assert_eq!(rep.decode_policy, decode.label());
+            // determinism per decode policy
+            let rep2 = run(&trace, &cfg);
+            assert_eq!(rep.completed, rep2.completed);
+            assert_eq!(
+                rep.makespan.to_bits(),
+                rep2.makespan.to_bits(),
+                "{}: non-deterministic",
+                decode.label()
+            );
+            completed.push(rep.completed);
+        }
+        assert!(
+            completed.iter().all(|&c| c == completed[0]),
+            "completion counts diverge across decode policies: \
+             {completed:?}"
+        );
     }
 
     #[test]

@@ -14,6 +14,10 @@
 //! * [`PoolMode`] — distributed adapter pool vs full replication;
 //! * [`crate::config::BatchPolicyKind`] — the per-server prefill
 //!   admission policy (the scheduler half of the design space);
+//! * [`crate::config::DecodePolicyKind`] — the per-server decode-set
+//!   composition (unified max-rank decode vs SGMV-style per-rank-class
+//!   sub-batch steps), making the scheduler seam symmetric across both
+//!   phases of generation;
 //!
 //! plus the smaller behavioral switches (periodic rebalancing,
 //! empirical vs analytic operating points, the load signal the router
@@ -121,6 +125,9 @@ pub struct SystemSpec {
     pub routing: RoutingPolicy,
     pub pool: PoolMode,
     pub batch: crate::config::BatchPolicyKind,
+    /// Per-server decode-set composition (the decode half of the
+    /// scheduler seam, symmetric with `batch`).
+    pub decode: crate::config::DecodePolicyKind,
     /// Re-place periodically from projected demand (Algorithm 1's time
     /// step). Static placements skip this entirely.
     pub periodic_rebalance: bool,
@@ -217,6 +224,11 @@ pub struct SimEngine<'a> {
     spec: &'a SystemSpec,
     cm: CostModel,
     oppoints: BTreeMap<u32, f64>,
+    /// Demand-weighted per-server capacity (tokens/s on the trace's
+    /// rank mix; harmonic mean of per-class operating points weighted
+    /// by token share) — the fleet-capacity yardstick the predictive
+    /// autoscaler sizes scale-ups against.
+    server_capacity_tps: f64,
     uniform_demand: BTreeMap<AdapterId, f64>,
     placer: Option<Box<dyn Placer>>,
     max_n: usize,
@@ -259,6 +271,48 @@ impl<'a> SimEngine<'a> {
                 *v = mean;
             }
         }
+        // Demand-weighted per-server capacity: tokens/s one server
+        // sustains on the trace's *actual* rank mix — the
+        // token-share-weighted harmonic mean of the per-class
+        // operating points (service time adds, so capacities combine
+        // harmonically). An unweighted mean over the classes would
+        // systematically mis-size predictive scale-ups on skewed-rank
+        // mixes (e.g. 85% rank-8 traffic priced at the rank-128 rate).
+        let server_capacity_tps = {
+            let mut tok_by_rank: BTreeMap<u32, f64> = BTreeMap::new();
+            for r in &trace.requests {
+                *tok_by_rank
+                    .entry(trace.adapters.get(r.adapter).rank)
+                    .or_insert(0.0) += r.total_tokens() as f64;
+            }
+            let total: f64 = tok_by_rank.values().sum();
+            // ranks missing from oppoints (none today: the map is
+            // keyed by the trace's unique_ranks) price as the most
+            // expensive known class — same conservative fallback as
+            // cost-weighted class selection, never a 1.0-denominator
+            // that would collapse the capacity estimate
+            let min_op = oppoints
+                .values()
+                .copied()
+                .fold(f64::INFINITY, f64::min);
+            let denom: f64 = tok_by_rank
+                .iter()
+                .map(|(rank, t)| {
+                    t / oppoints
+                        .get(rank)
+                        .copied()
+                        .unwrap_or(min_op)
+                        .max(1e-9)
+                })
+                .sum();
+            if total > 0.0 && denom > 0.0 {
+                total / denom
+            } else if oppoints.is_empty() {
+                0.0
+            } else {
+                oppoints.values().sum::<f64>() / oppoints.len() as f64
+            }
+        };
 
         // ---- initial placement + router + pool
         let uniform_demand: BTreeMap<AdapterId, f64> = trace
@@ -309,7 +363,16 @@ impl<'a> SimEngine<'a> {
         demand.last_value_only = spec.last_value_demand;
 
         let servers: Vec<SimServer> = (0..max_n)
-            .map(|s| SimServer::with_policy(s, cm, build_policy(spec.batch)))
+            .map(|s| {
+                SimServer::with_policy(
+                    s,
+                    cm,
+                    // cost-weighted class selection scores with the
+                    // same (possibly empirical/flattened) operating
+                    // points the placer and planner use
+                    build_policy(spec.batch, spec.decode, &oppoints),
+                )
+            })
             .collect();
 
         let report = SimReport {
@@ -317,6 +380,7 @@ impl<'a> SimEngine<'a> {
             trace: trace.name.clone(),
             offered_rps: trace.mean_rps(),
             batch_policy: spec.batch.label(),
+            decode_policy: spec.decode.label(),
             per_server_ttft: vec![Default::default(); max_n],
             fleet: FleetMetrics::new(cfg.cluster.server.tp, n0),
             ..Default::default()
@@ -350,6 +414,7 @@ impl<'a> SimEngine<'a> {
             spec,
             cm,
             oppoints,
+            server_capacity_tps,
             uniform_demand,
             placer,
             max_n,
@@ -525,6 +590,12 @@ impl<'a> SimEngine<'a> {
             self.st.report.fleet.record_completion(violated);
             if c.tbt.is_finite() {
                 self.st.report.tbt.push(c.tbt);
+                self.st
+                    .report
+                    .tbt_by_class
+                    .entry(c.rank)
+                    .or_default()
+                    .push(c.tbt);
             }
             self.st.report.per_server_ttft[s].push(c.ttft);
             self.st
@@ -679,6 +750,7 @@ impl<'a> SimEngine<'a> {
                 .map(|&s| self.st.servers[s].pending_count())
                 .sum(),
             projected_tps: self.st.demand.total_projected_tps(),
+            server_tps_capacity: self.server_capacity_tps,
         };
         self.st.win_completed = 0;
         self.st.win_violations = 0;
@@ -895,6 +967,17 @@ impl<'a> SimEngine<'a> {
             self.st.report.mixed_prefill_iters +=
                 srv.mixed_prefill_iters;
             self.st.report.pad_rank_tokens += srv.pad_rank_tokens;
+            self.st.report.decode_steps += srv.decode_steps;
+            self.st.report.mixed_decode_steps += srv.mixed_decode_steps;
+            self.st.report.decode_pad_rank += srv.decode_pad_rank;
+            for (&class, &n) in &srv.decode_steps_by_class {
+                *self
+                    .st
+                    .report
+                    .decode_steps_by_class
+                    .entry(class)
+                    .or_insert(0) += n;
+            }
         }
         self.st.report.fetches = self.st.pool.total_fetches;
         self.st.report.fetch_bytes = self.st.pool.total_fetch_bytes;

@@ -14,9 +14,13 @@ pub mod report;
 pub mod server;
 pub mod topology;
 
-pub use cluster::{run, LoraServeOpts, SimConfig, SystemKind};
+pub use cluster::{
+    custom_system_spec, register_custom_system,
+    registered_custom_systems, run, LoraServeOpts, SimConfig, SystemKind,
+};
 pub use engine::{
     run_spec, LoadSignal, PlacementPolicy, PoolMode, RoutingPolicy,
     SimEngine, SystemSpec,
 };
 pub use report::SimReport;
+pub use server::{BatchPolicy, DecodeGroup, DecodePlan};

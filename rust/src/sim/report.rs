@@ -45,8 +45,26 @@ pub struct SimReport {
     pub prefill_iters: u64,
     pub mixed_prefill_iters: u64,
     pub pad_rank_tokens: u64,
+    /// Decode-composition diagnostics: sub-batch steps run, steps
+    /// whose group mixed ≥ 2 distinct ranks (only unified decode
+    /// produces these), and Σ (group_max_rank − rank) per member per
+    /// step — the pad-to-max-rank decode work a rank-aware decode
+    /// policy recovers (unit rank·tokens, comparable to
+    /// `pad_rank_tokens`).
+    pub decode_steps: u64,
+    pub mixed_decode_steps: u64,
+    pub decode_pad_rank: u64,
+    /// Decode sub-batch steps by the rank class each step *paid* (its
+    /// group's max rank) — the per-class decode-iteration mix.
+    pub decode_steps_by_class: BTreeMap<u32, u64>,
+    /// Mean time-between-tokens samples keyed by the request's adapter
+    /// rank class — the per-class TBT attribution decode-aware
+    /// scheduling is judged on.
+    pub tbt_by_class: BTreeMap<u32, Samples>,
     /// Label of the batch policy the servers admitted with.
     pub batch_policy: String,
+    /// Label of the decode-set composition policy the servers ran.
+    pub decode_policy: String,
     pub rebalances: u64,
     /// Fleet accounting (GPU-seconds, scale events, size timeline,
     /// SLO-violation rate). For fixed-fleet runs the timeline is the
@@ -98,6 +116,39 @@ impl SimReport {
         self.mixed_prefill_iters as f64 / self.prefill_iters as f64
     }
 
+    /// Share of decode sub-batch steps billed at a high (≥ 64) rank —
+    /// the decode-side interference indicator the `sched` ablation
+    /// compares across decode policies.
+    pub fn highrank_decode_share(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        let hi: u64 = self
+            .decode_steps_by_class
+            .iter()
+            .filter(|(&class, _)| class >= 64)
+            .map(|(_, &n)| n)
+            .sum();
+        hi as f64 / self.decode_steps as f64
+    }
+
+    /// Share of decode sub-batch steps that mixed ≥ 2 distinct ranks.
+    pub fn mixed_decode_share(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        self.mixed_decode_steps as f64 / self.decode_steps as f64
+    }
+
+    /// P99 mean-TBT of one rank class (NaN if the class completed
+    /// nothing measurable).
+    pub fn tbt_p99_class(&mut self, rank: u32) -> f64 {
+        match self.tbt_by_class.get_mut(&rank) {
+            Some(s) if !s.is_empty() => s.p99(),
+            _ => f64::NAN,
+        }
+    }
+
     pub fn ttft_p95(&mut self) -> f64 {
         self.ttft.p95()
     }
@@ -139,5 +190,29 @@ mod tests {
         assert!(!r.meets_slo(10.0));
         assert!(r.completion_rate().is_nan());
         assert_eq!(r.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn decode_shares_and_per_class_tbt() {
+        let mut r = SimReport::default();
+        assert_eq!(r.highrank_decode_share(), 0.0);
+        assert_eq!(r.mixed_decode_share(), 0.0);
+        assert!(r.tbt_p99_class(8).is_nan());
+        r.decode_steps = 10;
+        r.mixed_decode_steps = 4;
+        r.decode_steps_by_class.insert(8, 3);
+        r.decode_steps_by_class.insert(64, 5);
+        r.decode_steps_by_class.insert(128, 2);
+        assert!((r.highrank_decode_share() - 0.7).abs() < 1e-12);
+        assert!((r.mixed_decode_share() - 0.4).abs() < 1e-12);
+        for i in 0..100 {
+            r.tbt_by_class
+                .entry(8)
+                .or_default()
+                .push(i as f64 / 100.0);
+        }
+        let p99 = r.tbt_p99_class(8);
+        assert!(p99 > 0.9 && p99 <= 1.0, "{p99}");
+        assert!(r.tbt_p99_class(128).is_nan());
     }
 }

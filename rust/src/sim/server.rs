@@ -7,16 +7,27 @@
 //! present in that batch** (`costmodel::prefill_time`/`decode_time`),
 //! exactly the pad-to-max-rank behaviour of the BGMV/MBGMV kernels.
 //!
-//! *What* enters a batch is pluggable via [`BatchPolicy`]: [`Fifo`]
-//! reproduces the classic arrival-order admission bit for bit, while
-//! [`RankBucketed`] and [`RankCap`] are rank-aware compositions (the
-//! CaraServe-style scheduler half of the design space) that trade a
-//! little queueing for rank-homogeneous batches.
+//! Both phases of generation are policy-composed via [`BatchPolicy`]:
+//!
+//! * **Prefill admission** (`admit`): [`Fifo`] reproduces the classic
+//!   arrival-order admission bit for bit, while [`RankBucketed`] and
+//!   [`RankCap`] are rank-aware compositions (the CaraServe-style
+//!   scheduler half of the design space) that trade a little queueing
+//!   for rank-homogeneous batches.
+//! * **Decode composition** (`compose_decode`): the active set is
+//!   decoded as a [`DecodePlan`] — a round of one or more sub-batch
+//!   steps, each with its own service time and `busy_until`. The
+//!   default (unified) plan is one whole-set step at the set's max
+//!   rank, the pre-refactor behavior bit for bit; the
+//!   [`RankPartitionedDecode`] and [`ClassSubBatchDecode`] decorators
+//!   split the round into per-rank-class steps (SGMV-style grouped
+//!   kernels), so a rank-8 tenant stops paying a co-resident rank-128
+//!   tenant's operating point for its whole decode tail.
 
-use crate::config::BatchPolicyKind;
+use crate::config::{BatchPolicyKind, ClassSelect, DecodePolicyKind};
 use crate::costmodel::CostModel;
 use crate::workload::{AdapterId, Request};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 /// A request resident on a server.
 #[derive(Debug, Clone, Copy)]
@@ -95,12 +106,69 @@ impl GpuAdapterCache {
     }
 }
 
-/// Prefill admission: given the ready queue (FIFO by arrival), decide
-/// which requests enter this iteration's prefill batch. Implementations
-/// remove admitted requests from `queue` (preserving the relative order
-/// of everything left behind) and must respect `slots` (free decode
-/// slots) and `max_tokens` (iteration token budget; the first admitted
-/// request is exempt so oversized prompts still run alone).
+/// One decode sub-batch: the active sequences (by their per-server
+/// `ActiveReq::seq` id) that step together, paying their group's
+/// maximum rank. Every sub-batch of a multi-group round pays the
+/// per-sub-batch kernel-launch overhead (`CostModel::decode_class`);
+/// single-group rounds are billed through the legacy unified formula.
+#[derive(Debug, Clone)]
+pub struct DecodeGroup {
+    pub seqs: Vec<u64>,
+}
+
+/// A decode round composed by policy: one or more disjoint sub-batch
+/// steps over the active set. The round is atomic — all its steps run
+/// (each with its own service time and `busy_until`) before the next
+/// prefill admission check.
+#[derive(Debug, Clone, Default)]
+pub struct DecodePlan {
+    pub groups: Vec<DecodeGroup>,
+}
+
+impl DecodePlan {
+    /// The unified (pre-refactor) plan: one whole-set step, no launch
+    /// overhead.
+    pub fn unified(active: &[ActiveReq]) -> DecodePlan {
+        if active.is_empty() {
+            return DecodePlan::default();
+        }
+        DecodePlan {
+            groups: vec![DecodeGroup {
+                seqs: active.iter().map(|a| a.seq).collect(),
+            }],
+        }
+    }
+
+    pub fn total_members(&self) -> usize {
+        self.groups.iter().map(|g| g.seqs.len()).sum()
+    }
+}
+
+/// Group the active set by exact rank class, ascending rank. The
+/// building block of the rank-aware decode compositions.
+fn classes_of(active: &[ActiveReq]) -> BTreeMap<u32, Vec<u64>> {
+    let mut classes: BTreeMap<u32, Vec<u64>> = BTreeMap::new();
+    for a in active {
+        classes.entry(a.sreq.rank).or_default().push(a.seq);
+    }
+    classes
+}
+
+/// Batch composition policy for *both* phases of generation.
+///
+/// **Prefill admission** (`admit`): given the ready queue (FIFO by
+/// arrival), decide which requests enter this iteration's prefill
+/// batch. Implementations remove admitted requests from `queue`
+/// (preserving the relative order of everything left behind) and must
+/// respect `slots` (free decode slots) and `max_tokens` (iteration
+/// token budget; the first admitted request is exempt so oversized
+/// prompts still run alone).
+///
+/// **Decode composition** (`compose_decode`): given the active set,
+/// produce the [`DecodePlan`] for the next decode round. Groups must
+/// be disjoint, non-empty, and cover at most `slots` sequences in
+/// total. The default is the unified whole-set plan (the pre-refactor
+/// decode, bit for bit).
 pub trait BatchPolicy: std::fmt::Debug {
     fn name(&self) -> &'static str;
 
@@ -110,19 +178,60 @@ pub trait BatchPolicy: std::fmt::Debug {
         slots: usize,
         max_tokens: u64,
     ) -> Vec<SimReq>;
+
+    fn compose_decode(
+        &mut self,
+        active: &[ActiveReq],
+        slots: usize,
+        _cm: &CostModel,
+    ) -> DecodePlan {
+        let _ = slots; // the whole-set plan can never exceed slots
+        DecodePlan::unified(active)
+    }
 }
 
 /// Build the policy instance a server owns (policies carry per-server
-/// state such as starvation counters, so each server gets its own).
-pub fn build_policy(kind: BatchPolicyKind) -> Box<dyn BatchPolicy> {
-    match kind {
+/// state such as starvation counters and fairness rotors, so each
+/// server gets its own). The prefill policy comes from `batch`; the
+/// decode policy wraps it as a decorator (`decode`), so one object
+/// composes both phases. `oppoints` (rank → tokens/s under SLO) scores
+/// cost-weighted class selection — pass the same map the rest of the
+/// system plans with (the engine passes its trace-derived, possibly
+/// empirical/flattened operating points, so selection and
+/// placement/planning never disagree).
+pub fn build_policy(
+    batch: BatchPolicyKind,
+    decode: DecodePolicyKind,
+    oppoints: &BTreeMap<u32, f64>,
+) -> Box<dyn BatchPolicy> {
+    let base: Box<dyn BatchPolicy> = match batch {
         BatchPolicyKind::Fifo => Box::new(Fifo),
-        BatchPolicyKind::RankBucketed { max_wait_iters } => {
-            Box::new(RankBucketed::new(max_wait_iters))
-        }
+        BatchPolicyKind::RankBucketed {
+            max_wait_iters,
+            select,
+        } => match select {
+            ClassSelect::LargestQueue => {
+                Box::new(RankBucketed::new(max_wait_iters))
+            }
+            ClassSelect::CostWeighted => {
+                Box::new(RankBucketed::cost_weighted(
+                    max_wait_iters,
+                    oppoints.clone(),
+                ))
+            }
+        },
         BatchPolicyKind::RankCap { factor } => {
             Box::new(RankCap::new(factor))
         }
+    };
+    match decode {
+        DecodePolicyKind::Unified => base,
+        DecodePolicyKind::RankPartitioned => {
+            Box::new(RankPartitionedDecode::new(base))
+        }
+        DecodePolicyKind::ClassSubBatch { max_groups } => Box::new(
+            ClassSubBatchDecode::new(base, max_groups.max(1) as usize),
+        ),
     }
 }
 
@@ -160,20 +269,31 @@ impl BatchPolicy for Fifo {
 }
 
 /// One rank class per prefill iteration: the chosen class's requests
-/// are admitted in arrival order; every other class waits. The class
-/// with the most queued requests wins (ties go to the class whose
-/// oldest request arrived first), except that whenever the queue's
-/// head request has been passed over `max_wait_iters` consecutive
-/// prefill iterations, its class is forced — the bounded-wait
-/// starvation guard. Because admission scans from the front, a forced
-/// class always admits the head, so no request waits at the head for
-/// more than `max_wait_iters` admitting iterations.
-#[derive(Debug, Clone, Copy)]
+/// are admitted in arrival order; every other class waits. By default
+/// the class with the most queued requests wins (ties go to the class
+/// whose oldest request arrived first); with cost-weighted selection
+/// ([`RankBucketed::cost_weighted`]) the class with the most queued
+/// *work* — queued prompt tokens ÷ the class's operating point — wins
+/// instead, so a short queue of expensive high-rank prompts can
+/// outrank a long queue of cheap ones. Either way, whenever the
+/// queue's head request has been passed over `max_wait_iters`
+/// consecutive prefill iterations, its class is forced — the
+/// bounded-wait starvation guard. Because admission scans from the
+/// front, a forced class always admits the head, so no request waits
+/// at the head for more than `max_wait_iters` admitting iterations.
+#[derive(Debug, Clone)]
 pub struct RankBucketed {
     pub max_wait_iters: u32,
     /// Consecutive admitting iterations the current head request has
     /// been passed over.
     waited: u32,
+    /// Cost-weighted class selection: rank → operating point (tokens/s
+    /// under SLO). Empty = largest-queued-class selection (the
+    /// original behavior). Ranks missing from the map (the engine
+    /// keys it by the trace's ranks, so normally none) score with the
+    /// map's minimum operating point — unknown means assume expensive,
+    /// never a runaway 1.0-denominator score.
+    oppoints: BTreeMap<u32, f64>,
 }
 
 impl RankBucketed {
@@ -181,6 +301,20 @@ impl RankBucketed {
         RankBucketed {
             max_wait_iters,
             waited: 0,
+            oppoints: BTreeMap::new(),
+        }
+    }
+
+    /// Cost-weighted class selection against the given per-rank
+    /// operating points (`ClassSelect::CostWeighted`).
+    pub fn cost_weighted(
+        max_wait_iters: u32,
+        oppoints: BTreeMap<u32, f64>,
+    ) -> Self {
+        RankBucketed {
+            max_wait_iters,
+            waited: 0,
+            oppoints,
         }
     }
 }
@@ -203,16 +337,38 @@ impl BatchPolicy for RankBucketed {
         let chosen = if self.waited >= self.max_wait_iters {
             front_rank
         } else {
-            // largest queued class; ties to the oldest head
-            let mut counts: std::collections::BTreeMap<u32, (usize, usize)> =
+            // highest-scoring class; ties to the oldest head. The
+            // score is the queued request count (largest-queue) or
+            // queued tokens ÷ operating point (cost-weighted).
+            let mut stats: BTreeMap<u32, (usize, usize, u64)> =
                 Default::default();
             for (i, r) in queue.iter().enumerate() {
-                counts.entry(r.rank).or_insert((0, i)).0 += 1;
+                let e = stats.entry(r.rank).or_insert((0, i, 0));
+                e.0 += 1;
+                e.2 += r.req.prompt_len as u64;
             }
-            let mut best = (0usize, usize::MAX, 0u32);
-            for (&rank, &(count, first)) in &counts {
-                if count > best.0 || (count == best.0 && first < best.1) {
-                    best = (count, first, rank);
+            let mut best = (f64::NEG_INFINITY, usize::MAX, 0u32);
+            for (&rank, &(count, first, tokens)) in &stats {
+                let score = if self.oppoints.is_empty() {
+                    count as f64
+                } else {
+                    let op = self
+                        .oppoints
+                        .get(&rank)
+                        .copied()
+                        .unwrap_or_else(|| {
+                            // unknown rank: assume the most expensive
+                            // class we know about
+                            self.oppoints
+                                .values()
+                                .copied()
+                                .fold(f64::INFINITY, f64::min)
+                        })
+                        .max(1e-9);
+                    tokens as f64 / op
+                };
+                if score > best.0 || (score == best.0 && first < best.1) {
+                    best = (score, first, rank);
                 }
             }
             best.2
@@ -317,26 +473,157 @@ impl BatchPolicy for RankCap {
     }
 }
 
+/// Rank-partitioned decode decorator: prefill admission delegates to
+/// the wrapped policy; every decode round runs one sub-batch step per
+/// rank class present in the active set (ascending rank), so each
+/// class pays only its own operating point — the SGMV-style grouped
+/// kernel, at the cost of one launch overhead per sub-batch whenever
+/// the round has more than one class.
+#[derive(Debug)]
+pub struct RankPartitionedDecode {
+    inner: Box<dyn BatchPolicy>,
+}
+
+impl RankPartitionedDecode {
+    pub fn new(inner: Box<dyn BatchPolicy>) -> Self {
+        RankPartitionedDecode { inner }
+    }
+}
+
+impl BatchPolicy for RankPartitionedDecode {
+    fn name(&self) -> &'static str {
+        "rank-partitioned"
+    }
+
+    fn admit(
+        &mut self,
+        queue: &mut VecDeque<SimReq>,
+        slots: usize,
+        max_tokens: u64,
+    ) -> Vec<SimReq> {
+        self.inner.admit(queue, slots, max_tokens)
+    }
+
+    fn compose_decode(
+        &mut self,
+        active: &[ActiveReq],
+        _slots: usize,
+        _cm: &CostModel,
+    ) -> DecodePlan {
+        DecodePlan {
+            groups: classes_of(active)
+                .into_values()
+                .map(|seqs| DecodeGroup { seqs })
+                .collect(),
+        }
+    }
+}
+
+/// Class-sub-batch decode decorator: like [`RankPartitionedDecode`]
+/// but at most `max_groups` classes decode per round, bounding kernel
+/// launches when many rank classes are co-resident. A cyclic fairness
+/// rotor over the rank classes picks which classes go each round, so a
+/// non-empty class is never skipped for more than
+/// ⌈classes/max_groups⌉ − 1 consecutive rounds.
+#[derive(Debug)]
+pub struct ClassSubBatchDecode {
+    inner: Box<dyn BatchPolicy>,
+    max_groups: usize,
+    /// Rank of the last class the rotor served; the next round starts
+    /// from the first class strictly above it (cyclic).
+    rotor: u32,
+}
+
+impl ClassSubBatchDecode {
+    pub fn new(inner: Box<dyn BatchPolicy>, max_groups: usize) -> Self {
+        assert!(max_groups >= 1, "class-subbatch needs max_groups >= 1");
+        ClassSubBatchDecode {
+            inner,
+            max_groups,
+            rotor: 0,
+        }
+    }
+}
+
+impl BatchPolicy for ClassSubBatchDecode {
+    fn name(&self) -> &'static str {
+        "class-subbatch"
+    }
+
+    fn admit(
+        &mut self,
+        queue: &mut VecDeque<SimReq>,
+        slots: usize,
+        max_tokens: u64,
+    ) -> Vec<SimReq> {
+        self.inner.admit(queue, slots, max_tokens)
+    }
+
+    fn compose_decode(
+        &mut self,
+        active: &[ActiveReq],
+        _slots: usize,
+        _cm: &CostModel,
+    ) -> DecodePlan {
+        let mut classes = classes_of(active);
+        if classes.len() > self.max_groups {
+            // cyclic rotor: serve the next `max_groups` classes in
+            // ascending-rank order, starting just above the last rank
+            // served (wrapping), and remember where we stopped
+            let ranks: Vec<u32> = classes.keys().copied().collect();
+            let start = ranks
+                .iter()
+                .position(|&r| r > self.rotor)
+                .unwrap_or(0);
+            let take: Vec<u32> = (0..self.max_groups)
+                .map(|k| ranks[(start + k) % ranks.len()])
+                .collect();
+            self.rotor = *take.last().unwrap();
+            classes.retain(|r, _| take.contains(r));
+        } else if let Some(&last) = classes.keys().next_back() {
+            self.rotor = last;
+        }
+        DecodePlan {
+            groups: classes
+                .into_values()
+                .map(|seqs| DecodeGroup { seqs })
+                .collect(),
+        }
+    }
+}
+
 #[derive(Debug, Clone, Copy)]
 pub struct ActiveReq {
     pub sreq: SimReq,
     /// Tokens produced so far (>= 1 once prefilled).
     pub produced: u32,
     pub first_token_at: f64,
+    /// Per-server activation sequence number — the stable id decode
+    /// plans reference members by (request ids can repeat across
+    /// traces; this never does within a server).
+    pub seq: u64,
 }
 
 /// What the server is currently executing.
 #[derive(Debug, Clone)]
 pub enum Iteration {
     Idle,
-    Prefill { batch: Vec<SimReq> },
-    Decode,
+    Prefill {
+        batch: Vec<SimReq>,
+    },
+    /// One decode sub-batch step: the member `seq` ids of the running
+    /// group (the whole active set under the unified plan).
+    Decode {
+        seqs: Vec<u64>,
+    },
 }
 
 /// Outcome of one finished request.
 #[derive(Debug, Clone, Copy)]
 pub struct Completion {
     pub req: Request,
+    /// Adapter rank of the request (per-rank-class attribution).
+    pub rank: u32,
     pub server: usize,
     pub ttft: f64,
     /// Mean time between tokens (NaN for single-token outputs).
@@ -376,9 +663,41 @@ pub struct SimServer {
     pub prefill_iters: u64,
     pub mixed_prefill_iters: u64,
     pub pad_rank_tokens: u64,
-    /// Prefill admission policy (owned per server: policies carry
-    /// starvation-guard state).
+    /// Decode-composition diagnostics (per decode policy): sub-batch
+    /// steps run, steps whose group mixed ≥2 distinct ranks (only the
+    /// unified plan produces these), and Σ (group_max_rank − rank) per
+    /// member per step — the pad-to-max-rank work the decode kernels
+    /// burn on mixed groups (each member produces one token per step,
+    /// so the unit is rank·tokens, comparable to `pad_rank_tokens`).
+    pub decode_steps: u64,
+    pub mixed_decode_steps: u64,
+    pub decode_pad_rank: u64,
+    /// Sub-batch steps by the rank class the step *paid* (its group
+    /// max rank) — the per-class decode-iteration mix.
+    pub decode_steps_by_class: BTreeMap<u32, u64>,
+    /// Batch composition policy, both phases (owned per server:
+    /// policies carry starvation-guard and fairness-rotor state).
     pub policy: Box<dyn BatchPolicy>,
+    /// Remaining sub-batch steps of the decode round in flight, priced
+    /// and profiled once at composition (membership cannot change
+    /// until a group's own step runs, so the stats stay exact). The
+    /// round is atomic: these run before the next prefill admission.
+    pending_decode: VecDeque<PricedStep>,
+    /// Next `ActiveReq::seq` to hand out.
+    next_seq: u64,
+}
+
+/// One pre-priced decode sub-batch step: the group's membership plus
+/// the stats and service time computed at round composition, so the
+/// per-step hot path never rescans the active set.
+#[derive(Debug, Clone)]
+struct PricedStep {
+    seqs: Vec<u64>,
+    time: f64,
+    members: usize,
+    max_rank: u32,
+    rank_sum: u64,
+    mixed: bool,
 }
 
 impl SimServer {
@@ -413,7 +732,13 @@ impl SimServer {
             prefill_iters: 0,
             mixed_prefill_iters: 0,
             pad_rank_tokens: 0,
+            decode_steps: 0,
+            mixed_decode_steps: 0,
+            decode_pad_rank: 0,
+            decode_steps_by_class: BTreeMap::new(),
             policy,
+            pending_decode: VecDeque::new(),
+            next_seq: 0,
         }
     }
 
@@ -540,11 +865,19 @@ impl SimServer {
     ///
     /// Prefill-prioritized iteration-level scheduling: the owned
     /// [`BatchPolicy`] admits a prefill batch (token budget + slot
-    /// limited) if any request is queued, otherwise one decode step
-    /// runs over all active sequences.
+    /// limited) if any request is queued, otherwise the policy
+    /// composes a [`DecodePlan`] over the active set and its sub-batch
+    /// steps run one per iteration (the whole set in one step under
+    /// the unified default). A decode round in flight finishes all its
+    /// steps before the next prefill admission check.
     pub fn start_iteration(&mut self, now: f64) -> Option<f64> {
         if !self.is_idle() {
             return None;
+        }
+        // decode-round continuation: remaining sub-batch steps run
+        // before any new admission (the plan is atomic)
+        if let Some(t) = self.start_pending_decode(now) {
+            return Some(t);
         }
         // admit prefills (policy-selected composition)
         let slots = self
@@ -600,25 +933,151 @@ impl SimServer {
             return Some(time);
         }
         if !self.active.is_empty() {
-            let b = self.active.len();
-            let cached: u64 = self
-                .active
-                .iter()
-                .map(|a| {
-                    a.sreq.req.prompt_len as u64 + a.produced as u64
-                })
-                .sum();
-            let max_rank =
-                self.active.iter().map(|a| a.sreq.rank).max().unwrap();
-            let time = self.cm.decode(b, cached, max_rank);
-            self.iters += 1;
-            self.iters_highrank += (max_rank >= 64) as u64;
-            self.running = Iteration::Decode;
-            self.busy_until = now + time;
-            self.busy_time += time;
-            return Some(time);
+            let plan = self.policy.compose_decode(
+                &self.active,
+                self.cm.server.max_batch_size,
+                &self.cm,
+            );
+            debug_assert!(
+                plan.total_members() <= self.cm.server.max_batch_size,
+                "decode plan exceeds slots"
+            );
+            self.pending_decode = self.price_decode_round(plan);
+            if self.pending_decode.is_empty() {
+                // A malformed custom plan (empty, or only empty
+                // groups) must not stall a server with live decodes —
+                // nothing else would ever re-arm it and its requests
+                // would silently never complete. Fall back to the
+                // unified whole-set round.
+                debug_assert!(false, "decode plan left active set unserved");
+                self.pending_decode = self
+                    .price_decode_round(DecodePlan::unified(&self.active));
+            }
+            if let Some(t) = self.start_pending_decode(now) {
+                return Some(t);
+            }
         }
         None
+    }
+
+    /// Per-member stats of one group's `seqs` (must be sorted — the
+    /// pricing path sorts every group once) against the current active
+    /// set: (members, cached tokens, max rank, Σ rank, mixed?). Runs
+    /// once per group at round composition — the per-step hot path
+    /// reuses the stored result.
+    fn group_stats(&self, seqs: &[u64]) -> (usize, u64, u32, u64, bool) {
+        let mut b = 0usize;
+        let mut cached = 0u64;
+        let mut max_rank = 0u32;
+        let mut rank_sum = 0u64;
+        let mut mixed = false;
+        // membership: whole-set groups (the unified default) hit the
+        // O(n) fast path; sub-batches binary-search their sorted seqs
+        let whole_set = seqs.len() == self.active.len();
+        for a in &self.active {
+            if !whole_set && seqs.binary_search(&a.seq).is_err() {
+                continue;
+            }
+            if b > 0 && a.sreq.rank != max_rank {
+                mixed = true;
+            }
+            b += 1;
+            cached += a.sreq.req.prompt_len as u64 + a.produced as u64;
+            rank_sum += u64::from(a.sreq.rank);
+            max_rank = max_rank.max(a.sreq.rank);
+        }
+        (b, cached, max_rank, rank_sum, mixed)
+    }
+
+    /// Price a composed decode round into per-step service times and
+    /// stats.
+    ///
+    /// A single-group round is billed through the legacy whole-batch
+    /// formula (`cm.decode`) — bit-identical to the pre-refactor
+    /// decode for the unified plan. A multi-group (SGMV-style) round
+    /// shares one forward pass: its *first* step carries the
+    /// weight-streaming/KV/overhead base of the entire round's
+    /// membership (`cm.decode_base`), and every step adds only its own
+    /// class's grouped LoRA kernel plus the per-sub-batch launch
+    /// overhead (`cm.decode_class`). Members of later groups cannot
+    /// change before their step runs (groups are disjoint, only a
+    /// group's own step completes its members, and the round blocks
+    /// prefill admission), so pricing at composition time is exact.
+    fn price_decode_round(&self, plan: DecodePlan) -> VecDeque<PricedStep> {
+        // profile the groups that actually run (empty groups dropped
+        // first, so a [real, empty] plan is priced as a single-group
+        // round, not a mispriced multi-group one)
+        let mut profiled: Vec<(Vec<u64>, usize, u64, u32, u64, bool)> =
+            Vec::with_capacity(plan.groups.len());
+        let mut b_total = 0usize;
+        let mut cached_total = 0u64;
+        for group in plan.groups {
+            // sorted once here so every later membership check (stats,
+            // token production) can binary-search instead of scanning
+            let mut seqs = group.seqs;
+            seqs.sort_unstable();
+            let (b, cached, max_rank, rank_sum, mixed) =
+                self.group_stats(&seqs);
+            if b == 0 {
+                continue; // empty group: nothing to run
+            }
+            b_total += b;
+            cached_total += cached;
+            profiled.push((seqs, b, cached, max_rank, rank_sum, mixed));
+        }
+        let multi = profiled.len() > 1;
+        let mut steps: VecDeque<PricedStep> =
+            VecDeque::with_capacity(profiled.len());
+        for (i, (seqs, b, cached, max_rank, rank_sum, mixed)) in
+            profiled.into_iter().enumerate()
+        {
+            let mut time = if multi {
+                self.cm.decode_class(b, max_rank, true)
+            } else {
+                self.cm.decode(b, cached, max_rank)
+            };
+            if multi && i == 0 {
+                // the round's shared forward-pass base lands on its
+                // first step
+                time += self.cm.decode_base(b_total, cached_total);
+            }
+            steps.push_back(PricedStep {
+                seqs,
+                time,
+                members: b,
+                max_rank,
+                rank_sum,
+                mixed,
+            });
+        }
+        steps
+    }
+
+    /// Run the next sub-batch step of the decode round in flight, if
+    /// any.
+    fn start_pending_decode(&mut self, now: f64) -> Option<f64> {
+        let step = self.pending_decode.pop_front()?;
+        debug_assert_eq!(
+            self.group_stats(&step.seqs).0,
+            step.members,
+            "decode-round membership changed between composition and \
+             its step"
+        );
+        self.iters += 1;
+        self.iters_highrank += (step.max_rank >= 64) as u64;
+        self.decode_steps += 1;
+        self.mixed_decode_steps += step.mixed as u64;
+        // Σ (group_max − rank) over members, one token each
+        self.decode_pad_rank +=
+            u64::from(step.max_rank) * step.members as u64 - step.rank_sum;
+        *self
+            .decode_steps_by_class
+            .entry(step.max_rank)
+            .or_insert(0) += 1;
+        self.running = Iteration::Decode { seqs: step.seqs };
+        self.busy_until = now + step.time;
+        self.busy_time += step.time;
+        Some(step.time)
     }
 
     /// Finish the running iteration; returns completed requests.
@@ -634,29 +1093,41 @@ impl SimServer {
                         self.outstanding -= sreq.est;
                         done.push(Completion {
                             req: sreq.req,
+                            rank: sreq.rank,
                             server: self.id,
                             ttft,
                             tbt: f64::NAN,
                             finished_at: now,
                         });
                     } else {
+                        let seq = self.next_seq;
+                        self.next_seq += 1;
                         self.active.push(ActiveReq {
                             sreq,
                             produced: 1,
                             first_token_at: now,
+                            seq,
                         });
                     }
                 }
             }
-            Iteration::Decode => {
+            Iteration::Decode { seqs } => {
                 let id = self.id;
                 let outstanding = &mut self.outstanding;
+                // whole-set steps (the unified default) skip the
+                // per-member membership check entirely; sub-batch
+                // steps binary-search their (priced-time-sorted) seqs
+                let whole_set = seqs.len() == self.active.len();
                 self.active.retain_mut(|a| {
+                    if !whole_set && seqs.binary_search(&a.seq).is_err() {
+                        return true; // not in this sub-batch step
+                    }
                     a.produced += 1;
                     if a.produced >= a.sreq.req.output_len {
                         *outstanding -= a.sreq.est;
                         done.push(Completion {
                             req: a.sreq.req,
+                            rank: a.sreq.rank,
                             server: id,
                             ttft: a.first_token_at - a.sreq.req.arrival,
                             tbt: (now - a.first_token_at)
@@ -668,6 +1139,10 @@ impl SimServer {
                         true
                     }
                 });
+                if self.active.is_empty() {
+                    // nothing left for any remaining (stale) steps
+                    self.pending_decode.clear();
+                }
             }
         }
         done
@@ -916,12 +1391,24 @@ mod tests {
 
     #[test]
     fn policies_respect_slots_and_token_budget() {
+        let ops = crate::costmodel::operating_points(
+            &ServerConfig::default(),
+            &crate::workload::RANK_CLASSES,
+        );
         for kind in [
             BatchPolicyKind::Fifo,
-            BatchPolicyKind::RankBucketed { max_wait_iters: 4 },
+            BatchPolicyKind::RankBucketed {
+                max_wait_iters: 4,
+                select: ClassSelect::LargestQueue,
+            },
+            BatchPolicyKind::RankBucketed {
+                max_wait_iters: 4,
+                select: ClassSelect::CostWeighted,
+            },
             BatchPolicyKind::RankCap { factor: 2 },
         ] {
-            let mut pol = build_policy(kind);
+            let mut pol =
+                build_policy(kind, DecodePolicyKind::Unified, &ops);
             let mut q: VecDeque<SimReq> = VecDeque::new();
             for i in 0..6 {
                 q.push_back(req(i as f64, i, 100, 1));
@@ -986,5 +1473,191 @@ mod tests {
         s.enqueue_ready(req(t, 1, 10, 2));
         s.start_iteration(t).unwrap();
         assert!(matches!(s.running, Iteration::Prefill { .. }));
+    }
+
+    /// Unified decode parity at the unit level: the sub-batch step of
+    /// the single-group plan bills exactly the pre-refactor whole-set
+    /// formula `cm.decode(b, cached, max_rank)`, bit for bit.
+    #[test]
+    fn unified_decode_step_matches_legacy_formula() {
+        let mut s = server();
+        let mut lo = req(0.0, 0, 100, 3);
+        lo.rank = 8;
+        let mut hi = req(0.0, 1, 300, 3);
+        hi.rank = 128;
+        s.enqueue_ready(lo);
+        s.enqueue_ready(hi);
+        let t1 = s.start_iteration(0.0).unwrap();
+        s.finish_iteration(t1);
+        assert_eq!(s.active.len(), 2);
+        let t2 = s.start_iteration(t1).unwrap();
+        assert!(matches!(s.running, Iteration::Decode { .. }));
+        // cached = Σ prompt + produced(=1); whole set pays max rank
+        let want = s.cm.decode(2, (100 + 1) + (300 + 1), 128);
+        assert_eq!(t2.to_bits(), want.to_bits());
+        assert_eq!(s.decode_steps, 1);
+        assert_eq!(s.mixed_decode_steps, 1);
+        assert_eq!(s.decode_pad_rank, (128 - 8) as u64);
+        assert_eq!(s.decode_steps_by_class.get(&128), Some(&1));
+    }
+
+    /// A mixed active set under RankPartitioned decodes as one
+    /// homogeneous sub-batch step per rank class, each billed at its
+    /// own rank plus the launch overhead, with per-class completion
+    /// times.
+    #[test]
+    fn rank_partitioned_decode_runs_per_class_steps() {
+        let cm = CostModel::new(ServerConfig::default());
+        let mut s = SimServer::with_policy(
+            0,
+            cm,
+            build_policy(
+                BatchPolicyKind::Fifo,
+                DecodePolicyKind::RankPartitioned,
+                &BTreeMap::new(),
+            ),
+        );
+        let mut lo = req(0.0, 0, 100, 2);
+        lo.rank = 8;
+        let mut hi = req(0.0, 1, 100, 2);
+        hi.rank = 128;
+        s.enqueue_ready(lo);
+        s.enqueue_ready(hi);
+        let t1 = s.start_iteration(0.0).unwrap();
+        s.finish_iteration(t1);
+        // decode round of two class steps sharing one forward pass:
+        // step 1 = rank-8 class — it carries the round's base (the
+        // whole membership's weights/KV/overheads) plus its own
+        // grouped kernel and launch overhead
+        let t2 = s.start_iteration(t1).unwrap();
+        let want_lo = s.cm.decode_class(1, 8, true)
+            + s.cm.decode_base(2, 202);
+        assert_eq!(t2.to_bits(), want_lo.to_bits());
+        let done = s.finish_iteration(t1 + t2);
+        assert_eq!(done.len(), 1, "rank-8 member finishes first");
+        assert_eq!(done[0].rank, 8);
+        // step 2 = rank-128 class: only its own kernel + launch, still
+        // the same round (no prefill in between even if one were
+        // queued — the round is atomic)
+        let t3 = s.start_iteration(t1 + t2).unwrap();
+        let want_hi = s.cm.decode_class(1, 128, true);
+        assert_eq!(t3.to_bits(), want_hi.to_bits());
+        let done = s.finish_iteration(t1 + t2 + t3);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].rank, 128);
+        assert!(s.quiesced());
+        assert_eq!(s.decode_steps, 2);
+        assert_eq!(s.mixed_decode_steps, 0, "groups are homogeneous");
+        assert_eq!(s.decode_pad_rank, 0);
+        assert_eq!(s.decode_steps_by_class.get(&8), Some(&1));
+        assert_eq!(s.decode_steps_by_class.get(&128), Some(&1));
+        // the round pays strictly less than unified + its two launch
+        // overheads: the rank-8 member's recovered padding is real
+        // (with bigger low-rank groups the round beats unified
+        // outright — see costmodel::grouped_decode_cost_split)
+        let launch = s.cm.server.decode_launch_overhead;
+        assert!(t2 + t3 < s.cm.decode(2, 202, 128) + 2.0 * launch);
+    }
+
+    fn active_set(ranks: &[u32]) -> Vec<ActiveReq> {
+        ranks
+            .iter()
+            .enumerate()
+            .map(|(i, &rank)| ActiveReq {
+                sreq: {
+                    let mut r = req(0.0, i as AdapterId, 64, 8);
+                    r.rank = rank;
+                    r
+                },
+                produced: 1,
+                first_token_at: 0.0,
+                seq: i as u64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn class_subbatch_rotor_serves_all_classes() {
+        let cm = CostModel::new(ServerConfig::default());
+        let mut pol = ClassSubBatchDecode::new(Box::new(Fifo), 2);
+        let active = active_set(&[8, 8, 16, 32, 64, 128, 128]);
+        // 5 classes, 2 per round: every class must be served at least
+        // once within ceil(5/2) = 3 consecutive rounds
+        let mut served: std::collections::BTreeSet<u32> =
+            Default::default();
+        for round in 0..3 {
+            let plan = pol.compose_decode(&active, 24, &cm);
+            assert!(plan.groups.len() <= 2, "round {round}");
+            for g in &plan.groups {
+                assert!(!g.seqs.is_empty());
+                let rank = active
+                    .iter()
+                    .find(|a| a.seq == g.seqs[0])
+                    .unwrap()
+                    .sreq
+                    .rank;
+                // homogeneous: every member has the group's rank
+                for &sq in &g.seqs {
+                    let a =
+                        active.iter().find(|a| a.seq == sq).unwrap();
+                    assert_eq!(a.sreq.rank, rank);
+                }
+                served.insert(rank);
+            }
+        }
+        assert_eq!(
+            served.into_iter().collect::<Vec<_>>(),
+            vec![8, 16, 32, 64, 128],
+            "rotor starved a class"
+        );
+        // few classes: behaves like rank-partitioned, no rotor skips
+        let small = active_set(&[8, 128]);
+        let plan = pol.compose_decode(&small, 24, &cm);
+        assert_eq!(plan.groups.len(), 2);
+        assert_eq!(plan.total_members(), 2);
+    }
+
+    #[test]
+    fn cost_weighted_class_selection_prefers_expensive_backlog() {
+        // three cheap rank-8 prompts vs two rank-128 prompts of the
+        // same length: largest-queue picks 8, cost-weighted picks 128
+        // (200 tokens / op 100 = 2.0 > 300 tokens / op 1000 = 0.3)
+        let fill = |q: &mut VecDeque<SimReq>| {
+            q.clear();
+            q.push_back(ranked(0.0, 0, 8));
+            q.push_back(ranked(1.0, 1, 128));
+            q.push_back(ranked(2.0, 2, 8));
+            q.push_back(ranked(3.0, 3, 128));
+            q.push_back(ranked(4.0, 4, 8));
+        };
+        let mut q: VecDeque<SimReq> = VecDeque::new();
+        fill(&mut q);
+        let mut largest = RankBucketed::new(8);
+        let batch = largest.admit(&mut q, 8, 10_000);
+        assert!(batch.iter().all(|r| r.rank == 8));
+        assert_eq!(batch.len(), 3);
+        let mut ops: BTreeMap<u32, f64> = BTreeMap::new();
+        ops.insert(8, 1000.0);
+        ops.insert(128, 100.0);
+        fill(&mut q);
+        let mut cost = RankBucketed::cost_weighted(8, ops);
+        let batch = cost.admit(&mut q, 8, 10_000);
+        assert!(batch.iter().all(|r| r.rank == 128), "{batch:?}");
+        assert_eq!(batch.len(), 2);
+        // the starvation guard still forces the head eventually
+        let mut q2: VecDeque<SimReq> = VecDeque::new();
+        let mut forced = RankBucketed::cost_weighted(1, {
+            let mut m = BTreeMap::new();
+            m.insert(8u32, 1000.0);
+            m.insert(128u32, 100.0);
+            m
+        });
+        q2.push_back(ranked(0.0, 0, 8)); // lone cheap head
+        q2.push_back(ranked(1.0, 1, 128));
+        let b1 = forced.admit(&mut q2, 8, 10_000);
+        assert!(b1.iter().all(|r| r.rank == 128));
+        q2.push_back(ranked(2.0, 2, 128));
+        let b2 = forced.admit(&mut q2, 8, 10_000);
+        assert_eq!(b2[0].rank, 8, "guard must force the head class");
     }
 }

@@ -1,0 +1,325 @@
+//! Decode-composition invariants: plan well-formedness (slot cap,
+//! disjointness, class homogeneity), the class-sub-batch fairness
+//! bound, completion conservation across decode policies, and the
+//! acceptance check behind the decode half of the scheduler seam —
+//! rank-partitioned decode shrinking the high-rank decode-step share
+//! and the low-rank classes' P99 TBT on a skewed-rank workload.
+//!
+//! (Bit-exact parity of the unified decode path with the pre-refactor
+//! engine is certified by `tests/sched_policies.rs`'s
+//! `fifo_engine_parity_all_systems` plus the unit test
+//! `unified_decode_step_matches_legacy_formula` in `sim::server`.)
+
+use loraserve::config::{
+    ClusterConfig, DecodePolicyKind, ModelSpec, ServerConfig,
+};
+use loraserve::costmodel::CostModel;
+use loraserve::sim::server::{
+    ActiveReq, BatchPolicy, ClassSubBatchDecode, Fifo,
+    RankPartitionedDecode, SimReq,
+};
+use loraserve::sim::{self, SimConfig, SimReport, SystemKind};
+use loraserve::trace::Trace;
+use loraserve::util::rng::Pcg32;
+use loraserve::workload::{AdapterSet, Request};
+use std::collections::{BTreeMap, BTreeSet};
+
+fn cm() -> CostModel {
+    CostModel::new(ServerConfig::default())
+}
+
+fn random_active(rng: &mut Pcg32, n: usize) -> Vec<ActiveReq> {
+    (0..n)
+        .map(|i| {
+            let rank = [8u32, 16, 32, 64, 128][rng.below(5) as usize];
+            ActiveReq {
+                sreq: SimReq {
+                    req: Request {
+                        id: i as u64,
+                        adapter: (i % 25) as u32,
+                        prompt_len: 64 + rng.below(400) as u32,
+                        output_len: 32,
+                        arrival: 0.0,
+                    },
+                    rank,
+                    adapter_bytes: 1 << 20,
+                    est: 0.1,
+                },
+                produced: 1 + rng.below(8) as u32,
+                first_token_at: 0.0,
+                seq: i as u64,
+            }
+        })
+        .collect()
+}
+
+fn rank_of(active: &[ActiveReq], seq: u64) -> u32 {
+    active.iter().find(|a| a.seq == seq).unwrap().sreq.rank
+}
+
+/// Property: composed plans never exceed the slot budget, never
+/// duplicate or invent members, and keep every group rank-homogeneous
+/// and non-empty; rank-partitioned covers the whole active set, and
+/// class-subbatch respects its group bound.
+#[test]
+fn decode_plans_are_well_formed() {
+    let cm = cm();
+    for seed in 0..8u64 {
+        let mut rng = Pcg32::new(300 + seed);
+        for n in [0usize, 1, 2, 5, 12, 24] {
+            let active = random_active(&mut rng, n);
+            let slots = 24usize;
+            let classes: BTreeSet<u32> =
+                active.iter().map(|a| a.sreq.rank).collect();
+            let mut partitioned =
+                RankPartitionedDecode::new(Box::new(Fifo));
+            let plan = partitioned.compose_decode(&active, slots, &cm);
+            assert_eq!(
+                plan.total_members(),
+                n,
+                "partitioned decodes everyone each round"
+            );
+            assert_eq!(plan.groups.len(), classes.len());
+            let mut seen: BTreeSet<u64> = BTreeSet::new();
+            for g in &plan.groups {
+                assert!(!g.seqs.is_empty(), "empty group");
+                let rank = rank_of(&active, g.seqs[0]);
+                for &sq in &g.seqs {
+                    assert!(seen.insert(sq), "seq {sq} in two groups");
+                    assert_eq!(
+                        rank_of(&active, sq),
+                        rank,
+                        "mixed-rank group"
+                    );
+                }
+            }
+            for k in [1usize, 2, 3] {
+                let mut sub = ClassSubBatchDecode::new(
+                    Box::new(Fifo),
+                    k,
+                );
+                let plan = sub.compose_decode(&active, slots, &cm);
+                assert!(plan.groups.len() <= k.min(classes.len().max(1)));
+                assert!(plan.total_members() <= slots);
+                let mut seen: BTreeSet<u64> = BTreeSet::new();
+                for g in &plan.groups {
+                    assert!(!g.seqs.is_empty());
+                    let rank = rank_of(&active, g.seqs[0]);
+                    for &sq in &g.seqs {
+                        assert!(seen.insert(sq));
+                        assert_eq!(rank_of(&active, sq), rank);
+                    }
+                }
+                if !active.is_empty() {
+                    assert!(
+                        !plan.groups.is_empty(),
+                        "non-empty active must decode something"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Property: the class-sub-batch rotor never skips a non-empty class
+/// for more than ⌈C/k⌉ − 1 consecutive rounds (the fairness bound),
+/// for a stable co-resident class set.
+#[test]
+fn class_subbatch_fairness_bound() {
+    let cm = cm();
+    let mut rng = Pcg32::new(77);
+    // 5 stable classes with randomized per-class populations
+    let mut active = Vec::new();
+    let mut seq = 0u64;
+    for &rank in &[8u32, 16, 32, 64, 128] {
+        for _ in 0..1 + rng.below(4) {
+            let mut a = random_active(&mut rng, 1).pop().unwrap();
+            a.sreq.rank = rank;
+            a.seq = seq;
+            seq += 1;
+            active.push(a);
+        }
+    }
+    let n_classes = 5usize;
+    for k in [1usize, 2, 3] {
+        let bound = n_classes.div_ceil(k); // served ≥ once per `bound`
+        let mut pol = ClassSubBatchDecode::new(Box::new(Fifo), k);
+        let mut waited: BTreeMap<u32, usize> = BTreeMap::new();
+        for round in 0..30 {
+            let plan = pol.compose_decode(&active, 24, &cm);
+            let served: BTreeSet<u32> = plan
+                .groups
+                .iter()
+                .map(|g| rank_of(&active, g.seqs[0]))
+                .collect();
+            for &rank in &[8u32, 16, 32, 64, 128] {
+                if served.contains(&rank) {
+                    waited.insert(rank, 0);
+                } else {
+                    let w = waited.entry(rank).or_insert(0);
+                    *w += 1;
+                    assert!(
+                        *w < bound,
+                        "k={k} round={round}: class {rank} skipped \
+                         {w} consecutive rounds (bound {bound})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The skewed-rank acceptance workload: two classes, ~85% rank-8
+/// traffic with a rank-128 minority always co-resident, long outputs
+/// so the decode tail dominates. Deterministic per seed.
+fn two_class_trace(rps: f64, duration: f64, seed: u64) -> Trace {
+    let adapters = AdapterSet::uniform_per_rank(
+        10,
+        &[8, 128],
+        &ModelSpec::LLAMA_7B,
+    );
+    let lo_ids: Vec<u32> = adapters
+        .iter()
+        .filter(|a| a.rank == 8)
+        .map(|a| a.id)
+        .collect();
+    let hi_ids: Vec<u32> = adapters
+        .iter()
+        .filter(|a| a.rank == 128)
+        .map(|a| a.id)
+        .collect();
+    let mut rng = Pcg32::new(seed);
+    let n = (rps * duration) as usize;
+    let requests: Vec<Request> = (0..n)
+        .map(|i| {
+            let pool = if rng.f64() < 0.85 { &lo_ids } else { &hi_ids };
+            Request {
+                id: i as u64,
+                adapter: pool[rng.below(pool.len() as u64) as usize],
+                prompt_len: 256,
+                output_len: 64,
+                arrival: duration * i as f64 / n as f64,
+            }
+        })
+        .collect();
+    Trace::new("two-class-skew", adapters, requests)
+}
+
+fn run_decode(
+    trace: &Trace,
+    decode: DecodePolicyKind,
+) -> SimReport {
+    let cluster = ClusterConfig {
+        n_servers: 1,
+        rebalance_period: 30.0,
+        ..Default::default()
+    };
+    sim::run(
+        trace,
+        &SimConfig::new(cluster, SystemKind::SLoraRandom)
+            .with_decode_policy(decode),
+    )
+}
+
+/// The acceptance check behind the decode seam: on the skewed-rank
+/// decode-heavy workload, rank-partitioned (and class-sub-batch)
+/// decode shrinks the cluster-wide high-rank decode-step share, wipes
+/// out decode-side pad-rank waste, and lowers the rank-8 class's P99
+/// TBT relative to unified max-rank decode — without losing a single
+/// request.
+#[test]
+fn rank_aware_decode_beats_unified_on_skewed_ranks() {
+    let trace = two_class_trace(6.0, 300.0, 5);
+    let mut unified = run_decode(&trace, DecodePolicyKind::Unified);
+    let mut partitioned =
+        run_decode(&trace, DecodePolicyKind::RankPartitioned);
+    let subbatch = run_decode(
+        &trace,
+        DecodePolicyKind::ClassSubBatch { max_groups: 2 },
+    );
+    for (rep, label) in [
+        (&unified, "unified"),
+        (&partitioned, "rank-partitioned"),
+        (&subbatch, "class-subbatch"),
+    ] {
+        assert_eq!(
+            rep.completed + rep.timeouts,
+            trace.requests.len() as u64,
+            "{label}: requests lost"
+        );
+        assert!(rep.decode_steps > 0, "{label}: no decode steps");
+    }
+    // structural: unified mixes ranks in decode and burns pad work;
+    // the rank-aware compositions never do
+    assert!(unified.mixed_decode_steps > 0);
+    assert!(unified.decode_pad_rank > 0);
+    assert_eq!(partitioned.mixed_decode_steps, 0);
+    assert_eq!(partitioned.decode_pad_rank, 0);
+    assert_eq!(subbatch.mixed_decode_steps, 0);
+    assert_eq!(subbatch.decode_pad_rank, 0);
+    // behavioral: the share of decode steps billed at a high rank
+    // collapses once the rank-128 minority stops dragging every step
+    assert!(
+        partitioned.highrank_decode_share()
+            < unified.highrank_decode_share(),
+        "partitioned {} !< unified {}",
+        partitioned.highrank_decode_share(),
+        unified.highrank_decode_share()
+    );
+    assert!(
+        subbatch.highrank_decode_share()
+            < unified.highrank_decode_share(),
+        "subbatch {} !< unified {}",
+        subbatch.highrank_decode_share(),
+        unified.highrank_decode_share()
+    );
+    // and the low-rank class's decode tail gets faster
+    let lo_unified = unified.tbt_p99_class(8);
+    let lo_partitioned = partitioned.tbt_p99_class(8);
+    assert!(
+        lo_partitioned < lo_unified,
+        "rank-8 p99 TBT: partitioned {lo_partitioned} !< unified \
+         {lo_unified}"
+    );
+}
+
+/// The `--decode-policy` knob threads end to end: the report labels
+/// the policy it ran, and the unified default matches an explicit
+/// unified run exactly.
+#[test]
+fn decode_knob_threads_through_config() {
+    let trace = two_class_trace(3.0, 90.0, 9);
+    let cluster = ClusterConfig {
+        n_servers: 1,
+        rebalance_period: 30.0,
+        ..Default::default()
+    };
+    let default_run = sim::run(
+        &trace,
+        &SimConfig::new(cluster.clone(), SystemKind::SLoraRandom),
+    );
+    assert_eq!(default_run.decode_policy, "unified");
+    let explicit = sim::run(
+        &trace,
+        &SimConfig::new(cluster.clone(), SystemKind::SLoraRandom)
+            .with_decode_policy(DecodePolicyKind::Unified),
+    );
+    assert_eq!(default_run.completed, explicit.completed);
+    assert_eq!(
+        default_run.makespan.to_bits(),
+        explicit.makespan.to_bits()
+    );
+    // cluster-config seeding (the JSON/CLI path) reaches the servers
+    let seeded = ClusterConfig {
+        n_servers: 1,
+        rebalance_period: 30.0,
+        decode_policy: DecodePolicyKind::RankPartitioned,
+        ..Default::default()
+    };
+    let rep = sim::run(
+        &trace,
+        &SimConfig::new(seeded, SystemKind::SLoraRandom),
+    );
+    assert_eq!(rep.decode_policy, "rank-partitioned");
+    assert_eq!(rep.mixed_decode_steps, 0);
+}

@@ -3,8 +3,10 @@
 //! rank-aware scheduling effect the `sched` ablation reports, and the
 //! `sched` figure smoke-run.
 
-use loraserve::config::{BatchPolicyKind, ClusterConfig};
-use loraserve::figures::sched::sched_table;
+use loraserve::config::{
+    BatchPolicyKind, ClassSelect, ClusterConfig, DecodePolicyKind,
+};
+use loraserve::figures::sched::{sched_decode_table, sched_table};
 use loraserve::sim::{
     self, run_spec, LoadSignal, PlacementPolicy, PoolMode,
     RoutingPolicy, SimConfig, SystemKind, SystemSpec,
@@ -42,6 +44,7 @@ fn hand_composed(kind: SystemKind) -> SystemSpec {
         routing: RoutingPolicy::Table,
         pool: PoolMode::Distributed,
         batch: BatchPolicyKind::Fifo,
+        decode: DecodePolicyKind::Unified,
         periodic_rebalance: false,
         empirical_oppoints: false,
         rank_agnostic: false,
@@ -144,6 +147,7 @@ fn rank_bucketed_reduces_highrank_share_under_random_placement() {
         &SimConfig::new(cluster(2), SystemKind::SLoraRandom)
             .with_batch_policy(BatchPolicyKind::RankBucketed {
                 max_wait_iters: 8,
+                select: ClassSelect::LargestQueue,
             }),
     );
     // structural: one rank class per prefill — no mixed batches, no
@@ -256,7 +260,7 @@ fn sched_figure_smoke_run() {
     let table = sched_table(&trace, &cluster(2));
     assert_eq!(
         table.rows.len(),
-        SystemKind::all().len() * 3,
+        SystemKind::all().len() * 4,
         "one row per system × policy"
     );
     for row in &table.rows {
@@ -268,6 +272,26 @@ fn sched_figure_smoke_run() {
     let md = table.to_markdown();
     assert!(md.contains("fifo"));
     assert!(md.contains("rank-bucketed"));
+    assert!(md.contains("rank-bucketed-cost"));
     assert!(md.contains("rank-cap"));
     assert!(md.contains("loraserve") && md.contains("toppings"));
+}
+
+/// The decode half of the ablation renders the full prefill × decode
+/// grid on a tiny trace.
+#[test]
+fn sched_decode_figure_smoke_run() {
+    let trace =
+        loraserve::figures::sched::skewed_decode_trace(4.0, 1, 60.0);
+    let table = sched_decode_table(&trace, &cluster(2));
+    assert_eq!(table.rows.len(), 2 * 3, "prefill × decode grid");
+    for row in &table.rows {
+        for cell in row {
+            assert!(!cell.is_empty(), "empty cell in {row:?}");
+        }
+    }
+    let md = table.to_markdown();
+    assert!(md.contains("unified"));
+    assert!(md.contains("rank-partitioned"));
+    assert!(md.contains("class-subbatch"));
 }
