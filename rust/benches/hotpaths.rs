@@ -256,7 +256,7 @@ fn main() {
         let mut pol = RankPartitionedDecode::new(Box::new(Fifo));
         b.run("sched: compose_decode (24 act.)", || {
             for _ in 0..1024 {
-                black_box(pol.compose_decode(&active, 24, &cm));
+                black_box(pol.compose_decode(&active, 24, &cm, None));
             }
             1024
         });

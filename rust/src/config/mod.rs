@@ -187,6 +187,59 @@ impl Default for AutoscaleConfig {
     }
 }
 
+/// Knobs of the scheduler's SLO feedback layer (`sim::slo::SloTracker`).
+///
+/// When `enabled`, every simulated server carries a rolling
+/// TTFT/TBT-headroom tracker that closes the loop between observed
+/// latency pressure and the batch/decode policies:
+///
+/// * **Preemptible decode rounds** (`preempt_decode`): between the
+///   sub-batch steps of a [`DecodePlan`](crate::sim::DecodePlan) round,
+///   a queued prefill may preempt the remaining steps when the queue
+///   head's projected TTFT headroom falls below `pressure_theta ×
+///   ttft_target`; the dropped steps are re-planned after the
+///   admission, so no request is ever lost.
+/// * **SLO-aware rotor**: `class-subbatch` decode serves the rank class
+///   with the worst rolling TBT headroom first, falling back to the
+///   cyclic fairness rotor when headrooms tie.
+/// * **Adaptive admission wait**: `rank-bucketed` scales its
+///   bounded-wait starvation guard by the queue head's remaining TTFT
+///   headroom, forcing the head class through as the target drains.
+///
+/// Disabled (the default), the scheduler is exactly the PR 3 open-loop
+/// scheduler, bit for bit. CLI: `--slo-ttft-ms`, `--slo-tbt-ms`,
+/// `--preempt-decode on|off`; JSON: `slo_ttft_ms`, `slo_tbt_ms`,
+/// `preempt_decode`, `slo_pressure_theta`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloFeedbackConfig {
+    /// Master switch: install the per-server tracker.
+    pub enabled: bool,
+    /// Scheduler-level TTFT target the tracker measures headroom
+    /// against, seconds. (Distinct from `SloConfig::ttft_p95`, the
+    /// evaluation SLA — the feedback target is typically much tighter.)
+    pub ttft_target: f64,
+    /// Per-token TBT target, seconds.
+    pub tbt_target: f64,
+    /// Allow queued prefills to preempt a decode round between its
+    /// sub-batch steps under TTFT pressure.
+    pub preempt_decode: bool,
+    /// Pressure threshold: headroom below `pressure_theta ×
+    /// ttft_target` counts as TTFT pressure. In [0, 1].
+    pub pressure_theta: f64,
+}
+
+impl Default for SloFeedbackConfig {
+    fn default() -> Self {
+        SloFeedbackConfig {
+            enabled: false,
+            ttft_target: 10.0,
+            tbt_target: 0.2,
+            preempt_decode: false,
+            pressure_theta: 0.5,
+        }
+    }
+}
+
 /// How `RankBucketed` picks the rank class that owns a prefill
 /// iteration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -279,8 +332,8 @@ impl BatchPolicyKind {
                 Ok(BatchPolicyKind::RankCap { factor })
             }
             other => Err(format!(
-                "unknown batch policy '{other}' \
-                 (fifo | rank-bucketed[:wait] | rank-bucketed-cost[:wait] \
+                "unknown batch policy '{other}' (valid: fifo | \
+                 rank-bucketed[:wait] | rank-bucketed-cost[:wait] \
                  | rank-cap[:factor])"
             )),
         }
@@ -330,14 +383,24 @@ pub enum DecodePolicyKind {
     /// At most `max_groups` rank classes decode per round, chosen by a
     /// cyclic fairness rotor over the classes present, bounding kernel
     /// launches per round: a non-empty class is never skipped for more
-    /// than ⌈classes/max_groups⌉ − 1 consecutive rounds.
+    /// than ⌈classes/max_groups⌉ − 1 consecutive rounds. Under SLO
+    /// feedback the rotor becomes SLO-aware: the classes with the
+    /// worst rolling TBT headroom go first, cyclic on ties.
     ClassSubBatch { max_groups: u32 },
+    /// Adaptive `max_groups` from the launch-overhead/padding
+    /// break-even (`CostModel::decode_split_gain`): each round, every
+    /// rank class whose recovered padding beats one extra sub-batch
+    /// launch decodes as its own group; the rest fold into the
+    /// maximum-rank group. Collapses to `unified` when no split pays,
+    /// to `rank-partitioned` when every split does.
+    ClassSubBatchAuto,
 }
 
 impl DecodePolicyKind {
     pub const DEFAULT_MAX_GROUPS: u32 = 2;
 
-    /// Parse `unified`, `rank-partitioned`, or `class-subbatch[:G]`.
+    /// Parse `unified`, `rank-partitioned`, `class-subbatch[:G]`, or
+    /// `class-subbatch:auto`.
     pub fn parse(s: &str) -> Result<DecodePolicyKind, String> {
         let (name, param) = match s.split_once(':') {
             Some((n, p)) => (n, Some(p)),
@@ -361,6 +424,9 @@ impl DecodePolicyKind {
             "class-subbatch" | "subbatch" => {
                 let max_groups = match param {
                     None => Self::DEFAULT_MAX_GROUPS,
+                    Some("auto") => {
+                        return Ok(DecodePolicyKind::ClassSubBatchAuto)
+                    }
                     Some(x) => x.parse::<u32>().map_err(|e| {
                         format!("decode-policy param '{x}': {e}")
                     })?,
@@ -373,8 +439,9 @@ impl DecodePolicyKind {
                 Ok(DecodePolicyKind::ClassSubBatch { max_groups })
             }
             other => Err(format!(
-                "unknown decode policy '{other}' \
-                 (unified | rank-partitioned | class-subbatch[:groups])"
+                "unknown decode policy '{other}' (valid: unified | \
+                 rank-partitioned | class-subbatch[:groups] | \
+                 class-subbatch:auto)"
             )),
         }
     }
@@ -387,6 +454,9 @@ impl DecodePolicyKind {
             }
             DecodePolicyKind::ClassSubBatch { max_groups } => {
                 format!("class-subbatch:{max_groups}")
+            }
+            DecodePolicyKind::ClassSubBatchAuto => {
+                "class-subbatch:auto".into()
             }
         }
     }
@@ -456,6 +526,10 @@ pub struct ClusterConfig {
     /// (threaded into `SimConfig` and the capacity planner, symmetric
     /// with `batch_policy`).
     pub decode_policy: DecodePolicyKind,
+    /// Scheduler SLO feedback layer (per-server headroom tracking,
+    /// preemptible decode rounds, SLO-aware rotor, adaptive waits).
+    /// Disabled by default — the PR 3 open-loop scheduler bit for bit.
+    pub feedback: SloFeedbackConfig,
     pub seed: u64,
 }
 
@@ -469,6 +543,7 @@ impl Default for ClusterConfig {
             autoscale: AutoscaleConfig::default(),
             batch_policy: BatchPolicyKind::default(),
             decode_policy: DecodePolicyKind::default(),
+            feedback: SloFeedbackConfig::default(),
             seed: 0,
         }
     }
@@ -526,6 +601,40 @@ impl ClusterConfig {
         }
         if let Some(s) = v.get("decode_policy").and_then(Json::as_str) {
             cfg.decode_policy = DecodePolicyKind::parse(s)?;
+        }
+        if let Some(x) = v.get("slo_ttft_ms").and_then(Json::as_f64) {
+            if x <= 0.0 {
+                return Err(format!("slo_ttft_ms must be > 0, got {x}"));
+            }
+            cfg.feedback.ttft_target = x / 1e3;
+            cfg.feedback.enabled = true;
+        }
+        if let Some(x) = v.get("slo_tbt_ms").and_then(Json::as_f64) {
+            if x <= 0.0 {
+                return Err(format!("slo_tbt_ms must be > 0, got {x}"));
+            }
+            cfg.feedback.tbt_target = x / 1e3;
+            cfg.feedback.enabled = true;
+        }
+        if let Some(b) = v.get("preempt_decode").and_then(Json::as_bool) {
+            cfg.feedback.preempt_decode = b;
+            if b {
+                cfg.feedback.enabled = true;
+            }
+        }
+        if let Some(x) =
+            v.get("slo_pressure_theta").and_then(Json::as_f64)
+        {
+            if !(0.0..=1.0).contains(&x) {
+                return Err(format!(
+                    "slo_pressure_theta must be in [0, 1], got {x}"
+                ));
+            }
+            cfg.feedback.pressure_theta = x;
+            // like every sibling feedback knob: tuning it switches the
+            // layer on (the targets have usable defaults), instead of
+            // being silently inert
+            cfg.feedback.enabled = true;
         }
         if let Some(x) =
             v.get("decode_launch_overhead_ms").and_then(Json::as_f64)
@@ -786,11 +895,17 @@ mod tests {
         assert!(DecodePolicyKind::parse("rank-partitioned:2").is_err());
         assert!(DecodePolicyKind::parse("nope").is_err());
         assert!(DecodePolicyKind::parse("class-subbatch:x").is_err());
+        // the adaptive (break-even) composition parses and labels
+        assert_eq!(
+            DecodePolicyKind::parse("class-subbatch:auto").unwrap(),
+            DecodePolicyKind::ClassSubBatchAuto
+        );
         // labels round-trip through parse
         for k in [
             DecodePolicyKind::Unified,
             DecodePolicyKind::RankPartitioned,
             DecodePolicyKind::ClassSubBatch { max_groups: 4 },
+            DecodePolicyKind::ClassSubBatchAuto,
         ] {
             assert_eq!(DecodePolicyKind::parse(&k.label()).unwrap(), k);
         }
@@ -838,6 +953,64 @@ mod tests {
             ClusterConfig::default().batch_policy,
             BatchPolicyKind::Fifo
         );
+    }
+
+    /// Unknown policy names list every valid variant (mirroring the
+    /// `--system` registry-listing error).
+    #[test]
+    fn unknown_policy_errors_list_variants() {
+        let e = BatchPolicyKind::parse("lifo").unwrap_err();
+        for v in ["fifo", "rank-bucketed", "rank-bucketed-cost", "rank-cap"]
+        {
+            assert!(e.contains(v), "batch error misses '{v}': {e}");
+        }
+        let e = DecodePolicyKind::parse("nope").unwrap_err();
+        for v in [
+            "unified",
+            "rank-partitioned",
+            "class-subbatch[:groups]",
+            "class-subbatch:auto",
+        ] {
+            assert!(e.contains(v), "decode error misses '{v}': {e}");
+        }
+    }
+
+    #[test]
+    fn slo_feedback_from_json() {
+        // defaults: disabled, open loop
+        let cfg = ClusterConfig::default();
+        assert!(!cfg.feedback.enabled);
+        assert!(!cfg.feedback.preempt_decode);
+        // any feedback knob enables the layer
+        let v = json::parse(
+            r#"{"slo_ttft_ms": 150.0, "slo_tbt_ms": 80.0,
+                "preempt_decode": true, "slo_pressure_theta": 0.8}"#,
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_json(&v).unwrap();
+        assert!(cfg.feedback.enabled);
+        assert!(cfg.feedback.preempt_decode);
+        assert!((cfg.feedback.ttft_target - 0.15).abs() < 1e-12);
+        assert!((cfg.feedback.tbt_target - 0.08).abs() < 1e-12);
+        assert!((cfg.feedback.pressure_theta - 0.8).abs() < 1e-12);
+        // theta alone also enables (never a silently inert knob)
+        let v = json::parse(r#"{"slo_pressure_theta": 0.9}"#).unwrap();
+        let cfg = ClusterConfig::from_json(&v).unwrap();
+        assert!(cfg.feedback.enabled);
+        assert!(!cfg.feedback.preempt_decode);
+        // preempt off alone keeps the layer disabled
+        let v = json::parse(r#"{"preempt_decode": false}"#).unwrap();
+        let cfg = ClusterConfig::from_json(&v).unwrap();
+        assert!(!cfg.feedback.enabled);
+        // bad values rejected
+        for bad in [
+            r#"{"slo_ttft_ms": 0.0}"#,
+            r#"{"slo_tbt_ms": -1.0}"#,
+            r#"{"slo_pressure_theta": 1.5}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(ClusterConfig::from_json(&v).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -59,6 +59,24 @@ impl CostModel {
             }
     }
 
+    /// Net service-time gain of splitting a `members`-sequence
+    /// rank-`rank` class out of a grouped decode round that would
+    /// otherwise pad it to `padded_to`: the padded LoRA kernel work
+    /// recovered minus the extra per-sub-batch launch overhead.
+    /// Positive ⇒ the split pays for itself — the
+    /// launch-overhead/padding break-even behind the adaptive
+    /// `class-subbatch:auto` decode composition.
+    pub fn decode_split_gain(
+        &self,
+        members: usize,
+        rank: u32,
+        padded_to: u32,
+    ) -> f64 {
+        decode_lora_time(&self.server, members, padded_to)
+            - decode_lora_time(&self.server, members, rank)
+            - self.server.decode_launch_overhead
+    }
+
     /// Saturation throughput (tokens/s) for a single-rank workload of
     /// the given request shape: the steady-state rate at which the
     /// server can complete requests, counting prompt+output tokens.
@@ -242,6 +260,32 @@ mod tests {
     fn decode_empty_batch_is_free() {
         let s = server(ModelSpec::LLAMA_7B, 4);
         assert_eq!(decode_time(&s, 0, 0, 128), 0.0);
+    }
+
+    /// The launch/padding break-even: splitting is worth one launch
+    /// overhead only when the class is padded far enough, with enough
+    /// members — and the gain is exactly the padding recovered minus
+    /// the launch.
+    #[test]
+    fn decode_split_gain_breakeven() {
+        let cm = CostModel::new(server(ModelSpec::LLAMA_7B, 4));
+        // a big low-rank class padded to 128 recovers real kernel time
+        assert!(cm.decode_split_gain(12, 8, 128) > 0.0);
+        // a single member padded 64→128 can't pay for a launch
+        assert!(cm.decode_split_gain(1, 64, 128) < 0.0);
+        // no padding, no gain — pure launch cost
+        let g = cm.decode_split_gain(8, 128, 128);
+        assert!((g + cm.server.decode_launch_overhead).abs() < 1e-15);
+        // exact decomposition against the kernel-time formula
+        let want = decode_lora_time(&cm.server, 6, 128)
+            - decode_lora_time(&cm.server, 6, 16)
+            - cm.server.decode_launch_overhead;
+        assert_eq!(cm.decode_split_gain(6, 16, 128).to_bits(), want.to_bits());
+        // monotone in member count
+        assert!(
+            cm.decode_split_gain(10, 8, 128)
+                > cm.decode_split_gain(2, 8, 128)
+        );
     }
 
     /// Grouped decode cost split: the shared base is a LoRA-free

@@ -61,7 +61,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, FigFn)> {
         ("ablations", "Algorithm 1 design-choice ablations",
          ablations::ablations),
         ("sched", "batch scheduling × placement ablation + \
-                   prefill × decode policy grid",
+                   prefill × decode policy grid + SLO-feedback grid",
          sched::sched),
         ("gpus", "min fleet under SLO per system (GPU savings)",
          elastic::gpus_under_slo),

@@ -3,7 +3,7 @@
 //!
 //! The paper fixes the scheduler (FIFO continuous batching) and varies
 //! *placement*; CaraServe-style rank-aware scheduling is the other
-//! half of the heterogeneous-rank design space. Two tables:
+//! half of the heterogeneous-rank design space. Three tables:
 //!
 //! * `sched` — every system under each `BatchPolicyKind` on a
 //!   mixed-rank prefill-heavy trace: rank-agnostic placement + `fifo`
@@ -20,15 +20,24 @@
 //!   shrink the cluster-wide high-rank decode-step share and the
 //!   low-rank classes' P99 TBT, at the cost of per-sub-batch launch
 //!   overhead.
+//! * `sched_slo` — open-loop vs SLO-feedback scheduling on a *bursty*
+//!   skewed-rank trace (a standing multi-class decode set + periodic
+//!   TTFT-sensitive prefill bursts): preemptible decode rounds, the
+//!   SLO-aware rotor, and adaptive knobs against the best open-loop
+//!   policies — the closed-loop half of this repo's scheduler seam.
 
 use super::helpers::{FigOpts, RESULTS_DIR};
 use crate::config::{
     BatchPolicyKind, ClassSelect, ClusterConfig, DecodePolicyKind,
+    ModelSpec, SloFeedbackConfig,
 };
 use crate::sim::{run, SimConfig, SystemKind};
 use crate::trace::azure::{self, AzureConfig, RankPopularity};
 use crate::trace::{LengthModel, Trace};
+use crate::util::rng::Pcg32;
 use crate::util::table::{fmt_secs, Table};
+use crate::workload::{AdapterSet, Request};
+use std::collections::BTreeMap;
 
 /// Systems × batch policies on one trace. Split from [`sched`] so the
 /// test suite can smoke-run it on a tiny trace.
@@ -153,6 +162,175 @@ pub fn skewed_decode_trace(rps: f64, seed: u64, duration: f64) -> Trace {
     })
 }
 
+/// The bursty skewed-rank workload of the `sched_slo` grid.
+///
+/// Two populations:
+///
+/// * a **standing decode set** — 20 long-output requests across all
+///   five rank classes (rank-8 plurality, a heavy high-rank tail),
+///   arriving in the first second and then decoding for the rest of
+///   the trace, so a multi-class decode round is almost always in
+///   flight;
+/// * **TTFT-sensitive prefill bursts** — 4 short rank-8 requests every
+///   1.5 s whose time-to-first-token is dominated by how long the
+///   scheduler makes them wait out the round in flight.
+///
+/// Open-loop policies make a burst wait for the *whole* remaining
+/// round; the feedback layer preempts at the next sub-batch step
+/// boundary — exactly the gap the `sched_slo` table (and the
+/// acceptance test in `tests/slo_feedback.rs`) measures. Measurements
+/// start after a 2 s warmup, so the standing set's cold-start prefill
+/// storm never pollutes the percentiles.
+pub fn bursty_slo_trace(seed: u64, duration: f64) -> Trace {
+    let adapters = AdapterSet::uniform_per_rank(
+        10,
+        &[8, 16, 32, 64, 128],
+        &ModelSpec::LLAMA_7B,
+    );
+    let mut by_rank: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+    for a in adapters.iter() {
+        by_rank.entry(a.rank).or_default().push(a.id);
+    }
+    let mut rng = Pcg32::new(seed);
+    let pick = |rank: u32, rng: &mut Pcg32| -> u32 {
+        let pool = &by_rank[&rank];
+        pool[rng.below(pool.len() as u64) as usize]
+    };
+    let mut requests: Vec<Request> = Vec::new();
+    // standing set: rank-8 plurality with a heavy high-rank tail, so
+    // rounds are multi-class and the late (high-rank) sub-batch steps
+    // carry real kernel time
+    let standing: [(u32, usize); 5] =
+        [(8, 6), (16, 2), (32, 2), (64, 4), (128, 6)];
+    // sized to keep decoding past the last burst (~36 tokens/s of
+    // per-member round cadence)
+    let output = (duration * 36.0) as u32 + 256;
+    let mut i = 0usize;
+    for &(rank, count) in &standing {
+        for _ in 0..count {
+            requests.push(Request {
+                id: 0, // reassigned by Trace::new
+                adapter: pick(rank, &mut rng),
+                prompt_len: 512,
+                output_len: output,
+                arrival: 0.045 * i as f64,
+            });
+            i += 1;
+        }
+    }
+    // TTFT-sensitive bursts: 4 rank-8 prompts every 1.5 s (past the
+    // 2 s measurement warmup). The burst arrives as one instant so no
+    // scheduler can split it across admissions — every policy prefills
+    // the whole burst in a single iteration and the TTFT difference is
+    // purely how long the burst waits out the decode round in flight.
+    let mut t = 2.25;
+    while t < duration {
+        for _ in 0..4 {
+            requests.push(Request {
+                id: 0,
+                adapter: pick(8, &mut rng),
+                prompt_len: 256,
+                output_len: 4,
+                arrival: t,
+            });
+        }
+        t += 1.5;
+    }
+    Trace::new("bursty-slo-skew", adapters, requests)
+}
+
+/// The feedback configuration the `sched_slo` grid (and the acceptance
+/// test) runs: tight scheduler-level targets with an aggressive
+/// pressure threshold, so a queued burst preempts the round in flight
+/// at the next sub-batch boundary.
+pub fn slo_grid_feedback() -> SloFeedbackConfig {
+    SloFeedbackConfig {
+        enabled: true,
+        ttft_target: 0.1,
+        tbt_target: 0.05,
+        preempt_decode: true,
+        pressure_theta: 0.95,
+    }
+}
+
+/// Open-loop vs SLO-feedback scheduling on the bursty skewed-rank
+/// trace. Split from [`sched`] so the test suite can smoke-run it (and
+/// assert the acceptance criterion) on the same harness.
+pub fn sched_slo_table(trace: &Trace, cluster: &ClusterConfig) -> Table {
+    let fb = slo_grid_feedback();
+    let bucketed = BatchPolicyKind::RankBucketed {
+        max_wait_iters: BatchPolicyKind::DEFAULT_MAX_WAIT_ITERS,
+        select: ClassSelect::LargestQueue,
+    };
+    let rows: [(BatchPolicyKind, DecodePolicyKind, Option<SloFeedbackConfig>);
+        6] = [
+        (BatchPolicyKind::Fifo, DecodePolicyKind::Unified, None),
+        (BatchPolicyKind::Fifo, DecodePolicyKind::RankPartitioned, None),
+        (
+            BatchPolicyKind::Fifo,
+            DecodePolicyKind::ClassSubBatch { max_groups: 2 },
+            None,
+        ),
+        (
+            BatchPolicyKind::Fifo,
+            DecodePolicyKind::RankPartitioned,
+            Some(fb),
+        ),
+        (
+            BatchPolicyKind::Fifo,
+            DecodePolicyKind::ClassSubBatchAuto,
+            Some(fb),
+        ),
+        (
+            bucketed,
+            DecodePolicyKind::ClassSubBatch { max_groups: 2 },
+            Some(fb),
+        ),
+    ];
+    let mut table = Table::new(
+        "sched_slo — open-loop vs SLO-feedback scheduling \
+         (bursty skewed ranks, 1 server)",
+        &[
+            "prefill policy",
+            "decode policy",
+            "feedback",
+            "p95 ttft",
+            "p99 ttft",
+            "p99 tbt r8",
+            "thr req/s",
+            "preempts",
+            "drops",
+        ],
+    );
+    for (batch, decode, feedback) in rows {
+        let mut cfg =
+            SimConfig::new(cluster.clone(), SystemKind::SLoraRandom)
+                .with_batch_policy(batch)
+                .with_decode_policy(decode)
+                .with_warmup(2.0);
+        if let Some(f) = feedback {
+            cfg = cfg.with_slo_feedback(f);
+        }
+        let mut rep = run(trace, &cfg);
+        table.row(vec![
+            batch.label(),
+            decode.label(),
+            if feedback.is_some() {
+                "preempt+slo".to_string()
+            } else {
+                "open-loop".to_string()
+            },
+            fmt_secs(rep.ttft.p95()),
+            fmt_secs(rep.ttft.p99()),
+            fmt_secs(rep.tbt_p99_class(8)),
+            format!("{:.2}", rep.throughput_rps()),
+            rep.decode_preemptions.to_string(),
+            rep.timeouts.to_string(),
+        ]);
+    }
+    table
+}
+
 pub fn sched(opts: &FigOpts) -> std::io::Result<()> {
     // Mixed ranks with short outputs: prefill iterations dominate, so
     // batch *composition* (not decode-set mixing) drives the
@@ -182,5 +360,16 @@ pub fn sched(opts: &FigOpts) -> std::io::Result<()> {
         ..Default::default()
     };
     sched_decode_table(&decode_trace, &decode_cluster)
-        .emit(RESULTS_DIR, "sched_decode")
+        .emit(RESULTS_DIR, "sched_decode")?;
+    // SLO grid: one server under a standing multi-class decode load
+    // with periodic prefill bursts, so the feedback layer's preemption
+    // points and rotor actually get exercised.
+    let slo_trace = bursty_slo_trace(opts.seed, opts.scale(90.0));
+    let slo_cluster = ClusterConfig {
+        n_servers: 1,
+        rebalance_period: 30.0,
+        ..Default::default()
+    };
+    sched_slo_table(&slo_trace, &slo_cluster)
+        .emit(RESULTS_DIR, "sched_slo")
 }

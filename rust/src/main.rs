@@ -67,7 +67,10 @@ fn usage() {
          [--adapters N] [--duration S] [--seed S] [--config file.json]\n         \
          [--batch-policy fifo|rank-bucketed[:W]|rank-bucketed-cost[:W]|\
          rank-cap[:F]]\n         \
-         [--decode-policy unified|rank-partitioned|class-subbatch[:G]]\n\
+         [--decode-policy unified|rank-partitioned|class-subbatch[:G]|\
+         class-subbatch:auto]\n         \
+         [--slo-ttft-ms MS] [--slo-tbt-ms MS] [--preempt-decode on|off]\n         \
+         [--report-out file.json]\n\
          autoscale [--system <kind>|--all] [--slo-ttft MS] \
          [--slo-e2e MS]\n         \
          [--metric ttft|e2e] [--percentile P] [--max-servers N]\n         \
@@ -170,6 +173,38 @@ fn build_cluster(args: &Args) -> Result<ClusterConfig, String> {
         cluster.decode_policy =
             loraserve::config::DecodePolicyKind::parse(dp)?;
     }
+    // SLO feedback knobs: setting a target (or switching preemption
+    // on) enables the per-server tracker
+    if args.get("slo-ttft-ms").is_some() {
+        let ms = args.get_f64("slo-ttft-ms", 0.0)?;
+        if ms <= 0.0 {
+            return Err(format!("--slo-ttft-ms must be > 0, got {ms}"));
+        }
+        cluster.feedback.ttft_target = ms / 1e3;
+        cluster.feedback.enabled = true;
+    }
+    if args.get("slo-tbt-ms").is_some() {
+        let ms = args.get_f64("slo-tbt-ms", 0.0)?;
+        if ms <= 0.0 {
+            return Err(format!("--slo-tbt-ms must be > 0, got {ms}"));
+        }
+        cluster.feedback.tbt_target = ms / 1e3;
+        cluster.feedback.enabled = true;
+    }
+    if let Some(p) = args.get("preempt-decode") {
+        match p {
+            "on" | "true" => {
+                cluster.feedback.preempt_decode = true;
+                cluster.feedback.enabled = true;
+            }
+            "off" | "false" => cluster.feedback.preempt_decode = false,
+            other => {
+                return Err(format!(
+                    "--preempt-decode takes on|off, got '{other}'"
+                ))
+            }
+        }
+    }
     Ok(cluster)
 }
 
@@ -233,6 +268,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
                 name,
                 cluster.batch_policy,
                 cluster.decode_policy,
+                cluster.feedback,
             )
             .ok_or_else(|| {
                 format!("custom system '{name}' not registered")
@@ -280,6 +316,11 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
             format!("{:.1}%", rep.mixed_decode_share() * 100.0),
         ),
         ("decode pad (rank·tok)", rep.decode_pad_rank.to_string()),
+        ("decode preemptions", rep.decode_preemptions.to_string()),
+        (
+            "ttft-under-pressure p99",
+            fmt_secs(rep.ttft_under_pressure_p99()),
+        ),
         ("rebalances", rep.rebalances.to_string()),
         ("migrated", fmt_bytes(rep.migration_bytes)),
         ("fetches", rep.fetches.to_string()),
@@ -308,6 +349,19 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
             rep.per_server_max_adapters[s],
             rep.per_server_highrank_frac[s],
         );
+    }
+    // Deterministic JSON digest of the run (the CI determinism gate
+    // runs `simulate` twice and byte-compares exactly this file).
+    if let Some(out) = args.get("report-out") {
+        let json = rep.to_json_string();
+        if let Some(dir) = std::path::Path::new(out).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| format!("{out}: {e}"))?;
+            }
+        }
+        std::fs::write(out, json).map_err(|e| format!("{out}: {e}"))?;
+        println!("[report written {out}]");
     }
     Ok(())
 }

@@ -16,6 +16,7 @@ use super::engine::{
 use super::report::SimReport;
 use crate::config::{
     AutoscaleConfig, BatchPolicyKind, ClusterConfig, DecodePolicyKind,
+    SloFeedbackConfig,
 };
 use crate::placement::Placer;
 use crate::trace::Trace;
@@ -57,6 +58,7 @@ impl SystemKind {
         opts: &LoraServeOpts,
         batch: BatchPolicyKind,
         decode: DecodePolicyKind,
+        slo: SloFeedbackConfig,
     ) -> SystemSpec {
         // (the Toppings arm below forces Replicated regardless)
         let pool = if opts.full_replication {
@@ -77,6 +79,7 @@ impl SystemKind {
             last_value_demand: opts.last_value_demand,
             load_signal: LoadSignal::ServiceSeconds,
             rank_blind_cost: false,
+            slo,
         };
         match self {
             SystemKind::LoraServe => SystemSpec {
@@ -142,12 +145,18 @@ pub struct SimConfig {
     /// from `ClusterConfig::decode_policy`, threaded exactly like
     /// `batch`.
     pub decode: DecodePolicyKind,
+    /// Scheduler SLO feedback layer. Seeded from
+    /// `ClusterConfig::feedback`, threaded exactly like `batch` and
+    /// `decode` (so the JSON/CLI knobs reach the capacity planner and
+    /// every figure harness unchanged).
+    pub feedback: SloFeedbackConfig,
 }
 
 impl SimConfig {
     pub fn new(cluster: ClusterConfig, system: SystemKind) -> Self {
         let batch = cluster.batch_policy;
         let decode = cluster.decode_policy;
+        let feedback = cluster.feedback;
         SimConfig {
             cluster,
             system,
@@ -157,6 +166,7 @@ impl SimConfig {
             autoscale: None,
             batch,
             decode,
+            feedback,
         }
     }
 
@@ -179,6 +189,14 @@ impl SimConfig {
         self.decode = decode;
         self
     }
+
+    pub fn with_slo_feedback(
+        mut self,
+        feedback: SloFeedbackConfig,
+    ) -> Self {
+        self.feedback = feedback;
+        self
+    }
 }
 
 /// Run one trace through one canned system. Deterministic per
@@ -186,7 +204,8 @@ impl SimConfig {
 /// drives the [`SimEngine`](super::engine::SimEngine); custom systems
 /// use [`run_spec`](super::engine::run_spec) directly.
 pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
-    let spec = cfg.system.spec(&cfg.opts, cfg.batch, cfg.decode);
+    let spec =
+        cfg.system.spec(&cfg.opts, cfg.batch, cfg.decode, cfg.feedback);
     super::engine::run_spec(trace, cfg, &spec)
 }
 
@@ -232,6 +251,7 @@ pub fn custom_system_spec(
     name: &str,
     batch: BatchPolicyKind,
     decode: DecodePolicyKind,
+    slo: SloFeedbackConfig,
 ) -> Option<SystemSpec> {
     let reg = custom_registry().lock().unwrap();
     let &(static_name, build) =
@@ -249,6 +269,7 @@ pub fn custom_system_spec(
         last_value_demand: false,
         load_signal: LoadSignal::ServiceSeconds,
         rank_blind_cost: false,
+        slo,
     })
 }
 
@@ -408,6 +429,7 @@ mod tests {
             "definitely-not-registered",
             BatchPolicyKind::Fifo,
             DecodePolicyKind::Unified,
+            SloFeedbackConfig::default(),
         )
         .is_none());
         register_custom_system("rr-test", |_seed| {
@@ -418,6 +440,7 @@ mod tests {
             "rr-test",
             BatchPolicyKind::Fifo,
             DecodePolicyKind::Unified,
+            SloFeedbackConfig::default(),
         )
         .expect("registered name must resolve");
         assert_eq!(spec.label, "rr-test");
@@ -458,6 +481,7 @@ mod tests {
             DecodePolicyKind::Unified,
             DecodePolicyKind::RankPartitioned,
             DecodePolicyKind::ClassSubBatch { max_groups: 2 },
+            DecodePolicyKind::ClassSubBatchAuto,
         ] {
             let cfg = SimConfig::new(cluster(), SystemKind::SLoraRandom)
                 .with_decode_policy(decode);

@@ -142,6 +142,11 @@ pub struct SystemSpec {
     /// Price every request as rank 0 in the outstanding-work estimate
     /// (Toppings' rank-agnostic signal, the imbalance §V-D critiques).
     pub rank_blind_cost: bool,
+    /// Scheduler SLO feedback layer (per-server headroom tracker,
+    /// preemptible decode rounds, SLO-aware rotor, adaptive waits).
+    /// Disabled by default; with it disabled the engine is the PR 3
+    /// open-loop engine bit for bit.
+    pub slo: crate::config::SloFeedbackConfig,
 }
 
 /// Run one trace through one composed system. Deterministic per
@@ -364,14 +369,18 @@ impl<'a> SimEngine<'a> {
 
         let servers: Vec<SimServer> = (0..max_n)
             .map(|s| {
-                SimServer::with_policy(
+                let mut srv = SimServer::with_policy(
                     s,
                     cm,
                     // cost-weighted class selection scores with the
                     // same (possibly empirical/flattened) operating
                     // points the placer and planner use
                     build_policy(spec.batch, spec.decode, &oppoints),
-                )
+                );
+                // SLO feedback is per-server state (rolling headroom
+                // windows), installed only when the layer is enabled
+                srv.enable_slo(spec.slo);
+                srv
             })
             .collect();
 
@@ -588,6 +597,20 @@ impl<'a> SimEngine<'a> {
             self.st.report.ttft.push(c.ttft);
             self.st.report.e2e.push(c.finished_at - c.req.arrival);
             self.st.report.fleet.record_completion(violated);
+            if self.spec.slo.enabled {
+                // headroom histograms vs the feedback targets
+                // (negative = target blown)
+                self.st
+                    .report
+                    .ttft_headroom
+                    .push(self.spec.slo.ttft_target - c.ttft);
+                if c.tbt.is_finite() {
+                    self.st
+                        .report
+                        .tbt_headroom
+                        .push(self.spec.slo.tbt_target - c.tbt);
+                }
+            }
             if c.tbt.is_finite() {
                 self.st.report.tbt.push(c.tbt);
                 self.st
@@ -970,6 +993,14 @@ impl<'a> SimEngine<'a> {
             self.st.report.decode_steps += srv.decode_steps;
             self.st.report.mixed_decode_steps += srv.mixed_decode_steps;
             self.st.report.decode_pad_rank += srv.decode_pad_rank;
+            self.st.report.decode_preemptions += srv.preemptions;
+            // same steady-state cutoff as every other latency stream:
+            // the cold-start storm is simulated, not measured
+            for &(arrival, t) in &srv.ttft_under_pressure {
+                if arrival >= self.cfg.warmup {
+                    self.st.report.ttft_under_pressure.push(t);
+                }
+            }
             for (&class, &n) in &srv.decode_steps_by_class {
                 *self
                     .st

@@ -12,6 +12,7 @@ pub mod event;
 pub mod profile;
 pub mod report;
 pub mod server;
+pub mod slo;
 pub mod topology;
 
 pub use cluster::{
@@ -24,3 +25,4 @@ pub use engine::{
 };
 pub use report::SimReport;
 pub use server::{BatchPolicy, DecodeGroup, DecodePlan};
+pub use slo::SloTracker;

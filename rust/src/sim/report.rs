@@ -61,6 +61,20 @@ pub struct SimReport {
     /// rank class — the per-class TBT attribution decode-aware
     /// scheduling is judged on.
     pub tbt_by_class: BTreeMap<u32, Samples>,
+    /// Decode rounds cut short by the SLO feedback layer (a queued
+    /// prefill preempted the remaining sub-batch steps under TTFT
+    /// pressure).
+    pub decode_preemptions: u64,
+    /// Per-completion TTFT headroom vs the feedback target
+    /// (`ttft_target − ttft`; negative = target blown). Empty when the
+    /// feedback layer is off.
+    pub ttft_headroom: Samples,
+    /// Per-completion TBT headroom vs the feedback target.
+    pub tbt_headroom: Samples,
+    /// TTFT of requests admitted while their server was under TTFT
+    /// pressure (including preempting admissions) — the
+    /// "TTFT under pressure" percentiles the feedback loop defends.
+    pub ttft_under_pressure: Samples,
     /// Label of the batch policy the servers admitted with.
     pub batch_policy: String,
     /// Label of the decode-set composition policy the servers ran.
@@ -149,6 +163,80 @@ impl SimReport {
         }
     }
 
+    /// P99 TTFT of requests admitted under TTFT pressure (NaN if the
+    /// feedback layer never flagged an admission).
+    pub fn ttft_under_pressure_p99(&mut self) -> f64 {
+        if self.ttft_under_pressure.is_empty() {
+            return f64::NAN;
+        }
+        self.ttft_under_pressure.p99()
+    }
+
+    /// Deterministic JSON digest of the run: every scalar counter plus
+    /// full-precision percentile/sum digests of each sample stream,
+    /// serialized through `util::json` (proper string escaping,
+    /// shortest-roundtrip floats; non-finite values quoted as strings
+    /// since bare NaN is not JSON). Two runs of the same (trace,
+    /// config, seed) must produce byte-identical output — the CI
+    /// determinism gate `cmp`s exactly this.
+    pub fn to_json_string(&mut self) -> String {
+        use crate::util::json::Json;
+        fn num(x: f64) -> Json {
+            if x.is_finite() {
+                Json::Num(x)
+            } else {
+                Json::Str(format!("{x}"))
+            }
+        }
+        fn digest(s: &mut Samples) -> Json {
+            Json::obj(vec![
+                ("n", Json::from(s.len())),
+                ("sum", num(s.sum())),
+                ("p50", num(s.p50())),
+                ("p95", num(s.p95())),
+                ("p99", num(s.p99())),
+            ])
+        }
+        Json::obj(vec![
+            ("system", Json::from(self.system.as_str())),
+            ("trace", Json::from(self.trace.as_str())),
+            ("batch_policy", Json::from(self.batch_policy.as_str())),
+            ("decode_policy", Json::from(self.decode_policy.as_str())),
+            ("completed", Json::from(self.completed)),
+            ("timeouts", Json::from(self.timeouts)),
+            ("makespan", num(self.makespan)),
+            ("offered_rps", num(self.offered_rps)),
+            ("iters", Json::from(self.iters)),
+            ("iters_highrank", Json::from(self.iters_highrank)),
+            ("prefill_iters", Json::from(self.prefill_iters)),
+            (
+                "mixed_prefill_iters",
+                Json::from(self.mixed_prefill_iters),
+            ),
+            ("pad_rank_tokens", Json::from(self.pad_rank_tokens)),
+            ("decode_steps", Json::from(self.decode_steps)),
+            ("mixed_decode_steps", Json::from(self.mixed_decode_steps)),
+            ("decode_pad_rank", Json::from(self.decode_pad_rank)),
+            ("decode_preemptions", Json::from(self.decode_preemptions)),
+            ("migration_bytes", Json::from(self.migration_bytes)),
+            ("fetches", Json::from(self.fetches)),
+            ("fetch_bytes", Json::from(self.fetch_bytes)),
+            ("gpu_loads", Json::from(self.gpu_loads)),
+            ("gpu_load_bytes", Json::from(self.gpu_load_bytes)),
+            ("rebalances", Json::from(self.rebalances)),
+            ("ttft", digest(&mut self.ttft)),
+            ("tbt", digest(&mut self.tbt)),
+            ("e2e", digest(&mut self.e2e)),
+            ("ttft_headroom", digest(&mut self.ttft_headroom)),
+            ("tbt_headroom", digest(&mut self.tbt_headroom)),
+            (
+                "ttft_under_pressure",
+                digest(&mut self.ttft_under_pressure),
+            ),
+        ])
+        .to_string()
+    }
+
     pub fn ttft_p95(&mut self) -> f64 {
         self.ttft.p95()
     }
@@ -190,6 +278,38 @@ mod tests {
         assert!(!r.meets_slo(10.0));
         assert!(r.completion_rate().is_nan());
         assert_eq!(r.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn json_digest_is_deterministic_and_complete() {
+        let mut r = SimReport {
+            system: "loraserve".into(),
+            completed: 10,
+            makespan: 12.5,
+            decode_preemptions: 3,
+            ..Default::default()
+        };
+        for i in 0..10 {
+            r.ttft.push(0.01 * i as f64);
+            r.ttft_under_pressure.push(0.02 * i as f64);
+        }
+        let a = r.to_json_string();
+        let b = r.to_json_string();
+        assert_eq!(a, b, "digest must be stable across calls");
+        for key in [
+            "\"completed\":10",
+            "\"decode_preemptions\":3",
+            "\"makespan\":12.5",
+            "\"ttft\":{",
+            "\"ttft_under_pressure\":{",
+        ] {
+            assert!(a.contains(key), "missing {key} in {a}");
+        }
+        // empty streams digest as NaN strings, still valid + stable
+        let mut empty = SimReport::default();
+        let d = empty.to_json_string();
+        assert!(d.contains("\"NaN\""));
+        assert!(empty.ttft_under_pressure_p99().is_nan());
     }
 
     #[test]

@@ -23,8 +23,19 @@
 //!   split the round into per-rank-class steps (SGMV-style grouped
 //!   kernels), so a rank-8 tenant stops paying a co-resident rank-128
 //!   tenant's operating point for its whole decode tail.
+//!
+//! On top of both sits the **SLO feedback layer**
+//! ([`super::slo::SloTracker`], optional per server): decode rounds
+//! become preemptible between sub-batch steps under TTFT pressure,
+//! `ClassSubBatchDecode`'s rotor serves the rank class with the worst
+//! rolling TBT headroom first, and `RankBucketed`'s bounded-wait guard
+//! adapts to the queue head's remaining TTFT headroom. Servers without
+//! a tracker run the open-loop scheduler unchanged.
 
-use crate::config::{BatchPolicyKind, ClassSelect, DecodePolicyKind};
+use super::slo::SloTracker;
+use crate::config::{
+    BatchPolicyKind, ClassSelect, DecodePolicyKind, SloFeedbackConfig,
+};
 use crate::costmodel::CostModel;
 use crate::workload::{AdapterId, Request};
 use std::collections::{BTreeMap, VecDeque};
@@ -168,7 +179,10 @@ fn classes_of(active: &[ActiveReq]) -> BTreeMap<u32, Vec<u64>> {
 /// produce the [`DecodePlan`] for the next decode round. Groups must
 /// be disjoint, non-empty, and cover at most `slots` sequences in
 /// total. The default is the unified whole-set plan (the pre-refactor
-/// decode, bit for bit).
+/// decode, bit for bit). `slo` is the server's SLO feedback tracker
+/// (None = open loop); SLO-aware compositions may consult its rolling
+/// per-class TBT headroom but must behave identically to their
+/// open-loop selves when it is absent.
 pub trait BatchPolicy: std::fmt::Debug {
     fn name(&self) -> &'static str;
 
@@ -184,10 +198,19 @@ pub trait BatchPolicy: std::fmt::Debug {
         active: &[ActiveReq],
         slots: usize,
         _cm: &CostModel,
+        _slo: Option<&SloTracker>,
     ) -> DecodePlan {
         let _ = slots; // the whole-set plan can never exceed slots
         DecodePlan::unified(active)
     }
+
+    /// SLO feedback hook: before each admission the server reports the
+    /// queue head's remaining TTFT-headroom fraction (1 = fresh, 0 =
+    /// target blown), letting stateful policies adapt — RankBucketed
+    /// shrinks its bounded-wait starvation guard as headroom drains
+    /// (adaptive `max_wait_iters`). Never called on open-loop servers,
+    /// so ignoring it (the default) preserves open-loop behavior.
+    fn set_slo_pressure(&mut self, _headroom_frac: f64) {}
 }
 
 /// Build the policy instance a server owns (policies carry per-server
@@ -232,6 +255,9 @@ pub fn build_policy(
         DecodePolicyKind::ClassSubBatch { max_groups } => Box::new(
             ClassSubBatchDecode::new(base, max_groups.max(1) as usize),
         ),
+        DecodePolicyKind::ClassSubBatchAuto => {
+            Box::new(ClassSubBatchDecode::adaptive(base))
+        }
     }
 }
 
@@ -287,6 +313,10 @@ pub struct RankBucketed {
     /// Consecutive admitting iterations the current head request has
     /// been passed over.
     waited: u32,
+    /// Last reported TTFT-headroom fraction of the queue head (SLO
+    /// feedback; stays 1.0 — the open-loop constant bound — on
+    /// servers without a tracker).
+    pressure: f64,
     /// Cost-weighted class selection: rank → operating point (tokens/s
     /// under SLO). Empty = largest-queued-class selection (the
     /// original behavior). Ranks missing from the map (the engine
@@ -301,6 +331,7 @@ impl RankBucketed {
         RankBucketed {
             max_wait_iters,
             waited: 0,
+            pressure: 1.0,
             oppoints: BTreeMap::new(),
         }
     }
@@ -314,14 +345,30 @@ impl RankBucketed {
         RankBucketed {
             max_wait_iters,
             waited: 0,
+            pressure: 1.0,
             oppoints,
         }
+    }
+
+    /// Effective bounded-wait guard: the configured `max_wait_iters`
+    /// scaled by the queue head's remaining TTFT-headroom fraction —
+    /// the adaptive `max_wait_iters` of the SLO feedback layer. With
+    /// full headroom (or no feedback: `pressure` stays 1.0) the bound
+    /// is exactly the configured constant; as the head's headroom
+    /// drains the bound shrinks toward 0, forcing the head class
+    /// through before its TTFT target blows.
+    fn effective_wait_bound(&self) -> u32 {
+        (self.max_wait_iters as f64 * self.pressure).floor() as u32
     }
 }
 
 impl BatchPolicy for RankBucketed {
     fn name(&self) -> &'static str {
         "rank-bucketed"
+    }
+
+    fn set_slo_pressure(&mut self, headroom_frac: f64) {
+        self.pressure = headroom_frac.clamp(0.0, 1.0);
     }
 
     fn admit(
@@ -334,7 +381,7 @@ impl BatchPolicy for RankBucketed {
             return Vec::new();
         }
         let front_rank = queue.front().unwrap().rank;
-        let chosen = if self.waited >= self.max_wait_iters {
+        let chosen = if self.waited >= self.effective_wait_bound() {
             front_rank
         } else {
             // highest-scoring class; ties to the oldest head. The
@@ -504,11 +551,16 @@ impl BatchPolicy for RankPartitionedDecode {
         self.inner.admit(queue, slots, max_tokens)
     }
 
+    fn set_slo_pressure(&mut self, headroom_frac: f64) {
+        self.inner.set_slo_pressure(headroom_frac);
+    }
+
     fn compose_decode(
         &mut self,
         active: &[ActiveReq],
         _slots: usize,
         _cm: &CostModel,
+        _slo: Option<&SloTracker>,
     ) -> DecodePlan {
         DecodePlan {
             groups: classes_of(active)
@@ -519,18 +571,87 @@ impl BatchPolicy for RankPartitionedDecode {
     }
 }
 
+/// The SLO-aware rotor's class pick: the `take` classes with the worst
+/// (lowest) rolling TBT headroom go first, ties broken by ascending
+/// rank. Returns None — fall back to the cyclic fairness rotor — when
+/// no tracker is installed or every class reports the same headroom
+/// (an all-fresh tracker, or genuinely tied cadences: with no signal
+/// to act on, count-fair rotation is the right default and keeps the
+/// ⌈C/G⌉ − 1 skip bound).
+fn slo_pick(
+    slo: Option<&SloTracker>,
+    ranks: &[u32],
+    take: usize,
+) -> Option<Vec<u32>> {
+    let slo = slo?;
+    let hs: Vec<f64> =
+        ranks.iter().map(|&r| slo.tbt_headroom(r)).collect();
+    let (lo, hi) = hs
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &h| {
+            (lo.min(h), hi.max(h))
+        });
+    if hi - lo <= 1e-12 {
+        return None; // headrooms tie: cyclic fairness
+    }
+    let mut order: Vec<(f64, u32)> =
+        hs.into_iter().zip(ranks.iter().copied()).collect();
+    order.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+    });
+    Some(order.into_iter().take(take).map(|(_, r)| r).collect())
+}
+
+/// Break-even (adaptive `max_groups`) composition: every class whose
+/// recovered padding beats one extra sub-batch launch
+/// (`CostModel::decode_split_gain` > 0) decodes as its own group; the
+/// rest fold into the maximum-rank group, where staying padded is
+/// cheaper than another kernel launch. Every member decodes every
+/// round; the plan collapses to unified when no split pays and to
+/// rank-partitioned when every split does.
+fn breakeven_plan(
+    cm: &CostModel,
+    mut classes: BTreeMap<u32, Vec<u64>>,
+) -> DecodePlan {
+    let Some(&max_rank) = classes.keys().next_back() else {
+        return DecodePlan::default();
+    };
+    let mut merged = classes.remove(&max_rank).unwrap_or_default();
+    let mut groups: Vec<DecodeGroup> = Vec::new();
+    for (rank, seqs) in classes {
+        if cm.decode_split_gain(seqs.len(), rank, max_rank) > 0.0 {
+            groups.push(DecodeGroup { seqs });
+        } else {
+            merged.extend(seqs);
+        }
+    }
+    groups.push(DecodeGroup { seqs: merged });
+    DecodePlan { groups }
+}
+
 /// Class-sub-batch decode decorator: like [`RankPartitionedDecode`]
 /// but at most `max_groups` classes decode per round, bounding kernel
-/// launches when many rank classes are co-resident. A cyclic fairness
-/// rotor over the rank classes picks which classes go each round, so a
-/// non-empty class is never skipped for more than
-/// ⌈classes/max_groups⌉ − 1 consecutive rounds.
+/// launches when many rank classes are co-resident.
+///
+/// Which classes go each round: with SLO feedback, the classes with
+/// the worst rolling TBT headroom first (the SLO-aware rotor — serve
+/// whoever is suffering); on headroom ties or open loop, a cyclic
+/// fairness rotor, so a non-empty class is never skipped for more than
+/// ⌈classes/max_groups⌉ − 1 consecutive rounds. The [`adaptive`]
+/// variant (`class-subbatch:auto`) derives the grouping from the
+/// launch-overhead/padding break-even instead of a fixed bound — see
+/// [`breakeven_plan`].
+///
+/// [`adaptive`]: ClassSubBatchDecode::adaptive
 #[derive(Debug)]
 pub struct ClassSubBatchDecode {
     inner: Box<dyn BatchPolicy>,
-    max_groups: usize,
-    /// Rank of the last class the rotor served; the next round starts
-    /// from the first class strictly above it (cyclic).
+    /// Fixed per-round group bound; None = adaptive break-even
+    /// composition.
+    max_groups: Option<usize>,
+    /// Rank of the last class the cyclic rotor served; the next
+    /// tie/open-loop round starts from the first class strictly above
+    /// it (cyclic).
     rotor: u32,
 }
 
@@ -539,7 +660,17 @@ impl ClassSubBatchDecode {
         assert!(max_groups >= 1, "class-subbatch needs max_groups >= 1");
         ClassSubBatchDecode {
             inner,
-            max_groups,
+            max_groups: Some(max_groups),
+            rotor: 0,
+        }
+    }
+
+    /// Adaptive `max_groups` from the launch-overhead/padding
+    /// break-even in the cost model (`class-subbatch:auto`).
+    pub fn adaptive(inner: Box<dyn BatchPolicy>) -> Self {
+        ClassSubBatchDecode {
+            inner,
+            max_groups: None,
             rotor: 0,
         }
     }
@@ -559,26 +690,42 @@ impl BatchPolicy for ClassSubBatchDecode {
         self.inner.admit(queue, slots, max_tokens)
     }
 
+    fn set_slo_pressure(&mut self, headroom_frac: f64) {
+        self.inner.set_slo_pressure(headroom_frac);
+    }
+
     fn compose_decode(
         &mut self,
         active: &[ActiveReq],
         _slots: usize,
-        _cm: &CostModel,
+        cm: &CostModel,
+        slo: Option<&SloTracker>,
     ) -> DecodePlan {
         let mut classes = classes_of(active);
-        if classes.len() > self.max_groups {
-            // cyclic rotor: serve the next `max_groups` classes in
-            // ascending-rank order, starting just above the last rank
-            // served (wrapping), and remember where we stopped
+        let Some(max_groups) = self.max_groups else {
+            return breakeven_plan(cm, classes);
+        };
+        if classes.len() > max_groups {
             let ranks: Vec<u32> = classes.keys().copied().collect();
-            let start = ranks
-                .iter()
-                .position(|&r| r > self.rotor)
-                .unwrap_or(0);
-            let take: Vec<u32> = (0..self.max_groups)
-                .map(|k| ranks[(start + k) % ranks.len()])
-                .collect();
-            self.rotor = *take.last().unwrap();
+            let take: Vec<u32> = match slo_pick(slo, &ranks, max_groups)
+            {
+                Some(worst_first) => worst_first,
+                None => {
+                    // cyclic rotor: serve the next `max_groups`
+                    // classes in ascending-rank order, starting just
+                    // above the last rank served (wrapping), and
+                    // remember where we stopped
+                    let start = ranks
+                        .iter()
+                        .position(|&r| r > self.rotor)
+                        .unwrap_or(0);
+                    let t: Vec<u32> = (0..max_groups)
+                        .map(|k| ranks[(start + k) % ranks.len()])
+                        .collect();
+                    self.rotor = *t.last().unwrap();
+                    t
+                }
+            };
             classes.retain(|r, _| take.contains(r));
         } else if let Some(&last) = classes.keys().next_back() {
             self.rotor = last;
@@ -678,10 +825,28 @@ pub struct SimServer {
     /// Batch composition policy, both phases (owned per server:
     /// policies carry starvation-guard and fairness-rotor state).
     pub policy: Box<dyn BatchPolicy>,
+    /// SLO feedback layer (None = open loop, the PR 3 scheduler bit
+    /// for bit): rolling TTFT/TBT headroom that drives decode-round
+    /// preemption, the SLO-aware rotor, and adaptive admission waits.
+    pub slo: Option<SloTracker>,
+    /// Decode rounds cut short by TTFT pressure (a queued prefill
+    /// preempted the remaining sub-batch steps).
+    pub preemptions: u64,
+    /// (arrival, TTFT) of requests admitted by a batch that ran under
+    /// TTFT pressure (preempting or pressure-flagged admissions) — the
+    /// "TTFT under pressure" distribution the feedback layer defends.
+    /// The arrival rides along so the engine can apply the same warmup
+    /// cutoff as every other latency stream.
+    pub ttft_under_pressure: Vec<(f64, f64)>,
+    /// The running prefill was admitted under TTFT pressure.
+    prefill_under_pressure: bool,
     /// Remaining sub-batch steps of the decode round in flight, priced
     /// and profiled once at composition (membership cannot change
     /// until a group's own step runs, so the stats stay exact). The
-    /// round is atomic: these run before the next prefill admission.
+    /// round is atomic in open loop: these run before the next prefill
+    /// admission. Under SLO feedback a queued prefill may preempt
+    /// between steps — the remainder is discarded whole (never run
+    /// stale) and re-planned on the next decode composition.
     pending_decode: VecDeque<PricedStep>,
     /// Next `ActiveReq::seq` to hand out.
     next_seq: u64,
@@ -737,8 +902,20 @@ impl SimServer {
             decode_pad_rank: 0,
             decode_steps_by_class: BTreeMap::new(),
             policy,
+            slo: None,
+            preemptions: 0,
+            ttft_under_pressure: Vec::new(),
+            prefill_under_pressure: false,
             pending_decode: VecDeque::new(),
             next_seq: 0,
+        }
+    }
+
+    /// Install the SLO feedback tracker (no-op when the config leaves
+    /// the layer disabled, keeping the server open-loop).
+    pub fn enable_slo(&mut self, cfg: SloFeedbackConfig) {
+        if cfg.enabled {
+            self.slo = Some(SloTracker::new(cfg));
         }
     }
 
@@ -860,6 +1037,29 @@ impl SimServer {
         dropped
     }
 
+    /// SLO feedback: should the decode round in flight yield to a
+    /// queued prefill? Only when preemption is enabled, a prefill is
+    /// queued with a free decode slot to land in, and the tracker
+    /// projects the queue head's TTFT headroom below the pressure
+    /// threshold if the round's remaining sub-batch steps were allowed
+    /// to run first.
+    fn should_preempt_round(&self, now: f64) -> bool {
+        let Some(slo) = &self.slo else {
+            return false;
+        };
+        if !slo.cfg.preempt_decode
+            || self.active.len() >= self.cm.server.max_batch_size
+        {
+            return false;
+        }
+        let Some(head) = self.queue.front() else {
+            return false;
+        };
+        let remaining: f64 =
+            self.pending_decode.iter().map(|s| s.time).sum();
+        slo.ttft_pressure(now - head.req.arrival, remaining)
+    }
+
     /// Start the next iteration if idle and work exists. Returns the
     /// iteration's service time (caller schedules IterationDone).
     ///
@@ -869,15 +1069,31 @@ impl SimServer {
     /// composes a [`DecodePlan`] over the active set and its sub-batch
     /// steps run one per iteration (the whole set in one step under
     /// the unified default). A decode round in flight finishes all its
-    /// steps before the next prefill admission check.
+    /// steps before the next prefill admission check — unless the SLO
+    /// feedback layer preempts it: under TTFT pressure with a prefill
+    /// queued, the remaining steps are dropped and the round is
+    /// re-planned after the admission. Conservation holds because
+    /// un-stepped members stay in the active set and simply rejoin the
+    /// next composed round (they re-pay the shared forward-pass base
+    /// there — the real cost of preemption).
     pub fn start_iteration(&mut self, now: f64) -> Option<f64> {
         if !self.is_idle() {
             return None;
         }
+        if let Some(t) = &mut self.slo {
+            t.tick(now);
+        }
         // decode-round continuation: remaining sub-batch steps run
-        // before any new admission (the plan is atomic)
-        if let Some(t) = self.start_pending_decode(now) {
-            return Some(t);
+        // before any new admission (the plan is atomic in open loop)
+        let mut preempted = false;
+        if !self.pending_decode.is_empty() {
+            if self.should_preempt_round(now) {
+                self.pending_decode.clear();
+                self.preemptions += 1;
+                preempted = true;
+            } else if let Some(t) = self.start_pending_decode(now) {
+                return Some(t);
+            }
         }
         // admit prefills (policy-selected composition)
         let slots = self
@@ -885,12 +1101,25 @@ impl SimServer {
             .server
             .max_batch_size
             .saturating_sub(self.active.len());
+        let mut under_pressure = preempted;
+        if let (Some(slo), Some(head)) = (&self.slo, self.queue.front())
+        {
+            // adaptive admission: report the head's remaining TTFT
+            // headroom so stateful policies (RankBucketed's
+            // bounded-wait guard) can tighten under pressure
+            let waited = now - head.req.arrival;
+            under_pressure =
+                under_pressure || slo.ttft_pressure(waited, 0.0);
+            let frac = slo.ttft_headroom_frac(waited);
+            self.policy.set_slo_pressure(frac);
+        }
         let batch = self.policy.admit(
             &mut self.queue,
             slots,
             self.cm.server.max_batch_tokens as u64,
         );
         if !batch.is_empty() {
+            self.prefill_under_pressure = under_pressure;
             let tokens: u64 =
                 batch.iter().map(|r| r.req.prompt_len as u64).sum();
             let max_rank =
@@ -933,10 +1162,25 @@ impl SimServer {
             return Some(time);
         }
         if !self.active.is_empty() {
+            if self.slo.is_some() {
+                // anchor every active class in the tracker so a class
+                // the rotor has been skipping accrues staleness from
+                // admission, not from its (never-happening) first step
+                let mut ranks: Vec<u32> = Vec::new();
+                for a in &self.active {
+                    if !ranks.contains(&a.sreq.rank) {
+                        ranks.push(a.sreq.rank);
+                    }
+                }
+                if let Some(slo) = &mut self.slo {
+                    slo.observe_active(now, &ranks);
+                }
+            }
             let plan = self.policy.compose_decode(
                 &self.active,
                 self.cm.server.max_batch_size,
                 &self.cm,
+                self.slo.as_ref(),
             );
             debug_assert!(
                 plan.total_members() <= self.cm.server.max_batch_size,
@@ -1086,9 +1330,17 @@ impl SimServer {
         match std::mem::replace(&mut self.running, Iteration::Idle) {
             Iteration::Idle => {}
             Iteration::Prefill { batch } => {
+                let pressured = std::mem::replace(
+                    &mut self.prefill_under_pressure,
+                    false,
+                );
                 for sreq in batch {
                     let ttft = now - sreq.req.arrival;
                     self.ttft_samples.push(ttft);
+                    if pressured {
+                        self.ttft_under_pressure
+                            .push((sreq.req.arrival, ttft));
+                    }
                     if sreq.req.output_len <= 1 {
                         self.outstanding -= sreq.est;
                         done.push(Completion {
@@ -1114,6 +1366,11 @@ impl SimServer {
             Iteration::Decode { seqs } => {
                 let id = self.id;
                 let outstanding = &mut self.outstanding;
+                // SLO feedback: collect the step's distinct member
+                // rank classes so the tracker can update each class's
+                // decode cadence (pure observation, no timing effect)
+                let track = self.slo.is_some();
+                let mut stepped_ranks: Vec<u32> = Vec::new();
                 // whole-set steps (the unified default) skip the
                 // per-member membership check entirely; sub-batch
                 // steps binary-search their (priced-time-sorted) seqs
@@ -1121,6 +1378,9 @@ impl SimServer {
                 self.active.retain_mut(|a| {
                     if !whole_set && seqs.binary_search(&a.seq).is_err() {
                         return true; // not in this sub-batch step
+                    }
+                    if track && !stepped_ranks.contains(&a.sreq.rank) {
+                        stepped_ranks.push(a.sreq.rank);
                     }
                     a.produced += 1;
                     if a.produced >= a.sreq.req.output_len {
@@ -1139,6 +1399,9 @@ impl SimServer {
                         true
                     }
                 });
+                if let Some(slo) = &mut self.slo {
+                    slo.record_decode_step(now, stepped_ranks);
+                }
                 if self.active.is_empty() {
                     // nothing left for any remaining (stale) steps
                     self.pending_decode.clear();
@@ -1586,7 +1849,7 @@ mod tests {
         let mut served: std::collections::BTreeSet<u32> =
             Default::default();
         for round in 0..3 {
-            let plan = pol.compose_decode(&active, 24, &cm);
+            let plan = pol.compose_decode(&active, 24, &cm, None);
             assert!(plan.groups.len() <= 2, "round {round}");
             for g in &plan.groups {
                 assert!(!g.seqs.is_empty());
@@ -1612,9 +1875,203 @@ mod tests {
         );
         // few classes: behaves like rank-partitioned, no rotor skips
         let small = active_set(&[8, 128]);
-        let plan = pol.compose_decode(&small, 24, &cm);
+        let plan = pol.compose_decode(&small, 24, &cm, None);
         assert_eq!(plan.groups.len(), 2);
         assert_eq!(plan.total_members(), 2);
+    }
+
+    /// The SLO-aware rotor serves the class with the worst rolling TBT
+    /// headroom first; with no signal (fresh tracker) it falls back to
+    /// the cyclic rotor.
+    #[test]
+    fn slo_rotor_serves_worst_headroom_first() {
+        use crate::config::SloFeedbackConfig;
+        let cm = CostModel::new(ServerConfig::default());
+        let fcfg = SloFeedbackConfig {
+            enabled: true,
+            ttft_target: 1.0,
+            tbt_target: 0.1,
+            preempt_decode: false,
+            pressure_theta: 0.5,
+        };
+        let active = active_set(&[8, 8, 64, 128]);
+        let mut pol = ClassSubBatchDecode::new(Box::new(Fifo), 1);
+        // fresh tracker: all headrooms tie at the target -> cyclic
+        // rotor, ascending from rank 8
+        let fresh = SloTracker::new(fcfg);
+        let plan = pol.compose_decode(&active, 24, &cm, Some(&fresh));
+        assert_eq!(plan.groups.len(), 1);
+        let first = plan.groups[0].seqs[0];
+        assert_eq!(
+            active.iter().find(|a| a.seq == first).unwrap().sreq.rank,
+            8
+        );
+        // rank 64 decoding far slower than the others: it must win the
+        // next round even though the cyclic rotor would pick rank 64's
+        // successor
+        let mut hot = SloTracker::new(fcfg);
+        for i in 0..4 {
+            let t = 0.02 * (i + 1) as f64;
+            hot.record_decode_step(t, [8u32, 128u32]);
+        }
+        hot.record_decode_step(0.02, [64u32]);
+        hot.record_decode_step(0.30, [64u32]); // 280 ms gap
+        let plan = pol.compose_decode(&active, 24, &cm, Some(&hot));
+        assert_eq!(plan.groups.len(), 1);
+        let first = plan.groups[0].seqs[0];
+        assert_eq!(
+            active.iter().find(|a| a.seq == first).unwrap().sreq.rank,
+            64,
+            "worst-TBT-headroom class must be served first"
+        );
+    }
+
+    /// Adaptive (break-even) composition: big padded classes split
+    /// out, tiny ones fold into the max-rank group, and the plan
+    /// always covers the whole active set.
+    #[test]
+    fn class_subbatch_auto_breakeven_plan() {
+        let cm = CostModel::new(ServerConfig::default());
+        let mut pol = ClassSubBatchDecode::adaptive(Box::new(Fifo));
+        // 12 rank-8 members recover far more padding than one launch;
+        // a single rank-64 member cannot pay for its own kernel launch
+        let mut ranks = vec![8u32; 12];
+        ranks.push(64);
+        ranks.extend([128, 128]);
+        let active = active_set(&ranks);
+        let plan = pol.compose_decode(&active, 24, &cm, None);
+        assert_eq!(plan.total_members(), active.len(), "covers everyone");
+        assert_eq!(plan.groups.len(), 2, "{plan:?}");
+        // the split group is the rank-8 dozen; the merged group holds
+        // the stray 64 padded up with the 128s
+        assert_eq!(plan.groups[0].seqs.len(), 12);
+        assert_eq!(plan.groups[1].seqs.len(), 3);
+        // homogeneous active set: collapses to the unified plan
+        let uni = active_set(&[128, 128, 128]);
+        let plan = pol.compose_decode(&uni, 24, &cm, None);
+        assert_eq!(plan.groups.len(), 1);
+        assert_eq!(plan.total_members(), 3);
+    }
+
+    fn slo_server(preempt: bool, ttft_target: f64) -> SimServer {
+        use crate::config::SloFeedbackConfig;
+        let cm = CostModel::new(ServerConfig::default());
+        let mut s = SimServer::with_policy(
+            0,
+            cm,
+            build_policy(
+                BatchPolicyKind::Fifo,
+                DecodePolicyKind::RankPartitioned,
+                &BTreeMap::new(),
+            ),
+        );
+        s.enable_slo(SloFeedbackConfig {
+            enabled: true,
+            ttft_target,
+            tbt_target: 0.1,
+            preempt_decode: preempt,
+            pressure_theta: 0.9,
+        });
+        s
+    }
+
+    /// Preemption: a prefill arriving mid-round is admitted at the
+    /// next sub-batch step boundary under TTFT pressure; the dropped
+    /// steps re-plan, and every request still completes (conservation).
+    #[test]
+    fn preemption_admits_prefill_between_steps_and_conserves() {
+        let mut s = slo_server(true, 0.05);
+        let mut lo = req(0.0, 0, 100, 4);
+        lo.rank = 8;
+        let mut hi = req(0.0, 1, 100, 4);
+        hi.rank = 128;
+        s.enqueue_ready(lo);
+        s.enqueue_ready(hi);
+        let t1 = s.start_iteration(0.0).unwrap();
+        s.finish_iteration(t1);
+        assert_eq!(s.active.len(), 2);
+        // decode round of two steps starts; a prefill arrives mid-round
+        let t2 = s.start_iteration(t1).unwrap();
+        assert!(matches!(s.running, Iteration::Decode { .. }));
+        let mut late = req(t1, 2, 100, 1);
+        late.rank = 8;
+        s.enqueue_ready(late);
+        s.finish_iteration(t1 + t2);
+        // next start: the remaining rank-128 step is preempted (waited
+        // + remaining >> (1-theta)*50ms) and the prefill runs instead
+        let t3 = s.start_iteration(t1 + t2).unwrap();
+        assert!(
+            matches!(s.running, Iteration::Prefill { .. }),
+            "pressure must preempt the round: {:?}",
+            s.running
+        );
+        assert_eq!(s.preemptions, 1);
+        let done = s.finish_iteration(t1 + t2 + t3);
+        assert_eq!(done.len(), 1, "single-token prefill completes");
+        assert_eq!(s.ttft_under_pressure.len(), 1);
+        // drive to quiescence: everyone (incl. the preempted member's
+        // re-planned steps) finishes — nothing lost, no empty steps
+        let mut now = t1 + t2 + t3;
+        let mut completed = done.len();
+        for _ in 0..64 {
+            match s.start_iteration(now) {
+                Some(dt) => {
+                    now += dt;
+                    completed += s.finish_iteration(now).len();
+                }
+                None => break,
+            }
+        }
+        assert_eq!(completed, 3, "conservation across preempted rounds");
+        assert!(s.quiesced());
+    }
+
+    /// Preemption off (or no pressure): rounds stay atomic — the PR 3
+    /// contract, bit for bit.
+    #[test]
+    fn preemption_off_keeps_rounds_atomic() {
+        let mut s = slo_server(false, 0.05);
+        let mut lo = req(0.0, 0, 100, 4);
+        lo.rank = 8;
+        let mut hi = req(0.0, 1, 100, 4);
+        hi.rank = 128;
+        s.enqueue_ready(lo);
+        s.enqueue_ready(hi);
+        let t1 = s.start_iteration(0.0).unwrap();
+        s.finish_iteration(t1);
+        let t2 = s.start_iteration(t1).unwrap();
+        let mut late = req(t1, 2, 100, 1);
+        late.rank = 8;
+        s.enqueue_ready(late);
+        s.finish_iteration(t1 + t2);
+        let _t3 = s.start_iteration(t1 + t2).unwrap();
+        assert!(
+            matches!(s.running, Iteration::Decode { .. }),
+            "round must finish before the prefill without preemption"
+        );
+        assert_eq!(s.preemptions, 0);
+    }
+
+    /// Adaptive max_wait_iters: with the head's TTFT headroom gone,
+    /// RankBucketed's guard drops to zero and the head class is forced
+    /// immediately; with full headroom the configured bound applies.
+    #[test]
+    fn rank_bucketed_adaptive_wait_bound() {
+        let mut pol = RankBucketed::new(8);
+        let mut q: VecDeque<SimReq> = VecDeque::new();
+        q.push_back(ranked(0.0, 0, 8)); // lone head
+        q.push_back(ranked(1.0, 1, 128));
+        q.push_back(ranked(2.0, 2, 128));
+        // no headroom left: the guard collapses, head class forced
+        pol.set_slo_pressure(0.0);
+        let batch = pol.admit(&mut q, 8, 10_000);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].rank, 8, "zero headroom forces the head");
+        // full headroom restored: majority class wins again
+        pol.set_slo_pressure(1.0);
+        q.push_back(ranked(3.0, 3, 8));
+        let batch = pol.admit(&mut q, 8, 10_000);
+        assert!(batch.iter().all(|r| r.rank == 128));
     }
 
     #[test]

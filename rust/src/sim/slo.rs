@@ -1,0 +1,288 @@
+//! The scheduler's SLO feedback layer: per-server rolling TTFT/TBT
+//! headroom tracking against configurable targets
+//! ([`SloFeedbackConfig`]).
+//!
+//! The tracker closes the loop the open-loop (PR 3) scheduler left
+//! open: instead of reacting only to batch *shape* (rank classes,
+//! queue depths), the policies can react to per-request latency
+//! *pressure* — the CaraServe/S-LoRA argument that admission control
+//! must watch the SLO, not just the batch. Three consumers:
+//!
+//! * `SimServer::start_iteration` asks [`SloTracker::ttft_pressure`]
+//!   whether a queued prefill's projected headroom justifies
+//!   preempting the decode round in flight between sub-batch steps;
+//! * `ClassSubBatchDecode` asks [`SloTracker::tbt_headroom`] which
+//!   rank class is suffering most, and serves it first (the SLO-aware
+//!   rotor), falling back to the cyclic rotor on ties;
+//! * `RankBucketed` receives [`SloTracker::ttft_headroom_frac`]
+//!   through `BatchPolicy::set_slo_pressure` and scales its
+//!   bounded-wait starvation guard accordingly (adaptive
+//!   `max_wait_iters`).
+//!
+//! A disabled tracker is simply absent (`SimServer::slo == None`), so
+//! the open-loop scheduler stays bit-identical to PR 3.
+
+use crate::config::SloFeedbackConfig;
+use std::collections::BTreeMap;
+
+/// Rolling-window size of the per-class inter-token-gap estimate.
+const TBT_WINDOW: usize = 32;
+
+/// Per-rank-class decode cadence: a ring of recent inter-token gaps
+/// plus the time of the class's last decode step (each member of a
+/// step produces exactly one token, so step-to-step gaps *are* the
+/// class's observed TBT).
+#[derive(Debug, Clone, Default)]
+struct ClassCadence {
+    gaps: Vec<f64>,
+    next: usize,
+    last_step_at: Option<f64>,
+}
+
+/// Rolling TTFT/TBT headroom against the feedback targets. Owned per
+/// server (cadence is a per-server signal); purely observational —
+/// recording never perturbs simulated time.
+#[derive(Debug, Clone)]
+pub struct SloTracker {
+    pub cfg: SloFeedbackConfig,
+    tbt: BTreeMap<u32, ClassCadence>,
+    /// Latest simulated time the tracker has seen (staleness anchor
+    /// for classes the rotor has been skipping).
+    now: f64,
+}
+
+impl SloTracker {
+    pub fn new(cfg: SloFeedbackConfig) -> Self {
+        SloTracker {
+            cfg,
+            tbt: BTreeMap::new(),
+            now: 0.0,
+        }
+    }
+
+    /// Advance the tracker's clock (monotone).
+    pub fn tick(&mut self, now: f64) {
+        if now > self.now {
+            self.now = now;
+        }
+    }
+
+    /// Sync the tracker with the classes currently in the active set
+    /// (called once per decode composition):
+    ///
+    /// * **Anchor** first-sighted classes at `now` — a class that
+    ///   joins the active set and is then never served would otherwise
+    ///   have no `last_step_at`, report full headroom forever, and be
+    ///   starved by the worst-first rotor. Anchored, its staleness
+    ///   grows from admission until it is worst and gets served.
+    /// * **Retire** departed classes — a class whose members all
+    ///   completed must not keep its cadence history; if it later
+    ///   re-enters, it restarts fresh instead of importing its idle
+    ///   gap as a giant "observed TBT" that would hog the rotor.
+    pub fn observe_active(&mut self, now: f64, classes: &[u32]) {
+        self.tick(now);
+        self.tbt.retain(|rank, _| classes.contains(rank));
+        for &rank in classes {
+            let e = self.tbt.entry(rank).or_default();
+            if e.last_step_at.is_none() {
+                e.last_step_at = Some(now);
+            }
+        }
+    }
+
+    /// Record one decode step finishing at `now` for every rank class
+    /// with a member in the step: the gap since the class's previous
+    /// step is its newest inter-token-gap sample.
+    pub fn record_decode_step(
+        &mut self,
+        now: f64,
+        classes: impl IntoIterator<Item = u32>,
+    ) {
+        self.tick(now);
+        for rank in classes {
+            let e = self.tbt.entry(rank).or_default();
+            if let Some(prev) = e.last_step_at {
+                let gap = now - prev;
+                if gap >= 0.0 {
+                    if e.gaps.len() < TBT_WINDOW {
+                        e.gaps.push(gap);
+                    } else {
+                        e.gaps[e.next] = gap;
+                    }
+                    e.next = (e.next + 1) % TBT_WINDOW;
+                }
+            }
+            e.last_step_at = Some(now);
+        }
+    }
+
+    /// Rolling mean inter-token gap of a class (None until the class
+    /// has stepped at least twice).
+    pub fn observed_tbt(&self, rank: u32) -> Option<f64> {
+        let e = self.tbt.get(&rank)?;
+        if e.gaps.is_empty() {
+            return None;
+        }
+        Some(e.gaps.iter().sum::<f64>() / e.gaps.len() as f64)
+    }
+
+    /// TBT headroom of a rank class: target minus the rolling observed
+    /// gap, floored by staleness (a class that hasn't stepped since
+    /// `last_step_at` is *at least* `now − last_step_at` slow, however
+    /// healthy its history looks — otherwise a skipped class would
+    /// keep reporting its old, good cadence and starve). Classes with
+    /// no observations report full headroom: the tracker has no
+    /// evidence of pressure, so all-fresh classes tie.
+    pub fn tbt_headroom(&self, rank: u32) -> f64 {
+        let Some(e) = self.tbt.get(&rank) else {
+            return self.cfg.tbt_target;
+        };
+        let mut gap: f64 = 0.0;
+        if !e.gaps.is_empty() {
+            gap = e.gaps.iter().sum::<f64>() / e.gaps.len() as f64;
+        }
+        if let Some(last) = e.last_step_at {
+            gap = gap.max(self.now - last);
+        }
+        if gap <= 0.0 {
+            return self.cfg.tbt_target;
+        }
+        self.cfg.tbt_target - gap
+    }
+
+    /// TTFT pressure: the queue head has already waited `waited`
+    /// seconds and would wait `projected` more (e.g. the in-flight
+    /// decode round's remaining sub-batch steps) before its prefill
+    /// could start. Pressure once the projected slack drops below
+    /// `pressure_theta ×` the target.
+    pub fn ttft_pressure(&self, waited: f64, projected: f64) -> bool {
+        let t = self.cfg.ttft_target;
+        t - waited - projected < self.cfg.pressure_theta * t
+    }
+
+    /// Remaining TTFT-headroom fraction of a request that has waited
+    /// `waited` seconds, in [0, 1]: 1 = just arrived, 0 = target
+    /// already blown. Drives the adaptive `RankBucketed` wait bound.
+    pub fn ttft_headroom_frac(&self, waited: f64) -> f64 {
+        ((self.cfg.ttft_target - waited) / self.cfg.ttft_target)
+            .clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SloFeedbackConfig {
+        SloFeedbackConfig {
+            enabled: true,
+            ttft_target: 1.0,
+            tbt_target: 0.1,
+            preempt_decode: true,
+            pressure_theta: 0.5,
+        }
+    }
+
+    #[test]
+    fn tbt_headroom_tracks_cadence_and_staleness() {
+        let mut t = SloTracker::new(cfg());
+        // unobserved classes report full headroom — an all-fresh tie
+        assert_eq!(t.tbt_headroom(8), 0.1);
+        assert_eq!(t.tbt_headroom(128), 0.1);
+        // class 8 steps every 20 ms, class 128 every 80 ms
+        for i in 0..10 {
+            t.record_decode_step(0.02 * (i + 1) as f64, [8u32]);
+        }
+        for i in 0..3 {
+            t.record_decode_step(0.08 * (i + 1) as f64, [128u32]);
+        }
+        t.tick(0.24);
+        assert!((t.observed_tbt(8).unwrap() - 0.02).abs() < 1e-12);
+        assert!((t.observed_tbt(128).unwrap() - 0.08).abs() < 1e-12);
+        // the slower class has the worse headroom
+        assert!(t.tbt_headroom(128) < t.tbt_headroom(8));
+        // staleness floor: class 8 skipped until t=0.5 looks 0.3 slow
+        t.tick(0.5);
+        let h = t.tbt_headroom(8);
+        assert!((h - (0.1 - 0.3)).abs() < 1e-12, "{h}");
+    }
+
+    /// A class that joins the active set but never gets served must
+    /// not hide behind "no observations = full headroom": once
+    /// anchored by `observe_active`, its staleness grows until it is
+    /// the worst class — the rotor cannot starve it. And a class that
+    /// drains out of the active set loses its cadence history, so a
+    /// later re-entry starts fresh instead of importing its idle gap.
+    #[test]
+    fn observe_active_anchors_and_retires_classes() {
+        let mut t = SloTracker::new(cfg());
+        // class 8 decodes steadily every 20 ms
+        for i in 0..6 {
+            t.record_decode_step(0.02 * (i + 1) as f64, [8u32]);
+        }
+        // class 64 becomes active at t=0.12 and is never served
+        t.observe_active(0.12, &[8, 64]);
+        // immediately after anchoring the fresh class still looks
+        // healthy (no evidence either way)
+        assert_eq!(t.tbt_headroom(64), 0.1);
+        // but by t=0.4 its staleness (0.28) beats class 8's (mean
+        // 0.02, staleness 0.28 too — both stale here, so step class 8
+        // once more to refresh it)
+        t.record_decode_step(0.4, [8u32]);
+        t.observe_active(0.4, &[8, 64]);
+        assert!(
+            t.tbt_headroom(64) < t.tbt_headroom(8),
+            "unserved class must decay below a freshly served one: \
+             64 -> {}, 8 -> {}",
+            t.tbt_headroom(64),
+            t.tbt_headroom(8)
+        );
+        // re-observing does not reset an existing anchor
+        assert!(t.tbt_headroom(64) < 0.1 - 0.27);
+        // class 8 drains out of the active set: its history retires,
+        // and a re-entry at t=1.0 restarts at full headroom instead of
+        // importing the 0.6 s idle gap as observed TBT
+        t.observe_active(0.7, &[64]);
+        t.observe_active(1.0, &[8, 64]);
+        assert_eq!(t.tbt_headroom(8), 0.1);
+        t.record_decode_step(1.02, [8u32]);
+        let g = t.observed_tbt(8).unwrap();
+        assert!(
+            (g - 0.02).abs() < 1e-12,
+            "re-entry gap must be anchor→step, not the 0.6 s idle \
+             gap: {g}"
+        );
+    }
+
+    #[test]
+    fn rolling_window_bounds_memory() {
+        let mut t = SloTracker::new(cfg());
+        for i in 0..(3 * TBT_WINDOW) {
+            t.record_decode_step(0.01 * (i + 1) as f64, [8u32]);
+        }
+        // still a finite mean of the last window, not the full history
+        assert!((t.observed_tbt(8).unwrap() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ttft_pressure_and_headroom_frac() {
+        let t = SloTracker::new(cfg());
+        // target 1.0, theta 0.5: pressure once waited+projected > 0.5
+        assert!(!t.ttft_pressure(0.1, 0.1));
+        assert!(t.ttft_pressure(0.4, 0.2));
+        assert!(t.ttft_pressure(0.6, 0.0));
+        assert_eq!(t.ttft_headroom_frac(0.0), 1.0);
+        assert!((t.ttft_headroom_frac(0.25) - 0.75).abs() < 1e-12);
+        assert_eq!(t.ttft_headroom_frac(2.0), 0.0);
+    }
+
+    #[test]
+    fn clock_is_monotone() {
+        let mut t = SloTracker::new(cfg());
+        t.tick(5.0);
+        t.tick(1.0); // ignored
+        t.record_decode_step(5.0, [8u32]);
+        t.record_decode_step(5.5, [8u32]);
+        assert!((t.observed_tbt(8).unwrap() - 0.5).abs() < 1e-12);
+    }
+}

@@ -73,7 +73,8 @@ fn decode_plans_are_well_formed() {
                 active.iter().map(|a| a.sreq.rank).collect();
             let mut partitioned =
                 RankPartitionedDecode::new(Box::new(Fifo));
-            let plan = partitioned.compose_decode(&active, slots, &cm);
+            let plan =
+                partitioned.compose_decode(&active, slots, &cm, None);
             assert_eq!(
                 plan.total_members(),
                 n,
@@ -98,7 +99,8 @@ fn decode_plans_are_well_formed() {
                     Box::new(Fifo),
                     k,
                 );
-                let plan = sub.compose_decode(&active, slots, &cm);
+                let plan =
+                    sub.compose_decode(&active, slots, &cm, None);
                 assert!(plan.groups.len() <= k.min(classes.len().max(1)));
                 assert!(plan.total_members() <= slots);
                 let mut seen: BTreeSet<u64> = BTreeSet::new();
@@ -146,7 +148,7 @@ fn class_subbatch_fairness_bound() {
         let mut pol = ClassSubBatchDecode::new(Box::new(Fifo), k);
         let mut waited: BTreeMap<u32, usize> = BTreeMap::new();
         for round in 0..30 {
-            let plan = pol.compose_decode(&active, 24, &cm);
+            let plan = pol.compose_decode(&active, 24, &cm, None);
             let served: BTreeSet<u32> = plan
                 .groups
                 .iter()

@@ -5,6 +5,7 @@
 
 use loraserve::config::{
     BatchPolicyKind, ClassSelect, ClusterConfig, DecodePolicyKind,
+    SloFeedbackConfig,
 };
 use loraserve::figures::sched::{sched_decode_table, sched_table};
 use loraserve::sim::{
@@ -51,6 +52,7 @@ fn hand_composed(kind: SystemKind) -> SystemSpec {
         last_value_demand: false,
         load_signal: LoadSignal::ServiceSeconds,
         rank_blind_cost: false,
+        slo: SloFeedbackConfig::default(),
     };
     match kind {
         SystemKind::LoraServe => SystemSpec {
