@@ -247,6 +247,7 @@ fn main() {
                     rank: RANK_CLASSES[rng.below(5) as usize],
                     adapter_bytes: 1 << 20,
                     est: 0.1,
+                    remote: false,
                 },
                 produced: 1 + (i as u32 % 16),
                 first_token_at: 0.0,

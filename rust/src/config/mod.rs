@@ -240,6 +240,100 @@ impl Default for SloFeedbackConfig {
     }
 }
 
+/// When the placement layer re-places adapters (the paper's
+/// "dynamically rebalances adapters across GPUs").
+///
+/// * `Periodic` — the open-loop timer: a full re-place every
+///   `rebalance_period` seconds (the PR 4 behavior, bit for bit).
+/// * `Triggered` — drift-reactive: a [`RebalanceConfig`] trigger
+///   watches the projected per-server load-imbalance ratio (and, when
+///   the SLO feedback layer is on, rolling TBT headroom) every
+///   `trigger_check_period` seconds and fires an *incremental*
+///   rebalance — only moves whose projected queued-token relief beats
+///   their RDMA migration cost are applied.
+/// * `Hybrid` — both: the periodic full re-place as a slow safety net,
+///   with triggered incremental rebalances in between.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RebalanceMode {
+    #[default]
+    Periodic,
+    Triggered,
+    Hybrid,
+}
+
+impl RebalanceMode {
+    /// Parse `periodic`, `triggered`, or `hybrid`.
+    pub fn parse(s: &str) -> Result<RebalanceMode, String> {
+        match s {
+            "periodic" => Ok(RebalanceMode::Periodic),
+            "triggered" => Ok(RebalanceMode::Triggered),
+            "hybrid" => Ok(RebalanceMode::Hybrid),
+            other => Err(format!(
+                "unknown rebalance mode '{other}' (valid: periodic | \
+                 triggered | hybrid)"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RebalanceMode::Periodic => "periodic",
+            RebalanceMode::Triggered => "triggered",
+            RebalanceMode::Hybrid => "hybrid",
+        }
+    }
+}
+
+/// Knobs of the drift-reactive placement layer
+/// (`sim::rebalance::RebalanceTrigger` + the incremental migration
+/// planner). JSON: `rebalance_mode`, `trigger_check_period`,
+/// `trigger_imbalance`, `trigger_hysteresis`, `trigger_min_interval`,
+/// `remote_attach`; CLI: `--rebalance-mode`, `--remote-attach`.
+///
+/// Defaults keep the layer fully inert: `Periodic` mode never
+/// evaluates the trigger, never plans incrementally, and never serves
+/// remotely — the engine is the PR 4 open-loop rebalancer bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RebalanceConfig {
+    pub mode: RebalanceMode,
+    /// Seconds between trigger-signal evaluations (triggered/hybrid
+    /// modes; this is also the demand tracker's window there).
+    pub check_period: f64,
+    /// Fire threshold on the projected per-server load-imbalance ratio
+    /// (max utilization ÷ mean over active servers). Strictly > 1 —
+    /// the ratio is floored at 1.0, so a threshold of exactly 1 would
+    /// leave the hysteresis exit unreachable.
+    pub imbalance_threshold: f64,
+    /// Schmitt-trigger exit fraction in (0, 1], applied to the
+    /// threshold's excess over 1 (the ratio's floor): once fired, the
+    /// trigger re-arms only after the ratio falls below
+    /// `1 + hysteresis × (imbalance_threshold − 1)`, so a signal
+    /// hovering at the threshold cannot thrash.
+    pub hysteresis: f64,
+    /// Minimum seconds between triggered rebalances (paces re-fires
+    /// while a fix takes effect).
+    pub min_interval: f64,
+    /// Serve cold/overflow adapters from a peer server's HBM over
+    /// GPUDirect RDMA instead of migrating them: no fetch wait and no
+    /// copy moved, but every iteration touching the adapter pays
+    /// `ServerConfig::remote_attach_penalty`. Only meaningful with a
+    /// distributed pool.
+    pub remote_attach: bool,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig {
+            mode: RebalanceMode::Periodic,
+            check_period: 15.0,
+            imbalance_threshold: 1.5,
+            hysteresis: 0.8,
+            min_interval: 30.0,
+            remote_attach: false,
+        }
+    }
+}
+
 /// How `RankBucketed` picks the rank class that owns a prefill
 /// iteration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -486,6 +580,14 @@ pub struct ServerConfig {
     /// (single-group) decode pays nothing. JSON knob:
     /// `decode_launch_overhead_ms`.
     pub decode_launch_overhead: f64,
+    /// Per-iteration penalty of touching one remotely-attached adapter
+    /// (`RebalanceConfig::remote_attach`), seconds: the weights stay
+    /// in a peer server's HBM and each iteration streams the active
+    /// low-rank slices over GPUDirect RDMA instead of paging a local
+    /// copy. Default derived from the `FetchSource::RemoteRdma` link
+    /// model (see `costmodel::calib::REMOTE_ATTACH_PENALTY`). JSON
+    /// knob: `remote_attach_penalty_ms`.
+    pub remote_attach_penalty: f64,
 }
 
 impl Default for ServerConfig {
@@ -503,6 +605,8 @@ impl Default for ServerConfig {
             gpu_adapter_cache_bytes: (3 << 30) / 2, // ~1.5 GiB of HBM after weights+KV
             decode_launch_overhead:
                 crate::costmodel::calib::DECODE_LAUNCH_OVERHEAD,
+            remote_attach_penalty:
+                crate::costmodel::calib::REMOTE_ATTACH_PENALTY,
         }
     }
 }
@@ -530,6 +634,10 @@ pub struct ClusterConfig {
     /// preemptible decode rounds, SLO-aware rotor, adaptive waits).
     /// Disabled by default — the PR 3 open-loop scheduler bit for bit.
     pub feedback: SloFeedbackConfig,
+    /// Drift-reactive rebalancing (trigger mode, thresholds, remote
+    /// attach). Default `Periodic` — the PR 4 open-loop rebalancer bit
+    /// for bit.
+    pub rebalance: RebalanceConfig,
     pub seed: u64,
 }
 
@@ -544,6 +652,7 @@ impl Default for ClusterConfig {
             batch_policy: BatchPolicyKind::default(),
             decode_policy: DecodePolicyKind::default(),
             feedback: SloFeedbackConfig::default(),
+            rebalance: RebalanceConfig::default(),
             seed: 0,
         }
     }
@@ -645,6 +754,64 @@ impl ClusterConfig {
                 ));
             }
             cfg.server.decode_launch_overhead = x / 1e3;
+        }
+        if let Some(x) =
+            v.get("remote_attach_penalty_ms").and_then(Json::as_f64)
+        {
+            if x < 0.0 {
+                return Err(format!(
+                    "remote_attach_penalty_ms must be >= 0, got {x}"
+                ));
+            }
+            cfg.server.remote_attach_penalty = x / 1e3;
+        }
+        if let Some(s) = v.get("rebalance_mode").and_then(Json::as_str) {
+            cfg.rebalance.mode = RebalanceMode::parse(s)?;
+        }
+        if let Some(x) =
+            v.get("trigger_check_period").and_then(Json::as_f64)
+        {
+            if x <= 0.0 {
+                return Err(format!(
+                    "trigger_check_period must be > 0, got {x}"
+                ));
+            }
+            cfg.rebalance.check_period = x;
+        }
+        if let Some(x) = v.get("trigger_imbalance").and_then(Json::as_f64)
+        {
+            // strictly above 1: the ratio is floored at 1.0, so a
+            // threshold of exactly 1 has an unreachable hysteresis
+            // exit and would latch the trigger after one fire
+            if x <= 1.0 {
+                return Err(format!(
+                    "trigger_imbalance must be > 1, got {x}"
+                ));
+            }
+            cfg.rebalance.imbalance_threshold = x;
+        }
+        if let Some(x) =
+            v.get("trigger_hysteresis").and_then(Json::as_f64)
+        {
+            if !(0.0..=1.0).contains(&x) || x == 0.0 {
+                return Err(format!(
+                    "trigger_hysteresis must be in (0, 1], got {x}"
+                ));
+            }
+            cfg.rebalance.hysteresis = x;
+        }
+        if let Some(x) =
+            v.get("trigger_min_interval").and_then(Json::as_f64)
+        {
+            if x < 0.0 {
+                return Err(format!(
+                    "trigger_min_interval must be >= 0, got {x}"
+                ));
+            }
+            cfg.rebalance.min_interval = x;
+        }
+        if let Some(b) = v.get("remote_attach").and_then(Json::as_bool) {
+            cfg.rebalance.remote_attach = b;
         }
         if let Some(a) = v.get("autoscale") {
             let au = &mut cfg.autoscale;
@@ -1011,6 +1178,64 @@ mod tests {
             let v = json::parse(bad).unwrap();
             assert!(ClusterConfig::from_json(&v).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn rebalance_config_from_json() {
+        // defaults: periodic, inert
+        let cfg = ClusterConfig::default();
+        assert_eq!(cfg.rebalance.mode, RebalanceMode::Periodic);
+        assert!(!cfg.rebalance.remote_attach);
+        let v = json::parse(
+            r#"{"rebalance_mode": "triggered",
+                "trigger_check_period": 10.0,
+                "trigger_imbalance": 1.3,
+                "trigger_hysteresis": 0.9,
+                "trigger_min_interval": 20.0,
+                "remote_attach": true,
+                "remote_attach_penalty_ms": 0.6}"#,
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.rebalance.mode, RebalanceMode::Triggered);
+        assert_eq!(cfg.rebalance.check_period, 10.0);
+        assert_eq!(cfg.rebalance.imbalance_threshold, 1.3);
+        assert_eq!(cfg.rebalance.hysteresis, 0.9);
+        assert_eq!(cfg.rebalance.min_interval, 20.0);
+        assert!(cfg.rebalance.remote_attach);
+        assert!(
+            (cfg.server.remote_attach_penalty - 0.6e-3).abs() < 1e-12
+        );
+        // labels round-trip through parse, bad values rejected
+        for m in [
+            RebalanceMode::Periodic,
+            RebalanceMode::Triggered,
+            RebalanceMode::Hybrid,
+        ] {
+            assert_eq!(RebalanceMode::parse(m.label()).unwrap(), m);
+        }
+        let e = RebalanceMode::parse("nope").unwrap_err();
+        for m in ["periodic", "triggered", "hybrid"] {
+            assert!(e.contains(m), "error misses '{m}': {e}");
+        }
+        for bad in [
+            r#"{"rebalance_mode": "sometimes"}"#,
+            r#"{"trigger_check_period": 0.0}"#,
+            r#"{"trigger_imbalance": 0.8}"#,
+            r#"{"trigger_imbalance": 1.0}"#,
+            r#"{"trigger_hysteresis": 0.0}"#,
+            r#"{"trigger_hysteresis": 1.5}"#,
+            r#"{"trigger_min_interval": -1.0}"#,
+            r#"{"remote_attach_penalty_ms": -0.1}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(ClusterConfig::from_json(&v).is_err(), "{bad}");
+        }
+        // untouched: the default penalty comes from calib
+        assert_eq!(
+            ClusterConfig::default().server.remote_attach_penalty,
+            crate::costmodel::calib::REMOTE_ATTACH_PENALTY
+        );
     }
 
     #[test]

@@ -78,6 +78,18 @@ pub const GAMMA_PER_SEQ: f64 = 0.0006;
 /// nothing.
 pub const DECODE_LAUNCH_OVERHEAD: f64 = 0.0008;
 
+/// Per-iteration penalty of touching one remotely-attached adapter
+/// (`RebalanceConfig::remote_attach`), seconds. Derived from the
+/// `FetchSource::RemoteRdma` link model (fetch.rs): each iteration
+/// issues one pipelined round of low-rank slice reads against the
+/// peer's HBM, so it pays the 250 µs two-hop GPUDirect latency floor
+/// (LAT_RDMA) plus ~60% dispatch/pipelining slack — the slices
+/// themselves stream concurrently with the layer compute, so the
+/// latency floor, not the bytes, dominates. Default of
+/// `ServerConfig::remote_attach_penalty` (JSON
+/// `remote_attach_penalty_ms`); locally resident adapters pay nothing.
+pub const REMOTE_ATTACH_PENALTY: f64 = 0.0004;
+
 /// Utilization headroom when converting a capacity into an
 /// operating point under SLO (Algorithm 1's profiled "operating
 /// points"): serving at full capacity has unbounded queueing delay, so

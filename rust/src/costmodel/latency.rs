@@ -77,6 +77,22 @@ impl CostModel {
             - self.server.decode_launch_overhead
     }
 
+    /// Per-iteration penalty of touching one remotely-attached adapter
+    /// (served from a peer server's HBM over GPUDirect RDMA instead of
+    /// being migrated — `RebalanceConfig::remote_attach`), seconds.
+    /// The `FetchSource::RemoteRdma`-derived default lives in
+    /// `calib::REMOTE_ATTACH_PENALTY`; the JSON knob
+    /// `remote_attach_penalty_ms` overrides it.
+    pub fn remote_attach_penalty(&self) -> f64 {
+        self.server.remote_attach_penalty
+    }
+
+    /// [`CostModel::remote_attach_penalty`] in milliseconds (the unit
+    /// the config knob is quoted in).
+    pub fn remote_attach_penalty_ms(&self) -> f64 {
+        self.server.remote_attach_penalty * 1e3
+    }
+
     /// Saturation throughput (tokens/s) for a single-rank workload of
     /// the given request shape: the steady-state rate at which the
     /// server can complete requests, counting prompt+output tokens.
@@ -286,6 +302,32 @@ mod tests {
             cm.decode_split_gain(10, 8, 128)
                 > cm.decode_split_gain(2, 8, 128)
         );
+    }
+
+    /// The remote-attach penalty mirrors the config knob exactly and
+    /// stays in the RDMA-latency regime: cheaper than re-fetching the
+    /// adapter every iteration, far from free.
+    #[test]
+    fn remote_attach_penalty_scale() {
+        let cm = CostModel::new(server(ModelSpec::LLAMA_7B, 4));
+        let p = cm.remote_attach_penalty();
+        assert_eq!(
+            p,
+            crate::costmodel::calib::REMOTE_ATTACH_PENALTY
+        );
+        assert_eq!(cm.remote_attach_penalty_ms(), p * 1e3);
+        // at least one RDMA latency floor, well under a decode step's
+        // fixed overhead
+        assert!(p >= 250e-6, "{p}");
+        assert!(p < crate::costmodel::calib::GAMMA0, "{p}");
+        // a full rank-64 adapter re-fetch would cost ~15x more per
+        // iteration than remote attach — the reason the mode exists
+        let refetch = crate::costmodel::fetch_time(
+            &cm.server.gpu,
+            crate::costmodel::FetchSource::RemoteRdma,
+            ModelSpec::LLAMA_7B.adapter_bytes(64),
+        );
+        assert!(refetch > 5.0 * p, "refetch={refetch} penalty={p}");
     }
 
     /// Grouped decode cost split: the shared base is a LoRA-free

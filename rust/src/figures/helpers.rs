@@ -41,6 +41,29 @@ pub fn warmup_secs(cluster: &ClusterConfig) -> f64 {
     2.0 * cluster.rebalance_period
 }
 
+/// Steady-state warmup derived from a run's *actual* rebalance
+/// timestamps (`SimReport::rebalance_times`): measurement starts at
+/// the second demand-informed re-placement — the first may act on a
+/// half-window of history — floored at one `rebalance_period`, so a
+/// periodic run's quarter-period bootstrap re-places (or an early
+/// trigger fire) don't pull the cutoff into the cold-start backlog
+/// those early re-places exist to drain. The old
+/// `2 × rebalance_period` formula assumed rebalances arrive on the
+/// period, which is wrong once they are trigger-driven (the period
+/// may never elapse); it remains the fallback when the run rebalanced
+/// fewer than twice — e.g. a triggered run on a stable trace, where
+/// the trigger (correctly) never fired and there is no steady-state
+/// transition to wait out.
+pub fn steady_warmup(
+    cluster: &ClusterConfig,
+    rebalance_times: &[f64],
+) -> f64 {
+    match rebalance_times.get(1) {
+        Some(&t) => t.max(cluster.rebalance_period),
+        None => warmup_secs(cluster),
+    }
+}
+
 /// Run one (trace, system) pair on a cluster.
 pub fn run_system(
     trace: &Trace,
@@ -123,6 +146,23 @@ mod tests {
             lengths: LengthModel::fixed(512, 128),
             ..Default::default()
         })
+    }
+
+    #[test]
+    fn steady_warmup_prefers_observed_rebalances() {
+        let cluster = ClusterConfig {
+            rebalance_period: 60.0,
+            ..Default::default()
+        };
+        // no rebalances observed: the old formula is the fallback
+        assert_eq!(steady_warmup(&cluster, &[]), 120.0);
+        assert_eq!(steady_warmup(&cluster, &[33.0]), 120.0);
+        // early (bootstrap-cadence) re-places: floored at one period
+        // so the cold-start backlog stays excluded
+        assert_eq!(steady_warmup(&cluster, &[15.0, 30.0, 45.0]), 60.0);
+        // trigger-driven rebalances landing late: steady state starts
+        // at the second one, still well before 2 × period would
+        assert_eq!(steady_warmup(&cluster, &[70.0, 95.0]), 95.0);
     }
 
     #[test]

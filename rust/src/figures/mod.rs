@@ -10,6 +10,7 @@
 pub mod ablations;
 pub mod characterization;
 pub mod design;
+pub mod drift;
 pub mod elastic;
 pub mod eval;
 pub mod helpers;
@@ -63,6 +64,9 @@ pub fn registry() -> Vec<(&'static str, &'static str, FigFn)> {
         ("sched", "batch scheduling × placement ablation + \
                    prefill × decode policy grid + SLO-feedback grid",
          sched::sched),
+        ("drift", "drift-reactive rebalancing: periodic vs triggered \
+                   vs triggered+remote-attach",
+         drift::drift),
         ("gpus", "min fleet under SLO per system (GPU savings)",
          elastic::gpus_under_slo),
         ("fleet", "SLO-aware autoscaler fleet-size timeline",

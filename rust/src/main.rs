@@ -70,6 +70,8 @@ fn usage() {
          [--decode-policy unified|rank-partitioned|class-subbatch[:G]|\
          class-subbatch:auto]\n         \
          [--slo-ttft-ms MS] [--slo-tbt-ms MS] [--preempt-decode on|off]\n         \
+         [--rebalance-mode periodic|triggered|hybrid] \
+         [--remote-attach on|off]\n         \
          [--report-out file.json]\n\
          autoscale [--system <kind>|--all] [--slo-ttft MS] \
          [--slo-e2e MS]\n         \
@@ -205,6 +207,24 @@ fn build_cluster(args: &Args) -> Result<ClusterConfig, String> {
             }
         }
     }
+    // drift-reactive rebalancing knobs (JSON carries the trigger
+    // thresholds; the CLI flips the mode and the remote-attach pool
+    // behavior)
+    if let Some(m) = args.get("rebalance-mode") {
+        cluster.rebalance.mode =
+            loraserve::config::RebalanceMode::parse(m)?;
+    }
+    if let Some(r) = args.get("remote-attach") {
+        match r {
+            "on" | "true" => cluster.rebalance.remote_attach = true,
+            "off" | "false" => cluster.rebalance.remote_attach = false,
+            other => {
+                return Err(format!(
+                    "--remote-attach takes on|off, got '{other}'"
+                ))
+            }
+        }
+    }
     Ok(cluster)
 }
 
@@ -269,6 +289,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
                 cluster.batch_policy,
                 cluster.decode_policy,
                 cluster.feedback,
+                cluster.rebalance,
             )
             .ok_or_else(|| {
                 format!("custom system '{name}' not registered")
@@ -322,6 +343,17 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
             fmt_secs(rep.ttft_under_pressure_p99()),
         ),
         ("rebalances", rep.rebalances.to_string()),
+        (
+            "rebalance mode",
+            cluster.rebalance.mode.label().to_string(),
+        ),
+        (
+            "triggered rebalances",
+            rep.triggered_rebalances.to_string(),
+        ),
+        ("incremental moves", rep.incremental_moves.to_string()),
+        ("rejected moves", rep.rejected_moves.to_string()),
+        ("remote served", rep.remote_served.to_string()),
         ("migrated", fmt_bytes(rep.migration_bytes)),
         ("fetches", rep.fetches.to_string()),
         (

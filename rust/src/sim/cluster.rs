@@ -16,7 +16,7 @@ use super::engine::{
 use super::report::SimReport;
 use crate::config::{
     AutoscaleConfig, BatchPolicyKind, ClusterConfig, DecodePolicyKind,
-    SloFeedbackConfig,
+    RebalanceConfig, SloFeedbackConfig,
 };
 use crate::placement::Placer;
 use crate::trace::Trace;
@@ -59,6 +59,7 @@ impl SystemKind {
         batch: BatchPolicyKind,
         decode: DecodePolicyKind,
         slo: SloFeedbackConfig,
+        rebalance: RebalanceConfig,
     ) -> SystemSpec {
         // (the Toppings arm below forces Replicated regardless)
         let pool = if opts.full_replication {
@@ -80,6 +81,7 @@ impl SystemKind {
             load_signal: LoadSignal::ServiceSeconds,
             rank_blind_cost: false,
             slo,
+            rebalance,
         };
         match self {
             SystemKind::LoraServe => SystemSpec {
@@ -150,6 +152,10 @@ pub struct SimConfig {
     /// `decode` (so the JSON/CLI knobs reach the capacity planner and
     /// every figure harness unchanged).
     pub feedback: SloFeedbackConfig,
+    /// Drift-reactive rebalancing (mode, trigger knobs, remote
+    /// attach). Seeded from `ClusterConfig::rebalance`, threaded
+    /// exactly like `batch`/`decode`/`feedback`.
+    pub rebalance: RebalanceConfig,
 }
 
 impl SimConfig {
@@ -157,6 +163,7 @@ impl SimConfig {
         let batch = cluster.batch_policy;
         let decode = cluster.decode_policy;
         let feedback = cluster.feedback;
+        let rebalance = cluster.rebalance;
         SimConfig {
             cluster,
             system,
@@ -167,6 +174,7 @@ impl SimConfig {
             batch,
             decode,
             feedback,
+            rebalance,
         }
     }
 
@@ -197,6 +205,11 @@ impl SimConfig {
         self.feedback = feedback;
         self
     }
+
+    pub fn with_rebalance(mut self, rebalance: RebalanceConfig) -> Self {
+        self.rebalance = rebalance;
+        self
+    }
 }
 
 /// Run one trace through one canned system. Deterministic per
@@ -204,8 +217,13 @@ impl SimConfig {
 /// drives the [`SimEngine`](super::engine::SimEngine); custom systems
 /// use [`run_spec`](super::engine::run_spec) directly.
 pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
-    let spec =
-        cfg.system.spec(&cfg.opts, cfg.batch, cfg.decode, cfg.feedback);
+    let spec = cfg.system.spec(
+        &cfg.opts,
+        cfg.batch,
+        cfg.decode,
+        cfg.feedback,
+        cfg.rebalance,
+    );
     super::engine::run_spec(trace, cfg, &spec)
 }
 
@@ -252,6 +270,7 @@ pub fn custom_system_spec(
     batch: BatchPolicyKind,
     decode: DecodePolicyKind,
     slo: SloFeedbackConfig,
+    rebalance: RebalanceConfig,
 ) -> Option<SystemSpec> {
     let reg = custom_registry().lock().unwrap();
     let &(static_name, build) =
@@ -270,6 +289,7 @@ pub fn custom_system_spec(
         load_signal: LoadSignal::ServiceSeconds,
         rank_blind_cost: false,
         slo,
+        rebalance,
     })
 }
 
@@ -430,6 +450,7 @@ mod tests {
             BatchPolicyKind::Fifo,
             DecodePolicyKind::Unified,
             SloFeedbackConfig::default(),
+            RebalanceConfig::default(),
         )
         .is_none());
         register_custom_system("rr-test", |_seed| {
@@ -441,6 +462,7 @@ mod tests {
             BatchPolicyKind::Fifo,
             DecodePolicyKind::Unified,
             SloFeedbackConfig::default(),
+            RebalanceConfig::default(),
         )
         .expect("registered name must resolve");
         assert_eq!(spec.label, "rr-test");

@@ -29,9 +29,13 @@
 
 use super::cluster::SimConfig;
 use super::event::{EventQueue, SimEvent};
+use super::rebalance::{
+    imbalance_ratio, plan_incremental, RebalanceTrigger,
+};
 use super::report::SimReport;
 use super::server::{build_policy, SimReq, SimServer};
 use super::topology::{try_retire, FleetTopology, SrvState};
+use crate::config::RebalanceMode;
 use crate::autoscale::{ScaleController, ScaleDecision, ScaleSignals};
 use crate::coordinator::{DemandTracker, Router, RoutingTable};
 use crate::costmodel::{operating_points, CostModel};
@@ -128,9 +132,18 @@ pub struct SystemSpec {
     /// Per-server decode-set composition (the decode half of the
     /// scheduler seam, symmetric with `batch`).
     pub decode: crate::config::DecodePolicyKind,
-    /// Re-place periodically from projected demand (Algorithm 1's time
-    /// step). Static placements skip this entirely.
+    /// Re-place from projected demand at all (Algorithm 1's time
+    /// step). Static placements skip this entirely; rebalancing
+    /// systems pick *when* and *how* via `rebalance` (open-loop timer,
+    /// drift-reactive trigger, or both).
     pub periodic_rebalance: bool,
+    /// Drift-reactive rebalance control: mode (periodic | triggered |
+    /// hybrid), trigger thresholds/hysteresis, and the remote-attach
+    /// pool behavior. Only consulted when `periodic_rebalance` is set
+    /// (except `remote_attach`, which any distributed-pool system may
+    /// use); the `Periodic` default reproduces the PR 4 engine bit for
+    /// bit.
+    pub rebalance: crate::config::RebalanceConfig,
     /// Profiled operating points (§IV-A) instead of the analytic model.
     pub empirical_oppoints: bool,
     /// Ablation A4: flatten operating points to their mean so
@@ -216,6 +229,9 @@ pub(crate) struct EngineState {
     /// In-flight batched drain migrations; `SimEvent::MigrationDone`
     /// carries an index into this list.
     pub migrations: Vec<Vec<AdapterId>>,
+    /// Drift-reactive rebalance trigger (None in periodic mode, where
+    /// the engine is the PR 4 open-loop rebalancer bit for bit).
+    pub trigger: Option<RebalanceTrigger>,
     pub events: u64,
 }
 
@@ -240,6 +256,10 @@ pub struct SimEngine<'a> {
     trace_end: f64,
     replicate: bool,
     table_routed: bool,
+    /// Serve pool misses out of a peer's HBM over RDMA instead of
+    /// fetching a copy (`RebalanceConfig::remote_attach`; only
+    /// meaningful for distributed pools).
+    remote_attach: bool,
     st: EngineState,
 }
 
@@ -363,8 +383,20 @@ impl<'a> SimEngine<'a> {
             }
         };
 
-        let mut demand =
-            DemandTracker::new(cfg.cluster.rebalance_period, 16);
+        // The demand tracker's window must match whoever rolls it: the
+        // periodic Rebalance tick (periodic mode — unchanged) or the
+        // TriggerCheck cadence (triggered/hybrid, where the trigger
+        // rolls every check so its projections track drift at the
+        // check period, not the — possibly never-elapsing — rebalance
+        // period).
+        let reactive = spec.periodic_rebalance
+            && spec.rebalance.mode != RebalanceMode::Periodic;
+        let demand_window = if reactive {
+            spec.rebalance.check_period
+        } else {
+            cfg.cluster.rebalance_period
+        };
+        let mut demand = DemandTracker::new(demand_window, 16);
         demand.last_value_only = spec.last_value_demand;
 
         let servers: Vec<SimServer> = (0..max_n)
@@ -400,17 +432,30 @@ impl<'a> SimEngine<'a> {
         }
         let trace_end = trace.duration();
         if spec.periodic_rebalance {
-            // Bootstrap: the initial placement is demand-blind
-            // (uniform assumption), so the first few rebalances fire
-            // early — a cold-start backlog at near-critical
-            // utilization otherwise takes many minutes to drain.
-            // Production deployments persist demand state across
-            // restarts; this approximates that.
-            q.push(
-                cfg.cluster.rebalance_period / 4.0,
-                SimEvent::Rebalance,
-            );
+            if spec.rebalance.mode != RebalanceMode::Triggered {
+                // Bootstrap: the initial placement is demand-blind
+                // (uniform assumption), so the first few rebalances
+                // fire early — a cold-start backlog at near-critical
+                // utilization otherwise takes many minutes to drain.
+                // Production deployments persist demand state across
+                // restarts; this approximates that.
+                q.push(
+                    cfg.cluster.rebalance_period / 4.0,
+                    SimEvent::Rebalance,
+                );
+            }
+            if reactive {
+                // triggered/hybrid: evaluate the drift signals every
+                // check period (the trigger itself decides whether the
+                // cold-start imbalance warrants the first re-place)
+                q.push(
+                    spec.rebalance.check_period,
+                    SimEvent::TriggerCheck,
+                );
+            }
         }
+        let trigger =
+            reactive.then(|| RebalanceTrigger::new(spec.rebalance));
         let controller: Option<ScaleController> =
             cfg.autoscale.map(ScaleController::new);
         if let Some(a) = cfg.autoscale {
@@ -430,6 +475,7 @@ impl<'a> SimEngine<'a> {
             trace_end,
             replicate,
             table_routed,
+            remote_attach: spec.rebalance.remote_attach && !replicate,
             st: EngineState {
                 rng,
                 topo,
@@ -447,6 +493,7 @@ impl<'a> SimEngine<'a> {
                 win_violations: 0,
                 outstanding_buf: vec![0.0f64; max_n],
                 migrations: Vec::new(),
+                trigger,
                 events: 0,
             },
         }
@@ -477,6 +524,7 @@ impl<'a> SimEngine<'a> {
                 self.on_migration_done(now, s, m)
             }
             SimEvent::Rebalance => self.on_rebalance(now),
+            SimEvent::TriggerCheck => self.on_trigger_check(now),
             SimEvent::AutoscaleTick => self.on_autoscale_tick(now),
             SimEvent::ServerReady(s) => self.on_server_ready(now, s),
             SimEvent::DrainCheck(s) => self.on_drain_check(now, s),
@@ -504,11 +552,28 @@ impl<'a> SimEngine<'a> {
     /// Hand one request to `target`: enqueue (starting an adapter
     /// fetch on a pool miss) and kick the server if idle. Shared by
     /// fresh arrivals and drain-time re-routing.
-    fn deliver(&mut self, target: ServerId, sreq: SimReq, now: f64) {
+    fn deliver(&mut self, target: ServerId, mut sreq: SimReq, now: f64) {
         let a = sreq.req.adapter;
         if self.st.pool.is_resident(target, a) {
+            // a drain re-route may carry a stale remote flag from its
+            // first delivery; here the adapter is served locally
+            sreq.remote = false;
+            self.st.servers[target].enqueue_ready(sreq);
+        } else if self.remote_attach {
+            // Remote attach: the adapter stays in its peer's HBM and
+            // this server serves it over GPUDirect RDMA — no fetch
+            // wait and no copy moved; every iteration touching the
+            // request pays `CostModel::remote_attach_penalty` instead.
+            // Counts remote-serving *episodes*: a re-delivery while
+            // the request is already remote is not a new one (a
+            // request that went local and later misses again is).
+            if !sreq.remote {
+                self.st.report.remote_served += 1;
+            }
+            sreq.remote = true;
             self.st.servers[target].enqueue_ready(sreq);
         } else {
+            sreq.remote = false;
             self.st.servers[target].enqueue_waiting(sreq);
             if let Some(dt) = self.st.pool.start_fetch(
                 target,
@@ -578,6 +643,7 @@ impl<'a> SimEngine<'a> {
             rank,
             adapter_bytes: self.trace.adapters.get(req.adapter).size_bytes,
             est: SimServer::estimate(&self.cm, &req, est_rank),
+            remote: false,
         };
         self.deliver(target, sreq, now);
     }
@@ -662,6 +728,11 @@ impl<'a> SimEngine<'a> {
                 }
             }
         } else {
+            if self.remote_attach {
+                // the copy is local now: stop charging the RDMA
+                // penalty to requests it was remotely serving
+                self.st.servers[s].mark_local(a);
+            }
             self.st.servers[s].release_waiting(a);
             if let Some(dt) = self.st.servers[s].start_iteration(now) {
                 self.st.q.push(now + dt, SimEvent::IterDone(s));
@@ -701,6 +772,11 @@ impl<'a> SimEngine<'a> {
             }
         } else {
             for &a in &ids {
+                if self.remote_attach {
+                    // the copies are local now: stop charging the
+                    // RDMA penalty to requests they remotely served
+                    self.st.servers[s].mark_local(a);
+                }
                 self.st.servers[s].release_waiting(a);
             }
             if let Some(dt) = self.st.servers[s].start_iteration(now) {
@@ -711,12 +787,32 @@ impl<'a> SimEngine<'a> {
     }
 
     fn on_rebalance(&mut self, now: f64) {
-        self.st.demand.roll_window();
-        let projected = self.st.demand.projected_tps();
+        if self.spec.rebalance.mode == RebalanceMode::Periodic {
+            // periodic mode: the rebalance tick owns the demand window
+            // (the pre-trigger behavior, bit for bit). In hybrid mode
+            // the TriggerCheck cadence rolls it instead — rolling here
+            // too would chop the window short and corrupt the TPS
+            // denominators.
+            self.st.demand.roll_window();
+        }
+        let mut projected = self.st.demand.projected_tps();
+        if self.spec.rebalance.mode != RebalanceMode::Periodic
+            && projected.is_empty()
+        {
+            // a hybrid wholesale tick can land before the trigger
+            // cadence has rolled a first window; fall back to the
+            // demand-blind uniform assumption like the drain path does
+            projected = self.uniform_demand.clone();
+        }
         let active_ids = self.st.topo.active();
         let next = self.replace_assignment(&active_ids, &projected);
-        self.st.report.migration_bytes +=
-            next.migration_bytes(&self.st.assignment, &self.trace.adapters);
+        if !self.remote_attach {
+            // under remote attach a wholesale re-place moves homes but
+            // never bytes (misses are served remotely, not fetched),
+            // so the assignment diff must not count as migration
+            self.st.report.migration_bytes += next
+                .migration_bytes(&self.st.assignment, &self.trace.adapters);
+        }
         self.st
             .router
             .update_table(RoutingTable::from_assignment(&next));
@@ -725,7 +821,13 @@ impl<'a> SimEngine<'a> {
         }
         self.st.assignment = next;
         self.st.report.rebalances += 1;
-        let next_in = if self.st.report.rebalances < 4 {
+        self.st.report.rebalance_times.push(now);
+        // bootstrap cadence is paced by *periodic* re-places only —
+        // trigger fires in hybrid mode must not eat the quarter-period
+        // bootstrap schedule
+        let periodic_rebalances = self.st.report.rebalances
+            - self.st.report.triggered_rebalances;
+        let next_in = if periodic_rebalances < 4 {
             self.cfg.cluster.rebalance_period / 4.0
         } else {
             self.cfg.cluster.rebalance_period
@@ -736,6 +838,136 @@ impl<'a> SimEngine<'a> {
         debug_assert!(
             self.st.pool.check_coverage(self.trace.adapters.len()).is_ok(),
             "rebalance lost coverage"
+        );
+    }
+
+    /// Drift-reactive sensing (triggered/hybrid modes): roll the
+    /// demand window, read the projected load-imbalance ratio under
+    /// the *current* assignment plus the SLO feedback layer's rolling
+    /// TBT headroom, and fire an incremental rebalance when the
+    /// Schmitt trigger says the placement has drifted off the
+    /// workload.
+    fn on_trigger_check(&mut self, now: f64) {
+        if self.st.trigger.is_none() {
+            return;
+        }
+        self.st.demand.roll_window();
+        let projected = self.st.demand.projected_tps();
+        let active_ids = self.st.topo.active();
+        self.st.report.trigger_checks += 1;
+        let imbalance = imbalance_ratio(
+            &self.st.assignment,
+            self.max_n,
+            &active_ids,
+            &self.trace.adapters,
+            &projected,
+            &self.oppoints,
+        );
+        // Only servers with live decode work can exert TBT pressure: a
+        // fully drained server's tracker rings are frozen (nothing
+        // retires them while `active` is empty), and a stale negative
+        // headroom there would otherwise hold the trigger's latch down
+        // for the rest of the run.
+        let slo_pressed = self.spec.slo.enabled
+            && active_ids.iter().any(|&s| {
+                let srv = &self.st.servers[s];
+                !srv.active.is_empty()
+                    && srv
+                        .slo
+                        .as_ref()
+                        .and_then(|t| t.worst_tbt_headroom())
+                        .is_some_and(|h| h < 0.0)
+            });
+        let fired = self
+            .st
+            .trigger
+            .as_mut()
+            .unwrap()
+            .evaluate(now, imbalance, slo_pressed);
+        if fired {
+            self.triggered_rebalance(now, &projected, &active_ids);
+        }
+        let next = now + self.spec.rebalance.check_period;
+        if next <= self.trace_end {
+            self.st.q.push(next, SimEvent::TriggerCheck);
+        }
+    }
+
+    /// A trigger-fired re-placement: ask the placer for a fresh
+    /// proposal, keep only the moves whose projected queued-token
+    /// relief beats their RDMA cost (`sim::rebalance::
+    /// plan_incremental`), start the accepted copies as one batched
+    /// transfer per destination (the drain protocol's machinery), and
+    /// swap the routing table. Rejected moves stay home — or, under
+    /// remote attach, move only their routing and get served out of
+    /// their old home's HBM.
+    fn triggered_rebalance(
+        &mut self,
+        now: f64,
+        projected: &BTreeMap<AdapterId, f64>,
+        active: &[ServerId],
+    ) {
+        let proposal = self.replace_assignment(active, projected);
+        if self.replicate {
+            // every copy already lives everywhere: a rebalance is a
+            // pure routing swap
+            self.st
+                .router
+                .update_table(RoutingTable::from_assignment(&proposal));
+            self.st.assignment = proposal;
+        } else {
+            let pool = &self.st.pool;
+            let plan = plan_incremental(
+                &self.st.assignment,
+                &proposal,
+                &self.trace.adapters,
+                self.max_n,
+                active,
+                projected,
+                &self.oppoints,
+                &self.cfg.cluster.server.gpu,
+                // a move keeps paying off until the next full
+                // re-place would have happened anyway
+                self.cfg.cluster.rebalance_period,
+                self.remote_attach,
+                // a destination already holding a copy — resident or
+                // in flight from an earlier on-demand miss fetch —
+                // makes the move free
+                &|s, a| pool.is_resident(s, a) || pool.is_fetching(s, a),
+            );
+            self.st.report.migration_bytes += plan.migrated_bytes;
+            self.st.report.incremental_moves += plan.moves_applied;
+            self.st.report.rejected_moves += plan.moves_rejected;
+            self.st
+                .router
+                .update_table(RoutingTable::from_assignment(
+                    &plan.assignment,
+                ));
+            self.st.pool.apply_assignment(&plan.residency);
+            for (tgt, ids) in plan.transfers {
+                if let Some((dt, started)) =
+                    self.st.pool.start_fetch_batch(
+                        tgt,
+                        &ids,
+                        &self.trace.adapters,
+                        &self.cfg.cluster.server.gpu,
+                    )
+                {
+                    let mid = self.st.migrations.len() as u32;
+                    self.st.migrations.push(started);
+                    self.st
+                        .q
+                        .push(now + dt, SimEvent::MigrationDone(tgt, mid));
+                }
+            }
+            self.st.assignment = plan.assignment;
+        }
+        self.st.report.rebalances += 1;
+        self.st.report.triggered_rebalances += 1;
+        self.st.report.rebalance_times.push(now);
+        debug_assert!(
+            self.st.pool.check_coverage(self.trace.adapters.len()).is_ok(),
+            "triggered rebalance lost coverage"
         );
     }
 
@@ -848,6 +1080,9 @@ impl<'a> SimEngine<'a> {
             }
             let next = self.replace_assignment(&survivors, &projected);
             if !self.replicate {
+                // counted even under remote attach: the drain path
+                // below still physically evacuates the victim's
+                // last-copy adapters over RDMA
                 self.st.report.migration_bytes += next
                     .migration_bytes(
                         &self.st.assignment,
@@ -943,11 +1178,15 @@ impl<'a> SimEngine<'a> {
             }
             let next = self.replace_assignment(&active_ids, &projected);
             if !self.replicate {
-                self.st.report.migration_bytes += next
-                    .migration_bytes(
-                        &self.st.assignment,
-                        &self.trace.adapters,
-                    );
+                if !self.remote_attach {
+                    // remote attach: relocated homes serve remotely,
+                    // no bytes move for the assignment diff
+                    self.st.report.migration_bytes += next
+                        .migration_bytes(
+                            &self.st.assignment,
+                            &self.trace.adapters,
+                        );
+                }
                 self.st.pool.apply_assignment(&homes_of(&next));
             }
             self.st

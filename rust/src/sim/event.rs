@@ -18,6 +18,11 @@ pub enum SimEvent {
     FetchDone(ServerId, AdapterId),
     /// Periodic LORASERVE re-placement (Algorithm 1 time step).
     Rebalance,
+    /// Drift-reactive trigger evaluation (`--rebalance-mode
+    /// triggered|hybrid`): roll the demand window, read the
+    /// load-imbalance / SLO-headroom signals, and fire an incremental
+    /// rebalance when the `RebalanceTrigger` says so.
+    TriggerCheck,
     /// Autoscaler signal-evaluation tick (`AutoscaleConfig`
     /// `decision_period`).
     AutoscaleTick,

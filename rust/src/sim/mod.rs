@@ -10,6 +10,7 @@ pub mod cluster;
 pub mod engine;
 pub mod event;
 pub mod profile;
+pub mod rebalance;
 pub mod report;
 pub mod server;
 pub mod slo;
@@ -22,6 +23,9 @@ pub use cluster::{
 pub use engine::{
     run_spec, LoadSignal, PlacementPolicy, PoolMode, RoutingPolicy,
     SimEngine, SystemSpec,
+};
+pub use rebalance::{
+    imbalance_ratio, plan_incremental, IncrementalPlan, RebalanceTrigger,
 };
 pub use report::SimReport;
 pub use server::{BatchPolicy, DecodeGroup, DecodePlan};

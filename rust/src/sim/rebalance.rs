@@ -1,0 +1,630 @@
+//! Drift-reactive rebalancing: the trigger and the incremental
+//! migration planner behind `--rebalance-mode triggered|hybrid`.
+//!
+//! The paper claims *workload-aware dynamic* placement, but the PR 4
+//! engine rebalanced on an open-loop timer: a full re-place every
+//! `rebalance_period`, applied wholesale. This module closes the
+//! sense→decide→act loop:
+//!
+//! * [`RebalanceTrigger`] — a Schmitt trigger over the projected
+//!   per-server load-imbalance ratio ([`imbalance_ratio`], computed
+//!   from the `DemandTracker` projections under the *current*
+//!   assignment) plus the SLO feedback layer's rolling TBT headroom.
+//!   Hysteresis (fire at `imbalance_threshold`, re-arm below
+//!   `1 + hysteresis × (threshold − 1)`) and a min-interval guard keep
+//!   it from thrashing on signal noise.
+//! * [`plan_incremental`] — diffs the current [`Assignment`] against
+//!   the placer's fresh proposal and applies only the moves whose
+//!   projected queued-token relief at the destination beats their RDMA
+//!   migration cost (`costmodel::fetch_time` over the bytes moved).
+//!   Rejected moves either stay home (the status quo wins) or — under
+//!   `remote_attach` — move their *routing* without moving any bytes:
+//!   the adapter keeps living in its old home's HBM and the new home
+//!   serves it over GPUDirect RDMA at a per-iteration penalty
+//!   (`CostModel::remote_attach_penalty`).
+//!
+//! Periodic mode never calls into this module, so the default engine
+//! stays the PR 4 open-loop rebalancer bit for bit.
+
+use crate::config::{GpuSpec, RebalanceConfig};
+use crate::costmodel::{fetch_time, FetchSource};
+use crate::placement::Assignment;
+use crate::workload::{AdapterId, AdapterSet, ServerId};
+use std::collections::BTreeMap;
+
+/// Projected per-server load-imbalance ratio: max utilization ÷ mean
+/// utilization over the *active* servers, with utilization of server s
+/// = Σ φ·demand/oppoint over its assigned adapters (the same
+/// rank-aware pricing the placer budgets with). 1.0 = perfectly
+/// balanced (or an idle cluster, where there is nothing to react to).
+pub fn imbalance_ratio(
+    assignment: &Assignment,
+    n_servers: usize,
+    active: &[ServerId],
+    adapters: &AdapterSet,
+    demand: &BTreeMap<AdapterId, f64>,
+    oppoints: &BTreeMap<u32, f64>,
+) -> f64 {
+    if active.is_empty() {
+        return 1.0;
+    }
+    let utils =
+        assignment.server_utils(n_servers, adapters, demand, oppoints);
+    let mut max = 0.0f64;
+    let mut sum = 0.0f64;
+    for &s in active {
+        max = max.max(utils[s]);
+        sum += utils[s];
+    }
+    let mean = sum / active.len() as f64;
+    if mean <= 1e-9 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+/// Schmitt trigger with a min-interval guard over the rebalance
+/// signals. `evaluate` is called once per `trigger_check_period`; it
+/// returns true when a rebalance should fire *now*.
+///
+/// Hysteresis semantics: the trigger fires on a rising edge — the
+/// signal crossing `imbalance_threshold` (or the SLO feedback layer
+/// reporting a blown TBT headroom) while armed — and then latches
+/// until the signal cools below the exit threshold with no SLO
+/// pressure, so a signal hovering at the threshold produces exactly
+/// one rebalance, not one per check. Because the imbalance ratio is
+/// floored at 1.0 (a balanced cluster), the hysteresis fraction
+/// applies to the *excess over 1*: exit = 1 + hysteresis ×
+/// (threshold − 1) — a plain `threshold × hysteresis` could sit below
+/// 1.0 and never re-arm. `min_interval` additionally paces fires so a
+/// rebalance gets time to take effect before it can be judged
+/// insufficient.
+#[derive(Debug, Clone)]
+pub struct RebalanceTrigger {
+    cfg: RebalanceConfig,
+    armed: bool,
+    last_fire: f64,
+    /// Total fires (mirrors `SimReport::triggered_rebalances`).
+    pub fires: u64,
+}
+
+impl RebalanceTrigger {
+    pub fn new(cfg: RebalanceConfig) -> Self {
+        RebalanceTrigger {
+            cfg,
+            armed: true,
+            last_fire: f64::NEG_INFINITY,
+            fires: 0,
+        }
+    }
+
+    /// Feed one observation of the signals; true = fire a rebalance.
+    pub fn evaluate(
+        &mut self,
+        now: f64,
+        imbalance: f64,
+        slo_pressed: bool,
+    ) -> bool {
+        let hot =
+            imbalance >= self.cfg.imbalance_threshold || slo_pressed;
+        let exit = 1.0
+            + self.cfg.hysteresis
+                * (self.cfg.imbalance_threshold - 1.0);
+        let cold = imbalance < exit && !slo_pressed;
+        if cold {
+            self.armed = true;
+        }
+        if hot
+            && self.armed
+            && now - self.last_fire >= self.cfg.min_interval
+        {
+            self.armed = false;
+            self.last_fire = now;
+            self.fires += 1;
+            return true;
+        }
+        false
+    }
+}
+
+/// Outcome of diffing the current assignment against a placer
+/// proposal: the assignment to route by, where copies should actually
+/// live, and the transfers to start eagerly.
+#[derive(Debug)]
+pub struct IncrementalPlan {
+    /// The routing truth the φ table is rebuilt from: the proposal's
+    /// entry minus the rejected destinations (their φ mass re-spread
+    /// over the survivors) — or the full proposal under remote attach
+    /// (rejected destinations serve remotely), or the previous entry
+    /// when nothing was accepted.
+    pub assignment: Assignment,
+    /// Desired residency per adapter for `AdapterPool::
+    /// apply_assignment` — the homes that hold (or are about to
+    /// receive) an actual copy. Remote-attach routing entries without
+    /// a copy are deliberately absent here.
+    pub residency: Vec<Vec<ServerId>>,
+    /// Accepted copies to RDMA eagerly, grouped per destination (one
+    /// batched transfer each, like the drain protocol).
+    pub transfers: BTreeMap<ServerId, Vec<AdapterId>>,
+    /// Bytes of the accepted copies (the migration the plan decided to
+    /// pay for).
+    pub migrated_bytes: u64,
+    pub moves_applied: u64,
+    pub moves_rejected: u64,
+}
+
+/// Diff `prev` → `proposal` and keep only the moves that pay.
+///
+/// A "move" is a copy of adapter `a` appearing on a server it wasn't
+/// on; every destination is judged *on its own*. A destination that
+/// already holds a copy (`has_copy` — resident, or in flight from an
+/// earlier on-demand miss fetch) is a free routing improvement and is
+/// always accepted. A destination needing a copy must buy its own
+/// transfer: its projected queued-token relief — the utilization
+/// share moved (φ·demand/oppoint) times how much more loaded the
+/// source is than the destination under the *previous* assignment,
+/// integrated over `horizon` seconds (the span the new placement is
+/// expected to serve) — must beat the RDMA cost of the adapter's
+/// bytes (`fetch_time(RemoteRdma)`). The rejected destinations' φ
+/// mass re-spreads proportionally over the surviving homes (or, under
+/// `remote_attach`, stays routed and is served remotely). Moves whose
+/// old home is leaving the active set are forced through wholesale —
+/// there is no status quo to keep.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_incremental(
+    prev: &Assignment,
+    proposal: &Assignment,
+    adapters: &AdapterSet,
+    n_servers: usize,
+    active: &[ServerId],
+    demand: &BTreeMap<AdapterId, f64>,
+    oppoints: &BTreeMap<u32, f64>,
+    gpu: &GpuSpec,
+    horizon: f64,
+    remote_attach: bool,
+    has_copy: &dyn Fn(ServerId, AdapterId) -> bool,
+) -> IncrementalPlan {
+    let n_adapters = proposal.shares.len();
+    let utils =
+        prev.server_utils(n_servers, adapters, demand, oppoints);
+    let mut plan = IncrementalPlan {
+        assignment: Assignment::new(n_adapters),
+        residency: vec![Vec::new(); n_adapters],
+        transfers: BTreeMap::new(),
+        migrated_bytes: 0,
+        moves_applied: 0,
+        moves_rejected: 0,
+    };
+    for a in 0..n_adapters as AdapterId {
+        let old: Vec<ServerId> = prev
+            .shares
+            .get(a as usize)
+            .map(|ss| ss.iter().map(|&(s, _)| s).collect())
+            .unwrap_or_default();
+        let new_entry = &proposal.shares[a as usize];
+        let added: Vec<(ServerId, f64)> = new_entry
+            .iter()
+            .copied()
+            .filter(|&(s, _)| !old.contains(&s))
+            .collect();
+        // φ-share shifts among existing homes move no bytes: accept
+        // wholesale. Homes leaving the active set force the whole
+        // proposal through — the status quo is not keepable.
+        let forced = old.iter().any(|s| !active.contains(s));
+        if added.is_empty() || forced {
+            for &(s, phi) in new_entry {
+                plan.assignment.add(a, s, phi);
+            }
+            plan.residency[a as usize] =
+                new_entry.iter().map(|&(s, _)| s).collect();
+            let need: Vec<ServerId> = added
+                .iter()
+                .map(|&(s, _)| s)
+                .filter(|&s| !has_copy(s, a))
+                .collect();
+            if !need.is_empty() {
+                plan.migrated_bytes +=
+                    adapters.get(a).size_bytes * need.len() as u64;
+                plan.moves_applied += need.len() as u64;
+                for &d in &need {
+                    plan.transfers.entry(d).or_default().push(a);
+                }
+            }
+            continue;
+        }
+        // judge each destination on its own merits
+        let info = adapters.get(a);
+        let per_copy =
+            fetch_time(gpu, FetchSource::RemoteRdma, info.size_bytes);
+        let dem = demand.get(&a).copied().unwrap_or(0.0);
+        let op = oppoints
+            .get(&info.rank)
+            .copied()
+            .unwrap_or(1.0)
+            .max(1e-9);
+        // relief is measured against the most loaded current home
+        // (the server the move actually decongests)
+        let u_src =
+            old.iter().map(|&s| utils[s]).fold(0.0f64, f64::max);
+        let mut accepted: Vec<ServerId> = Vec::new();
+        let mut need: Vec<ServerId> = Vec::new();
+        let mut rejected: Vec<ServerId> = Vec::new();
+        for &(d, phi) in &added {
+            if has_copy(d, a) {
+                accepted.push(d); // free routing improvement
+                continue;
+            }
+            let w = phi * dem / op;
+            let gain = w * (u_src - utils[d]).max(0.0) * horizon;
+            if gain > per_copy {
+                accepted.push(d);
+                need.push(d);
+            } else {
+                rejected.push(d);
+            }
+        }
+        plan.migrated_bytes += info.size_bytes * need.len() as u64;
+        plan.moves_applied += need.len() as u64;
+        plan.moves_rejected += rejected.len() as u64;
+        for &d in &need {
+            plan.transfers.entry(d).or_default().push(a);
+        }
+        if remote_attach {
+            // rejected destinations keep their routing share and serve
+            // the adapter out of a peer's HBM over RDMA — no bytes
+            for &(s, phi) in new_entry {
+                plan.assignment.add(a, s, phi);
+            }
+            plan.residency[a as usize] = new_entry
+                .iter()
+                .map(|&(s, _)| s)
+                .filter(|s| !rejected.contains(s))
+                .collect();
+            if plan.residency[a as usize].is_empty() {
+                // every proposed home was rejected: the copies stay
+                // exactly where they are
+                plan.residency[a as usize] = old;
+            }
+        } else if accepted.is_empty() {
+            // nothing pays anywhere: the status quo stays
+            for &(s, phi) in &prev.shares[a as usize] {
+                plan.assignment.add(a, s, phi);
+            }
+            plan.residency[a as usize] = old;
+        } else {
+            // keep the proposal's surviving homes; the rejected
+            // destinations' φ mass re-spreads proportionally
+            let chosen: Vec<(ServerId, f64)> = new_entry
+                .iter()
+                .copied()
+                .filter(|(s, _)| !rejected.contains(s))
+                .collect();
+            let total: f64 =
+                chosen.iter().map(|&(_, phi)| phi).sum();
+            for &(s, phi) in &chosen {
+                plan.assignment.add(a, s, phi / total);
+            }
+            plan.residency[a as usize] =
+                chosen.iter().map(|&(s, _)| s).collect();
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelSpec, RebalanceMode, ServerConfig};
+    use crate::costmodel::operating_points;
+    use crate::util::rng::Pcg32;
+    use crate::workload::RANK_CLASSES;
+
+    fn cfg() -> RebalanceConfig {
+        RebalanceConfig {
+            mode: RebalanceMode::Triggered,
+            check_period: 15.0,
+            imbalance_threshold: 1.5,
+            hysteresis: 0.8,
+            min_interval: 30.0,
+            remote_attach: false,
+        }
+    }
+
+    /// Property: a stable signal — bounded noise strictly below the
+    /// fire threshold — never fires, for any of a family of seeds.
+    #[test]
+    fn stable_signal_fires_zero() {
+        for seed in 0..16u64 {
+            let mut rng = Pcg32::new(seed);
+            let mut t = RebalanceTrigger::new(cfg());
+            for step in 0..400 {
+                // ratio wanders in [1.0, 1.4): under the 1.5 threshold
+                let sig = 1.0 + 0.4 * rng.f64();
+                assert!(
+                    !t.evaluate(15.0 * step as f64, sig, false),
+                    "seed {seed} step {step}: fired on stable signal"
+                );
+            }
+            assert_eq!(t.fires, 0);
+        }
+    }
+
+    /// Property: a step change fires exactly one burst — one fire at
+    /// the edge, then the latch holds while the signal stays high, and
+    /// nothing refires after the (simulated) fix brings it back down.
+    #[test]
+    fn step_change_fires_one_burst() {
+        for seed in 0..16u64 {
+            let mut rng = Pcg32::new(100 + seed);
+            let mut t = RebalanceTrigger::new(cfg());
+            let mut fired_at: Vec<usize> = Vec::new();
+            for step in 0..400 {
+                // low until step 100; high (hovering around 2.0) until
+                // step 120 — a fix landing 20 checks later; low after
+                let sig = if (100..120).contains(&step) {
+                    1.8 + 0.4 * rng.f64()
+                } else {
+                    1.0 + 0.2 * rng.f64()
+                };
+                if t.evaluate(15.0 * step as f64, sig, false) {
+                    fired_at.push(step);
+                }
+            }
+            assert_eq!(
+                fired_at,
+                vec![100],
+                "seed {seed}: want exactly one fire at the edge"
+            );
+        }
+    }
+
+    /// The latch re-arms below the exit threshold, so a second
+    /// genuine episode fires again — and the min-interval guard paces
+    /// back-to-back episodes.
+    #[test]
+    fn rearms_after_cooling_and_paces_by_min_interval() {
+        let mut t = RebalanceTrigger::new(cfg());
+        assert!(t.evaluate(0.0, 2.0, false));
+        // still hot: latched
+        assert!(!t.evaluate(15.0, 2.0, false));
+        // hovering between exit (1 + 0.8 × 0.5 = 1.4) and enter
+        // (1.5): stays latched
+        assert!(!t.evaluate(30.0, 1.45, false));
+        // cools below the exit threshold: re-arms silently
+        assert!(!t.evaluate(45.0, 1.1, false));
+        // second episode 60 s after the first fire: refires
+        assert!(t.evaluate(60.0, 1.6, false));
+        assert_eq!(t.fires, 2);
+        // immediate third episode is paced out by min_interval even
+        // after cooling
+        assert!(!t.evaluate(70.0, 1.0, false));
+        assert!(!t.evaluate(80.0, 3.0, false), "min-interval guard");
+        assert!(t.evaluate(95.0, 3.0, false));
+    }
+
+    /// SLO pressure fires the trigger on its own, and holds the latch
+    /// like a hot imbalance signal does.
+    #[test]
+    fn slo_pressure_fires_and_latches() {
+        let mut t = RebalanceTrigger::new(cfg());
+        assert!(t.evaluate(0.0, 1.0, true));
+        assert!(!t.evaluate(40.0, 1.0, true), "latched under pressure");
+        // pressure clears with a cold ratio: re-arm, then refire
+        assert!(!t.evaluate(55.0, 1.0, false));
+        assert!(t.evaluate(70.0, 1.0, true));
+        assert_eq!(t.fires, 2);
+    }
+
+    fn ctx() -> (AdapterSet, BTreeMap<AdapterId, f64>, BTreeMap<u32, f64>)
+    {
+        let adapters = AdapterSet::uniform_per_rank(
+            4,
+            &[8, 64],
+            &ModelSpec::LLAMA_7B,
+        );
+        let oppoints =
+            operating_points(&ServerConfig::default(), &RANK_CLASSES);
+        let mut demand = BTreeMap::new();
+        for a in adapters.iter() {
+            demand.insert(a.id, 100.0);
+        }
+        (adapters, demand, oppoints)
+    }
+
+    #[test]
+    fn imbalance_ratio_flags_skewed_assignments() {
+        let (adapters, demand, oppoints) = ctx();
+        let active = [0usize, 1];
+        // balanced: one rank-8 and one rank-64 adapter per server
+        let mut even = Assignment::new(4);
+        even.add(0, 0, 1.0);
+        even.add(2, 0, 1.0);
+        even.add(1, 1, 1.0);
+        even.add(3, 1, 1.0);
+        // skewed: everything piles onto server 0
+        let mut skew = Assignment::new(4);
+        for a in 0..4 {
+            skew.add(a, 0, 1.0);
+        }
+        let r_even = imbalance_ratio(
+            &even, 2, &active, &adapters, &demand, &oppoints,
+        );
+        let r_skew = imbalance_ratio(
+            &skew, 2, &active, &adapters, &demand, &oppoints,
+        );
+        assert!((r_even - 1.0).abs() < 1e-9, "even {r_even}");
+        assert!((r_skew - 2.0).abs() < 1e-9, "skew {r_skew}");
+        // an idle cluster reads balanced
+        let none: BTreeMap<AdapterId, f64> = BTreeMap::new();
+        assert_eq!(
+            imbalance_ratio(
+                &even, 2, &active, &adapters, &none, &oppoints
+            ),
+            1.0
+        );
+    }
+
+    #[test]
+    fn incremental_plan_accepts_paying_moves_and_rejects_churn() {
+        let (adapters, mut demand, oppoints) = ctx();
+        let gpu = crate::config::GpuSpec::A100_40G;
+        let active = [0usize, 1];
+        // everything on server 0; adapter 0 is hot, adapter 1 is idle
+        let mut prev = Assignment::new(4);
+        for a in 0..4 {
+            prev.add(a, 0, 1.0);
+        }
+        demand.insert(0, 4000.0);
+        demand.insert(1, 0.0);
+        // proposal moves the hot adapter 0 *and* the idle adapter 1 to
+        // the empty server 1
+        let mut proposal = prev.clone();
+        proposal.shares[0] = vec![(1, 1.0)];
+        proposal.shares[1] = vec![(1, 1.0)];
+        let plan = plan_incremental(
+            &prev, &proposal, &adapters, 2, &active, &demand,
+            &oppoints, &gpu, 60.0, false, &|_, _| false,
+        );
+        // the hot move pays (seconds of queued-token relief vs a ~ms
+        // transfer); the idle move is pure churn and stays home
+        assert_eq!(plan.moves_applied, 1);
+        assert_eq!(plan.moves_rejected, 1);
+        assert_eq!(plan.assignment.servers_of(0), &[(1, 1.0)]);
+        assert_eq!(plan.assignment.servers_of(1), &[(0, 1.0)]);
+        assert_eq!(plan.residency[0], vec![1]);
+        assert_eq!(plan.residency[1], vec![0]);
+        assert_eq!(plan.transfers[&1], vec![0]);
+        assert_eq!(
+            plan.migrated_bytes,
+            adapters.get(0).size_bytes
+        );
+        plan.assignment.validate(2).unwrap();
+        // remote attach: the rejected move still moves its *routing*
+        let plan_ra = plan_incremental(
+            &prev, &proposal, &adapters, 2, &active, &demand,
+            &oppoints, &gpu, 60.0, true, &|_, _| false,
+        );
+        assert_eq!(plan_ra.assignment.servers_of(1), &[(1, 1.0)]);
+        assert_eq!(plan_ra.residency[1], vec![0], "no copy moved");
+        assert_eq!(plan_ra.migrated_bytes, plan.migrated_bytes);
+        plan_ra.assignment.validate(2).unwrap();
+        // a destination already holding a resident copy (left behind
+        // by an earlier on-demand miss fetch) makes the move free: the
+        // otherwise-rejected idle move is accepted with no bytes, no
+        // transfer, and no move counted
+        let plan_free = plan_incremental(
+            &prev,
+            &proposal,
+            &adapters,
+            2,
+            &active,
+            &demand,
+            &oppoints,
+            &gpu,
+            60.0,
+            false,
+            &|s, a| s == 1 && a == 1,
+        );
+        assert_eq!(plan_free.assignment.servers_of(1), &[(1, 1.0)]);
+        assert_eq!(plan_free.residency[1], vec![1]);
+        assert_eq!(plan_free.moves_rejected, 0);
+        assert_eq!(plan_free.moves_applied, 1, "only the hot copy");
+        assert_eq!(plan_free.migrated_bytes, plan.migrated_bytes);
+        assert_eq!(plan_free.transfers[&1], vec![0]);
+    }
+
+    /// Destinations are judged individually: a paying destination in
+    /// the same proposal entry as a useless one is kept while the
+    /// useless one is dropped, its φ mass re-spreading over the
+    /// survivors — a free destination can neither subsidize a useless
+    /// copy nor be dragged down with one.
+    #[test]
+    fn per_destination_judgement_splits_mixed_bundles() {
+        let (adapters, mut demand, oppoints) = ctx();
+        let gpu = crate::config::GpuSpec::A100_40G;
+        let active = [0usize, 1, 2];
+        let mut prev = Assignment::new(4);
+        prev.add(0, 0, 1.0);
+        prev.add(1, 0, 1.0);
+        prev.add(2, 2, 1.0);
+        prev.add(3, 2, 1.0);
+        for a in 0..4 {
+            demand.insert(a, 4000.0);
+        }
+        // proposal splits adapter 0 onto server 1 (idle — the move
+        // pays) and server 2 (rank-64 load makes it *more* loaded
+        // than the source — zero relief)
+        let mut proposal = prev.clone();
+        proposal.shares[0] = vec![(1, 0.5), (2, 0.5)];
+        let plan = plan_incremental(
+            &prev, &proposal, &adapters, 3, &active, &demand,
+            &oppoints, &gpu, 60.0, false, &|_, _| false,
+        );
+        assert_eq!(plan.moves_applied, 1);
+        assert_eq!(plan.moves_rejected, 1);
+        // the surviving home takes the rejected destination's share
+        assert_eq!(plan.assignment.servers_of(0), &[(1, 1.0)]);
+        assert_eq!(plan.residency[0], vec![1]);
+        assert_eq!(plan.transfers[&1], vec![0]);
+        plan.assignment.validate(3).unwrap();
+    }
+
+    #[test]
+    fn incremental_plan_forces_moves_off_inactive_homes() {
+        let (adapters, demand, oppoints) = ctx();
+        let gpu = crate::config::GpuSpec::A100_40G;
+        // server 0 is leaving the fleet: only server 1 stays active
+        let active = [1usize];
+        let mut prev = Assignment::new(4);
+        for a in 0..4 {
+            prev.add(a, 0, 1.0);
+        }
+        let mut proposal = Assignment::new(4);
+        for a in 0..4 {
+            proposal.add(a, 1, 1.0);
+        }
+        let plan = plan_incremental(
+            &prev, &proposal, &adapters, 2, &active, &demand,
+            &oppoints, &gpu, 60.0, false, &|_, _| false,
+        );
+        assert_eq!(plan.moves_applied, 4, "all moves forced");
+        assert_eq!(plan.moves_rejected, 0);
+        for a in 0..4u32 {
+            assert_eq!(plan.assignment.servers_of(a), &[(1usize, 1.0)]);
+        }
+    }
+
+    /// An identical proposal is a no-op plan: nothing moves, nothing
+    /// is rejected, the assignment survives byte for byte.
+    #[test]
+    fn identical_proposal_is_noop() {
+        let (adapters, demand, oppoints) = ctx();
+        let gpu = crate::config::GpuSpec::A100_40G;
+        let active = [0usize, 1];
+        let mut prev = Assignment::new(4);
+        prev.add(0, 0, 0.5);
+        prev.add(0, 1, 0.5);
+        prev.add(1, 0, 1.0);
+        prev.add(2, 1, 1.0);
+        prev.add(3, 1, 1.0);
+        let plan = plan_incremental(
+            &prev,
+            &prev.clone(),
+            &adapters,
+            2,
+            &active,
+            &demand,
+            &oppoints,
+            &gpu,
+            60.0,
+            false,
+            &|_, _| false,
+        );
+        assert_eq!(plan.moves_applied, 0);
+        assert_eq!(plan.moves_rejected, 0);
+        assert_eq!(plan.migrated_bytes, 0);
+        assert!(plan.transfers.is_empty());
+        assert_eq!(plan.assignment, prev);
+    }
+}

@@ -80,6 +80,29 @@ pub struct SimReport {
     /// Label of the decode-set composition policy the servers ran.
     pub decode_policy: String,
     pub rebalances: u64,
+    /// Simulated times of every re-placement (periodic and triggered)
+    /// — what `figures::helpers::steady_warmup` derives the
+    /// steady-state cutoff from now that rebalances may be
+    /// trigger-driven.
+    pub rebalance_times: Vec<f64>,
+    /// Trigger-signal evaluations (`--rebalance-mode
+    /// triggered|hybrid`'s TriggerCheck events).
+    pub trigger_checks: u64,
+    /// Rebalances fired by the drift trigger (also counted in
+    /// `rebalances`).
+    pub triggered_rebalances: u64,
+    /// Adapter copies the incremental planner migrated (projected
+    /// gain beat the RDMA cost).
+    pub incremental_moves: u64,
+    /// Proposed copies the incremental planner rejected as
+    /// not-worth-the-bytes churn.
+    pub rejected_moves: u64,
+    /// Remote-attach serving episodes: a request entering remote
+    /// service (adapter left in a peer's HBM, per-iteration RDMA
+    /// penalty instead of a migration). A request re-routed while
+    /// already remote counts once; one that turned local and later
+    /// misses again starts a new episode.
+    pub remote_served: u64,
     /// Fleet accounting (GPU-seconds, scale events, size timeline,
     /// SLO-violation rate). For fixed-fleet runs the timeline is the
     /// constant `n_servers`.
@@ -224,6 +247,14 @@ impl SimReport {
             ("gpu_loads", Json::from(self.gpu_loads)),
             ("gpu_load_bytes", Json::from(self.gpu_load_bytes)),
             ("rebalances", Json::from(self.rebalances)),
+            ("trigger_checks", Json::from(self.trigger_checks)),
+            (
+                "triggered_rebalances",
+                Json::from(self.triggered_rebalances),
+            ),
+            ("incremental_moves", Json::from(self.incremental_moves)),
+            ("rejected_moves", Json::from(self.rejected_moves)),
+            ("remote_served", Json::from(self.remote_served)),
             ("ttft", digest(&mut self.ttft)),
             ("tbt", digest(&mut self.tbt)),
             ("e2e", digest(&mut self.e2e)),
@@ -287,6 +318,9 @@ mod tests {
             completed: 10,
             makespan: 12.5,
             decode_preemptions: 3,
+            triggered_rebalances: 2,
+            incremental_moves: 5,
+            remote_served: 7,
             ..Default::default()
         };
         for i in 0..10 {
@@ -299,6 +333,9 @@ mod tests {
         for key in [
             "\"completed\":10",
             "\"decode_preemptions\":3",
+            "\"triggered_rebalances\":2",
+            "\"incremental_moves\":5",
+            "\"remote_served\":7",
             "\"makespan\":12.5",
             "\"ttft\":{",
             "\"ttft_under_pressure\":{",

@@ -49,6 +49,13 @@ pub struct SimReq {
     pub adapter_bytes: u64,
     /// Routed-time service estimate (for Toppings' outstanding-work).
     pub est: f64,
+    /// Served by remote attach: the adapter's weights stay in a peer
+    /// server's HBM and every iteration touching this request streams
+    /// its slices over GPUDirect RDMA
+    /// (`CostModel::remote_attach_penalty`) instead of paging a local
+    /// copy — the routing moved without the bytes. Set by the engine
+    /// on delivery; always false outside remote-attach pools.
+    pub remote: bool,
 }
 
 /// S-LoRA-style GPU adapter cache: active adapter slices live in a
@@ -952,6 +959,30 @@ impl SimServer {
         self.waiting_fetch.push(sreq);
     }
 
+    /// An adapter just became locally resident (a fetch or migration
+    /// landed): requests that were being served by remote attach
+    /// switch to the local copy from their next iteration on, instead
+    /// of paying the per-iteration RDMA penalty for their whole
+    /// lifetime. (Steps of a decode round already priced keep their
+    /// priced time — rounds are atomic.)
+    pub fn mark_local(&mut self, adapter: AdapterId) {
+        for r in self.queue.iter_mut() {
+            if r.req.adapter == adapter {
+                r.remote = false;
+            }
+        }
+        for r in self.waiting_fetch.iter_mut() {
+            if r.req.adapter == adapter {
+                r.remote = false;
+            }
+        }
+        for a in self.active.iter_mut() {
+            if a.sreq.req.adapter == adapter {
+                a.sreq.remote = false;
+            }
+        }
+    }
+
     /// Move requests whose adapter just became resident into the ready
     /// queue (ordered by arrival to preserve FIFO fairness).
     pub fn release_waiting(&mut self, adapter: AdapterId) {
@@ -1057,7 +1088,14 @@ impl SimServer {
         };
         let remaining: f64 =
             self.pending_decode.iter().map(|s| s.time).sum();
-        slo.ttft_pressure(now - head.req.arrival, remaining)
+        // Projected TTFT is wait *plus* the head's own prefill: its
+        // first token lands only after its prefill runs, not when it
+        // merely reaches the front. Pricing only the queue wait made
+        // the projection under-fire — a head whose wait looked fine
+        // could still blow the target by the width of its own prefill
+        // (the ROADMAP follow-up; regression-tested below).
+        let own = self.cm.prefill(head.req.prompt_len as u64, head.rank);
+        slo.ttft_pressure(now - head.req.arrival, remaining + own)
     }
 
     /// Start the next iteration if idle and work exists. Returns the
@@ -1136,7 +1174,11 @@ impl SimServer {
                 })
                 .sum::<u64>();
             // page this batch's adapters into the GPU pool (S-LoRA
-            // unified paging); active sequences' adapters are pinned
+            // unified paging); active sequences' adapters are pinned.
+            // Remotely-attached adapters never enter the local cache —
+            // each pays the per-iteration RDMA penalty instead (once
+            // per distinct adapter: its slices stream once per
+            // iteration however many requests share it).
             let pinned: std::collections::BTreeSet<AdapterId> = self
                 .active
                 .iter()
@@ -1145,13 +1187,21 @@ impl SimServer {
                 .collect();
             let mut load_time = 0.0;
             let pcie = self.cm.server.gpu.pcie_bw;
+            let mut remote_seen: Vec<AdapterId> = Vec::new();
             for r in &batch {
-                load_time += self.gpu_cache.touch(
-                    r.req.adapter,
-                    r.adapter_bytes,
-                    pcie,
-                    &pinned,
-                );
+                if r.remote {
+                    if !remote_seen.contains(&r.req.adapter) {
+                        remote_seen.push(r.req.adapter);
+                        load_time += self.cm.remote_attach_penalty();
+                    }
+                } else {
+                    load_time += self.gpu_cache.touch(
+                        r.req.adapter,
+                        r.adapter_bytes,
+                        pcie,
+                        &pinned,
+                    );
+                }
             }
             let time = self.cm.prefill(tokens, max_rank) + load_time;
             self.iters += 1;
@@ -1163,17 +1213,19 @@ impl SimServer {
         }
         if !self.active.is_empty() {
             if self.slo.is_some() {
-                // anchor every active class in the tracker so a class
-                // the rotor has been skipping accrues staleness from
-                // admission, not from its (never-happening) first step
-                let mut ranks: Vec<u32> = Vec::new();
+                // anchor every active class *and tenant* in the
+                // tracker so a class (or a co-class tenant) the rotor
+                // has been skipping accrues staleness from admission,
+                // not from its (never-happening) first step
+                let mut members: Vec<(u32, AdapterId)> = Vec::new();
                 for a in &self.active {
-                    if !ranks.contains(&a.sreq.rank) {
-                        ranks.push(a.sreq.rank);
+                    let m = (a.sreq.rank, a.sreq.req.adapter);
+                    if !members.contains(&m) {
+                        members.push(m);
                     }
                 }
                 if let Some(slo) = &mut self.slo {
-                    slo.observe_active(now, &ranks);
+                    slo.observe_active_members(now, &members);
                 }
             }
             let plan = self.policy.compose_decode(
@@ -1206,15 +1258,19 @@ impl SimServer {
 
     /// Per-member stats of one group's `seqs` (must be sorted — the
     /// pricing path sorts every group once) against the current active
-    /// set: (members, cached tokens, max rank, Σ rank, mixed?). Runs
-    /// once per group at round composition — the per-step hot path
-    /// reuses the stored result.
-    fn group_stats(&self, seqs: &[u64]) -> (usize, u64, u32, u64, bool) {
+    /// set: (members, cached tokens, max rank, Σ rank, mixed?,
+    /// distinct remote adapters). Runs once per group at round
+    /// composition — the per-step hot path reuses the stored result.
+    fn group_stats(
+        &self,
+        seqs: &[u64],
+    ) -> (usize, u64, u32, u64, bool, usize) {
         let mut b = 0usize;
         let mut cached = 0u64;
         let mut max_rank = 0u32;
         let mut rank_sum = 0u64;
         let mut mixed = false;
+        let mut remote_seen: Vec<AdapterId> = Vec::new();
         // membership: whole-set groups (the unified default) hit the
         // O(n) fast path; sub-batches binary-search their sorted seqs
         let whole_set = seqs.len() == self.active.len();
@@ -1229,8 +1285,13 @@ impl SimServer {
             cached += a.sreq.req.prompt_len as u64 + a.produced as u64;
             rank_sum += u64::from(a.sreq.rank);
             max_rank = max_rank.max(a.sreq.rank);
+            if a.sreq.remote
+                && !remote_seen.contains(&a.sreq.req.adapter)
+            {
+                remote_seen.push(a.sreq.req.adapter);
+            }
         }
-        (b, cached, max_rank, rank_sum, mixed)
+        (b, cached, max_rank, rank_sum, mixed, remote_seen.len())
     }
 
     /// Price a composed decode round into per-step service times and
@@ -1251,7 +1312,8 @@ impl SimServer {
         // profile the groups that actually run (empty groups dropped
         // first, so a [real, empty] plan is priced as a single-group
         // round, not a mispriced multi-group one)
-        let mut profiled: Vec<(Vec<u64>, usize, u64, u32, u64, bool)> =
+        type Profiled = (Vec<u64>, usize, u64, u32, u64, bool, usize);
+        let mut profiled: Vec<Profiled> =
             Vec::with_capacity(plan.groups.len());
         let mut b_total = 0usize;
         let mut cached_total = 0u64;
@@ -1260,19 +1322,21 @@ impl SimServer {
             // token production) can binary-search instead of scanning
             let mut seqs = group.seqs;
             seqs.sort_unstable();
-            let (b, cached, max_rank, rank_sum, mixed) =
+            let (b, cached, max_rank, rank_sum, mixed, remote) =
                 self.group_stats(&seqs);
             if b == 0 {
                 continue; // empty group: nothing to run
             }
             b_total += b;
             cached_total += cached;
-            profiled.push((seqs, b, cached, max_rank, rank_sum, mixed));
+            profiled.push((
+                seqs, b, cached, max_rank, rank_sum, mixed, remote,
+            ));
         }
         let multi = profiled.len() > 1;
         let mut steps: VecDeque<PricedStep> =
             VecDeque::with_capacity(profiled.len());
-        for (i, (seqs, b, cached, max_rank, rank_sum, mixed)) in
+        for (i, (seqs, b, cached, max_rank, rank_sum, mixed, remote)) in
             profiled.into_iter().enumerate()
         {
             let mut time = if multi {
@@ -1284,6 +1348,12 @@ impl SimServer {
                 // the round's shared forward-pass base lands on its
                 // first step
                 time += self.cm.decode_base(b_total, cached_total);
+            }
+            if remote > 0 {
+                // each remotely-attached adapter streams its slices
+                // over RDMA once per step it participates in
+                time +=
+                    remote as f64 * self.cm.remote_attach_penalty();
             }
             steps.push_back(PricedStep {
                 seqs,
@@ -1366,11 +1436,12 @@ impl SimServer {
             Iteration::Decode { seqs } => {
                 let id = self.id;
                 let outstanding = &mut self.outstanding;
-                // SLO feedback: collect the step's distinct member
-                // rank classes so the tracker can update each class's
-                // decode cadence (pure observation, no timing effect)
+                // SLO feedback: collect the step's distinct (rank,
+                // adapter) members so the tracker can update each
+                // class's — and each tenant's — decode cadence (pure
+                // observation, no timing effect)
                 let track = self.slo.is_some();
-                let mut stepped_ranks: Vec<u32> = Vec::new();
+                let mut stepped: Vec<(u32, AdapterId)> = Vec::new();
                 // whole-set steps (the unified default) skip the
                 // per-member membership check entirely; sub-batch
                 // steps binary-search their (priced-time-sorted) seqs
@@ -1379,8 +1450,11 @@ impl SimServer {
                     if !whole_set && seqs.binary_search(&a.seq).is_err() {
                         return true; // not in this sub-batch step
                     }
-                    if track && !stepped_ranks.contains(&a.sreq.rank) {
-                        stepped_ranks.push(a.sreq.rank);
+                    if track {
+                        let m = (a.sreq.rank, a.sreq.req.adapter);
+                        if !stepped.contains(&m) {
+                            stepped.push(m);
+                        }
                     }
                     a.produced += 1;
                     if a.produced >= a.sreq.req.output_len {
@@ -1400,7 +1474,7 @@ impl SimServer {
                     }
                 });
                 if let Some(slo) = &mut self.slo {
-                    slo.record_decode_step(now, stepped_ranks);
+                    slo.record_decode_step_members(now, &stepped);
                 }
                 if self.active.is_empty() {
                     // nothing left for any remaining (stale) steps
@@ -1434,6 +1508,7 @@ mod tests {
             rank: 8,
             adapter_bytes: 17 << 20,
             est: 0.1,
+            remote: false,
         }
     }
 
@@ -1582,6 +1657,142 @@ mod tests {
         let mut r = req(arrival, adapter, 100, 1);
         r.rank = rank;
         r
+    }
+
+    /// Regression (ROADMAP follow-up): the decode-preemption
+    /// projection must include the queued head's *own* prefill time.
+    /// This pins an operating point where waited + remaining-round
+    /// time alone sits under the pressure threshold — the old
+    /// projection declines to preempt — but adding the head's prefill
+    /// blows it, so the fixed projection preempts.
+    #[test]
+    fn preemption_projection_includes_prefill_service_time() {
+        let cm = CostModel::new(ServerConfig::default());
+        // after the round's first (rank-8) step runs, the remaining
+        // step is the lone rank-128 sub-batch
+        let rem = cm.decode_class(1, 128, true);
+        let own = cm.prefill(2000, 8);
+        // θ = 0.5 and target T = 2·rem + own puts the pressure
+        // boundary (projected > T/2 = rem + own/2) strictly between
+        // the old projection (rem) and the fixed one (rem + own)
+        let slo_cfg = SloFeedbackConfig {
+            enabled: true,
+            ttft_target: 2.0 * rem + own,
+            tbt_target: 0.2,
+            preempt_decode: true,
+            pressure_theta: 0.5,
+        };
+        let probe = SloTracker::new(slo_cfg);
+        assert!(
+            !probe.ttft_pressure(0.0, rem),
+            "old projection (queue wait only) must under-fire here"
+        );
+        assert!(probe.ttft_pressure(0.0, rem + own));
+
+        let mut s = SimServer::with_policy(
+            0,
+            cm,
+            Box::new(RankPartitionedDecode::new(Box::new(Fifo))),
+        );
+        s.enable_slo(slo_cfg);
+        let mut lo = req(0.0, 0, 100, 3);
+        lo.rank = 8;
+        let mut hi = req(0.0, 1, 100, 3);
+        hi.rank = 128;
+        s.enqueue_ready(lo);
+        s.enqueue_ready(hi);
+        let t1 = s.start_iteration(0.0).unwrap(); // mixed prefill
+        assert!(s.finish_iteration(t1).is_empty());
+        let d1 = s.start_iteration(t1).unwrap(); // round step 1 (rank 8)
+        s.finish_iteration(t1 + d1);
+        // a big prefill arrives exactly now: waited = 0 at the check
+        let mut head = req(t1 + d1, 2, 2000, 1);
+        head.rank = 8;
+        s.enqueue_ready(head);
+        let _ = s.start_iteration(t1 + d1).unwrap();
+        assert_eq!(
+            s.preemptions, 1,
+            "fixed projection must preempt the remaining rank-128 step"
+        );
+        assert!(
+            matches!(s.running, Iteration::Prefill { .. }),
+            "the preempting admission runs the head's prefill"
+        );
+    }
+
+    /// When a copy lands locally, `mark_local` flips the remote flag
+    /// on that adapter's queued, waiting, and active requests — other
+    /// adapters' requests keep theirs.
+    #[test]
+    fn mark_local_clears_remote_flags() {
+        let mut s = server();
+        let mut c = req(0.0, 7, 100, 3);
+        c.remote = true;
+        s.enqueue_ready(c);
+        let t = s.start_iteration(0.0).unwrap();
+        s.finish_iteration(t); // c decoding, still remote
+        assert!(s.active[0].sreq.remote);
+        let mut a = req(t, 7, 100, 1);
+        a.remote = true;
+        s.enqueue_ready(a);
+        let mut b = req(t, 8, 100, 1);
+        b.remote = true;
+        s.enqueue_waiting(b);
+        s.mark_local(7);
+        assert!(!s.active[0].sreq.remote);
+        assert!(!s.queue[0].remote);
+        assert!(
+            s.waiting_fetch[0].remote,
+            "other adapters keep the flag"
+        );
+    }
+
+    /// Remote-attach pricing: a remotely-served adapter pays the
+    /// per-iteration RDMA penalty on its prefill (instead of a GPU
+    /// cache page-in) and on every decode step touching it — once per
+    /// distinct adapter, however many requests share it.
+    #[test]
+    fn remote_attach_pays_per_iteration_penalty() {
+        let penalty =
+            CostModel::new(ServerConfig::default()).remote_attach_penalty();
+        // two requests sharing one remote adapter vs the same pair
+        // served locally from a warm cache
+        let serve = |remote: bool| -> (f64, f64) {
+            let mut s = server();
+            for i in 0..2 {
+                let mut r = req(0.0, 7, 100, 3);
+                r.req.id = i;
+                r.remote = remote;
+                s.enqueue_ready(r);
+            }
+            if !remote {
+                // warm the cache so the local path pays no page-in
+                // (remote adapters never enter the cache at all)
+                let pinned = std::collections::BTreeSet::new();
+                s.gpu_cache.touch(
+                    7,
+                    17 << 20,
+                    s.cm.server.gpu.pcie_bw,
+                    &pinned,
+                );
+            }
+            let tp = s.start_iteration(0.0).unwrap();
+            s.finish_iteration(tp);
+            let td = s.start_iteration(tp).unwrap();
+            (tp, td)
+        };
+        let (tp_local, td_local) = serve(false);
+        let (tp_remote, td_remote) = serve(true);
+        assert!(
+            (tp_remote - tp_local - penalty).abs() < 1e-12,
+            "prefill: one penalty for one distinct remote adapter \
+             (local {tp_local}, remote {tp_remote})"
+        );
+        assert!(
+            (td_remote - td_local - penalty).abs() < 1e-12,
+            "decode step: one penalty per distinct remote adapter \
+             (local {td_local}, remote {td_remote})"
+        );
     }
 
     #[test]

@@ -23,6 +23,7 @@
 //! the open-loop scheduler stays bit-identical to PR 3.
 
 use crate::config::SloFeedbackConfig;
+use crate::workload::AdapterId;
 use std::collections::BTreeMap;
 
 /// Rolling-window size of the per-class inter-token-gap estimate.
@@ -46,9 +47,34 @@ struct ClassCadence {
 pub struct SloTracker {
     pub cfg: SloFeedbackConfig,
     tbt: BTreeMap<u32, ClassCadence>,
+    /// Per-tenant cadence inside each rank class
+    /// (`rank → adapter → cadence`). The class-level ring alone lets
+    /// one noisy tenant hide a starved co-class tenant — the class
+    /// keeps stepping (healthy cadence, fresh staleness anchor) while
+    /// a particular adapter's own gaps blow the target. Fed by the
+    /// member-aware observe/record calls; [`SloTracker::tbt_headroom`]
+    /// takes the worst per-adapter value when a class is multi-tenant.
+    tbt_adapter: BTreeMap<u32, BTreeMap<AdapterId, ClassCadence>>,
     /// Latest simulated time the tracker has seen (staleness anchor
     /// for classes the rotor has been skipping).
     now: f64,
+}
+
+/// Push one inter-step gap into a cadence ring and advance its anchor
+/// (shared by the class-level and per-adapter rings).
+fn push_gap(e: &mut ClassCadence, now: f64) {
+    if let Some(prev) = e.last_step_at {
+        let gap = now - prev;
+        if gap >= 0.0 {
+            if e.gaps.len() < TBT_WINDOW {
+                e.gaps.push(gap);
+            } else {
+                e.gaps[e.next] = gap;
+            }
+            e.next = (e.next + 1) % TBT_WINDOW;
+        }
+    }
+    e.last_step_at = Some(now);
 }
 
 impl SloTracker {
@@ -56,6 +82,7 @@ impl SloTracker {
         SloTracker {
             cfg,
             tbt: BTreeMap::new(),
+            tbt_adapter: BTreeMap::new(),
             now: 0.0,
         }
     }
@@ -90,6 +117,41 @@ impl SloTracker {
         }
     }
 
+    /// Member-aware [`SloTracker::observe_active`]: anchors/retires
+    /// the class rings from the distinct ranks present *and* keeps the
+    /// per-tenant rings in sync — a tenant that joins the active set
+    /// and is then never stepped accrues its own staleness, and a
+    /// tenant whose requests all completed loses its cadence history
+    /// exactly like a departed class does.
+    pub fn observe_active_members(
+        &mut self,
+        now: f64,
+        members: &[(u32, AdapterId)],
+    ) {
+        let mut classes: Vec<u32> = Vec::new();
+        for &(rank, _) in members {
+            if !classes.contains(&rank) {
+                classes.push(rank);
+            }
+        }
+        self.observe_active(now, &classes);
+        self.tbt_adapter.retain(|rank, per| {
+            per.retain(|ad, _| members.contains(&(*rank, *ad)));
+            !per.is_empty()
+        });
+        for &(rank, ad) in members {
+            let e = self
+                .tbt_adapter
+                .entry(rank)
+                .or_default()
+                .entry(ad)
+                .or_default();
+            if e.last_step_at.is_none() {
+                e.last_step_at = Some(now);
+            }
+        }
+    }
+
     /// Record one decode step finishing at `now` for every rank class
     /// with a member in the step: the gap since the class's previous
     /// step is its newest inter-token-gap sample.
@@ -100,19 +162,35 @@ impl SloTracker {
     ) {
         self.tick(now);
         for rank in classes {
-            let e = self.tbt.entry(rank).or_default();
-            if let Some(prev) = e.last_step_at {
-                let gap = now - prev;
-                if gap >= 0.0 {
-                    if e.gaps.len() < TBT_WINDOW {
-                        e.gaps.push(gap);
-                    } else {
-                        e.gaps[e.next] = gap;
-                    }
-                    e.next = (e.next + 1) % TBT_WINDOW;
-                }
+            push_gap(self.tbt.entry(rank).or_default(), now);
+        }
+    }
+
+    /// Member-aware [`SloTracker::record_decode_step`]: updates the
+    /// class rings (distinct ranks, identical to the class-only call)
+    /// *and* each stepped tenant's own cadence ring. `members` must be
+    /// deduplicated per (rank, adapter).
+    pub fn record_decode_step_members(
+        &mut self,
+        now: f64,
+        members: &[(u32, AdapterId)],
+    ) {
+        let mut classes: Vec<u32> = Vec::new();
+        for &(rank, _) in members {
+            if !classes.contains(&rank) {
+                classes.push(rank);
             }
-            e.last_step_at = Some(now);
+        }
+        self.record_decode_step(now, classes);
+        for &(rank, ad) in members {
+            push_gap(
+                self.tbt_adapter
+                    .entry(rank)
+                    .or_default()
+                    .entry(ad)
+                    .or_default(),
+                now,
+            );
         }
     }
 
@@ -126,17 +204,12 @@ impl SloTracker {
         Some(e.gaps.iter().sum::<f64>() / e.gaps.len() as f64)
     }
 
-    /// TBT headroom of a rank class: target minus the rolling observed
-    /// gap, floored by staleness (a class that hasn't stepped since
+    /// Headroom of one cadence ring: target minus the rolling observed
+    /// gap, floored by staleness (a ring that hasn't stepped since
     /// `last_step_at` is *at least* `now − last_step_at` slow, however
-    /// healthy its history looks — otherwise a skipped class would
-    /// keep reporting its old, good cadence and starve). Classes with
-    /// no observations report full headroom: the tracker has no
-    /// evidence of pressure, so all-fresh classes tie.
-    pub fn tbt_headroom(&self, rank: u32) -> f64 {
-        let Some(e) = self.tbt.get(&rank) else {
-            return self.cfg.tbt_target;
-        };
+    /// healthy its history looks — otherwise a skipped class/tenant
+    /// would keep reporting its old, good cadence and starve).
+    fn headroom_of(&self, e: &ClassCadence) -> f64 {
         let mut gap: f64 = 0.0;
         if !e.gaps.is_empty() {
             gap = e.gaps.iter().sum::<f64>() / e.gaps.len() as f64;
@@ -148,6 +221,40 @@ impl SloTracker {
             return self.cfg.tbt_target;
         }
         self.cfg.tbt_target - gap
+    }
+
+    /// TBT headroom of a rank class (see [`SloTracker::headroom_of`]
+    /// for the per-ring formula). Classes with no observations report
+    /// full headroom: the tracker has no evidence of pressure, so
+    /// all-fresh classes tie. When the class is multi-tenant, the
+    /// *worst per-adapter* headroom wins — the class-level ring
+    /// averages tenants, so a noisy tenant stepping often would
+    /// otherwise hide a starved co-class tenant from the rotor.
+    pub fn tbt_headroom(&self, rank: u32) -> f64 {
+        let class = match self.tbt.get(&rank) {
+            None => return self.cfg.tbt_target,
+            Some(e) => self.headroom_of(e),
+        };
+        match self.tbt_adapter.get(&rank) {
+            Some(per) if per.len() >= 2 => per
+                .values()
+                .map(|e| self.headroom_of(e))
+                .fold(class, f64::min),
+            _ => class,
+        }
+    }
+
+    /// Worst rolling TBT headroom over every tracked class (and every
+    /// tenant inside multi-tenant classes) — the server-level SLO
+    /// pressure signal the drift-reactive rebalance trigger consumes.
+    /// `None` until at least one class has been observed.
+    pub fn worst_tbt_headroom(&self) -> Option<f64> {
+        let mut worst: Option<f64> = None;
+        for &rank in self.tbt.keys() {
+            let h = self.tbt_headroom(rank);
+            worst = Some(worst.map_or(h, |w: f64| w.min(h)));
+        }
+        worst
     }
 
     /// TTFT pressure: the queue head has already waited `waited`
@@ -252,6 +359,64 @@ mod tests {
             "re-entry gap must be anchor→step, not the 0.6 s idle \
              gap: {g}"
         );
+    }
+
+    /// The multi-tenant fix: a class whose ring keeps stepping (one
+    /// busy tenant) must not hide a co-class tenant that never steps —
+    /// the worst per-adapter headroom wins. Single-tenant classes keep
+    /// reporting exactly the class-level value.
+    #[test]
+    fn per_adapter_headroom_catches_starved_co_tenant() {
+        let mut t = SloTracker::new(cfg());
+        // tenants 1 and 2 share rank class 8; only tenant 1 steps
+        t.observe_active_members(0.0, &[(8, 1), (8, 2)]);
+        for i in 0..10 {
+            t.record_decode_step_members(
+                0.02 * (i + 1) as f64,
+                &[(8, 1)],
+            );
+        }
+        // class-level view: healthy 20 ms cadence, fresh anchor
+        let class_only = t.headroom_of(t.tbt.get(&8).unwrap());
+        assert!(class_only > 0.0, "{class_only}");
+        // tenant 2 has been starved for 0.2 s: the class headroom must
+        // reflect the worst tenant, not the class average
+        let h = t.tbt_headroom(8);
+        assert!(
+            (h - (0.1 - 0.2)).abs() < 1e-12,
+            "want tenant 2's staleness (-0.1), got {h}"
+        );
+        assert_eq!(t.worst_tbt_headroom(), Some(h));
+        // once tenant 2 drains out of the active set, the class is
+        // single-tenant again and reports the class-level value
+        t.observe_active_members(0.2, &[(8, 1)]);
+        assert_eq!(t.tbt_headroom(8), class_only);
+        // empty tracker has no worst signal
+        assert_eq!(SloTracker::new(cfg()).worst_tbt_headroom(), None);
+    }
+
+    /// Member-aware recording feeds the class rings exactly like the
+    /// class-only call (same distinct ranks), so single-tenant
+    /// behavior — and the rotor driven by it — is unchanged.
+    #[test]
+    fn member_calls_match_class_calls_for_single_tenants() {
+        let mut a = SloTracker::new(cfg());
+        let mut b = SloTracker::new(cfg());
+        for i in 0..8 {
+            let now = 0.03 * (i + 1) as f64;
+            a.record_decode_step(now, [8u32, 64]);
+            b.record_decode_step_members(
+                now,
+                &[(8, 1), (64, 2)],
+            );
+        }
+        for rank in [8u32, 64] {
+            assert_eq!(
+                a.tbt_headroom(rank).to_bits(),
+                b.tbt_headroom(rank).to_bits(),
+                "rank {rank}"
+            );
+        }
     }
 
     #[test]

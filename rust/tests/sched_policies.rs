@@ -5,7 +5,7 @@
 
 use loraserve::config::{
     BatchPolicyKind, ClassSelect, ClusterConfig, DecodePolicyKind,
-    SloFeedbackConfig,
+    RebalanceConfig, SloFeedbackConfig,
 };
 use loraserve::figures::sched::{sched_decode_table, sched_table};
 use loraserve::sim::{
@@ -53,6 +53,7 @@ fn hand_composed(kind: SystemKind) -> SystemSpec {
         load_signal: LoadSignal::ServiceSeconds,
         rank_blind_cost: false,
         slo: SloFeedbackConfig::default(),
+        rebalance: RebalanceConfig::default(),
     };
     match kind {
         SystemKind::LoraServe => SystemSpec {
@@ -232,6 +233,7 @@ fn rank_bucketed_starvation_bound_property() {
                     rank,
                     adapter_bytes: 1 << 20,
                     est: 0.1,
+                    remote: false,
                 });
                 next_id += 1;
             }

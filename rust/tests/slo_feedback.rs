@@ -147,6 +147,7 @@ fn active_set(ranks: &[u32]) -> Vec<ActiveReq> {
                 rank,
                 adapter_bytes: 1 << 20,
                 est: 0.1,
+                remote: false,
             },
             produced: 1,
             first_token_at: 0.0,
