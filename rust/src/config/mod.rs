@@ -288,7 +288,9 @@ impl RebalanceMode {
 /// (`sim::rebalance::RebalanceTrigger` + the incremental migration
 /// planner). JSON: `rebalance_mode`, `trigger_check_period`,
 /// `trigger_imbalance`, `trigger_hysteresis`, `trigger_min_interval`,
-/// `remote_attach`; CLI: `--rebalance-mode`, `--remote-attach`.
+/// `remote_attach`, `trigger_queue_signal`, `trigger_queue_depth`,
+/// `trigger_stall`, `remote_promote_hot`; CLI: `--rebalance-mode`,
+/// `--remote-attach`.
 ///
 /// Defaults keep the layer fully inert: `Periodic` mode never
 /// evaluates the trigger, never plans incrementally, and never serves
@@ -319,6 +321,23 @@ pub struct RebalanceConfig {
     /// `ServerConfig::remote_attach_penalty`. Only meaningful with a
     /// distributed pool.
     pub remote_attach: bool,
+    /// Feed queue pressure — mean pending depth over active servers
+    /// and windowed fetch-stall seconds — into the trigger as a third
+    /// OR-term beside the imbalance ratio and SLO headroom. Off by
+    /// default: the trigger behaves exactly as before.
+    pub queue_signal: bool,
+    /// Mean pending requests per active server (ready queue + fetch
+    /// waiters + active batch) that counts as queue pressure.
+    pub queue_depth_hot: f64,
+    /// Fleet-wide fetch-stall seconds accumulated since the previous
+    /// trigger check that count as queue pressure.
+    pub stall_hot: f64,
+    /// Remote-attach promotion: an adapter remotely served from one
+    /// server at least this many times between trigger checks gets its
+    /// copy migrated there (stop paying the per-iteration RDMA penalty
+    /// for sustained traffic). 0 (the default) disables promotion.
+    /// Only meaningful with `remote_attach` in triggered/hybrid mode.
+    pub promote_hot: u64,
 }
 
 impl Default for RebalanceConfig {
@@ -330,6 +349,10 @@ impl Default for RebalanceConfig {
             hysteresis: 0.8,
             min_interval: 30.0,
             remote_attach: false,
+            queue_signal: false,
+            queue_depth_hot: 8.0,
+            stall_hot: 0.5,
+            promote_hot: 0,
         }
     }
 }
@@ -813,6 +836,34 @@ impl ClusterConfig {
         if let Some(b) = v.get("remote_attach").and_then(Json::as_bool) {
             cfg.rebalance.remote_attach = b;
         }
+        if let Some(b) =
+            v.get("trigger_queue_signal").and_then(Json::as_bool)
+        {
+            cfg.rebalance.queue_signal = b;
+        }
+        if let Some(x) =
+            v.get("trigger_queue_depth").and_then(Json::as_f64)
+        {
+            if x <= 0.0 {
+                return Err(format!(
+                    "trigger_queue_depth must be > 0, got {x}"
+                ));
+            }
+            cfg.rebalance.queue_depth_hot = x;
+        }
+        if let Some(x) = v.get("trigger_stall").and_then(Json::as_f64) {
+            if x <= 0.0 {
+                return Err(format!(
+                    "trigger_stall must be > 0, got {x}"
+                ));
+            }
+            cfg.rebalance.stall_hot = x;
+        }
+        if let Some(x) =
+            v.get("remote_promote_hot").and_then(Json::as_usize)
+        {
+            cfg.rebalance.promote_hot = x as u64;
+        }
         if let Some(a) = v.get("autoscale") {
             let au = &mut cfg.autoscale;
             if let Some(x) = a.get("min_servers").and_then(Json::as_usize) {
@@ -1186,13 +1237,19 @@ mod tests {
         let cfg = ClusterConfig::default();
         assert_eq!(cfg.rebalance.mode, RebalanceMode::Periodic);
         assert!(!cfg.rebalance.remote_attach);
+        assert!(!cfg.rebalance.queue_signal);
+        assert_eq!(cfg.rebalance.promote_hot, 0);
         let v = json::parse(
             r#"{"rebalance_mode": "triggered",
                 "trigger_check_period": 10.0,
                 "trigger_imbalance": 1.3,
                 "trigger_hysteresis": 0.9,
                 "trigger_min_interval": 20.0,
+                "trigger_queue_signal": true,
+                "trigger_queue_depth": 6.0,
+                "trigger_stall": 0.25,
                 "remote_attach": true,
+                "remote_promote_hot": 3,
                 "remote_attach_penalty_ms": 0.6}"#,
         )
         .unwrap();
@@ -1203,6 +1260,10 @@ mod tests {
         assert_eq!(cfg.rebalance.hysteresis, 0.9);
         assert_eq!(cfg.rebalance.min_interval, 20.0);
         assert!(cfg.rebalance.remote_attach);
+        assert!(cfg.rebalance.queue_signal);
+        assert_eq!(cfg.rebalance.queue_depth_hot, 6.0);
+        assert_eq!(cfg.rebalance.stall_hot, 0.25);
+        assert_eq!(cfg.rebalance.promote_hot, 3);
         assert!(
             (cfg.server.remote_attach_penalty - 0.6e-3).abs() < 1e-12
         );
@@ -1226,6 +1287,8 @@ mod tests {
             r#"{"trigger_hysteresis": 0.0}"#,
             r#"{"trigger_hysteresis": 1.5}"#,
             r#"{"trigger_min_interval": -1.0}"#,
+            r#"{"trigger_queue_depth": 0.0}"#,
+            r#"{"trigger_stall": -0.5}"#,
             r#"{"remote_attach_penalty_ms": -0.1}"#,
         ] {
             let v = json::parse(bad).unwrap();

@@ -8,6 +8,7 @@
 //! ```
 
 pub mod ablations;
+pub mod attrib;
 pub mod characterization;
 pub mod design;
 pub mod drift;
@@ -67,6 +68,9 @@ pub fn registry() -> Vec<(&'static str, &'static str, FigFn)> {
         ("drift", "drift-reactive rebalancing: periodic vs triggered \
                    vs triggered+remote-attach",
          drift::drift),
+        ("attrib", "SLO-violation attribution: TTFT component \
+                    breakdown by rebalance mode",
+         attrib::attrib),
         ("gpus", "min fleet under SLO per system (GPU savings)",
          elastic::gpus_under_slo),
         ("fleet", "SLO-aware autoscaler fleet-size timeline",

@@ -38,6 +38,7 @@ pub mod runtime;
 pub mod server;
 pub mod figures;
 pub mod metrics;
+pub mod obs;
 pub mod trace;
 pub mod util;
 pub mod workload;

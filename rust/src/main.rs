@@ -6,6 +6,9 @@
 //!   autoscale search the minimum fleet meeting an SLO and replay the
 //!             trace under the SLO-aware autoscaler (fleet timeline)
 //!   trace     synthesize + characterize traces (writes CSV)
+//!   trace-check  validate a Chrome trace export (spans nest, async
+//!             begin/end balanced) — the CI smoke runs this on the
+//!             artifacts `simulate --trace-out` emits
 //!   profile   print operating points for a server config
 //!   serve     run the real PJRT mini-cluster on a synthetic workload
 //!             (needs the `pjrt` feature)
@@ -41,6 +44,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "autoscale" => cmd_autoscale(&args),
         "trace" => cmd_trace(&args),
+        "trace-check" => cmd_trace_check(&args),
         "profile" => cmd_profile(&args),
         "serve" => cmd_serve(&args),
         other => {
@@ -72,13 +76,16 @@ fn usage() {
          [--slo-ttft-ms MS] [--slo-tbt-ms MS] [--preempt-decode on|off]\n         \
          [--rebalance-mode periodic|triggered|hybrid] \
          [--remote-attach on|off]\n         \
-         [--report-out file.json]\n\
+         [--report-out file.json]\n         \
+         [--trace-out trace.json] [--trace-last N] \
+         [--metrics-out file.prom]\n\
          autoscale [--system <kind>|--all] [--slo-ttft MS] \
          [--slo-e2e MS]\n         \
          [--metric ttft|e2e] [--percentile P] [--max-servers N]\n         \
          [--trace prod|shifting|uniform] [--rps R] [--duration S]\n         \
          [--adapters N] [--seed S] [--batch-policy P]\n\
          trace    --kind prod|azure [--adapters N] [--out file.csv]\n\
+         trace-check <trace.json>\n\
          profile  [--model 7b|13b|30b|70b] [--tp N]\n\
          serve    [--servers N] [--requests N] [--duration S]   \
          (feature pjrt)"
@@ -265,6 +272,28 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         ),
         other => return Err(format!("unknown trace kind '{other}'")),
     };
+    // observability knobs — all default off so the plain path stays
+    // bit-identical (see tests/obs_tracing.rs)
+    let mut obs_cfg = loraserve::obs::ObsConfig::default();
+    if args.get("trace-out").is_some() {
+        obs_cfg.trace = true;
+        // tracing implies the latency decomposition: the trace and the
+        // attribution table explain the same run
+        obs_cfg.attrib = true;
+    }
+    if args.get("trace-last").is_some() {
+        if !obs_cfg.trace {
+            return Err("--trace-last needs --trace-out".into());
+        }
+        let n = args.get_usize("trace-last", 0)?;
+        if n == 0 {
+            return Err("--trace-last must be > 0".into());
+        }
+        obs_cfg.trace_last = Some(n);
+    }
+    if args.get("metrics-out").is_some() {
+        obs_cfg.metrics = true;
+    }
     let label = match &choice {
         SystemChoice::Canned(k) => k.label().to_string(),
         SystemChoice::Custom(name) => name.clone(),
@@ -278,10 +307,11 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         cluster.n_servers
     );
     let t0 = std::time::Instant::now();
-    let mut rep = match &choice {
-        SystemChoice::Canned(k) => sim::run(
+    let (mut rep, obs_out) = match &choice {
+        SystemChoice::Canned(k) => sim::run_observed(
             &trace,
-            &sim::SimConfig::new(cluster.clone(), *k),
+            &sim::SimConfig::new(cluster.clone(), *k)
+                .with_obs(obs_cfg),
         ),
         SystemChoice::Custom(name) => {
             let spec = sim::custom_system_spec(
@@ -296,12 +326,13 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
             })?;
             // the canned kind inside SimConfig is unused by run_spec;
             // it only carries the cluster/warmup knobs
-            sim::run_spec(
+            sim::run_spec_observed(
                 &trace,
                 &sim::SimConfig::new(
                     cluster.clone(),
                     SystemKind::LoraServe,
-                ),
+                )
+                .with_obs(obs_cfg),
                 &spec,
             )
         }
@@ -354,6 +385,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         ("incremental moves", rep.incremental_moves.to_string()),
         ("rejected moves", rep.rejected_moves.to_string()),
         ("remote served", rep.remote_served.to_string()),
+        ("remote promotions", rep.promotions.to_string()),
         ("migrated", fmt_bytes(rep.migration_bytes)),
         ("fetches", rep.fetches.to_string()),
         (
@@ -382,19 +414,92 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
             rep.per_server_highrank_frac[s],
         );
     }
+    // SLO-violation attribution: where the TTFT/E2E time actually went
+    // (component means; `recon` = worst |sum − measured| in the cohort)
+    if let Some(a) = &rep.attribution {
+        let mut at = Table::new(
+            "latency attribution (mean per request)",
+            &[
+                "cohort", "n", "ttft", "queue", "fetch", "prefill",
+                "skew", "remote", "decode", "launch", "preempt", "recon",
+            ],
+        );
+        for (name, b) in [
+            ("all", &a.all),
+            ("ttft violators", &a.violators),
+            ("p99 ttft tail", &a.tail),
+        ] {
+            at.row(vec![
+                name.to_string(),
+                b.n.to_string(),
+                fmt_secs(b.ttft),
+                fmt_secs(b.queue_wait),
+                fmt_secs(b.fetch_stall),
+                fmt_secs(b.prefill_service),
+                fmt_secs(b.skew()),
+                fmt_secs(b.remote()),
+                fmt_secs(b.decode_service),
+                fmt_secs(b.decode_launch),
+                fmt_secs(b.preempt_delay),
+                format!("{:.1e}", b.recon),
+            ]);
+        }
+        println!("{}", at.to_markdown());
+    }
     // Deterministic JSON digest of the run (the CI determinism gate
     // runs `simulate` twice and byte-compares exactly this file).
     if let Some(out) = args.get("report-out") {
-        let json = rep.to_json_string();
-        if let Some(dir) = std::path::Path::new(out).parent() {
-            if !dir.as_os_str().is_empty() {
-                std::fs::create_dir_all(dir)
-                    .map_err(|e| format!("{out}: {e}"))?;
-            }
-        }
-        std::fs::write(out, json).map_err(|e| format!("{out}: {e}"))?;
+        write_out(out, &rep.to_json_string())?;
         println!("[report written {out}]");
     }
+    // Chrome trace-event export (load in Perfetto / chrome://tracing);
+    // same-seed runs of the same build emit byte-identical files.
+    if let Some(out) = args.get("trace-out") {
+        let json = obs_out.trace_json.as_deref().unwrap_or(
+            "{\"traceEvents\":[]}",
+        );
+        write_out(out, json)?;
+        println!("[trace written {out}]");
+    }
+    // Prometheus text exposition of the end-of-run registry snapshot.
+    if let Some(out) = args.get("metrics-out") {
+        let text = obs_out.metrics_text.as_deref().unwrap_or("");
+        write_out(out, text)?;
+        println!("[metrics written {out}]");
+    }
+    Ok(())
+}
+
+/// Write `contents` to `path`, creating parent directories.
+fn write_out(path: &str, contents: &str) -> Result<(), String> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("{path}: {e}"))?;
+        }
+    }
+    std::fs::write(path, contents).map_err(|e| format!("{path}: {e}"))
+}
+
+/// Validate a Chrome trace export (CI runs this on the `--trace-out`
+/// artifact): parses, complete spans nest per track, async begin/end
+/// balanced per `(cat, id)`.
+fn cmd_trace_check(args: &Args) -> Result<(), String> {
+    let path = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .or_else(|| args.get("file"))
+        .ok_or("usage: loraserve trace-check <trace.json>")?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{path}: {e}"))?;
+    loraserve::obs::check_spans_nest(&text)
+        .map_err(|e| format!("{path}: {e}"))?;
+    let n = loraserve::util::json::parse(&text)?
+        .get("traceEvents")
+        .and_then(|e| e.as_arr().map(|a| a.len()))
+        .unwrap_or(0);
+    println!("{path}: OK ({n} events; spans nest, async balanced)");
     Ok(())
 }
 

@@ -2,7 +2,14 @@
 //! capacity subsystem (GPU-seconds, scale-event counters, fleet-size
 //! timeline, SLO-violation rate), plus re-exports of the metric
 //! primitives (`util::stats`) and the per-run report (`sim::report`).
+//!
+//! Ad-hoc run counters (arrivals, fetches, rebalances, ...) live in
+//! the [`MetricsRegistry`] from `obs::metrics` — a counter/gauge
+//! registry with deterministic snapshot ordering and Prometheus text
+//! export (`simulate --metrics-out`), re-exported here so metric
+//! consumers have one import path.
 
+pub use crate::obs::MetricsRegistry;
 pub use crate::sim::report::SimReport;
 pub use crate::util::stats::{Histogram, Samples};
 

@@ -1,0 +1,361 @@
+//! Chrome trace-event JSON sink (Perfetto / `chrome://tracing`
+//! viewable) with an optional bounded flight-recorder ring, plus the
+//! span-nesting checker the CI smoke uses to validate emitted traces.
+
+use super::{Phase, TraceEvent, PID_CONTROL, TID_PREFILL, TID_REQUESTS};
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Where trace events go. The simulation emits through
+/// [`super::Obs`]; sinks only collect and export.
+pub trait TraceSink: std::fmt::Debug {
+    fn emit(&mut self, ev: TraceEvent);
+    /// Number of retained events.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Export retained events as Chrome trace-event JSON.
+    fn export_chrome(&self) -> String;
+}
+
+/// Discards everything — the sink behind metrics/attribution-only
+/// configurations.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    fn emit(&mut self, _ev: TraceEvent) {}
+    fn len(&self) -> usize {
+        0
+    }
+    fn export_chrome(&self) -> String {
+        String::from("{\"traceEvents\":[]}")
+    }
+}
+
+/// Collects events in emission order; with `last = Some(n)` it runs as
+/// a flight recorder keeping only the most recent `n` events (the
+/// number dropped is reported in the export's metadata).
+#[derive(Debug, Default)]
+pub struct ChromeTraceSink {
+    events: VecDeque<TraceEvent>,
+    last: Option<usize>,
+    dropped: u64,
+}
+
+impl ChromeTraceSink {
+    pub fn new(last: Option<usize>) -> Self {
+        ChromeTraceSink {
+            events: VecDeque::new(),
+            last,
+            dropped: 0,
+        }
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+impl TraceSink for ChromeTraceSink {
+    fn emit(&mut self, ev: TraceEvent) {
+        self.events.push_back(ev);
+        if let Some(cap) = self.last {
+            while self.events.len() > cap.max(1) {
+                self.events.pop_front();
+                self.dropped += 1;
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    fn export_chrome(&self) -> String {
+        let mut out = String::from("{\"displayTimeUnit\":\"ms\",");
+        let _ = std::fmt::Write::write_fmt(
+            &mut out,
+            format_args!("\"droppedEvents\":{},", self.dropped),
+        );
+        out.push_str("\"traceEvents\":[");
+        let mut first = true;
+        let mut push = |j: Json, out: &mut String| {
+            if !std::mem::take(&mut first) {
+                out.push(',');
+            }
+            out.push_str(&j.to_string());
+        };
+        // metadata first: name every process/thread that appears
+        let mut pids = BTreeSet::new();
+        let mut lanes = BTreeSet::new();
+        for ev in &self.events {
+            pids.insert(ev.pid);
+            lanes.insert((ev.pid, ev.tid));
+        }
+        for pid in &pids {
+            let name = if *pid == PID_CONTROL {
+                "control-plane".to_string()
+            } else {
+                format!("server {}", pid - 1)
+            };
+            push(meta("process_name", *pid, 0, &name), &mut out);
+        }
+        for (pid, tid) in &lanes {
+            let name = if *pid == PID_CONTROL {
+                "decisions".to_string()
+            } else {
+                match *tid {
+                    TID_REQUESTS => "requests".to_string(),
+                    TID_PREFILL => "prefill".to_string(),
+                    t if t == super::decode_lane(0) => {
+                        "decode (no-lora)".to_string()
+                    }
+                    t => format!("decode r≤{}", 1u64 << (t - 3)),
+                }
+            };
+            push(meta("thread_name", *pid, *tid, &name), &mut out);
+        }
+        for ev in &self.events {
+            push(event_json(ev), &mut out);
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+fn meta(name: &str, pid: u32, tid: u32, value: &str) -> Json {
+    Json::obj(vec![
+        ("ph", "M".into()),
+        ("name", name.into()),
+        ("pid", pid.into()),
+        ("tid", tid.into()),
+        ("args", Json::obj(vec![("name", value.into())])),
+    ])
+}
+
+fn event_json(ev: &TraceEvent) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("name", ev.name.into()),
+        ("pid", ev.pid.into()),
+        ("tid", ev.tid.into()),
+        ("ts", (ev.ts * 1e6).into()),
+    ];
+    match ev.ph {
+        Phase::Span { dur } => {
+            pairs.push(("ph", "X".into()));
+            pairs.push(("dur", (dur * 1e6).into()));
+        }
+        Phase::Instant => {
+            pairs.push(("ph", "i".into()));
+            pairs.push(("s", "t".into()));
+        }
+        Phase::AsyncBegin { cat, id }
+        | Phase::AsyncInstant { cat, id }
+        | Phase::AsyncEnd { cat, id } => {
+            let ph = match ev.ph {
+                Phase::AsyncBegin { .. } => "b",
+                Phase::AsyncInstant { .. } => "n",
+                _ => "e",
+            };
+            pairs.push(("ph", ph.into()));
+            pairs.push(("cat", cat.into()));
+            pairs.push(("id", format!("{id:#x}").into()));
+        }
+    }
+    if let Some(c) = ev.cname {
+        pairs.push(("cname", c.into()));
+    }
+    if !ev.args.is_empty() {
+        pairs.push((
+            "args",
+            Json::obj(
+                ev.args.iter().map(|(k, v)| (*k, v.clone())).collect(),
+            ),
+        ));
+    }
+    Json::obj(pairs)
+}
+
+/// Validate a Chrome trace export: it parses, complete (`"X"`) spans
+/// on each `(pid, tid)` track nest strictly (no partial overlap), and
+/// every async end has a matching open begin per `(cat, id)`. Used by
+/// the `trace-check` CLI subcommand that the CI smoke runs on emitted
+/// artifacts.
+pub fn check_spans_nest(text: &str) -> Result<(), String> {
+    let v = crate::util::json::parse(text)?;
+    let events = v
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or("missing traceEvents array")?;
+    let num = |ev: &Json, k: &str| -> f64 {
+        ev.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0)
+    };
+    // spans per track, in emission order (event start times are
+    // non-decreasing within a track because the DES emits at dispatch
+    // time)
+    let mut tracks: BTreeMap<(u64, u64), Vec<(f64, f64)>> = BTreeMap::new();
+    let mut open_async: BTreeMap<(String, String), i64> = BTreeMap::new();
+    const EPS: f64 = 1e-3; // µs
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        match ph {
+            "X" => {
+                let key = (num(ev, "pid") as u64, num(ev, "tid") as u64);
+                let ts = num(ev, "ts");
+                let dur = num(ev, "dur");
+                if dur < 0.0 {
+                    return Err(format!("negative dur at ts={ts}"));
+                }
+                tracks.entry(key).or_default().push((ts, ts + dur));
+            }
+            "b" | "e" => {
+                let cat = ev
+                    .get("cat")
+                    .and_then(|c| c.as_str())
+                    .ok_or("async event without cat")?
+                    .to_string();
+                let id = ev
+                    .get("id")
+                    .and_then(|c| c.as_str())
+                    .ok_or("async event without id")?
+                    .to_string();
+                let n = open_async.entry((cat.clone(), id.clone())).or_insert(0);
+                if ph == "b" {
+                    *n += 1;
+                } else {
+                    *n -= 1;
+                    if *n < 0 {
+                        return Err(format!(
+                            "async end without begin: {cat}/{id}"
+                        ));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    for ((pid, tid), spans) in &tracks {
+        // stack of open span end-times; a new span must start after
+        // the enclosing span started and must not poke out of it
+        let mut stack: Vec<f64> = Vec::new();
+        let mut last_start = f64::NEG_INFINITY;
+        for &(ts, end) in spans {
+            if ts < last_start - EPS {
+                return Err(format!(
+                    "track {pid}/{tid}: spans out of order at ts={ts}"
+                ));
+            }
+            last_start = ts;
+            while let Some(&top) = stack.last() {
+                if top <= ts + EPS {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&top) = stack.last() {
+                if end > top + EPS {
+                    return Err(format!(
+                        "track {pid}/{tid}: span [{ts}, {end}] partially \
+                         overlaps enclosing span ending at {top}"
+                    ));
+                }
+            }
+            stack.push(end);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(ts: f64, dur: f64, pid: u32, tid: u32) -> TraceEvent {
+        TraceEvent {
+            name: "s",
+            ph: Phase::Span { dur },
+            ts,
+            pid,
+            tid,
+            cname: None,
+            args: vec![],
+        }
+    }
+
+    #[test]
+    fn ring_keeps_exactly_last_n() {
+        let mut sink = ChromeTraceSink::new(Some(3));
+        for i in 0..10 {
+            sink.emit(span(i as f64, 0.5, 0, 0));
+        }
+        assert_eq!(sink.len(), 3);
+        assert_eq!(sink.dropped(), 7);
+        let text = sink.export_chrome();
+        let v = crate::util::json::parse(&text).unwrap();
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        let xs: Vec<f64> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .map(|e| e.get("ts").unwrap().as_f64().unwrap() / 1e6)
+            .collect();
+        assert_eq!(xs, vec![7.0, 8.0, 9.0]);
+        assert_eq!(
+            v.get("droppedEvents").unwrap().as_f64().unwrap() as u64,
+            7
+        );
+    }
+
+    #[test]
+    fn export_parses_and_nests() {
+        let mut sink = ChromeTraceSink::new(None);
+        sink.emit(span(0.0, 10.0, 1, 1));
+        sink.emit(span(1.0, 2.0, 1, 1)); // nested inside the first
+        sink.emit(span(20.0, 1.0, 1, 1)); // disjoint
+        sink.emit(TraceEvent {
+            name: "req",
+            ph: Phase::AsyncBegin { cat: "req", id: 7 },
+            ts: 0.0,
+            pid: 1,
+            tid: 0,
+            cname: None,
+            args: vec![("rank", 8u32.into())],
+        });
+        sink.emit(TraceEvent {
+            name: "req",
+            ph: Phase::AsyncEnd { cat: "req", id: 7 },
+            ts: 5.0,
+            pid: 1,
+            tid: 0,
+            cname: None,
+            args: vec![],
+        });
+        let text = sink.export_chrome();
+        check_spans_nest(&text).unwrap();
+        // metadata names the tracks
+        assert!(text.contains("process_name"));
+        assert!(text.contains("server 0"));
+    }
+
+    #[test]
+    fn checker_rejects_partial_overlap_and_unbalanced_async() {
+        let mut sink = ChromeTraceSink::new(None);
+        sink.emit(span(0.0, 5.0, 1, 1));
+        sink.emit(span(3.0, 5.0, 1, 1)); // pokes out of the first
+        assert!(check_spans_nest(&sink.export_chrome()).is_err());
+
+        let mut sink = ChromeTraceSink::new(None);
+        sink.emit(TraceEvent {
+            name: "m",
+            ph: Phase::AsyncEnd { cat: "mig", id: 1 },
+            ts: 0.0,
+            pid: 0,
+            tid: 0,
+            cname: None,
+            args: vec![],
+        });
+        assert!(check_spans_nest(&sink.export_chrome()).is_err());
+    }
+}

@@ -1,0 +1,115 @@
+//! Counter/gauge registry with deterministic snapshot ordering and
+//! Prometheus text exposition. Absorbs the engine's ad-hoc counters:
+//! at the end of a run the engine publishes every `SimReport` counter
+//! and the fleet/latency gauges here, in addition to the live counters
+//! bumped during the run.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+}
+
+impl MetricsRegistry {
+    pub fn inc(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn set_counter(&mut self, name: &str, v: u64) {
+        self.counters.insert(name.to_string(), v);
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty()
+    }
+
+    /// All series in deterministic (sorted, counters-first) order.
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        self.counters
+            .iter()
+            .map(|(k, v)| (k.clone(), *v as f64))
+            .chain(self.gauges.iter().map(|(k, v)| (k.clone(), *v)))
+            .collect()
+    }
+
+    /// Prometheus text exposition format (one `# TYPE` line per
+    /// series; counters first, then gauges, each alphabetical).
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            let _ = writeln!(out, "# TYPE {k} counter\n{k} {v}");
+        }
+        for (k, v) in &self.gauges {
+            let _ = writeln!(out, "# TYPE {k} gauge\n{k} {}", fmt_f64(*v));
+        }
+        out
+    }
+}
+
+/// Shortest round-trippable float, with Prometheus spellings for the
+/// non-finite values.
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot_is_sorted() {
+        let mut m = MetricsRegistry::default();
+        m.inc("b_total", 2);
+        m.inc("a_total", 1);
+        m.inc("b_total", 3);
+        m.set_gauge("z_seconds", 0.25);
+        m.set_gauge("z_seconds", 0.5); // latest wins
+        assert_eq!(m.counter("b_total"), 5);
+        assert_eq!(m.gauge("z_seconds"), Some(0.5));
+        let names: Vec<String> =
+            m.snapshot().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(names, vec!["a_total", "b_total", "z_seconds"]);
+    }
+
+    #[test]
+    fn prometheus_text_is_deterministic() {
+        let mut m = MetricsRegistry::default();
+        m.inc("sim_completed_total", 42);
+        m.set_gauge("sim_ttft_p95_seconds", 0.125);
+        m.set_gauge("sim_bad", f64::NAN);
+        let text = m.to_prometheus();
+        assert_eq!(
+            text,
+            "# TYPE sim_completed_total counter\n\
+             sim_completed_total 42\n\
+             # TYPE sim_bad gauge\n\
+             sim_bad NaN\n\
+             # TYPE sim_ttft_p95_seconds gauge\n\
+             sim_ttft_p95_seconds 0.125\n"
+        );
+        assert_eq!(text, m.clone().to_prometheus());
+    }
+}

@@ -1,0 +1,436 @@
+//! Observability: flight-recorder tracing, per-request SLO-violation
+//! attribution, and a counter/gauge metrics registry for the
+//! simulation engine.
+//!
+//! The whole subsystem hangs off one cheaply-cloneable [`Obs`] handle
+//! that the engine installs into every [`crate::sim::SimServer`], the
+//! adapter pool, and the autoscale controller. `Obs::default()` is
+//! *disabled*: every hook early-returns before constructing an event,
+//! so the hot path stays zero-cost and report digests are
+//! bit-identical to a build without the subsystem (asserted in
+//! `tests/obs_tracing.rs`).
+//!
+//! Track layout of the exported Chrome trace (see [`chrome`]):
+//!
+//! - `pid 0` — the control plane: trigger checks, rebalances,
+//!   autoscale decisions, drains (instants on `tid 0`), plus async
+//!   `mig`/`fetch` spans for in-flight RDMA transfers.
+//! - `pid 1+s` — server `s`: `tid 0` carries per-request async `req`
+//!   spans (arrival → admission → completion), `tid 1` the prefill
+//!   lane, and `tid 2+⌈log2 rank⌉` one decode lane per rank class,
+//!   colored by class (`cname`).
+
+pub mod attrib;
+pub mod chrome;
+pub mod metrics;
+
+pub use attrib::{AttribTable, AttributionSummary, ReqAttrib};
+pub use chrome::{check_spans_nest, ChromeTraceSink, NoopSink, TraceSink};
+pub use metrics::MetricsRegistry;
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Observability knobs on `SimConfig` — all default off, and the
+/// engine behaves bit-identically when every knob is off.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ObsConfig {
+    /// Record request-lifecycle and control-plane trace events;
+    /// exported as Chrome trace-event JSON (`ObsOutput::trace_json`,
+    /// `simulate --trace-out`).
+    pub trace: bool,
+    /// Flight-recorder mode: keep only the last N trace events
+    /// (`simulate --trace-last N`).
+    pub trace_last: Option<usize>,
+    /// Maintain the per-request latency decomposition and attach the
+    /// aggregated table to `SimReport::attribution`.
+    pub attrib: bool,
+    /// Maintain the counter/gauge registry; exported as Prometheus
+    /// text (`ObsOutput::metrics_text`, `simulate --metrics-out`).
+    pub metrics: bool,
+}
+
+impl ObsConfig {
+    pub fn enabled(&self) -> bool {
+        self.trace || self.attrib || self.metrics
+    }
+}
+
+/// One trace record. `ts`/`dur` are simulation seconds; the exporter
+/// converts to trace-viewer microseconds.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub ph: Phase,
+    pub ts: f64,
+    pub pid: u32,
+    pub tid: u32,
+    /// Trace-viewer color name (decode lanes are colored by rank
+    /// class).
+    pub cname: Option<&'static str>,
+    pub args: Vec<(&'static str, Json)>,
+}
+
+/// Trace-event phase, mirroring the Chrome trace-event kinds we emit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Phase {
+    /// Complete span (`"X"`) with a known duration — iterations and
+    /// decode sub-batch steps, whose service time is priced up front.
+    Span { dur: f64 },
+    /// Thread-scoped instant (`"i"`).
+    Instant,
+    /// Async begin (`"b"`), paired with [`Phase::AsyncEnd`] by
+    /// `(cat, id)`; used for spans that may overlap on one track
+    /// (requests in flight, RDMA transfers).
+    AsyncBegin { cat: &'static str, id: u64 },
+    /// Async instant (`"n"`) — a milestone inside an async span.
+    AsyncInstant { cat: &'static str, id: u64 },
+    /// Async end (`"e"`).
+    AsyncEnd { cat: &'static str, id: u64 },
+}
+
+/// Control-plane process id and the server-track helpers.
+pub const PID_CONTROL: u32 = 0;
+
+pub fn server_pid(server: usize) -> u32 {
+    1 + server as u32
+}
+
+/// Server-track thread ids: requests / prefill / per-rank-class decode
+/// lanes.
+pub const TID_REQUESTS: u32 = 0;
+pub const TID_PREFILL: u32 = 1;
+
+/// One decode lane per rank class (class = bit length of the rank, so
+/// ranks 5..=8 share a lane, 9..=16 the next, ...).
+pub fn decode_lane(max_rank: u32) -> u32 {
+    2 + (32 - max_rank.leading_zeros())
+}
+
+/// Deterministic per-rank-class trace-viewer color.
+pub fn rank_cname(max_rank: u32) -> &'static str {
+    const PALETTE: [&str; 6] = [
+        "thread_state_running",
+        "cq_build_passed",
+        "rail_response",
+        "thread_state_iowait",
+        "cq_build_failed",
+        "terrible",
+    ];
+    PALETTE[(32 - max_rank.leading_zeros()) as usize % PALETTE.len()]
+}
+
+/// Shared observability state behind the [`Obs`] handle.
+#[derive(Debug)]
+pub struct ObsState {
+    pub cfg: ObsConfig,
+    pub sink: Box<dyn TraceSink>,
+    pub metrics: MetricsRegistry,
+    pub attrib: AttribTable,
+}
+
+/// End-of-run export bundle from `run_observed`.
+#[derive(Debug, Clone, Default)]
+pub struct ObsOutput {
+    /// Chrome trace-event JSON (present when `ObsConfig::trace`).
+    pub trace_json: Option<String>,
+    /// Prometheus text exposition (present when `ObsConfig::metrics`).
+    pub metrics_text: Option<String>,
+    /// Per-request attribution records in uid order (present when
+    /// `ObsConfig::attrib`).
+    pub attrib: Option<Vec<ReqAttrib>>,
+}
+
+/// Cheaply-cloneable handle to the shared observability state. The
+/// simulation is single-threaded, so `Rc<RefCell<_>>` is safe; the
+/// disabled handle (`Obs::default()`) carries `None` and every hook
+/// returns before touching any state.
+#[derive(Debug, Clone, Default)]
+pub struct Obs {
+    inner: Option<Rc<RefCell<ObsState>>>,
+}
+
+impl Obs {
+    pub fn new(cfg: ObsConfig) -> Obs {
+        if !cfg.enabled() {
+            return Obs::default();
+        }
+        let sink: Box<dyn TraceSink> = if cfg.trace {
+            Box::new(ChromeTraceSink::new(cfg.trace_last))
+        } else {
+            Box::new(NoopSink)
+        };
+        Obs {
+            inner: Some(Rc::new(RefCell::new(ObsState {
+                cfg,
+                sink,
+                metrics: MetricsRegistry::default(),
+                attrib: AttribTable::default(),
+            }))),
+        }
+    }
+
+    pub fn on(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    pub fn trace_on(&self) -> bool {
+        self.inner
+            .as_ref()
+            .is_some_and(|s| s.borrow().cfg.trace)
+    }
+
+    pub fn attrib_on(&self) -> bool {
+        self.inner
+            .as_ref()
+            .is_some_and(|s| s.borrow().cfg.attrib)
+    }
+
+    pub fn metrics_on(&self) -> bool {
+        self.inner
+            .as_ref()
+            .is_some_and(|s| s.borrow().cfg.metrics)
+    }
+
+    fn emit(&self, ev: TraceEvent) {
+        if let Some(s) = &self.inner {
+            let mut s = s.borrow_mut();
+            if s.cfg.trace {
+                s.sink.emit(ev);
+            }
+        }
+    }
+
+    pub fn span(
+        &self,
+        name: &'static str,
+        ts: f64,
+        dur: f64,
+        pid: u32,
+        tid: u32,
+        cname: Option<&'static str>,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        self.emit(TraceEvent {
+            name,
+            ph: Phase::Span { dur },
+            ts,
+            pid,
+            tid,
+            cname,
+            args,
+        });
+    }
+
+    pub fn instant(
+        &self,
+        name: &'static str,
+        ts: f64,
+        pid: u32,
+        tid: u32,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        self.emit(TraceEvent {
+            name,
+            ph: Phase::Instant,
+            ts,
+            pid,
+            tid,
+            cname: None,
+            args,
+        });
+    }
+
+    pub fn async_begin(
+        &self,
+        name: &'static str,
+        cat: &'static str,
+        id: u64,
+        ts: f64,
+        pid: u32,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        self.emit(TraceEvent {
+            name,
+            ph: Phase::AsyncBegin { cat, id },
+            ts,
+            pid,
+            tid: TID_REQUESTS,
+            cname: None,
+            args,
+        });
+    }
+
+    pub fn async_instant(
+        &self,
+        name: &'static str,
+        cat: &'static str,
+        id: u64,
+        ts: f64,
+        pid: u32,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        self.emit(TraceEvent {
+            name,
+            ph: Phase::AsyncInstant { cat, id },
+            ts,
+            pid,
+            tid: TID_REQUESTS,
+            cname: None,
+            args,
+        });
+    }
+
+    pub fn async_end(
+        &self,
+        name: &'static str,
+        cat: &'static str,
+        id: u64,
+        ts: f64,
+        pid: u32,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        self.emit(TraceEvent {
+            name,
+            ph: Phase::AsyncEnd { cat, id },
+            ts,
+            pid,
+            tid: TID_REQUESTS,
+            cname: None,
+            args,
+        });
+    }
+
+    /// Bump a monotonically-increasing counter (no-op unless the
+    /// metrics registry is enabled).
+    pub fn counter_add(&self, name: &'static str, v: u64) {
+        if let Some(s) = &self.inner {
+            let mut s = s.borrow_mut();
+            if s.cfg.metrics {
+                s.metrics.inc(name, v);
+            }
+        }
+    }
+
+    /// Overwrite a counter with its authoritative end-of-run value
+    /// (the engine syncs the `SimReport` totals here at `finish`, so
+    /// the registry absorbs counters the hot path never bumped live).
+    pub fn counter_set(&self, name: &'static str, v: u64) {
+        if let Some(s) = &self.inner {
+            let mut s = s.borrow_mut();
+            if s.cfg.metrics {
+                s.metrics.set_counter(name, v);
+            }
+        }
+    }
+
+    /// Set a gauge to its latest value (no-op unless enabled).
+    pub fn gauge_set(&self, name: &'static str, v: f64) {
+        if let Some(s) = &self.inner {
+            let mut s = s.borrow_mut();
+            if s.cfg.metrics {
+                s.metrics.set_gauge(name, v);
+            }
+        }
+    }
+
+    /// Run `f` against the attribution table (no-op unless enabled).
+    pub fn with_attrib(&self, f: impl FnOnce(&mut AttribTable)) {
+        if let Some(s) = &self.inner {
+            let mut s = s.borrow_mut();
+            if s.cfg.attrib {
+                f(&mut s.attrib);
+            }
+        }
+    }
+
+    /// Aggregate the attribution table (None when disabled or empty).
+    pub fn attribution_summary(
+        &self,
+        ttft_slo: f64,
+    ) -> Option<AttributionSummary> {
+        let s = self.inner.as_ref()?;
+        let s = s.borrow();
+        if !s.cfg.attrib {
+            return None;
+        }
+        s.attrib.summarize(ttft_slo)
+    }
+
+    /// Number of trace events currently retained by the sink.
+    pub fn trace_len(&self) -> usize {
+        self.inner
+            .as_ref()
+            .map_or(0, |s| s.borrow().sink.len())
+    }
+
+    /// Export the end-of-run bundle.
+    pub fn export(&self) -> ObsOutput {
+        let Some(s) = &self.inner else {
+            return ObsOutput::default();
+        };
+        let s = s.borrow();
+        ObsOutput {
+            trace_json: s.cfg.trace.then(|| s.sink.export_chrome()),
+            metrics_text: s
+                .cfg
+                .metrics
+                .then(|| s.metrics.to_prometheus()),
+            attrib: s
+                .cfg
+                .attrib
+                .then(|| s.attrib.records().to_vec()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handle_is_inert() {
+        let obs = Obs::default();
+        assert!(!obs.on() && !obs.trace_on() && !obs.attrib_on());
+        obs.span("x", 0.0, 1.0, 0, 0, None, vec![]);
+        obs.counter_add("c", 1);
+        obs.with_attrib(|_| panic!("attrib hook ran while disabled"));
+        assert_eq!(obs.trace_len(), 0);
+        let out = obs.export();
+        assert!(out.trace_json.is_none());
+        assert!(out.metrics_text.is_none());
+        assert!(out.attrib.is_none());
+    }
+
+    #[test]
+    fn enabled_handle_records_and_exports() {
+        let obs = Obs::new(ObsConfig {
+            trace: true,
+            metrics: true,
+            ..Default::default()
+        });
+        obs.span("prefill", 1.0, 0.5, server_pid(0), TID_PREFILL, None, vec![
+            ("tokens", 512u64.into()),
+        ]);
+        obs.instant("trigger_check", 2.0, PID_CONTROL, 0, vec![]);
+        obs.counter_add("sim_arrivals_total", 3);
+        assert_eq!(obs.trace_len(), 2);
+        let out = obs.export();
+        let trace = out.trace_json.unwrap();
+        assert!(crate::util::json::parse(&trace).is_ok());
+        assert!(out.metrics_text.unwrap().contains("sim_arrivals_total 3"));
+    }
+
+    #[test]
+    fn decode_lanes_group_by_rank_class() {
+        assert_eq!(decode_lane(5), decode_lane(8));
+        assert_ne!(decode_lane(8), decode_lane(16));
+        assert_ne!(rank_cname(8), rank_cname(64));
+        // shared handles see each other's events
+        let a = Obs::new(ObsConfig { trace: true, ..Default::default() });
+        let b = a.clone();
+        b.instant("x", 0.0, 0, 0, vec![]);
+        assert_eq!(a.trace_len(), 1);
+    }
+}

@@ -156,6 +156,10 @@ pub struct SimConfig {
     /// attach). Seeded from `ClusterConfig::rebalance`, threaded
     /// exactly like `batch`/`decode`/`feedback`.
     pub rebalance: RebalanceConfig,
+    /// Observability: tracing, attribution, and the metrics registry.
+    /// All knobs default off, and the engine is bit-identical with
+    /// them off (asserted in `tests/obs_tracing.rs`).
+    pub obs: crate::obs::ObsConfig,
 }
 
 impl SimConfig {
@@ -175,6 +179,7 @@ impl SimConfig {
             decode,
             feedback,
             rebalance,
+            obs: crate::obs::ObsConfig::default(),
         }
     }
 
@@ -210,6 +215,11 @@ impl SimConfig {
         self.rebalance = rebalance;
         self
     }
+
+    pub fn with_obs(mut self, obs: crate::obs::ObsConfig) -> Self {
+        self.obs = obs;
+        self
+    }
 }
 
 /// Run one trace through one canned system. Deterministic per
@@ -225,6 +235,24 @@ pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
         cfg.rebalance,
     );
     super::engine::run_spec(trace, cfg, &spec)
+}
+
+/// [`run`], plus the end-of-run observability bundle (Chrome trace
+/// JSON, Prometheus text, per-request attribution records) per
+/// `SimConfig::obs`. With every obs knob off this is exactly `run`
+/// with an empty bundle.
+pub fn run_observed(
+    trace: &Trace,
+    cfg: &SimConfig,
+) -> (SimReport, crate::obs::ObsOutput) {
+    let spec = cfg.system.spec(
+        &cfg.opts,
+        cfg.batch,
+        cfg.decode,
+        cfg.feedback,
+        cfg.rebalance,
+    );
+    super::engine::run_spec_observed(trace, cfg, &spec)
 }
 
 // ---------------------------------------------------------------------

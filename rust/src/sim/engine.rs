@@ -40,6 +40,7 @@ use crate::autoscale::{ScaleController, ScaleDecision, ScaleSignals};
 use crate::coordinator::{DemandTracker, Router, RoutingTable};
 use crate::costmodel::{operating_points, CostModel};
 use crate::metrics::FleetMetrics;
+use crate::obs::{self, Obs, ObsOutput};
 use crate::placement::baselines::{ContiguousPlacer, RandomPlacer};
 use crate::placement::loraserve::LoraServePlacer;
 use crate::placement::{place_onto, Assignment, Placer};
@@ -172,6 +173,21 @@ pub fn run_spec(
     SimEngine::new(trace, cfg, spec).run()
 }
 
+/// [`run_spec`], plus the end-of-run observability bundle (trace JSON,
+/// Prometheus text, attribution records) per `SimConfig::obs`.
+pub fn run_spec_observed(
+    trace: &Trace,
+    cfg: &SimConfig,
+    spec: &SystemSpec,
+) -> (SimReport, ObsOutput) {
+    SimEngine::new(trace, cfg, spec).run_observed()
+}
+
+/// Async-span id for one (server, adapter) RDMA fetch (cat `fetch`).
+fn fetch_id(s: ServerId, a: AdapterId) -> u64 {
+    ((s as u64) << 32) | a as u64
+}
+
 fn homes_of(asg: &Assignment) -> Vec<Vec<ServerId>> {
     asg.shares
         .iter()
@@ -260,6 +276,19 @@ pub struct SimEngine<'a> {
     /// fetching a copy (`RebalanceConfig::remote_attach`; only
     /// meaningful for distributed pools).
     remote_attach: bool,
+    /// Observability handle (tracing + metrics + attribution), shared
+    /// with every server. Disabled (`Obs::default`) unless
+    /// `SimConfig::obs` enables something, in which case every hook
+    /// below is still behind an `obs.on()` / `trace_on()` guard.
+    obs: Obs,
+    /// Fleet-wide fetch-stall seconds at the previous trigger check —
+    /// the baseline the queue-pressure signal's windowed delta is
+    /// measured from (`RebalanceConfig::queue_signal`).
+    stall_snap: f64,
+    /// Remote-attach hotness window: (adapter, server) → remote
+    /// deliveries since the last trigger check. Only maintained when
+    /// `RebalanceConfig::promote_hot` > 0.
+    remote_hot: BTreeMap<(AdapterId, ServerId), u64>,
     st: EngineState,
 }
 
@@ -399,6 +428,7 @@ impl<'a> SimEngine<'a> {
         let mut demand = DemandTracker::new(demand_window, 16);
         demand.last_value_only = spec.last_value_demand;
 
+        let obs = Obs::new(cfg.obs);
         let servers: Vec<SimServer> = (0..max_n)
             .map(|s| {
                 let mut srv = SimServer::with_policy(
@@ -412,6 +442,8 @@ impl<'a> SimEngine<'a> {
                 // SLO feedback is per-server state (rolling headroom
                 // windows), installed only when the layer is enabled
                 srv.enable_slo(spec.slo);
+                // shared observability handle (disabled = zero-cost)
+                srv.obs = obs.clone();
                 srv
             })
             .collect();
@@ -476,6 +508,9 @@ impl<'a> SimEngine<'a> {
             replicate,
             table_routed,
             remote_attach: spec.rebalance.remote_attach && !replicate,
+            obs,
+            stall_snap: 0.0,
+            remote_hot: BTreeMap::new(),
             st: EngineState {
                 rng,
                 topo,
@@ -512,6 +547,15 @@ impl<'a> SimEngine<'a> {
             self.handle(now, ev);
         }
         self.finish()
+    }
+
+    /// [`SimEngine::run`], then export the observability bundle the
+    /// run recorded. The bundle is empty when `SimConfig::obs` left
+    /// everything off.
+    pub fn run_observed(self) -> (SimReport, ObsOutput) {
+        let obs = self.obs.clone();
+        let report = self.run();
+        (report, obs.export())
     }
 
     /// One dispatch per `SimEvent` variant — the whole alphabet.
@@ -554,6 +598,7 @@ impl<'a> SimEngine<'a> {
     /// fresh arrivals and drain-time re-routing.
     fn deliver(&mut self, target: ServerId, mut sreq: SimReq, now: f64) {
         let a = sreq.req.adapter;
+        let uid = sreq.uid as u64;
         if self.st.pool.is_resident(target, a) {
             // a drain re-route may carry a stale remote flag from its
             // first delivery; here the adapter is served locally
@@ -569,18 +614,56 @@ impl<'a> SimEngine<'a> {
             // request that went local and later misses again is).
             if !sreq.remote {
                 self.st.report.remote_served += 1;
+                self.obs.counter_add("sim_remote_episodes_total", 1);
             }
             sreq.remote = true;
+            if self.spec.rebalance.promote_hot > 0 {
+                // remote-attach hotness window (satellite promotion)
+                *self.remote_hot.entry((a, target)).or_insert(0) += 1;
+            }
+            if self.obs.trace_on() {
+                self.obs.async_instant(
+                    "remote_attach",
+                    "req",
+                    uid,
+                    now,
+                    obs::server_pid(target),
+                    vec![("adapter", a.into())],
+                );
+            }
             self.st.servers[target].enqueue_ready(sreq);
         } else {
             sreq.remote = false;
-            self.st.servers[target].enqueue_waiting(sreq);
+            if self.obs.trace_on() {
+                self.obs.async_instant(
+                    "wait_fetch",
+                    "req",
+                    uid,
+                    now,
+                    obs::server_pid(target),
+                    vec![("adapter", a.into())],
+                );
+            }
+            self.st.servers[target].enqueue_waiting(sreq, now);
             if let Some(dt) = self.st.pool.start_fetch(
                 target,
                 a,
                 &self.trace.adapters,
                 &self.cfg.cluster.server.gpu,
             ) {
+                if self.obs.trace_on() {
+                    self.obs.async_begin(
+                        "fetch",
+                        "fetch",
+                        fetch_id(target, a),
+                        now,
+                        obs::PID_CONTROL,
+                        vec![
+                            ("server", target.into()),
+                            ("adapter", a.into()),
+                        ],
+                    );
+                }
                 self.st.q.push(now + dt, SimEvent::FetchDone(target, a));
             }
         }
@@ -644,7 +727,30 @@ impl<'a> SimEngine<'a> {
             adapter_bytes: self.trace.adapters.get(req.adapter).size_bytes,
             est: SimServer::estimate(&self.cm, &req, est_rank),
             remote: false,
+            uid: i as u32,
         };
+        if self.obs.on() {
+            self.obs.counter_add("sim_arrivals_total", 1);
+            self.obs.async_begin(
+                "req",
+                "req",
+                sreq.uid as u64,
+                now,
+                obs::server_pid(target),
+                vec![
+                    ("adapter", req.adapter.into()),
+                    ("rank", rank.into()),
+                    ("prompt", req.prompt_len.into()),
+                    ("output", req.output_len.into()),
+                ],
+            );
+            self.obs.with_attrib(|t| {
+                let r = t.rec(i as u32);
+                r.arrival = req.arrival;
+                r.server = target as u32;
+                r.rank = rank;
+            });
+        }
         self.deliver(target, sreq, now);
     }
 
@@ -657,6 +763,29 @@ impl<'a> SimEngine<'a> {
             let violated = c.ttft > self.cfg.cluster.slo.ttft_p95;
             self.st.win_completed += 1;
             self.st.win_violations += violated as u64;
+            if self.obs.on() {
+                self.obs.counter_add("sim_completed_total", 1);
+                if violated {
+                    self.obs.counter_add("sim_slo_violations_total", 1);
+                }
+                self.obs.async_end(
+                    "req",
+                    "req",
+                    c.uid as u64,
+                    now,
+                    obs::server_pid(s),
+                    vec![("ttft_ms", (c.ttft * 1e3).into())],
+                );
+                let measured = c.req.arrival >= self.cfg.warmup;
+                self.obs.with_attrib(|t| {
+                    let r = t.rec(c.uid);
+                    r.ttft = c.ttft;
+                    r.e2e = c.finished_at - c.req.arrival;
+                    r.violated = violated;
+                    r.measured = measured;
+                    r.done = true;
+                });
+            }
             if c.req.arrival < self.cfg.warmup {
                 continue; // simulated, but not measured
             }
@@ -706,6 +835,19 @@ impl<'a> SimEngine<'a> {
 
     fn on_fetch_done(&mut self, now: f64, s: ServerId, a: AdapterId) {
         self.st.pool.finish_fetch(s, a);
+        if self.obs.on() {
+            self.obs.counter_add("sim_fetches_done_total", 1);
+            if self.obs.trace_on() {
+                self.obs.async_end(
+                    "fetch",
+                    "fetch",
+                    fetch_id(s, a),
+                    now,
+                    obs::PID_CONTROL,
+                    vec![],
+                );
+            }
+        }
         if self.st.topo.state(s) == SrvState::Draining {
             // a fetch that raced the drain decision: discard the fresh
             // copy if covered elsewhere, otherwise it *is* the last
@@ -721,6 +863,19 @@ impl<'a> SimEngine<'a> {
                         &self.trace.adapters,
                         &self.cfg.cluster.server.gpu,
                     ) {
+                        if self.obs.trace_on() {
+                            self.obs.async_begin(
+                                "fetch",
+                                "fetch",
+                                fetch_id(tgt, a),
+                                now,
+                                obs::PID_CONTROL,
+                                vec![
+                                    ("server", tgt.into()),
+                                    ("adapter", a.into()),
+                                ],
+                            );
+                        }
                         self.st
                             .q
                             .push(now + dt, SimEvent::FetchDone(tgt, a));
@@ -733,7 +888,7 @@ impl<'a> SimEngine<'a> {
                 // penalty to requests it was remotely serving
                 self.st.servers[s].mark_local(a);
             }
-            self.st.servers[s].release_waiting(a);
+            self.st.servers[s].release_waiting(a, now);
             if let Some(dt) = self.st.servers[s].start_iteration(now) {
                 self.st.q.push(now + dt, SimEvent::IterDone(s));
             }
@@ -747,6 +902,16 @@ impl<'a> SimEngine<'a> {
         let ids = std::mem::take(&mut self.st.migrations[mid as usize]);
         for &a in &ids {
             self.st.pool.finish_fetch(s, a);
+        }
+        if self.obs.trace_on() {
+            self.obs.async_end(
+                "migration",
+                "mig",
+                mid as u64,
+                now,
+                obs::PID_CONTROL,
+                vec![("server", s.into()), ("adapters", ids.len().into())],
+            );
         }
         if self.st.topo.state(s) == SrvState::Draining {
             // the migration raced a drain of its own destination:
@@ -762,6 +927,19 @@ impl<'a> SimEngine<'a> {
                             &self.trace.adapters,
                             &self.cfg.cluster.server.gpu,
                         ) {
+                            if self.obs.trace_on() {
+                                self.obs.async_begin(
+                                    "fetch",
+                                    "fetch",
+                                    fetch_id(tgt, a),
+                                    now,
+                                    obs::PID_CONTROL,
+                                    vec![
+                                        ("server", tgt.into()),
+                                        ("adapter", a.into()),
+                                    ],
+                                );
+                            }
                             self.st.q.push(
                                 now + dt,
                                 SimEvent::FetchDone(tgt, a),
@@ -777,7 +955,7 @@ impl<'a> SimEngine<'a> {
                     // RDMA penalty to requests they remotely served
                     self.st.servers[s].mark_local(a);
                 }
-                self.st.servers[s].release_waiting(a);
+                self.st.servers[s].release_waiting(a, now);
             }
             if let Some(dt) = self.st.servers[s].start_iteration(now) {
                 self.st.q.push(now + dt, SimEvent::IterDone(s));
@@ -822,6 +1000,16 @@ impl<'a> SimEngine<'a> {
         self.st.assignment = next;
         self.st.report.rebalances += 1;
         self.st.report.rebalance_times.push(now);
+        if self.obs.on() {
+            self.obs.counter_add("sim_rebalances_total", 1);
+            self.obs.instant(
+                "rebalance",
+                now,
+                obs::PID_CONTROL,
+                0,
+                vec![("kind", "periodic".into())],
+            );
+        }
         // bootstrap cadence is paced by *periodic* re-places only —
         // trigger fires in hybrid mode must not eat the quarter-period
         // bootstrap schedule
@@ -878,18 +1066,136 @@ impl<'a> SimEngine<'a> {
                         .and_then(|t| t.worst_tbt_headroom())
                         .is_some_and(|h| h < 0.0)
             });
+        // Satellite queue-pressure signal (config-gated, default off):
+        // mean pending depth over active servers, OR fleet-wide
+        // fetch-stall seconds accumulated since the previous check.
+        // Both are symptoms the imbalance ratio can miss — a hot
+        // server stalled on adapter fetches looks *underloaded* to the
+        // projected-utilization signal.
+        let queue_pressed = if self.spec.rebalance.queue_signal {
+            let depth: usize = active_ids
+                .iter()
+                .map(|&s| self.st.servers[s].pending_count())
+                .sum();
+            let mean_depth =
+                depth as f64 / active_ids.len().max(1) as f64;
+            let stall: f64 = self
+                .st
+                .servers
+                .iter()
+                .map(|srv| srv.fetch_stall_s)
+                .sum();
+            let win_stall = stall - self.stall_snap;
+            self.stall_snap = stall;
+            mean_depth >= self.spec.rebalance.queue_depth_hot
+                || win_stall >= self.spec.rebalance.stall_hot
+        } else {
+            false
+        };
         let fired = self
             .st
             .trigger
             .as_mut()
             .unwrap()
-            .evaluate(now, imbalance, slo_pressed);
+            .evaluate(now, imbalance, slo_pressed, queue_pressed);
+        if self.obs.on() {
+            self.obs.counter_add("sim_trigger_checks_total", 1);
+            self.obs.gauge_set("sim_imbalance_ratio", imbalance);
+            self.obs.instant(
+                "trigger_check",
+                now,
+                obs::PID_CONTROL,
+                0,
+                vec![
+                    ("imbalance", imbalance.into()),
+                    ("slo_pressed", slo_pressed.into()),
+                    ("queue_pressed", queue_pressed.into()),
+                    ("fired", fired.into()),
+                ],
+            );
+        }
         if fired {
             self.triggered_rebalance(now, &projected, &active_ids);
+        }
+        if self.spec.rebalance.promote_hot > 0 {
+            self.promote_remote_hot(now);
         }
         let next = now + self.spec.rebalance.check_period;
         if next <= self.trace_end {
             self.st.q.push(next, SimEvent::TriggerCheck);
+        }
+    }
+
+    /// Remote-attach promotion (`RebalanceConfig::promote_hot`): an
+    /// adapter delivered into remote service from the same server at
+    /// least `promote_hot` times since the last trigger check has
+    /// sustained traffic there — paying the per-iteration RDMA penalty
+    /// indefinitely costs more than materializing the copy once.
+    /// Promote it: start a batched RDMA transfer to the hot server
+    /// (the drain protocol's machinery; `MigrationDone` flips the
+    /// waiting requests to local serving via `mark_local`). Routing is
+    /// untouched — the φ table already points here, which is why the
+    /// remote episodes piled up.
+    fn promote_remote_hot(&mut self, now: f64) {
+        let window = std::mem::take(&mut self.remote_hot);
+        let mut by_tgt: BTreeMap<ServerId, Vec<AdapterId>> =
+            BTreeMap::new();
+        for ((a, s), n) in window {
+            if n >= self.spec.rebalance.promote_hot
+                && self.st.topo.state(s) == SrvState::Active
+                && !self.st.pool.is_resident(s, a)
+                && !self.st.pool.is_fetching(s, a)
+            {
+                by_tgt.entry(s).or_default().push(a);
+            }
+        }
+        for (tgt, ids) in by_tgt {
+            if let Some((dt, started)) = self.st.pool.start_fetch_batch(
+                tgt,
+                &ids,
+                &self.trace.adapters,
+                &self.cfg.cluster.server.gpu,
+            ) {
+                for &a in &started {
+                    self.st.report.migration_bytes +=
+                        self.trace.adapters.get(a).size_bytes;
+                }
+                self.st.report.promotions += started.len() as u64;
+                if self.obs.on() {
+                    self.obs.counter_add(
+                        "sim_remote_promotions_total",
+                        started.len() as u64,
+                    );
+                    self.obs.instant(
+                        "remote_promote",
+                        now,
+                        obs::PID_CONTROL,
+                        0,
+                        vec![
+                            ("server", tgt.into()),
+                            ("adapters", started.len().into()),
+                        ],
+                    );
+                }
+                let mid = self.st.migrations.len() as u32;
+                if self.obs.trace_on() {
+                    self.obs.async_begin(
+                        "migration",
+                        "mig",
+                        mid as u64,
+                        now,
+                        obs::PID_CONTROL,
+                        vec![
+                            ("server", tgt.into()),
+                            ("adapters", started.len().into()),
+                        ],
+                    );
+                }
+                self.st.migrations.push(started);
+                self.st
+                    .q
+                    .push(now + dt, SimEvent::MigrationDone(tgt, mid));
+            }
         }
     }
 
@@ -938,6 +1244,16 @@ impl<'a> SimEngine<'a> {
             self.st.report.migration_bytes += plan.migrated_bytes;
             self.st.report.incremental_moves += plan.moves_applied;
             self.st.report.rejected_moves += plan.moves_rejected;
+            if self.obs.on() {
+                self.obs.counter_add(
+                    "sim_incremental_moves_total",
+                    plan.moves_applied,
+                );
+                self.obs.counter_add(
+                    "sim_rejected_moves_total",
+                    plan.moves_rejected,
+                );
+            }
             self.st
                 .router
                 .update_table(RoutingTable::from_assignment(
@@ -954,6 +1270,19 @@ impl<'a> SimEngine<'a> {
                     )
                 {
                     let mid = self.st.migrations.len() as u32;
+                    if self.obs.trace_on() {
+                        self.obs.async_begin(
+                            "migration",
+                            "mig",
+                            mid as u64,
+                            now,
+                            obs::PID_CONTROL,
+                            vec![
+                                ("server", tgt.into()),
+                                ("adapters", started.len().into()),
+                            ],
+                        );
+                    }
                     self.st.migrations.push(started);
                     self.st
                         .q
@@ -965,6 +1294,17 @@ impl<'a> SimEngine<'a> {
         self.st.report.rebalances += 1;
         self.st.report.triggered_rebalances += 1;
         self.st.report.rebalance_times.push(now);
+        if self.obs.on() {
+            self.obs.counter_add("sim_rebalances_total", 1);
+            self.obs.counter_add("sim_triggered_rebalances_total", 1);
+            self.obs.instant(
+                "rebalance",
+                now,
+                obs::PID_CONTROL,
+                0,
+                vec![("kind", "triggered".into())],
+            );
+        }
         debug_assert!(
             self.st.pool.check_coverage(self.trace.adapters.len()).is_ok(),
             "triggered rebalance lost coverage"
@@ -1021,6 +1361,28 @@ impl<'a> SimEngine<'a> {
             .as_mut()
             .unwrap()
             .decide(now, &sig, &cand, provisioning);
+        if self.obs.on() {
+            let (kind, arg) = match decision {
+                ScaleDecision::Hold => ("hold", 0usize),
+                ScaleDecision::Up(k) => ("up", k),
+                ScaleDecision::Down(victim) => ("down", victim),
+            };
+            self.obs.counter_add("sim_autoscale_ticks_total", 1);
+            self.obs.gauge_set("sim_busy_frac", sig.busy_frac);
+            self.obs.instant(
+                "autoscale",
+                now,
+                obs::PID_CONTROL,
+                0,
+                vec![
+                    ("decision", kind.into()),
+                    ("arg", arg.into()),
+                    ("busy_frac", sig.busy_frac.into()),
+                    ("violation_rate", sig.violation_rate.into()),
+                    ("queue_depth", sig.queue_depth.into()),
+                ],
+            );
+        }
         match decision {
             ScaleDecision::Hold => {}
             ScaleDecision::Up(k) => {
@@ -1065,6 +1427,16 @@ impl<'a> SimEngine<'a> {
         self.st.topo.set(victim, SrvState::Draining);
         self.st.servers[victim].draining = true;
         self.st.report.fleet.scale_downs += 1;
+        if self.obs.on() {
+            self.obs.counter_add("sim_drains_total", 1);
+            self.obs.instant(
+                "drain",
+                now,
+                obs::PID_CONTROL,
+                0,
+                vec![("server", victim.into())],
+            );
+        }
         let survivors = self.st.topo.active();
         // routable drops now; the victim stays billed until it retires
         self.st.report.fleet.set_fleet(
@@ -1128,6 +1500,19 @@ impl<'a> SimEngine<'a> {
                     )
                 {
                     let mid = self.st.migrations.len() as u32;
+                    if self.obs.trace_on() {
+                        self.obs.async_begin(
+                            "migration",
+                            "mig",
+                            mid as u64,
+                            now,
+                            obs::PID_CONTROL,
+                            vec![
+                                ("server", tgt.into()),
+                                ("adapters", started.len().into()),
+                            ],
+                        );
+                    }
                     self.st.migrations.push(started);
                     self.st
                         .q
@@ -1165,6 +1550,15 @@ impl<'a> SimEngine<'a> {
             active_ids.len(),
             self.st.topo.billed(),
         );
+        if self.obs.trace_on() {
+            self.obs.instant(
+                "server_ready",
+                now,
+                obs::PID_CONTROL,
+                0,
+                vec![("server", s.into())],
+            );
+        }
         if self.replicate {
             self.st.report.migration_bytes += self
                 .st
@@ -1251,6 +1645,73 @@ impl<'a> SimEngine<'a> {
         }
         self.st.report.fetches = self.st.pool.total_fetches;
         self.st.report.fetch_bytes = self.st.pool.total_fetch_bytes;
+        if self.obs.on() {
+            self.st.report.attribution = self
+                .obs
+                .attribution_summary(self.cfg.cluster.slo.ttft_p95);
+            if self.obs.metrics_on() {
+                // sync the report's authoritative totals into the
+                // registry (overwriting any live-bumped counters with
+                // the same final values)
+                let r = &mut self.st.report;
+                self.obs.counter_set("sim_completed_total", r.completed);
+                self.obs.counter_set("sim_timeouts_total", r.timeouts);
+                self.obs.counter_set("sim_iters_total", r.iters);
+                self.obs
+                    .counter_set("sim_prefill_iters_total", r.prefill_iters);
+                self.obs
+                    .counter_set("sim_decode_steps_total", r.decode_steps);
+                self.obs.counter_set(
+                    "sim_decode_preemptions_total",
+                    r.decode_preemptions,
+                );
+                self.obs.counter_set("sim_fetches_total", r.fetches);
+                self.obs
+                    .counter_set("sim_fetch_bytes_total", r.fetch_bytes);
+                self.obs.counter_set(
+                    "sim_migration_bytes_total",
+                    r.migration_bytes,
+                );
+                self.obs
+                    .counter_set("sim_rebalances_total", r.rebalances);
+                self.obs.counter_set(
+                    "sim_trigger_checks_total",
+                    r.trigger_checks,
+                );
+                self.obs.counter_set(
+                    "sim_triggered_rebalances_total",
+                    r.triggered_rebalances,
+                );
+                self.obs.counter_set(
+                    "sim_incremental_moves_total",
+                    r.incremental_moves,
+                );
+                self.obs.counter_set(
+                    "sim_rejected_moves_total",
+                    r.rejected_moves,
+                );
+                self.obs.counter_set(
+                    "sim_remote_promotions_total",
+                    r.promotions,
+                );
+                self.obs.counter_set(
+                    "sim_remote_served_total",
+                    r.remote_served,
+                );
+                self.obs.gauge_set("sim_makespan_seconds", r.makespan);
+                self.obs
+                    .gauge_set("sim_ttft_p95_seconds", r.ttft.p95());
+                self.obs.gauge_set("sim_tbt_p95_seconds", r.tbt.p95());
+                self.obs.gauge_set("sim_e2e_p95_seconds", r.e2e.p95());
+                let stall: f64 = self
+                    .st
+                    .servers
+                    .iter()
+                    .map(|srv| srv.fetch_stall_s)
+                    .sum();
+                self.obs.gauge_set("sim_fetch_stall_seconds", stall);
+            }
+        }
         self.st.report
     }
 }

@@ -18,11 +18,12 @@ pub mod topology;
 
 pub use cluster::{
     custom_system_spec, register_custom_system,
-    registered_custom_systems, run, LoraServeOpts, SimConfig, SystemKind,
+    registered_custom_systems, run, run_observed, LoraServeOpts,
+    SimConfig, SystemKind,
 };
 pub use engine::{
-    run_spec, LoadSignal, PlacementPolicy, PoolMode, RoutingPolicy,
-    SimEngine, SystemSpec,
+    run_spec, run_spec_observed, LoadSignal, PlacementPolicy, PoolMode,
+    RoutingPolicy, SimEngine, SystemSpec,
 };
 pub use rebalance::{
     imbalance_ratio, plan_incremental, IncrementalPlan, RebalanceTrigger,

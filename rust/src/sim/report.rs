@@ -97,6 +97,10 @@ pub struct SimReport {
     /// Proposed copies the incremental planner rejected as
     /// not-worth-the-bytes churn.
     pub rejected_moves: u64,
+    /// Remote-attach promotions (`RebalanceConfig::promote_hot`):
+    /// adapters whose sustained remote-serving traffic earned them a
+    /// materialized copy on the serving server.
+    pub promotions: u64,
     /// Remote-attach serving episodes: a request entering remote
     /// service (adapter left in a peer's HBM, per-iteration RDMA
     /// penalty instead of a migration). A request re-routed while
@@ -107,6 +111,11 @@ pub struct SimReport {
     /// SLO-violation rate). For fixed-fleet runs the timeline is the
     /// constant `n_servers`.
     pub fleet: FleetMetrics,
+    /// Per-request SLO-violation attribution summary (component means
+    /// for all/violator/tail cohorts), present only when the run was
+    /// observed with `ObsConfig::attrib` — absent, the digest is
+    /// byte-identical to an unobserved run.
+    pub attribution: Option<crate::obs::AttributionSummary>,
 }
 
 impl SimReport {
@@ -220,7 +229,7 @@ impl SimReport {
                 ("p99", num(s.p99())),
             ])
         }
-        Json::obj(vec![
+        let mut pairs = vec![
             ("system", Json::from(self.system.as_str())),
             ("trace", Json::from(self.trace.as_str())),
             ("batch_policy", Json::from(self.batch_policy.as_str())),
@@ -254,6 +263,7 @@ impl SimReport {
             ),
             ("incremental_moves", Json::from(self.incremental_moves)),
             ("rejected_moves", Json::from(self.rejected_moves)),
+            ("promotions", Json::from(self.promotions)),
             ("remote_served", Json::from(self.remote_served)),
             ("ttft", digest(&mut self.ttft)),
             ("tbt", digest(&mut self.tbt)),
@@ -264,8 +274,11 @@ impl SimReport {
                 "ttft_under_pressure",
                 digest(&mut self.ttft_under_pressure),
             ),
-        ])
-        .to_string()
+        ];
+        if let Some(a) = &self.attribution {
+            pairs.push(("attribution", a.to_json()));
+        }
+        Json::obj(pairs).to_string()
     }
 
     pub fn ttft_p95(&mut self) -> f64 {

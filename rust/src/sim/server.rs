@@ -37,6 +37,7 @@ use crate::config::{
     BatchPolicyKind, ClassSelect, DecodePolicyKind, SloFeedbackConfig,
 };
 use crate::costmodel::CostModel;
+use crate::obs::{self, Obs};
 use crate::workload::{AdapterId, Request};
 use std::collections::{BTreeMap, VecDeque};
 
@@ -44,6 +45,11 @@ use std::collections::{BTreeMap, VecDeque};
 #[derive(Debug, Clone, Copy)]
 pub struct SimReq {
     pub req: Request,
+    /// Engine-assigned request uid (its index in the trace) — the
+    /// stable identity observability keys on (`Request::id` can repeat
+    /// across traces). Behavior-neutral: nothing on the timing path
+    /// reads it.
+    pub uid: u32,
     pub rank: u32,
     /// Adapter weight bytes (GPU paging cost on a cache miss).
     pub adapter_bytes: u64,
@@ -776,6 +782,8 @@ pub enum Iteration {
 #[derive(Debug, Clone, Copy)]
 pub struct Completion {
     pub req: Request,
+    /// Engine-assigned request uid (see [`SimReq::uid`]).
+    pub uid: u32,
     /// Adapter rank of the request (per-rank-class attribution).
     pub rank: u32,
     pub server: usize,
@@ -791,8 +799,10 @@ pub struct SimServer {
     pub cm: CostModel,
     /// Ready-to-prefill FIFO.
     pub queue: VecDeque<SimReq>,
-    /// Requests waiting for their adapter to be fetched.
-    pub waiting_fetch: Vec<SimReq>,
+    /// Requests waiting for their adapter to be fetched, with the
+    /// time each started waiting (feeds the fetch-stall counter and
+    /// the attribution table).
+    pub waiting_fetch: Vec<(SimReq, f64)>,
     pub active: Vec<ActiveReq>,
     pub running: Iteration,
     /// Outstanding-work estimate in seconds (Toppings' signal).
@@ -847,6 +857,14 @@ pub struct SimServer {
     pub ttft_under_pressure: Vec<(f64, f64)>,
     /// The running prefill was admitted under TTFT pressure.
     prefill_under_pressure: bool,
+    /// Seconds requests spent blocked on adapter fetches, accumulated
+    /// as they leave `waiting_fetch` — one of the two queue-pressure
+    /// signals the drift trigger's optional third OR-term reads
+    /// (`RebalanceConfig::queue_signal`).
+    pub fetch_stall_s: f64,
+    /// Observability handle (disabled by default: every hook is a
+    /// no-op and the server is bit-identical to an unobserved one).
+    pub obs: Obs,
     /// Remaining sub-batch steps of the decode round in flight, priced
     /// and profiled once at composition (membership cannot change
     /// until a group's own step runs, so the stats stay exact). The
@@ -870,6 +888,26 @@ struct PricedStep {
     max_rank: u32,
     rank_sum: u64,
     mixed: bool,
+    /// Price breakdown for attribution — only computed when the
+    /// observability layer asks for it (None on the unobserved path).
+    price: Option<StepPrice>,
+}
+
+/// Where one priced step's service time came from, recorded at
+/// composition so per-member attribution can split `time` into
+/// service / skew / launch / remote without re-deriving the formulas.
+#[derive(Debug, Clone, Copy)]
+struct StepPrice {
+    /// Shared forward-pass base carried by this step (first step of a
+    /// multi-group round; 0 elsewhere).
+    base: f64,
+    /// Per-sub-batch kernel launch overhead included in `time`.
+    launch: f64,
+    /// Remote-attach penalties included in `time`.
+    remote: f64,
+    /// KV residency of the group (own-rank repricing input).
+    cached: u64,
+    multi: bool,
 }
 
 impl SimServer {
@@ -913,6 +951,8 @@ impl SimServer {
             preemptions: 0,
             ttft_under_pressure: Vec::new(),
             prefill_under_pressure: false,
+            fetch_stall_s: 0.0,
+            obs: Obs::default(),
             pending_decode: VecDeque::new(),
             next_seq: 0,
         }
@@ -954,9 +994,9 @@ impl SimServer {
         self.queue.push_back(sreq);
     }
 
-    pub fn enqueue_waiting(&mut self, sreq: SimReq) {
+    pub fn enqueue_waiting(&mut self, sreq: SimReq, now: f64) {
         self.outstanding += sreq.est;
-        self.waiting_fetch.push(sreq);
+        self.waiting_fetch.push((sreq, now));
     }
 
     /// An adapter just became locally resident (a fetch or migration
@@ -971,7 +1011,7 @@ impl SimServer {
                 r.remote = false;
             }
         }
-        for r in self.waiting_fetch.iter_mut() {
+        for (r, _) in self.waiting_fetch.iter_mut() {
             if r.req.adapter == adapter {
                 r.remote = false;
             }
@@ -984,11 +1024,18 @@ impl SimServer {
     }
 
     /// Move requests whose adapter just became resident into the ready
-    /// queue (ordered by arrival to preserve FIFO fairness).
-    pub fn release_waiting(&mut self, adapter: AdapterId) {
+    /// queue (ordered by arrival to preserve FIFO fairness), charging
+    /// the time they spent blocked to the fetch-stall counter.
+    pub fn release_waiting(&mut self, adapter: AdapterId, now: f64) {
         let mut released: Vec<SimReq> = Vec::new();
-        self.waiting_fetch.retain(|r| {
+        let stall = &mut self.fetch_stall_s;
+        let obs = &self.obs;
+        self.waiting_fetch.retain(|(r, since)| {
             if r.req.adapter == adapter {
+                *stall += now - since;
+                obs.with_attrib(|t| {
+                    t.rec(r.uid).fetch_stall += now - since;
+                });
                 released.push(*r);
                 false
             } else {
@@ -1011,7 +1058,7 @@ impl SimServer {
     /// here.
     pub fn extract_pending(&mut self) -> Vec<SimReq> {
         let mut out: Vec<SimReq> = self.queue.drain(..).collect();
-        out.extend(self.waiting_fetch.drain(..));
+        out.extend(self.waiting_fetch.drain(..).map(|(r, _)| r));
         for r in &out {
             self.outstanding -= r.est;
         }
@@ -1054,9 +1101,11 @@ impl SimServer {
         // the exact scan but skip it when empty
         if !self.waiting_fetch.is_empty() {
             let outstanding = &mut self.outstanding;
-            self.waiting_fetch.retain(|r| {
+            let stall = &mut self.fetch_stall_s;
+            self.waiting_fetch.retain(|(r, since)| {
                 if now - r.req.arrival > timeout {
                     *outstanding -= r.est;
+                    *stall += now - since;
                     dropped += 1;
                     false
                 } else {
@@ -1088,13 +1137,40 @@ impl SimServer {
         };
         let remaining: f64 =
             self.pending_decode.iter().map(|s| s.time).sum();
-        // Projected TTFT is wait *plus* the head's own prefill: its
-        // first token lands only after its prefill runs, not when it
-        // merely reaches the front. Pricing only the queue wait made
-        // the projection under-fire — a head whose wait looked fine
-        // could still blow the target by the width of its own prefill
-        // (the ROADMAP follow-up; regression-tested below).
-        let own = self.cm.prefill(head.req.prompt_len as u64, head.rank);
+        // Projected TTFT is wait *plus* the prefill the head will ride
+        // in: its first token lands only after that batch runs, not
+        // when it merely reaches the front. The head rarely prefills
+        // alone — a simultaneous burst co-admits into one batch priced
+        // at the batch's *total* tokens and *max* rank, so project the
+        // greedy FIFO batch over the head's co-arrived neighbours
+        // (slot- and token-budget-limited, first request exempt like
+        // admission itself). Pricing only the head's own prompt made
+        // the projection under-fire on bursts — the head's wait looked
+        // fine while its batch was several prompts (or a higher rank
+        // class) wide (regression-tested below).
+        let slots = self
+            .cm
+            .server
+            .max_batch_size
+            .saturating_sub(self.active.len());
+        let budget = self.cm.server.max_batch_tokens as u64;
+        let mut tokens = 0u64;
+        let mut max_rank = 0u32;
+        let mut n = 0usize;
+        for r in &self.queue {
+            let t = r.req.prompt_len as u64;
+            if n > 0
+                && (n >= slots
+                    || tokens + t > budget
+                    || r.req.arrival > head.req.arrival + 1e-9)
+            {
+                break;
+            }
+            tokens += t;
+            max_rank = max_rank.max(r.rank);
+            n += 1;
+        }
+        let own = self.cm.prefill(tokens, max_rank);
         slo.ttft_pressure(now - head.req.arrival, remaining + own)
     }
 
@@ -1126,9 +1202,20 @@ impl SimServer {
         let mut preempted = false;
         if !self.pending_decode.is_empty() {
             if self.should_preempt_round(now) {
+                let dropped = self.pending_decode.len();
                 self.pending_decode.clear();
                 self.preemptions += 1;
                 preempted = true;
+                if self.obs.trace_on() {
+                    self.obs.instant(
+                        "preempt",
+                        now,
+                        obs::server_pid(self.id),
+                        obs::TID_REQUESTS,
+                        vec![("dropped_steps", dropped.into())],
+                    );
+                }
+                self.obs.counter_add("sim_decode_preemptions_total", 1);
             } else if let Some(t) = self.start_pending_decode(now) {
                 return Some(t);
             }
@@ -1188,24 +1275,38 @@ impl SimServer {
             let mut load_time = 0.0;
             let pcie = self.cm.server.gpu.pcie_bw;
             let mut remote_seen: Vec<AdapterId> = Vec::new();
+            // page-in vs remote split tracked for attribution only —
+            // `load_time` keeps its exact accumulation order so the
+            // timing stays bit-identical
+            let mut page_t = 0.0;
+            let mut remote_t = 0.0;
             for r in &batch {
                 if r.remote {
                     if !remote_seen.contains(&r.req.adapter) {
                         remote_seen.push(r.req.adapter);
-                        load_time += self.cm.remote_attach_penalty();
+                        let pen = self.cm.remote_attach_penalty();
+                        load_time += pen;
+                        remote_t += pen;
                     }
                 } else {
-                    load_time += self.gpu_cache.touch(
+                    let lt = self.gpu_cache.touch(
                         r.req.adapter,
                         r.adapter_bytes,
                         pcie,
                         &pinned,
                     );
+                    load_time += lt;
+                    page_t += lt;
                 }
             }
             let time = self.cm.prefill(tokens, max_rank) + load_time;
             self.iters += 1;
             self.iters_highrank += (max_rank >= 64) as u64;
+            if self.obs.on() {
+                self.observe_prefill(
+                    now, time, tokens, max_rank, page_t, remote_t, &batch,
+                );
+            }
             self.running = Iteration::Prefill { batch };
             self.busy_until = now + time;
             self.busy_time += time;
@@ -1334,6 +1435,7 @@ impl SimServer {
             ));
         }
         let multi = profiled.len() > 1;
+        let want_price = self.obs.attrib_on();
         let mut steps: VecDeque<PricedStep> =
             VecDeque::with_capacity(profiled.len());
         for (i, (seqs, b, cached, max_rank, rank_sum, mixed, remote)) in
@@ -1355,6 +1457,21 @@ impl SimServer {
                 time +=
                     remote as f64 * self.cm.remote_attach_penalty();
             }
+            let price = want_price.then(|| StepPrice {
+                base: if multi && i == 0 {
+                    self.cm.decode_base(b_total, cached_total)
+                } else {
+                    0.0
+                },
+                launch: if multi {
+                    self.cm.server.decode_launch_overhead
+                } else {
+                    0.0
+                },
+                remote: remote as f64 * self.cm.remote_attach_penalty(),
+                cached,
+                multi,
+            });
             steps.push_back(PricedStep {
                 seqs,
                 time,
@@ -1362,6 +1479,7 @@ impl SimServer {
                 max_rank,
                 rank_sum,
                 mixed,
+                price,
             });
         }
         steps
@@ -1388,10 +1506,152 @@ impl SimServer {
             .decode_steps_by_class
             .entry(step.max_rank)
             .or_insert(0) += 1;
+        if self.obs.on() {
+            self.observe_decode_step(now, &step);
+        }
         self.running = Iteration::Decode { seqs: step.seqs };
         self.busy_until = now + step.time;
         self.busy_time += step.time;
         Some(step.time)
+    }
+
+    /// Observability for one admitted prefill batch: the iteration
+    /// span, per-request admission milestones, and the exact latency
+    /// decomposition. Queue wait is computed residually at admission
+    /// (everything since arrival not already charged to fetch stall);
+    /// the batch's page-in/remote load and its pad-to-max-rank premium
+    /// are charged to every member — each member really does wait for
+    /// the whole batch.
+    fn observe_prefill(
+        &mut self,
+        now: f64,
+        time: f64,
+        tokens: u64,
+        max_rank: u32,
+        page_t: f64,
+        remote_t: f64,
+        batch: &[SimReq],
+    ) {
+        let pid = obs::server_pid(self.id);
+        if self.obs.trace_on() {
+            self.obs.span(
+                "prefill",
+                now,
+                time,
+                pid,
+                obs::TID_PREFILL,
+                Some(obs::rank_cname(max_rank)),
+                vec![
+                    ("batch", batch.len().into()),
+                    ("tokens", tokens.into()),
+                    ("max_rank", max_rank.into()),
+                    ("load_ms", ((page_t + remote_t) * 1e3).into()),
+                ],
+            );
+            for r in batch {
+                self.obs.async_instant(
+                    "admitted",
+                    "req",
+                    r.uid as u64,
+                    now,
+                    pid,
+                    vec![],
+                );
+            }
+        }
+        self.obs.counter_add("sim_prefill_iters_total", 1);
+        self.obs.counter_add("sim_prefill_tokens_total", tokens);
+        if self.obs.attrib_on() {
+            let cm = self.cm;
+            let compute = cm.prefill(tokens, max_rank);
+            let active_uids: Vec<u32> =
+                self.active.iter().map(|a| a.sreq.uid).collect();
+            self.obs.with_attrib(|t| {
+                for r in batch {
+                    let rec = t.rec(r.uid);
+                    rec.queue_wait =
+                        now - r.req.arrival - rec.fetch_stall;
+                    rec.fetch_stall += page_t;
+                    let own = cm.prefill(tokens, r.rank);
+                    rec.prefill_service = own;
+                    rec.prefill_skew = compute - own;
+                    rec.prefill_remote = remote_t;
+                }
+                // every already-active decode stalls behind this
+                // (preempting or interleaved) prefill
+                for &uid in &active_uids {
+                    t.rec(uid).preempt_delay += time;
+                }
+            });
+        }
+    }
+
+    /// Observability for one decode sub-batch step: the rank-class
+    /// lane span plus the per-member split of the step's priced time
+    /// into service / skew / launch / remote. Non-members of the step
+    /// (other sub-batches of the round) are charged the step's
+    /// serialization: the shared base still advances their forward
+    /// pass (service); the class kernel, launch, and remote penalties
+    /// stall them (skew/launch/remote).
+    fn observe_decode_step(&self, now: f64, step: &PricedStep) {
+        if self.obs.trace_on() {
+            self.obs.span(
+                "decode",
+                now,
+                step.time,
+                obs::server_pid(self.id),
+                obs::decode_lane(step.max_rank),
+                Some(obs::rank_cname(step.max_rank)),
+                vec![
+                    ("b", step.members.into()),
+                    ("max_rank", step.max_rank.into()),
+                    ("mixed", step.mixed.into()),
+                ],
+            );
+        }
+        self.obs.counter_add("sim_decode_steps_total", 1);
+        let Some(p) = step.price else {
+            return;
+        };
+        let cm = self.cm;
+        let whole = step.seqs.len() == self.active.len();
+        let charges: Vec<(u32, bool, u32)> = self
+            .active
+            .iter()
+            .map(|a| {
+                let member =
+                    whole || step.seqs.binary_search(&a.seq).is_ok();
+                (a.sreq.uid, member, a.sreq.rank)
+            })
+            .collect();
+        let (b, max_rank, time) =
+            (step.members, step.max_rank, step.time);
+        self.obs.with_attrib(|t| {
+            for (uid, member, rank) in charges {
+                let rec = t.rec(uid);
+                if member {
+                    if p.multi {
+                        let own = cm.decode_class(b, rank, false);
+                        let at_max =
+                            cm.decode_class(b, max_rank, false);
+                        rec.decode_service += own + p.base;
+                        rec.decode_skew += at_max - own;
+                        rec.decode_launch += p.launch;
+                    } else {
+                        let own = cm.decode(b, p.cached, rank);
+                        rec.decode_service += own;
+                        rec.decode_skew += time - p.remote - own;
+                    }
+                    rec.decode_remote += p.remote;
+                } else {
+                    rec.decode_service += p.base;
+                    rec.decode_skew +=
+                        time - p.base - p.launch - p.remote;
+                    rec.decode_launch += p.launch;
+                    rec.decode_remote += p.remote;
+                }
+            }
+        });
     }
 
     /// Finish the running iteration; returns completed requests.
@@ -1415,6 +1675,7 @@ impl SimServer {
                         self.outstanding -= sreq.est;
                         done.push(Completion {
                             req: sreq.req,
+                            uid: sreq.uid,
                             rank: sreq.rank,
                             server: self.id,
                             ttft,
@@ -1461,6 +1722,7 @@ impl SimServer {
                         *outstanding -= a.sreq.est;
                         done.push(Completion {
                             req: a.sreq.req,
+                            uid: a.sreq.uid,
                             rank: a.sreq.rank,
                             server: id,
                             ttft: a.first_token_at - a.sreq.req.arrival,
@@ -1505,6 +1767,7 @@ mod tests {
         };
         SimReq {
             req: r,
+            uid: 0,
             rank: 8,
             adapter_bytes: 17 << 20,
             est: 0.1,
@@ -1598,20 +1861,22 @@ mod tests {
     #[test]
     fn waiting_fetch_released_in_arrival_order() {
         let mut s = server();
-        s.enqueue_waiting(req(2.0, 5, 10, 1));
-        s.enqueue_waiting(req(1.0, 5, 10, 1));
-        s.enqueue_waiting(req(1.5, 6, 10, 1));
-        s.release_waiting(5);
+        s.enqueue_waiting(req(2.0, 5, 10, 1), 2.0);
+        s.enqueue_waiting(req(1.0, 5, 10, 1), 1.0);
+        s.enqueue_waiting(req(1.5, 6, 10, 1), 1.5);
+        s.release_waiting(5, 3.0);
         assert_eq!(s.queue.len(), 2);
         assert_eq!(s.queue[0].req.arrival, 1.0);
         assert_eq!(s.waiting_fetch.len(), 1);
+        // stall accounting: (3−2) + (3−1) seconds left the wait list
+        assert!((s.fetch_stall_s - 3.0).abs() < 1e-12);
     }
 
     #[test]
     fn purge_timeouts_counts_and_restores_outstanding() {
         let mut s = server();
         s.enqueue_ready(req(0.0, 0, 10, 1));
-        s.enqueue_waiting(req(0.5, 1, 10, 1));
+        s.enqueue_waiting(req(0.5, 1, 10, 1), 0.5);
         let before = s.outstanding;
         assert!(before > 0.0);
         let dropped = s.purge_timeouts(100.0, 10.0);
@@ -1625,7 +1890,7 @@ mod tests {
     fn extract_pending_drains_queues_in_arrival_order() {
         let mut s = server();
         s.enqueue_ready(req(2.0, 0, 10, 1));
-        s.enqueue_waiting(req(1.0, 1, 10, 1));
+        s.enqueue_waiting(req(1.0, 1, 10, 1), 1.0);
         s.enqueue_ready(req(3.0, 2, 10, 1));
         assert!(s.outstanding > 0.0);
         let pending = s.extract_pending();
@@ -1720,6 +1985,66 @@ mod tests {
         );
     }
 
+    /// Regression: the preemption projection must price the *batch*
+    /// the queue head will ride in, not just the head's own prompt. A
+    /// simultaneous burst co-admits into one prefill priced at the
+    /// batch's total tokens (and max rank); pricing the head alone
+    /// under-fires by the width of its co-arrived neighbours.
+    #[test]
+    fn preemption_projection_prices_coqueued_burst() {
+        let cm = CostModel::new(ServerConfig::default());
+        let rem = cm.decode_class(1, 128, true);
+        // one 700-token prompt looks harmless; a simultaneous burst of
+        // three co-admits into a 2100-token batch that does not
+        let single = cm.prefill(700, 8);
+        let burst = cm.prefill(2100, 8);
+        let slo_cfg = SloFeedbackConfig {
+            enabled: true,
+            // boundary (θ=0.5): projected > rem + single strictly
+            // separates head-only (rem + single) from the burst
+            // projection (rem + burst)
+            ttft_target: 2.0 * (rem + single),
+            tbt_target: 0.2,
+            preempt_decode: true,
+            pressure_theta: 0.5,
+        };
+        let probe = SloTracker::new(slo_cfg);
+        assert!(
+            !probe.ttft_pressure(0.0, rem + single),
+            "head-only projection must under-fire here"
+        );
+        assert!(probe.ttft_pressure(0.0, rem + burst));
+
+        let run = |n_burst: usize| {
+            let mut s = SimServer::with_policy(
+                0,
+                cm,
+                Box::new(RankPartitionedDecode::new(Box::new(Fifo))),
+            );
+            s.enable_slo(slo_cfg);
+            let mut lo = req(0.0, 0, 100, 3);
+            lo.rank = 8;
+            let mut hi = req(0.0, 1, 100, 3);
+            hi.rank = 128;
+            s.enqueue_ready(lo);
+            s.enqueue_ready(hi);
+            let t1 = s.start_iteration(0.0).unwrap();
+            assert!(s.finish_iteration(t1).is_empty());
+            let d1 = s.start_iteration(t1).unwrap(); // round step 1
+            s.finish_iteration(t1 + d1);
+            // the burst arrives together, exactly at the check
+            for k in 0..n_burst {
+                let mut r = req(t1 + d1, 2 + k as AdapterId, 700, 1);
+                r.rank = 8;
+                s.enqueue_ready(r);
+            }
+            let _ = s.start_iteration(t1 + d1).unwrap();
+            s.preemptions
+        };
+        assert_eq!(run(1), 0, "a lone 700-token head must not preempt");
+        assert_eq!(run(3), 1, "the co-queued burst must preempt");
+    }
+
     /// When a copy lands locally, `mark_local` flips the remote flag
     /// on that adapter's queued, waiting, and active requests — other
     /// adapters' requests keep theirs.
@@ -1737,12 +2062,12 @@ mod tests {
         s.enqueue_ready(a);
         let mut b = req(t, 8, 100, 1);
         b.remote = true;
-        s.enqueue_waiting(b);
+        s.enqueue_waiting(b, t);
         s.mark_local(7);
         assert!(!s.active[0].sreq.remote);
         assert!(!s.queue[0].remote);
         assert!(
-            s.waiting_fetch[0].remote,
+            s.waiting_fetch[0].0.remote,
             "other adapters keep the flag"
         );
     }

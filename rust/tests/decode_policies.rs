@@ -45,6 +45,7 @@ fn random_active(rng: &mut Pcg32, n: usize) -> Vec<ActiveReq> {
                     adapter_bytes: 1 << 20,
                     est: 0.1,
                     remote: false,
+                    uid: 0,
                 },
                 produced: 1 + rng.below(8) as u32,
                 first_token_at: 0.0,

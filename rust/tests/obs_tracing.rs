@@ -1,0 +1,294 @@
+//! Observability acceptance criteria (the flight-recorder PR):
+//!
+//! * every obs knob off — and trace/metrics on — leaves the report
+//!   digest **bit-identical** to an unobserved run (the subsystem is
+//!   zero-cost when it only watches);
+//! * two same-seed observed runs export **byte-identical** trace and
+//!   metrics files (the CI determinism gate `cmp`s them);
+//! * the per-request latency decomposition reconciles with the
+//!   measured TTFT/E2E to 1e-6 s on a mixed trace that exercises
+//!   decode preemption *and* remote-attach serving;
+//! * the flight-recorder ring keeps exactly the last N events;
+//! * emitted traces pass the span-nesting / async-balance checker the
+//!   `trace-check` CLI subcommand runs in CI;
+//! * the queue-pressure trigger signal and remote-attach promotion
+//!   satellites do what their knobs say (and stay inert by default).
+
+use loraserve::config::{
+    ClusterConfig, DecodePolicyKind, RebalanceConfig, RebalanceMode,
+    SloFeedbackConfig,
+};
+use loraserve::figures::drift::{drift_rebalance, drift_trace};
+use loraserve::obs::{check_spans_nest, ObsConfig};
+use loraserve::sim::{self, run_observed, SimConfig, SystemKind};
+use loraserve::trace::Trace;
+use loraserve::util::json::{parse, Json};
+
+fn drift_cluster(rebalance: RebalanceConfig) -> ClusterConfig {
+    let mut c = ClusterConfig {
+        n_servers: 4,
+        rebalance_period: 60.0,
+        ..Default::default()
+    };
+    c.rebalance = rebalance;
+    c
+}
+
+fn mixed_trace() -> Trace {
+    drift_trace(20, 8.0, 300.0, 5)
+}
+
+/// Count non-metadata events in an exported Chrome trace.
+fn event_count(trace_json: &str) -> usize {
+    let v = parse(trace_json).unwrap();
+    v.get("traceEvents")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) != Some("M"))
+        .count()
+}
+
+/// Tracing + metrics observe the run without perturbing it: the
+/// report digest is byte-for-byte the digest of an unobserved run.
+#[test]
+fn tracing_and_metrics_leave_digest_bit_identical() {
+    let trace = mixed_trace();
+    let rb = drift_rebalance(RebalanceMode::Triggered, true);
+    let mut base = sim::run(
+        &trace,
+        &SimConfig::new(drift_cluster(rb), SystemKind::LoraServe),
+    );
+    let (mut watched, out) = run_observed(
+        &trace,
+        &SimConfig::new(drift_cluster(rb), SystemKind::LoraServe)
+            .with_obs(ObsConfig {
+                trace: true,
+                metrics: true,
+                ..Default::default()
+            }),
+    );
+    assert_eq!(
+        base.to_json_string(),
+        watched.to_json_string(),
+        "observing a run must not change its digest"
+    );
+    assert!(out.trace_json.is_some());
+    assert!(out.metrics_text.is_some());
+    // the digest carries the new counters even when nothing fired
+    assert!(base.to_json_string().contains("\"promotions\":"));
+}
+
+/// Same seed, same config ⇒ byte-identical trace and metrics exports
+/// (what the CI determinism gate compares across two fresh runs).
+#[test]
+fn same_seed_exports_are_byte_identical() {
+    let trace = mixed_trace();
+    let run = || {
+        let rb = drift_rebalance(RebalanceMode::Triggered, true);
+        run_observed(
+            &trace,
+            &SimConfig::new(drift_cluster(rb), SystemKind::LoraServe)
+                .with_obs(ObsConfig {
+                    trace: true,
+                    metrics: true,
+                    attrib: true,
+                    ..Default::default()
+                }),
+        )
+        .1
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.trace_json, b.trace_json);
+    assert_eq!(a.metrics_text, b.metrics_text);
+    assert!(event_count(a.trace_json.as_deref().unwrap()) > 1000);
+    // Prometheus text carries the end-of-run counter sync
+    let prom = a.metrics_text.unwrap();
+    assert!(prom.contains("sim_completed_total"));
+    assert!(prom.contains("# TYPE"));
+}
+
+/// Emitted traces pass the same structural checker the CI smoke runs
+/// via `loraserve trace-check`: X-spans nest per track, every async
+/// end has a begin.
+#[test]
+fn real_trace_passes_span_nesting_checker() {
+    let trace = mixed_trace();
+    let rb = drift_rebalance(RebalanceMode::Triggered, true);
+    let (_, out) = run_observed(
+        &trace,
+        &SimConfig::new(drift_cluster(rb), SystemKind::LoraServe)
+            .with_obs(ObsConfig {
+                trace: true,
+                ..Default::default()
+            }),
+    );
+    let text = out.trace_json.unwrap();
+    check_spans_nest(&text).unwrap();
+    // the request lifecycle and control plane both made it in
+    for needle in ["\"req\"", "prefill", "decode", "trigger_check"] {
+        assert!(text.contains(needle), "trace missing {needle}");
+    }
+}
+
+/// `--trace-last N` runs the sink as a flight recorder: exactly the
+/// last N events survive, and the export reports how many fell off.
+#[test]
+fn flight_recorder_ring_keeps_exactly_last_n() {
+    let trace = mixed_trace();
+    let observe = |last: Option<usize>| {
+        let rb = drift_rebalance(RebalanceMode::Triggered, true);
+        run_observed(
+            &trace,
+            &SimConfig::new(drift_cluster(rb), SystemKind::LoraServe)
+                .with_obs(ObsConfig {
+                    trace: true,
+                    trace_last: last,
+                    ..Default::default()
+                }),
+        )
+        .1
+        .trace_json
+        .unwrap()
+    };
+    let full = observe(None);
+    let ring = observe(Some(64));
+    let total = event_count(&full);
+    assert!(total > 64, "run too small to exercise the ring: {total}");
+    assert_eq!(event_count(&ring), 64);
+    let dropped = parse(&ring)
+        .unwrap()
+        .get("droppedEvents")
+        .and_then(Json::as_f64)
+        .unwrap() as usize;
+    assert_eq!(dropped, total - 64);
+    // the ring's last event is the full trace's last event
+    let last_of = |text: &str| {
+        let v = parse(text).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        let e = evs.last().unwrap();
+        (
+            e.get("name").and_then(Json::as_str).unwrap().to_string(),
+            e.get("ts").and_then(Json::as_f64).unwrap(),
+        )
+    };
+    assert_eq!(last_of(&full), last_of(&ring));
+}
+
+/// The exact-decomposition contract on a trace that exercises every
+/// component: queueing, fetch stalls, rank-partitioned decode with
+/// SLO-feedback preemption, and remote-attach serving. Every
+/// completed request's summed components must reconcile with its
+/// measured TTFT and E2E latency to 1e-6 s.
+#[test]
+fn attribution_reconciles_on_mixed_preempt_remote_trace() {
+    let trace = mixed_trace();
+    let rb = drift_rebalance(RebalanceMode::Triggered, true);
+    let (mut rep, out) = run_observed(
+        &trace,
+        &SimConfig::new(drift_cluster(rb), SystemKind::LoraServe)
+            .with_decode_policy(DecodePolicyKind::RankPartitioned)
+            .with_slo_feedback(SloFeedbackConfig {
+                enabled: true,
+                ttft_target: 0.08,
+                tbt_target: 0.05,
+                preempt_decode: true,
+                pressure_theta: 0.5,
+            })
+            .with_obs(ObsConfig {
+                attrib: true,
+                ..Default::default()
+            }),
+    );
+    // the run really is mixed: both hard-to-attribute paths fired
+    assert!(rep.decode_preemptions > 0, "no decode preemption");
+    assert!(rep.remote_served > 0, "no remote-attach serving");
+
+    let recs = out.attrib.expect("attrib enabled");
+    let mut checked = 0u64;
+    let (mut saw_preempt, mut saw_remote) = (false, false);
+    for r in recs.iter().filter(|r| r.used && r.done) {
+        assert!(
+            (r.ttft_sum() - r.ttft).abs() < 1e-6,
+            "ttft decomposition off by {} at arrival {}",
+            (r.ttft_sum() - r.ttft).abs(),
+            r.arrival
+        );
+        assert!(
+            (r.e2e_sum() - r.e2e).abs() < 1e-6,
+            "e2e decomposition off by {} at arrival {}",
+            (r.e2e_sum() - r.e2e).abs(),
+            r.arrival
+        );
+        saw_preempt |= r.preempt_delay > 0.0;
+        saw_remote |= r.prefill_remote + r.decode_remote > 0.0;
+        checked += 1;
+    }
+    assert!(checked > 100, "only {checked} completions checked");
+    assert!(saw_preempt, "no request charged preempt_delay");
+    assert!(saw_remote, "no request charged a remote-attach penalty");
+
+    // the aggregated summary reports the same reconciliation bound
+    // and lands in the digest
+    let a = rep.attribution.expect("summary attached to the report");
+    assert!(a.all.recon < 1e-6, "recon={}", a.all.recon);
+    assert!(a.tail.recon < 1e-6, "recon={}", a.tail.recon);
+    // measured (post-warmup) completions are a subset of done records
+    assert!(a.all.n > 0 && a.all.n <= checked);
+    assert!(rep.to_json_string().contains("\"attribution\""));
+}
+
+/// Satellite: the opt-in queue-pressure OR-term. With the imbalance
+/// threshold parked out of reach, the trigger can only fire through
+/// queue depth / fetch-stall pressure — off by default, live when
+/// `queue_signal` is set.
+#[test]
+fn queue_pressure_signal_fires_trigger_only_when_enabled() {
+    let trace = mixed_trace();
+    let run = |queue_signal: bool| {
+        let mut rb = drift_rebalance(RebalanceMode::Triggered, false);
+        rb.imbalance_threshold = 1e9; // imbalance alone can never fire
+        rb.queue_signal = queue_signal;
+        rb.queue_depth_hot = 0.25; // any sustained backlog counts
+        rb.stall_hot = 1e9; // isolate the depth term
+        sim::run(
+            &trace,
+            &SimConfig::new(drift_cluster(rb), SystemKind::LoraServe),
+        )
+    };
+    let quiet = run(false);
+    assert_eq!(
+        quiet.triggered_rebalances, 0,
+        "default-off signal must leave the trigger silent"
+    );
+    let pressed = run(true);
+    assert!(pressed.trigger_checks > 0);
+    assert!(
+        pressed.triggered_rebalances > 0,
+        "queue pressure never fired the trigger"
+    );
+}
+
+/// Satellite: remote-attach promotion. With `promote_hot = 1` every
+/// remotely-served adapter earns a materialized copy at the next
+/// trigger check; with the default 0 nothing is ever promoted.
+#[test]
+fn remote_hotness_promotes_adapters_to_local_copies() {
+    let trace = mixed_trace();
+    let run = |promote_hot: u64| {
+        let mut rb = drift_rebalance(RebalanceMode::Triggered, true);
+        rb.promote_hot = promote_hot;
+        sim::run(
+            &trace,
+            &SimConfig::new(drift_cluster(rb), SystemKind::LoraServe),
+        )
+    };
+    let off = run(0);
+    assert!(off.remote_served > 0, "no remote serving to promote");
+    assert_eq!(off.promotions, 0, "promotion must be off by default");
+    let on = run(1);
+    assert!(
+        on.promotions > 0,
+        "hot remote adapters were never materialized"
+    );
+}

@@ -234,6 +234,7 @@ fn rank_bucketed_starvation_bound_property() {
                     adapter_bytes: 1 << 20,
                     est: 0.1,
                     remote: false,
+                    uid: 0,
                 });
                 next_id += 1;
             }

@@ -148,6 +148,7 @@ fn active_set(ranks: &[u32]) -> Vec<ActiveReq> {
                 adapter_bytes: 1 << 20,
                 est: 0.1,
                 remote: false,
+                uid: 0,
             },
             produced: 1,
             first_token_at: 0.0,
