@@ -205,6 +205,101 @@ fn main() {
         1
     });
 
+    // --- sharded DES scaling: same workload on a wider fleet with the
+    // shard count swept. Every shard count produces the byte-identical
+    // report digest (the epoch-barrier contract — see
+    // tests/sharded_determinism.rs), so this measures wall-clock only;
+    // the `bench` CLI subcommand runs the pinned large-fleet scenario.
+    let wide = azure::generate(&AzureConfig {
+        rps: 60.0,
+        duration: 120.0,
+        lengths: LengthModel::fixed(256, 32),
+        ..Default::default()
+    });
+    let wide_cluster = ClusterConfig {
+        n_servers: 8,
+        ..Default::default()
+    };
+    for shards in [1usize, 2, 4, 8] {
+        b.run(&format!("sim: shard scaling x{shards} (8srv)"), || {
+            let rep = sim::run(
+                &wide,
+                &SimConfig::new(
+                    wide_cluster.clone(),
+                    SystemKind::LoraServe,
+                )
+                .with_shards(shards),
+            );
+            black_box(rep.events);
+            1
+        });
+    }
+
+    // --- allocation pressure: the per-event hot paths must not
+    // allocate. The event heap orders on one packed-u128 key compare;
+    // the server loop reuses its admission/decode scratch and appends
+    // completions into a caller-owned buffer.
+    {
+        use loraserve::sim::event::EventQueue;
+        let mut q: EventQueue<u32> = EventQueue::with_capacity(8192);
+        let mut t = 0.0f64;
+        b.run("event: push+pop 8k (packed key)", || {
+            for i in 0..8192u32 {
+                q.push(t + (i % 97) as f64, i);
+            }
+            while let Some((now, ev)) = q.pop() {
+                t = t.max(now);
+                black_box(ev);
+            }
+            8192
+        });
+    }
+    {
+        use loraserve::sim::server::{build_policy, SimReq, SimServer};
+        use loraserve::workload::Request;
+        let scfg = loraserve::config::ServerConfig::default();
+        let cm = loraserve::costmodel::CostModel::new(scfg);
+        let ops = costmodel::operating_points(&scfg, &RANK_CLASSES);
+        let mut srv = SimServer::with_policy(
+            0,
+            cm,
+            build_policy(
+                loraserve::config::BatchPolicyKind::Fifo,
+                loraserve::config::DecodePolicyKind::Unified,
+                &ops,
+            ),
+        );
+        let mut out = Vec::new();
+        let mut now = 0.0f64;
+        b.run("sim: serve 64 reqs, reused outbox", || {
+            for i in 0..64u32 {
+                srv.enqueue_ready(SimReq {
+                    req: Request {
+                        id: i as u64,
+                        adapter: i % 8,
+                        prompt_len: 128,
+                        output_len: 8,
+                        arrival: now,
+                    },
+                    uid: i,
+                    rank: 8,
+                    adapter_bytes: 1 << 20,
+                    est: 0.05,
+                    remote: false,
+                });
+            }
+            let mut done = 0u64;
+            while let Some(dt) = srv.start_iteration(now) {
+                now += dt;
+                out.clear();
+                srv.finish_iteration_into(now, &mut out);
+                done += out.len() as u64;
+            }
+            black_box(done);
+            64
+        });
+    }
+
     // --- rank-aware batch scheduling (admission is on the DES hot
     // path: one policy call per iteration)
     b.run("sim: rank-bucketed admission run", || {
@@ -244,6 +339,7 @@ fn main() {
                         output_len: 64,
                         arrival: 0.0,
                     },
+                    uid: i as u32,
                     rank: RANK_CLASSES[rng.below(5) as usize],
                     adapter_bytes: 1 << 20,
                     est: 0.1,

@@ -5,6 +5,10 @@
 //!   simulate  run one trace × system on the DES cluster
 //!   autoscale search the minimum fleet meeting an SLO and replay the
 //!             trace under the SLO-aware autoscaler (fleet timeline)
+//!   bench     run the canonical large-fleet DES benchmark sequential
+//!             vs sharded and write BENCH_sim.json (events/sec,
+//!             wall-clock, peak RSS, speedup) — CI tracks this against
+//!             the committed baseline
 //!   trace     synthesize + characterize traces (writes CSV)
 //!   trace-check  validate a Chrome trace export (spans nest, async
 //!             begin/end balanced) — the CI smoke runs this on the
@@ -42,6 +46,7 @@ fn main() {
     let result = match args.subcommand().unwrap() {
         "figures" => cmd_figures(&args),
         "simulate" => cmd_simulate(&args),
+        "bench" => cmd_bench(&args),
         "autoscale" => cmd_autoscale(&args),
         "trace" => cmd_trace(&args),
         "trace-check" => cmd_trace_check(&args),
@@ -76,9 +81,11 @@ fn usage() {
          [--slo-ttft-ms MS] [--slo-tbt-ms MS] [--preempt-decode on|off]\n         \
          [--rebalance-mode periodic|triggered|hybrid] \
          [--remote-attach on|off]\n         \
-         [--report-out file.json]\n         \
+         [--shards N] [--report-out file.json]\n         \
          [--trace-out trace.json] [--trace-last N] \
          [--metrics-out file.prom]\n\
+         bench    [--scenario full|ci] [--shards N] [--seed S] \
+         [--out BENCH_sim.json]\n\
          autoscale [--system <kind>|--all] [--slo-ttft MS] \
          [--slo-e2e MS]\n         \
          [--metric ttft|e2e] [--percentile P] [--max-servers N]\n         \
@@ -294,6 +301,10 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     if args.get("metrics-out").is_some() {
         obs_cfg.metrics = true;
     }
+    // sharded event loop: any value yields the byte-identical report
+    // digest (epoch-barrier determinism contract; the CI gate compares
+    // a --shards 4 run against a sequential one)
+    let shards = args.get_usize("shards", 1)?;
     let label = match &choice {
         SystemChoice::Canned(k) => k.label().to_string(),
         SystemChoice::Custom(name) => name.clone(),
@@ -311,6 +322,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         SystemChoice::Canned(k) => sim::run_observed(
             &trace,
             &sim::SimConfig::new(cluster.clone(), *k)
+                .with_shards(shards)
                 .with_obs(obs_cfg),
         ),
         SystemChoice::Custom(name) => {
@@ -332,6 +344,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
                     cluster.clone(),
                     SystemKind::LoraServe,
                 )
+                .with_shards(shards)
                 .with_obs(obs_cfg),
                 &spec,
             )
@@ -467,6 +480,136 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         write_out(out, text)?;
         println!("[metrics written {out}]");
     }
+    Ok(())
+}
+
+/// Peak resident set size of this process in bytes (Linux `VmHWM`
+/// from `/proc/self/status`; 0 where procfs is unavailable).
+fn peak_rss_bytes() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|kb| kb.parse::<u64>().ok())
+        })
+        .map(|kb| kb * 1024)
+        .unwrap_or(0)
+}
+
+/// The canonical DES throughput benchmark: one large-fleet,
+/// high-request-count scenario run sequentially and sharded, emitting
+/// `BENCH_sim.json` with events/sec, wall-clock, peak RSS, and the
+/// sharded speedup. The two runs must produce byte-identical report
+/// digests (the epoch-barrier determinism contract) — the bench fails
+/// hard if they diverge, so the CI perf step doubles as a determinism
+/// check at scale.
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    use loraserve::util::json::Json;
+    let scenario = args.get_or("scenario", "full");
+    // (servers, rps, duration): `full` is the perf-trajectory
+    // scenario; `ci` is the same shape scaled down to stay fast on
+    // shared runners.
+    let (n_servers, rps, duration) = match scenario {
+        "full" => (16usize, 240.0, 300.0),
+        "ci" => (8usize, 80.0, 120.0),
+        other => {
+            return Err(format!(
+                "unknown scenario '{other}' (full | ci)"
+            ))
+        }
+    };
+    let seed = args.get_u64("seed", 0)?;
+    let host_cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    // default: every core up to the fleet size, but at least the 4
+    // shards the perf trajectory is pinned at
+    let shards = args
+        .get_usize("shards", host_cores.max(4).min(n_servers))?
+        .clamp(1, n_servers);
+    let trace = azure::generate(&azure::AzureConfig {
+        rps,
+        duration,
+        seed,
+        lengths: loraserve::trace::LengthModel::fixed(256, 32),
+        ..Default::default()
+    });
+    let cluster = ClusterConfig {
+        n_servers,
+        rebalance_period: 20.0,
+        ..Default::default()
+    };
+    println!(
+        "bench '{scenario}': {} reqs, {:.0} rps, {} servers, \
+         {} host cores — sequential vs {} shards",
+        trace.requests.len(),
+        trace.mean_rps(),
+        n_servers,
+        host_cores,
+        shards,
+    );
+    let mut runs: Vec<(usize, u64, f64)> = Vec::new();
+    let mut digests: Vec<String> = Vec::new();
+    for s in [1, shards] {
+        let cfg =
+            sim::SimConfig::new(cluster.clone(), SystemKind::LoraServe)
+                .with_shards(s);
+        let t0 = std::time::Instant::now();
+        let mut rep = sim::run(&trace, &cfg);
+        let wall = t0.elapsed().as_secs_f64();
+        let events = rep.events;
+        println!(
+            "  shards={s}: {events} events in {wall:.3}s \
+             ({:.0} events/sec)",
+            events as f64 / wall.max(1e-9),
+        );
+        runs.push((s, events, wall));
+        digests.push(rep.to_json_string());
+        if s == shards {
+            break; // shards == 1: one run is both baseline and result
+        }
+    }
+    if digests.windows(2).any(|w| w[0] != w[1]) {
+        return Err(format!(
+            "DETERMINISM VIOLATION: shards=1 and shards={shards} \
+             report digests differ"
+        ));
+    }
+    let eps = |&(_, events, wall): &(usize, u64, f64)| {
+        events as f64 / wall.max(1e-9)
+    };
+    let seq_eps = eps(&runs[0]);
+    let par_eps = eps(runs.last().unwrap());
+    let speedup = par_eps / seq_eps.max(1e-9);
+    println!(
+        "  speedup: {speedup:.2}x events/sec at {} shards",
+        runs.last().unwrap().0
+    );
+    let run_json = |r: &(usize, u64, f64)| {
+        Json::obj(vec![
+            ("shards", r.0.into()),
+            ("events", Json::from(r.1)),
+            ("wall_s", Json::Num(r.2)),
+            ("events_per_sec", Json::Num(eps(r))),
+        ])
+    };
+    let out_json = Json::obj(vec![
+        ("scenario", scenario.into()),
+        ("seed", Json::from(seed)),
+        ("requests", trace.requests.len().into()),
+        ("servers", n_servers.into()),
+        ("host_cores", host_cores.into()),
+        ("runs", Json::Arr(runs.iter().map(run_json).collect())),
+        ("events_per_sec_seq", Json::Num(seq_eps)),
+        ("events_per_sec", Json::Num(par_eps)),
+        ("speedup", Json::Num(speedup)),
+        ("peak_rss_bytes", Json::from(peak_rss_bytes())),
+    ]);
+    let out = args.get_or("out", "BENCH_sim.json");
+    write_out(out, &out_json.to_string())?;
+    println!("[bench written {out}]");
     Ok(())
 }
 

@@ -7,8 +7,10 @@ use crate::util::json::Json;
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 /// Where trace events go. The simulation emits through
-/// [`super::Obs`]; sinks only collect and export.
-pub trait TraceSink: std::fmt::Debug {
+/// [`super::Obs`]; sinks only collect and export. `Send` because the
+/// sink lives behind the `Arc<Mutex<ObsState>>` handle that servers
+/// carry across the sharded engine's scoped-thread boundary.
+pub trait TraceSink: std::fmt::Debug + Send {
     fn emit(&mut self, ev: TraceEvent);
     /// Number of retained events.
     fn len(&self) -> usize;

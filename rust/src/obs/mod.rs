@@ -29,8 +29,7 @@ pub use chrome::{check_spans_nest, ChromeTraceSink, NoopSink, TraceSink};
 pub use metrics::MetricsRegistry;
 
 use crate::util::json::Json;
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 /// Observability knobs on `SimConfig` — all default off, and the
 /// engine behaves bit-identically when every knob is off.
@@ -143,12 +142,16 @@ pub struct ObsOutput {
 }
 
 /// Cheaply-cloneable handle to the shared observability state. The
-/// simulation is single-threaded, so `Rc<RefCell<_>>` is safe; the
 /// disabled handle (`Obs::default()`) carries `None` and every hook
-/// returns before touching any state.
+/// returns before touching any state — that keeps the hot path
+/// zero-cost. The enabled handle is `Arc<Mutex<_>>` so servers can
+/// cross the sharded engine's scoped-thread boundary; the engine
+/// serializes lane flushing whenever observability is on (see
+/// `sim/engine.rs`), so the mutex is uncontended and the emission
+/// order is deterministic for any shard count.
 #[derive(Debug, Clone, Default)]
 pub struct Obs {
-    inner: Option<Rc<RefCell<ObsState>>>,
+    inner: Option<Arc<Mutex<ObsState>>>,
 }
 
 impl Obs {
@@ -162,7 +165,7 @@ impl Obs {
             Box::new(NoopSink)
         };
         Obs {
-            inner: Some(Rc::new(RefCell::new(ObsState {
+            inner: Some(Arc::new(Mutex::new(ObsState {
                 cfg,
                 sink,
                 metrics: MetricsRegistry::default(),
@@ -178,24 +181,24 @@ impl Obs {
     pub fn trace_on(&self) -> bool {
         self.inner
             .as_ref()
-            .is_some_and(|s| s.borrow().cfg.trace)
+            .is_some_and(|s| s.lock().unwrap().cfg.trace)
     }
 
     pub fn attrib_on(&self) -> bool {
         self.inner
             .as_ref()
-            .is_some_and(|s| s.borrow().cfg.attrib)
+            .is_some_and(|s| s.lock().unwrap().cfg.attrib)
     }
 
     pub fn metrics_on(&self) -> bool {
         self.inner
             .as_ref()
-            .is_some_and(|s| s.borrow().cfg.metrics)
+            .is_some_and(|s| s.lock().unwrap().cfg.metrics)
     }
 
     fn emit(&self, ev: TraceEvent) {
         if let Some(s) = &self.inner {
-            let mut s = s.borrow_mut();
+            let mut s = s.lock().unwrap();
             if s.cfg.trace {
                 s.sink.emit(ev);
             }
@@ -306,7 +309,7 @@ impl Obs {
     /// metrics registry is enabled).
     pub fn counter_add(&self, name: &'static str, v: u64) {
         if let Some(s) = &self.inner {
-            let mut s = s.borrow_mut();
+            let mut s = s.lock().unwrap();
             if s.cfg.metrics {
                 s.metrics.inc(name, v);
             }
@@ -318,7 +321,7 @@ impl Obs {
     /// the registry absorbs counters the hot path never bumped live).
     pub fn counter_set(&self, name: &'static str, v: u64) {
         if let Some(s) = &self.inner {
-            let mut s = s.borrow_mut();
+            let mut s = s.lock().unwrap();
             if s.cfg.metrics {
                 s.metrics.set_counter(name, v);
             }
@@ -328,7 +331,7 @@ impl Obs {
     /// Set a gauge to its latest value (no-op unless enabled).
     pub fn gauge_set(&self, name: &'static str, v: f64) {
         if let Some(s) = &self.inner {
-            let mut s = s.borrow_mut();
+            let mut s = s.lock().unwrap();
             if s.cfg.metrics {
                 s.metrics.set_gauge(name, v);
             }
@@ -338,7 +341,7 @@ impl Obs {
     /// Run `f` against the attribution table (no-op unless enabled).
     pub fn with_attrib(&self, f: impl FnOnce(&mut AttribTable)) {
         if let Some(s) = &self.inner {
-            let mut s = s.borrow_mut();
+            let mut s = s.lock().unwrap();
             if s.cfg.attrib {
                 f(&mut s.attrib);
             }
@@ -351,7 +354,7 @@ impl Obs {
         ttft_slo: f64,
     ) -> Option<AttributionSummary> {
         let s = self.inner.as_ref()?;
-        let s = s.borrow();
+        let s = s.lock().unwrap();
         if !s.cfg.attrib {
             return None;
         }
@@ -362,7 +365,7 @@ impl Obs {
     pub fn trace_len(&self) -> usize {
         self.inner
             .as_ref()
-            .map_or(0, |s| s.borrow().sink.len())
+            .map_or(0, |s| s.lock().unwrap().sink.len())
     }
 
     /// Export the end-of-run bundle.
@@ -370,7 +373,7 @@ impl Obs {
         let Some(s) = &self.inner else {
             return ObsOutput::default();
         };
-        let s = s.borrow();
+        let s = s.lock().unwrap();
         ObsOutput {
             trace_json: s.cfg.trace.then(|| s.sink.export_chrome()),
             metrics_text: s

@@ -133,8 +133,16 @@ pub struct SimConfig {
     /// the cold-start window before the first rebalance is not what
     /// the paper reports).
     pub warmup: f64,
-    /// Hard cap on simulated events (runaway guard).
+    /// Hard cap on simulated events (runaway guard). Aggregated
+    /// across the control queue and every server lane, so the budget
+    /// means the same thing at any shard count.
     pub max_events: u64,
+    /// Worker threads for the sharded event loop. `1` (the default)
+    /// runs fully sequential; any value produces the byte-identical
+    /// report digest (epoch-barrier determinism contract — see
+    /// `sim/engine.rs` and `tests/sharded_determinism.rs`). Clamped to
+    /// the fleet size by the engine.
+    pub shards: usize,
     /// Elastic capacity: run the SLO-aware autoscaler with these
     /// knobs. None (the default) keeps the fleet fixed at
     /// `cluster.n_servers` — the paper's original setting.
@@ -174,6 +182,7 @@ impl SimConfig {
             opts: LoraServeOpts::default(),
             warmup: 0.0,
             max_events: 500_000_000,
+            shards: 1,
             autoscale: None,
             batch,
             decode,
@@ -185,6 +194,11 @@ impl SimConfig {
 
     pub fn with_warmup(mut self, warmup: f64) -> Self {
         self.warmup = warmup;
+        self
+    }
+
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
         self
     }
 

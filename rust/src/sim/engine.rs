@@ -26,6 +26,25 @@
 //! `SystemSpec` values and never touch the loop. With
 //! `BatchPolicyKind::Fifo` the engine reproduces the pre-refactor
 //! simulator bit for bit (asserted by `tests/sched_policies.rs`).
+//!
+//! # Sharded execution
+//!
+//! The event loop is split in two. Every *coupling* event — routing
+//! (`Arrive`), fetch/migration landings, rebalance, trigger checks,
+//! autoscaling, drain — stays on the coordinator's control queue and
+//! runs sequentially in deterministic `(time, seq)` order. Everything
+//! *server-local* — request deliveries and iteration completions —
+//! lives in a per-server [`Lane`] with its own private heap. Between
+//! control events the lanes are independent, so the coordinator
+//! advances them to each control event's timestamp (an *epoch
+//! barrier*) either inline or, with `SimConfig::shards > 1`, on
+//! `std::thread::scope` worker threads. Each lane's computation is
+//! identical no matter which thread runs it, completions are absorbed
+//! in fixed lane-index order at each barrier, and the control schedule
+//! never depends on the shard count — so the same seed produces a
+//! byte-identical report digest sequential or sharded, with any shard
+//! count (asserted by `tests/sharded_determinism.rs` and the CI
+//! determinism gate).
 
 use super::cluster::SimConfig;
 use super::event::{EventQueue, SimEvent};
@@ -33,7 +52,7 @@ use super::rebalance::{
     imbalance_ratio, plan_incremental, RebalanceTrigger,
 };
 use super::report::SimReport;
-use super::server::{build_policy, SimReq, SimServer};
+use super::server::{build_policy, Completion, SimReq, SimServer};
 use super::topology::{try_retire, FleetTopology, SrvState};
 use crate::config::RebalanceMode;
 use crate::autoscale::{ScaleController, ScaleDecision, ScaleSignals};
@@ -222,6 +241,76 @@ fn compute_assignment(
     }
 }
 
+/// Server-local events, private to one server's lane heap. Lanes
+/// advance independently between epoch barriers; everything that
+/// couples servers (routing, fetches, rebalance, autoscaling, drain)
+/// stays on the coordinator's control queue.
+#[derive(Debug, Clone, Copy)]
+enum LaneEvent {
+    /// A routed request lands on this server. `ready` was decided at
+    /// control time (the pool is coordinator state): resident or
+    /// remote-attached adapters enqueue runnable; a pool miss parks in
+    /// the fetch-wait queue until the control-plane `FetchDone` lands.
+    Deliver { sreq: SimReq, ready: bool },
+    /// The server's in-flight iteration completes.
+    IterDone,
+}
+
+/// One server's shard of the event loop: a private heap of
+/// [`LaneEvent`]s, the completions produced since the last barrier
+/// (absorbed into the report in lane-index order — fixed regardless of
+/// shard count, so the digest never depends on it), and the lane's
+/// event counter (aggregated into the `max_events` runaway backstop).
+struct Lane {
+    heap: EventQueue<LaneEvent>,
+    outbox: Vec<Completion>,
+    events: u64,
+}
+
+/// Below this many pending lane events a parallel flush costs more in
+/// thread spawn than it saves — run inline.
+const PARALLEL_FLUSH_MIN: usize = 256;
+
+/// Advance one lane to `horizon` (inclusive — a same-timestamp
+/// delivery must land before the control event that reads it).
+/// Runs on worker threads, so it must never panic for the runaway
+/// backstop: `std::thread::scope` would replace the payload with
+/// "a scoped thread panicked". Instead the lane stops at `cap` and
+/// the coordinator's aggregate budget check fires on the control
+/// thread with the real message.
+fn flush_lane(
+    srv: &mut SimServer,
+    lane: &mut Lane,
+    horizon: f64,
+    timeout: f64,
+    cap: u64,
+) {
+    loop {
+        let Some(t) = lane.heap.peek_time() else { break };
+        if t > horizon || lane.events >= cap {
+            break;
+        }
+        let Some((t, ev)) = lane.heap.pop() else { break };
+        lane.events += 1;
+        match ev {
+            LaneEvent::Deliver { sreq, ready } => {
+                if ready {
+                    srv.enqueue_ready(sreq);
+                } else {
+                    srv.enqueue_waiting(sreq, t);
+                }
+            }
+            LaneEvent::IterDone => {
+                srv.finish_iteration_into(t, &mut lane.outbox);
+                srv.purge_timeouts(t, timeout);
+            }
+        }
+        if let Some(dt) = srv.start_iteration(t) {
+            lane.heap.push(t + dt, LaneEvent::IterDone);
+        }
+    }
+}
+
 /// Every mutable piece of a running simulation, explicit in one place:
 /// each event handler reads and writes exactly these fields.
 pub(crate) struct EngineState {
@@ -248,7 +337,14 @@ pub(crate) struct EngineState {
     /// Drift-reactive rebalance trigger (None in periodic mode, where
     /// the engine is the PR 4 open-loop rebalancer bit for bit).
     pub trigger: Option<RebalanceTrigger>,
+    /// Control-queue events processed.
     pub events: u64,
+    /// Per-server event lanes, indexed like `servers` (the sharded
+    /// half of the event loop).
+    lanes: Vec<Lane>,
+    /// Σ `lanes[s].events`, refreshed after every flush so the
+    /// `max_events` backstop check on the control path stays O(1).
+    lane_events: u64,
 }
 
 /// The discrete-event cluster simulation: arrivals → routing →
@@ -272,6 +368,10 @@ pub struct SimEngine<'a> {
     trace_end: f64,
     replicate: bool,
     table_routed: bool,
+    /// Worker-thread count for parallel lane flushes (clamped to
+    /// `[1, max_n]`; 1 = fully inline). Never observable in results:
+    /// it only picks who executes identical per-lane work.
+    shards: usize,
     /// Serve pool misses out of a peer's HBM over RDMA instead of
     /// fetching a copy (`RebalanceConfig::remote_attach`; only
     /// meaningful for distributed pools).
@@ -458,7 +558,10 @@ impl<'a> SimEngine<'a> {
             fleet: FleetMetrics::new(cfg.cluster.server.tp, n0),
             ..Default::default()
         };
-        let mut q: EventQueue<SimEvent> = EventQueue::new();
+        // pre-size for the bootstrap storm: one Arrive per trace
+        // request, plus headroom for the periodic control events
+        let mut q: EventQueue<SimEvent> =
+            EventQueue::with_capacity(trace.requests.len() + 16);
         for (i, r) in trace.requests.iter().enumerate() {
             q.push(r.arrival, SimEvent::Arrive(i));
         }
@@ -507,6 +610,7 @@ impl<'a> SimEngine<'a> {
             trace_end,
             replicate,
             table_routed,
+            shards: cfg.shards.clamp(1, max_n),
             remote_attach: spec.rebalance.remote_attach && !replicate,
             obs,
             stall_snap: 0.0,
@@ -530,23 +634,136 @@ impl<'a> SimEngine<'a> {
                 migrations: Vec::new(),
                 trigger,
                 events: 0,
+                lanes: (0..max_n)
+                    .map(|_| Lane {
+                        heap: EventQueue::new(),
+                        outbox: Vec::new(),
+                        events: 0,
+                    })
+                    .collect(),
+                lane_events: 0,
             },
         }
     }
 
-    /// Drain the event queue to completion and emit the report.
+    /// Drain the event queue to completion and emit the report: pop
+    /// each control event in `(time, seq)` order, advance every lane
+    /// to its timestamp (the epoch barrier) when the event reads or
+    /// writes server state, then dispatch it. Table-routed arrivals
+    /// skip the barrier — the φ table reads no server state — which is
+    /// what keeps epochs long enough to be worth parallelizing.
     pub fn run(mut self) -> SimReport {
         while let Some((now, ev)) = self.st.q.pop() {
             self.st.events += 1;
-            if self.st.events > self.cfg.max_events {
-                panic!(
-                    "simulation exceeded {} events (trace {}, system {})",
-                    self.cfg.max_events, self.trace.name, self.spec.label
-                );
+            self.check_event_budget();
+            if self.needs_barrier(&ev) {
+                self.flush_lanes(now);
+                self.merge_completions();
+                self.retire_sweep(now);
             }
             self.handle(now, ev);
         }
+        // control queue dry: lanes can only chain server-local
+        // iterations from here (fetch decisions already happened at
+        // delivery time), so run them out in one final epoch
+        self.flush_lanes(f64::INFINITY);
+        self.merge_completions();
+        self.check_event_budget();
+        let end = self.st.report.makespan.max(self.st.q.now());
+        self.retire_sweep(end);
         self.finish()
+    }
+
+    /// Does `ev` need the lanes flushed to `now` before it runs?
+    /// Table-routed arrivals don't: `Router::Table` ignores the load
+    /// buffer, so routing reads no server state. Everything else
+    /// (least-loaded routing, fetch/migration landings, rebalance,
+    /// trigger checks, autoscaling, drain) must observe servers as of
+    /// `now`.
+    fn needs_barrier(&self, ev: &SimEvent) -> bool {
+        !(self.table_routed && matches!(ev, SimEvent::Arrive(_)))
+    }
+
+    /// The runaway backstop, aggregated across the control queue and
+    /// every lane (the guard must still fire under sharding). Panics
+    /// only on the control thread so the message survives
+    /// `std::thread::scope`.
+    fn check_event_budget(&self) {
+        if self.st.events + self.st.lane_events > self.cfg.max_events {
+            panic!(
+                "simulation exceeded {} events (trace {}, system {})",
+                self.cfg.max_events, self.trace.name, self.spec.label
+            );
+        }
+    }
+
+    /// Advance every lane to `horizon` (inclusive). Lanes are
+    /// independent between barriers, so with `shards > 1` they advance
+    /// on scoped worker threads — unless observability is on (trace
+    /// emission must stay in deterministic lane order through the
+    /// shared sink) or the pending backlog is too small to amortize a
+    /// spawn. Either path performs identical per-lane work in the same
+    /// per-lane order, so results are bit-identical for any shard
+    /// count.
+    fn flush_lanes(&mut self, horizon: f64) {
+        let pending: usize =
+            self.st.lanes.iter().map(|l| l.heap.len()).sum();
+        if pending == 0 {
+            return;
+        }
+        let timeout = self.cfg.cluster.slo.timeout;
+        let cap = self.cfg.max_events.saturating_add(1);
+        let inline = self.shards <= 1
+            || self.obs.on()
+            || pending < PARALLEL_FLUSH_MIN;
+        let shards = self.shards;
+        let st = &mut self.st;
+        let servers = &mut st.servers;
+        let lanes = &mut st.lanes;
+        if inline {
+            for (srv, lane) in servers.iter_mut().zip(lanes.iter_mut())
+            {
+                flush_lane(srv, lane, horizon, timeout, cap);
+            }
+        } else {
+            let chunk = servers.len().div_ceil(shards);
+            std::thread::scope(|scope| {
+                for (srvs, lns) in servers
+                    .chunks_mut(chunk)
+                    .zip(lanes.chunks_mut(chunk))
+                {
+                    scope.spawn(move || {
+                        for (srv, lane) in
+                            srvs.iter_mut().zip(lns.iter_mut())
+                        {
+                            flush_lane(srv, lane, horizon, timeout, cap);
+                        }
+                    });
+                }
+            });
+        }
+        st.lane_events = st.lanes.iter().map(|l| l.events).sum();
+    }
+
+    /// Fold every lane's completions into the report, in lane-index
+    /// order then per-lane completion order — both independent of the
+    /// shard count, so every sample stream's push order (and therefore
+    /// the digest) is byte-identical sharded or not.
+    fn merge_completions(&mut self) {
+        for s in 0..self.max_n {
+            if self.st.lanes[s].outbox.is_empty() {
+                continue;
+            }
+            let outbox = std::mem::take(&mut self.st.lanes[s].outbox);
+            for c in &outbox {
+                self.absorb_completion(s, c);
+            }
+            // hand the buffer back so the next epoch reuses its
+            // capacity instead of re-allocating
+            let mut buf = outbox;
+            buf.clear();
+            self.st.lanes[s].outbox = buf;
+        }
     }
 
     /// [`SimEngine::run`], then export the observability bundle the
@@ -558,11 +775,11 @@ impl<'a> SimEngine<'a> {
         (report, obs.export())
     }
 
-    /// One dispatch per `SimEvent` variant — the whole alphabet.
+    /// One dispatch per `SimEvent` variant — the whole control-plane
+    /// alphabet (`IterDone` lives in the lanes now).
     fn handle(&mut self, now: f64, ev: SimEvent) {
         match ev {
             SimEvent::Arrive(i) => self.on_arrive(now, i),
-            SimEvent::IterDone(s) => self.on_iter_done(now, s),
             SimEvent::FetchDone(s, a) => self.on_fetch_done(now, s, a),
             SimEvent::MigrationDone(s, m) => {
                 self.on_migration_done(now, s, m)
@@ -593,17 +810,19 @@ impl<'a> SimEngine<'a> {
         }
     }
 
-    /// Hand one request to `target`: enqueue (starting an adapter
-    /// fetch on a pool miss) and kick the server if idle. Shared by
-    /// fresh arrivals and drain-time re-routing.
+    /// Hand one request to `target`: decide how it will be served
+    /// (the pool and the fetch path are coordinator state), then push
+    /// the delivery into the target's lane — the lane enqueues it and
+    /// kicks the server at this same timestamp during the next flush.
+    /// Shared by fresh arrivals and drain-time re-routing.
     fn deliver(&mut self, target: ServerId, mut sreq: SimReq, now: f64) {
         let a = sreq.req.adapter;
         let uid = sreq.uid as u64;
-        if self.st.pool.is_resident(target, a) {
+        let ready = if self.st.pool.is_resident(target, a) {
             // a drain re-route may carry a stale remote flag from its
             // first delivery; here the adapter is served locally
             sreq.remote = false;
-            self.st.servers[target].enqueue_ready(sreq);
+            true
         } else if self.remote_attach {
             // Remote attach: the adapter stays in its peer's HBM and
             // this server serves it over GPUDirect RDMA — no fetch
@@ -631,7 +850,7 @@ impl<'a> SimEngine<'a> {
                     vec![("adapter", a.into())],
                 );
             }
-            self.st.servers[target].enqueue_ready(sreq);
+            true
         } else {
             sreq.remote = false;
             if self.obs.trace_on() {
@@ -644,7 +863,6 @@ impl<'a> SimEngine<'a> {
                     vec![("adapter", a.into())],
                 );
             }
-            self.st.servers[target].enqueue_waiting(sreq, now);
             if let Some(dt) = self.st.pool.start_fetch(
                 target,
                 a,
@@ -666,10 +884,11 @@ impl<'a> SimEngine<'a> {
                 }
                 self.st.q.push(now + dt, SimEvent::FetchDone(target, a));
             }
-        }
-        if let Some(dt) = self.st.servers[target].start_iteration(now) {
-            self.st.q.push(now + dt, SimEvent::IterDone(target));
-        }
+            false
+        };
+        self.st.lanes[target]
+            .heap
+            .push(now, LaneEvent::Deliver { sreq, ready });
     }
 
     fn replace_assignment(
@@ -685,6 +904,102 @@ impl<'a> SimEngine<'a> {
             &self.oppoints,
             Some(&self.st.assignment),
         )
+    }
+
+    /// Start one batched RDMA transfer per destination (the drain
+    /// protocol's machinery) for a plan's accepted copies; each lands
+    /// as a single `MigrationDone`.
+    fn start_transfers(
+        &mut self,
+        now: f64,
+        transfers: BTreeMap<ServerId, Vec<AdapterId>>,
+    ) {
+        for (tgt, ids) in transfers {
+            if let Some((dt, started)) = self.st.pool.start_fetch_batch(
+                tgt,
+                &ids,
+                &self.trace.adapters,
+                &self.cfg.cluster.server.gpu,
+            ) {
+                let mid = self.st.migrations.len() as u32;
+                if self.obs.trace_on() {
+                    self.obs.async_begin(
+                        "migration",
+                        "mig",
+                        mid as u64,
+                        now,
+                        obs::PID_CONTROL,
+                        vec![
+                            ("server", tgt.into()),
+                            ("adapters", started.len().into()),
+                        ],
+                    );
+                }
+                self.st.migrations.push(started);
+                self.st
+                    .q
+                    .push(now + dt, SimEvent::MigrationDone(tgt, mid));
+            }
+        }
+    }
+
+    /// Topology-change re-place (drain and scale-up), routed through
+    /// `plan_incremental` instead of a wholesale swap: propose a fresh
+    /// placement on `active`, apply only the moves whose projected
+    /// queued-token relief beats their RDMA cost (moves off a server
+    /// leaving the fleet are forced — there is no status quo to keep),
+    /// start the accepted copies as batched transfers, and swap the φ
+    /// table. Replicated pools just swap routing.
+    fn incremental_replace(&mut self, now: f64, active: &[ServerId]) {
+        let mut projected = self.st.demand.projected_tps();
+        if projected.is_empty() {
+            // before the first demand window rolls, fall back to the
+            // demand-blind uniform assumption (like the bootstrap)
+            projected = self.uniform_demand.clone();
+        }
+        let proposal = self.replace_assignment(active, &projected);
+        if self.replicate {
+            self.st
+                .router
+                .update_table(RoutingTable::from_assignment(&proposal));
+            self.st.assignment = proposal;
+            return;
+        }
+        let pool = &self.st.pool;
+        let plan = plan_incremental(
+            &self.st.assignment,
+            &proposal,
+            &self.trace.adapters,
+            self.max_n,
+            active,
+            &projected,
+            &self.oppoints,
+            &self.cfg.cluster.server.gpu,
+            // a move keeps paying off until the next full re-place
+            // would have happened anyway
+            self.cfg.cluster.rebalance_period,
+            self.remote_attach,
+            &|s, a| pool.is_resident(s, a) || pool.is_fetching(s, a),
+        );
+        self.st.report.migration_bytes += plan.migrated_bytes;
+        self.st.report.incremental_moves += plan.moves_applied;
+        self.st.report.rejected_moves += plan.moves_rejected;
+        if self.obs.on() {
+            self.obs.counter_add(
+                "sim_incremental_moves_total",
+                plan.moves_applied,
+            );
+            self.obs.counter_add(
+                "sim_rejected_moves_total",
+                plan.moves_rejected,
+            );
+        }
+        self.st
+            .router
+            .update_table(RoutingTable::from_assignment(&plan.assignment));
+        self.st.pool.apply_assignment(&plan.residency);
+        self.start_transfers(now, plan.transfers);
+        self.st.assignment = plan.assignment;
     }
 
     fn try_retire(&mut self, s: ServerId, now: f64) -> bool {
@@ -710,7 +1025,11 @@ impl<'a> SimEngine<'a> {
     fn on_arrive(&mut self, now: f64, i: usize) {
         let req = self.trace.requests[i];
         self.st.demand.record(req.adapter, req.total_tokens());
-        self.fill_load_signal();
+        if !self.table_routed {
+            // the φ table never reads the load buffer — refreshing it
+            // per arrival would put an O(n) scan on the hot path
+            self.fill_load_signal();
+        }
         let target = self.st.router.route(
             req.adapter,
             &self.st.outstanding_buf,
@@ -754,83 +1073,76 @@ impl<'a> SimEngine<'a> {
         self.deliver(target, sreq, now);
     }
 
-    fn on_iter_done(&mut self, now: f64, s: ServerId) {
-        let completions = self.st.servers[s].finish_iteration(now);
-        for c in completions {
-            self.st.report.completed += 1;
-            self.st.report.makespan =
-                self.st.report.makespan.max(c.finished_at);
-            let violated = c.ttft > self.cfg.cluster.slo.ttft_p95;
-            self.st.win_completed += 1;
-            self.st.win_violations += violated as u64;
-            if self.obs.on() {
-                self.obs.counter_add("sim_completed_total", 1);
-                if violated {
-                    self.obs.counter_add("sim_slo_violations_total", 1);
-                }
-                self.obs.async_end(
-                    "req",
-                    "req",
-                    c.uid as u64,
-                    now,
-                    obs::server_pid(s),
-                    vec![("ttft_ms", (c.ttft * 1e3).into())],
-                );
-                let measured = c.req.arrival >= self.cfg.warmup;
-                self.obs.with_attrib(|t| {
-                    let r = t.rec(c.uid);
-                    r.ttft = c.ttft;
-                    r.e2e = c.finished_at - c.req.arrival;
-                    r.violated = violated;
-                    r.measured = measured;
-                    r.done = true;
-                });
+    /// Fold one completion into the report — the per-completion half
+    /// of the old `IterDone` handler. Runs at epoch barriers via
+    /// [`SimEngine::merge_completions`]; the timeout purge and the
+    /// next-iteration kick happen inside the lane ([`flush_lane`]).
+    fn absorb_completion(&mut self, s: ServerId, c: &Completion) {
+        self.st.report.completed += 1;
+        self.st.report.makespan =
+            self.st.report.makespan.max(c.finished_at);
+        let violated = c.ttft > self.cfg.cluster.slo.ttft_p95;
+        self.st.win_completed += 1;
+        self.st.win_violations += violated as u64;
+        if self.obs.on() {
+            self.obs.counter_add("sim_completed_total", 1);
+            if violated {
+                self.obs.counter_add("sim_slo_violations_total", 1);
             }
-            if c.req.arrival < self.cfg.warmup {
-                continue; // simulated, but not measured
-            }
-            self.st.report.ttft.push(c.ttft);
-            self.st.report.e2e.push(c.finished_at - c.req.arrival);
-            self.st.report.fleet.record_completion(violated);
-            if self.spec.slo.enabled {
-                // headroom histograms vs the feedback targets
-                // (negative = target blown)
-                self.st
-                    .report
-                    .ttft_headroom
-                    .push(self.spec.slo.ttft_target - c.ttft);
-                if c.tbt.is_finite() {
-                    self.st
-                        .report
-                        .tbt_headroom
-                        .push(self.spec.slo.tbt_target - c.tbt);
-                }
-            }
-            if c.tbt.is_finite() {
-                self.st.report.tbt.push(c.tbt);
-                self.st
-                    .report
-                    .tbt_by_class
-                    .entry(c.rank)
-                    .or_default()
-                    .push(c.tbt);
-            }
-            self.st.report.per_server_ttft[s].push(c.ttft);
+            self.obs.async_end(
+                "req",
+                "req",
+                c.uid as u64,
+                c.finished_at,
+                obs::server_pid(s),
+                vec![("ttft_ms", (c.ttft * 1e3).into())],
+            );
+            let measured = c.req.arrival >= self.cfg.warmup;
+            self.obs.with_attrib(|t| {
+                let r = t.rec(c.uid);
+                r.ttft = c.ttft;
+                r.e2e = c.finished_at - c.req.arrival;
+                r.violated = violated;
+                r.measured = measured;
+                r.done = true;
+            });
+        }
+        if c.req.arrival < self.cfg.warmup {
+            return; // simulated, but not measured
+        }
+        self.st.report.ttft.push(c.ttft);
+        self.st.report.e2e.push(c.finished_at - c.req.arrival);
+        self.st.report.fleet.record_completion(violated);
+        if self.spec.slo.enabled {
+            // headroom histograms vs the feedback targets
+            // (negative = target blown)
             self.st
                 .report
-                .per_adapter_ttft
-                .entry(c.req.adapter)
+                .ttft_headroom
+                .push(self.spec.slo.ttft_target - c.ttft);
+            if c.tbt.is_finite() {
+                self.st
+                    .report
+                    .tbt_headroom
+                    .push(self.spec.slo.tbt_target - c.tbt);
+            }
+        }
+        if c.tbt.is_finite() {
+            self.st.report.tbt.push(c.tbt);
+            self.st
+                .report
+                .tbt_by_class
+                .entry(c.rank)
                 .or_default()
-                .push(c.ttft);
+                .push(c.tbt);
         }
-        self.st.servers[s]
-            .purge_timeouts(now, self.cfg.cluster.slo.timeout);
-        if let Some(dt) = self.st.servers[s].start_iteration(now) {
-            self.st.q.push(now + dt, SimEvent::IterDone(s));
-        }
-        if self.st.topo.state(s) == SrvState::Draining {
-            self.try_retire(s, now);
-        }
+        self.st.report.per_server_ttft[s].push(c.ttft);
+        self.st
+            .report
+            .per_adapter_ttft
+            .entry(c.req.adapter)
+            .or_default()
+            .push(c.ttft);
     }
 
     fn on_fetch_done(&mut self, now: f64, s: ServerId, a: AdapterId) {
@@ -890,7 +1202,7 @@ impl<'a> SimEngine<'a> {
             }
             self.st.servers[s].release_waiting(a, now);
             if let Some(dt) = self.st.servers[s].start_iteration(now) {
-                self.st.q.push(now + dt, SimEvent::IterDone(s));
+                self.st.lanes[s].heap.push(now + dt, LaneEvent::IterDone);
             }
         }
         self.retire_sweep(now);
@@ -958,7 +1270,7 @@ impl<'a> SimEngine<'a> {
                 self.st.servers[s].release_waiting(a, now);
             }
             if let Some(dt) = self.st.servers[s].start_iteration(now) {
-                self.st.q.push(now + dt, SimEvent::IterDone(s));
+                self.st.lanes[s].heap.push(now + dt, LaneEvent::IterDone);
             }
         }
         self.retire_sweep(now);
@@ -1260,35 +1572,7 @@ impl<'a> SimEngine<'a> {
                     &plan.assignment,
                 ));
             self.st.pool.apply_assignment(&plan.residency);
-            for (tgt, ids) in plan.transfers {
-                if let Some((dt, started)) =
-                    self.st.pool.start_fetch_batch(
-                        tgt,
-                        &ids,
-                        &self.trace.adapters,
-                        &self.cfg.cluster.server.gpu,
-                    )
-                {
-                    let mid = self.st.migrations.len() as u32;
-                    if self.obs.trace_on() {
-                        self.obs.async_begin(
-                            "migration",
-                            "mig",
-                            mid as u64,
-                            now,
-                            obs::PID_CONTROL,
-                            vec![
-                                ("server", tgt.into()),
-                                ("adapters", started.len().into()),
-                            ],
-                        );
-                    }
-                    self.st.migrations.push(started);
-                    self.st
-                        .q
-                        .push(now + dt, SimEvent::MigrationDone(tgt, mid));
-                }
-            }
+            self.start_transfers(now, plan.transfers);
             self.st.assignment = plan.assignment;
         }
         self.st.report.rebalances += 1;
@@ -1445,29 +1729,12 @@ impl<'a> SimEngine<'a> {
             self.st.topo.billed(),
         );
         if self.table_routed {
-            // swap the table: the victim stops receiving traffic *now*
-            let mut projected = self.st.demand.projected_tps();
-            if projected.is_empty() {
-                projected = self.uniform_demand.clone();
-            }
-            let next = self.replace_assignment(&survivors, &projected);
-            if !self.replicate {
-                // counted even under remote attach: the drain path
-                // below still physically evacuates the victim's
-                // last-copy adapters over RDMA
-                self.st.report.migration_bytes += next
-                    .migration_bytes(
-                        &self.st.assignment,
-                        &self.trace.adapters,
-                    );
-                // the pool GC keeps any last copy on the victim alive
-                // until its migration lands
-                self.st.pool.apply_assignment(&homes_of(&next));
-            }
-            self.st
-                .router
-                .update_table(RoutingTable::from_assignment(&next));
-            self.st.assignment = next;
+            // swap the table: the victim stops receiving traffic
+            // *now*. The re-place runs through `plan_incremental` —
+            // moves off the departing victim are forced (and their
+            // bytes counted), while survivor-to-survivor churn only
+            // happens where the relief beats the RDMA cost.
+            self.incremental_replace(now, &survivors);
         }
         if self.replicate {
             // fully replicated: every copy exists on the survivors;
@@ -1479,7 +1746,8 @@ impl<'a> SimEngine<'a> {
             // Batch the victim's last-copy RDMA migrations per
             // destination: one scheduled completion per target server,
             // amortizing the per-transfer latency, instead of one
-            // event per adapter.
+            // event per adapter. (Adapters the incremental plan
+            // already started moving are skipped by the pool.)
             let mut by_tgt: BTreeMap<ServerId, Vec<AdapterId>> =
                 BTreeMap::new();
             for a in self.st.pool.evacuations(victim) {
@@ -1490,48 +1758,39 @@ impl<'a> SimEngine<'a> {
                 };
                 by_tgt.entry(tgt).or_default().push(a);
             }
-            for (tgt, ids) in by_tgt {
-                if let Some((dt, started)) =
-                    self.st.pool.start_fetch_batch(
-                        tgt,
-                        &ids,
-                        &self.trace.adapters,
-                        &self.cfg.cluster.server.gpu,
-                    )
-                {
-                    let mid = self.st.migrations.len() as u32;
-                    if self.obs.trace_on() {
-                        self.obs.async_begin(
-                            "migration",
-                            "mig",
-                            mid as u64,
-                            now,
-                            obs::PID_CONTROL,
-                            vec![
-                                ("server", tgt.into()),
-                                ("adapters", started.len().into()),
-                            ],
-                        );
-                    }
-                    self.st.migrations.push(started);
-                    self.st
-                        .q
-                        .push(now + dt, SimEvent::MigrationDone(tgt, mid));
-                }
-            }
+            self.start_transfers(now, by_tgt);
         }
         // re-route not-yet-running work through the swapped table
         // (active decodes finish here)
         let pending = self.st.servers[victim].extract_pending();
+        let timeout = self.cfg.cluster.slo.timeout;
+        let cap = self.cfg.max_events.saturating_add(1);
         for sreq in pending {
-            self.fill_load_signal();
+            if !self.table_routed {
+                self.fill_load_signal();
+            }
             let target = self.st.router.route(
                 sreq.req.adapter,
                 &self.st.outstanding_buf,
                 &mut self.st.rng,
             );
             self.deliver(target, sreq, now);
+            if !self.table_routed {
+                // least-loaded re-routes must observe each other's
+                // load: drain the just-pushed delivery into the server
+                // before the next request reads the signal
+                let st = &mut self.st;
+                flush_lane(
+                    &mut st.servers[target],
+                    &mut st.lanes[target],
+                    now,
+                    timeout,
+                    cap,
+                );
+            }
         }
+        self.st.lane_events =
+            self.st.lanes.iter().map(|l| l.events).sum();
         self.st.q.push(now, SimEvent::DrainCheck(victim));
         debug_assert!(
             self.st.pool.check_coverage(self.trace.adapters.len()).is_ok(),
@@ -1566,27 +1825,11 @@ impl<'a> SimEngine<'a> {
                 .replicate_all_to(s, &self.trace.adapters);
         }
         if self.table_routed {
-            let mut projected = self.st.demand.projected_tps();
-            if projected.is_empty() {
-                projected = self.uniform_demand.clone();
-            }
-            let next = self.replace_assignment(&active_ids, &projected);
-            if !self.replicate {
-                if !self.remote_attach {
-                    // remote attach: relocated homes serve remotely,
-                    // no bytes move for the assignment diff
-                    self.st.report.migration_bytes += next
-                        .migration_bytes(
-                            &self.st.assignment,
-                            &self.trace.adapters,
-                        );
-                }
-                self.st.pool.apply_assignment(&homes_of(&next));
-            }
-            self.st
-                .router
-                .update_table(RoutingTable::from_assignment(&next));
-            self.st.assignment = next;
+            // spread load onto the newcomer through `plan_incremental`:
+            // only the moves whose projected relief beats their RDMA
+            // cost actually copy bytes (under remote attach the rest
+            // move routing only and serve out of their old home's HBM)
+            self.incremental_replace(now, &active_ids);
         }
         debug_assert!(
             self.st.pool.check_coverage(self.trace.adapters.len()).is_ok(),
@@ -1645,6 +1888,10 @@ impl<'a> SimEngine<'a> {
         }
         self.st.report.fetches = self.st.pool.total_fetches;
         self.st.report.fetch_bytes = self.st.pool.total_fetch_bytes;
+        // control + lane events: identical for any shard count (the
+        // control schedule and per-lane work never depend on it), so
+        // this is safe to fold into the determinism digest
+        self.st.report.events = self.st.events + self.st.lane_events;
         if self.obs.on() {
             self.st.report.attribution = self
                 .obs

@@ -1,19 +1,29 @@
 //! Discrete-event machinery: the simulator's event alphabet and a
 //! deterministic time-ordered event heap.
+//!
+//! The heap is generic over the event payload so the sharded engine
+//! can reuse it both for the coordinator's control queue
+//! (`EventQueue<SimEvent>`) and for each server lane's private heap
+//! (`EventQueue<LaneEvent>`). Ordering is a single packed
+//! `(time_bits, seq)` `u128` key compare: for non-negative finite
+//! `f64` times the IEEE-754 bit pattern is order-preserving, so one
+//! integer compare replaces the old two-field float-then-int chain.
 
 use crate::workload::{AdapterId, ServerId};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-/// Everything that can happen in the cluster simulation — the request
-/// path (arrive/iterate/fetch), the control plane (rebalance), and the
-/// elastic-capacity subsystem's topology-change events.
+/// Control-plane events — everything the coordinator handles
+/// sequentially at epoch barriers: the request path's routing and
+/// fetch landings, rebalance/migration, the autoscaler, and drain.
+/// Server-local iteration completions (`IterDone`) are *not* here:
+/// they live in each server lane's private heap
+/// (`engine::LaneEvent`), which is what makes lanes advance in
+/// parallel between barriers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SimEvent {
     /// Request `trace.requests[i]` reaches the coordinator.
     Arrive(usize),
-    /// A server finishes its running prefill/decode iteration.
-    IterDone(ServerId),
     /// An RDMA adapter fetch lands on its destination server.
     FetchDone(ServerId, AdapterId),
     /// Periodic LORASERVE re-placement (Algorithm 1 time step).
@@ -38,17 +48,30 @@ pub enum SimEvent {
 }
 
 /// Events are ordered by time, then by insertion sequence (FIFO among
-/// simultaneous events) — this makes runs bit-reproducible.
+/// simultaneous events) — this makes runs bit-reproducible. Both are
+/// packed into one `u128` (`time.to_bits() << 64 | seq`) so the heap's
+/// sift compares are a single integer compare. Valid because sim time
+/// is non-negative and finite (asserted on push): for such doubles the
+/// raw bit pattern orders exactly like the float.
 #[derive(Debug)]
 struct Scheduled<E> {
-    time: f64,
-    seq: u64,
+    key: u128,
     event: E,
+}
+
+#[inline]
+fn pack(time: f64, seq: u64) -> u128 {
+    ((time.to_bits() as u128) << 64) | seq as u128
+}
+
+#[inline]
+fn unpack_time(key: u128) -> f64 {
+    f64::from_bits((key >> 64) as u64)
 }
 
 impl<E> PartialEq for Scheduled<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.key == other.key
     }
 }
 impl<E> Eq for Scheduled<E> {}
@@ -60,11 +83,7 @@ impl<E> PartialOrd for Scheduled<E> {
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // reversed: BinaryHeap is a max-heap, we want earliest first
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
+        other.key.cmp(&self.key)
     }
 }
 
@@ -90,6 +109,22 @@ impl<E> EventQueue<E> {
         Self::default()
     }
 
+    /// A queue pre-sized for `n` events (e.g. the trace's request
+    /// count), so the bootstrap `push` storm never re-grows the heap.
+    pub fn with_capacity(n: usize) -> Self {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(n),
+            seq: 0,
+            now: 0.0,
+        }
+    }
+
+    /// Grow the backing heap to hold at least `additional` more events
+    /// without reallocating.
+    pub fn reserve(&mut self, additional: usize) {
+        self.heap.reserve(additional);
+    }
+
     pub fn now(&self) -> f64 {
         self.now
     }
@@ -100,10 +135,13 @@ impl<E> EventQueue<E> {
             "scheduling into the past: {time} < {}",
             self.now
         );
-        debug_assert!(time.is_finite());
+        debug_assert!(
+            time.is_finite() && time >= 0.0,
+            "event time must be finite and non-negative (bit-packed \
+             ordering): {time}"
+        );
         self.heap.push(Scheduled {
-            time: time.max(self.now),
-            seq: self.seq,
+            key: pack(time.max(self.now), self.seq),
             event,
         });
         self.seq += 1;
@@ -112,10 +150,20 @@ impl<E> EventQueue<E> {
     /// Pop the earliest event, advancing the clock.
     pub fn pop(&mut self) -> Option<(f64, E)> {
         self.heap.pop().map(|s| {
-            debug_assert!(s.time >= self.now - 1e-9);
-            self.now = s.time;
-            (s.time, s.event)
+            let time = unpack_time(s.key);
+            debug_assert!(time >= self.now - 1e-9);
+            self.now = time;
+            (time, s.event)
         })
+    }
+
+    /// Timestamp of the earliest pending event (the clock does not
+    /// advance). The sharded engine's lane flush loops on this:
+    /// `while peek_time() <= horizon { pop() }` (inclusive — a
+    /// same-timestamp delivery must land before the control event
+    /// that reads it).
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|s| unpack_time(s.key))
     }
 
     pub fn len(&self) -> usize {
@@ -137,6 +185,7 @@ mod tests {
         q.push(3.0, "c");
         q.push(1.0, "a");
         q.push(2.0, "b");
+        assert_eq!(q.peek_time(), Some(1.0));
         assert_eq!(q.pop().unwrap(), (1.0, "a"));
         assert_eq!(q.pop().unwrap(), (2.0, "b"));
         assert_eq!(q.now(), 2.0);
@@ -144,6 +193,7 @@ mod tests {
         assert_eq!(q.pop().unwrap(), (2.5, "d"));
         assert_eq!(q.pop().unwrap(), (3.0, "c"));
         assert!(q.pop().is_none());
+        assert_eq!(q.peek_time(), None);
     }
 
     #[test]
@@ -161,7 +211,7 @@ mod tests {
     fn property_random_order_is_sorted() {
         use crate::util::rng::Pcg32;
         let mut rng = Pcg32::new(9);
-        let mut q = EventQueue::new();
+        let mut q = EventQueue::with_capacity(1000);
         for i in 0..1000 {
             q.push(rng.f64() * 100.0, i);
         }
@@ -170,5 +220,16 @@ mod tests {
             assert!(t >= last);
             last = t;
         }
+    }
+
+    #[test]
+    fn packed_key_orders_like_float_then_seq() {
+        // the u128 pack is order-isomorphic to (time, seq) for the
+        // domain the queue accepts (finite, non-negative times)
+        let times = [0.0, 1e-300, 0.5, 1.0, 1.0000000000000002, 3e5];
+        for w in times.windows(2) {
+            assert!(pack(w[0], u64::MAX) < pack(w[1], 0));
+        }
+        assert!(pack(2.0, 0) < pack(2.0, 1));
     }
 }

@@ -107,6 +107,12 @@ pub struct SimReport {
     /// already remote counts once; one that turned local and later
     /// misses again starts a new episode.
     pub remote_served: u64,
+    /// Total simulated events processed: control-queue events plus
+    /// every server lane's delivery/iteration events. Shard-invariant
+    /// by the epoch-barrier determinism contract, so it is part of the
+    /// digest; also the denominator of the `bench` subcommand's
+    /// events/sec figure.
+    pub events: u64,
     /// Fleet accounting (GPU-seconds, scale events, size timeline,
     /// SLO-violation rate). For fixed-fleet runs the timeline is the
     /// constant `n_servers`.
@@ -236,6 +242,7 @@ impl SimReport {
             ("decode_policy", Json::from(self.decode_policy.as_str())),
             ("completed", Json::from(self.completed)),
             ("timeouts", Json::from(self.timeouts)),
+            ("events", Json::from(self.events)),
             ("makespan", num(self.makespan)),
             ("offered_rps", num(self.offered_rps)),
             ("iters", Json::from(self.iters)),

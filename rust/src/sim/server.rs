@@ -39,7 +39,7 @@ use crate::config::{
 use crate::costmodel::CostModel;
 use crate::obs::{self, Obs};
 use crate::workload::{AdapterId, Request};
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 /// A request resident on a server.
 #[derive(Debug, Clone, Copy)]
@@ -153,13 +153,23 @@ impl DecodePlan {
     /// The unified (pre-refactor) plan: one whole-set step, no launch
     /// overhead.
     pub fn unified(active: &[ActiveReq]) -> DecodePlan {
+        DecodePlan::unified_pooled(active, &mut Vec::new())
+    }
+
+    /// [`unified`](DecodePlan::unified), drawing the membership vector
+    /// from `pool` so the hot path never allocates.
+    pub fn unified_pooled(
+        active: &[ActiveReq],
+        pool: &mut Vec<Vec<u64>>,
+    ) -> DecodePlan {
         if active.is_empty() {
             return DecodePlan::default();
         }
+        let mut seqs = pool.pop().unwrap_or_default();
+        seqs.clear();
+        seqs.extend(active.iter().map(|a| a.seq));
         DecodePlan {
-            groups: vec![DecodeGroup {
-                seqs: active.iter().map(|a| a.seq).collect(),
-            }],
+            groups: vec![DecodeGroup { seqs }],
         }
     }
 
@@ -169,52 +179,100 @@ impl DecodePlan {
 }
 
 /// Group the active set by exact rank class, ascending rank. The
-/// building block of the rank-aware decode compositions.
-fn classes_of(active: &[ActiveReq]) -> BTreeMap<u32, Vec<u64>> {
+/// building block of the rank-aware decode compositions. Class
+/// vectors come from `pool` (recycled step-membership buffers).
+fn classes_of(
+    active: &[ActiveReq],
+    pool: &mut Vec<Vec<u64>>,
+) -> BTreeMap<u32, Vec<u64>> {
     let mut classes: BTreeMap<u32, Vec<u64>> = BTreeMap::new();
     for a in active {
-        classes.entry(a.sreq.rank).or_default().push(a.seq);
+        classes
+            .entry(a.sreq.rank)
+            .or_insert_with(|| {
+                let mut v = pool.pop().unwrap_or_default();
+                v.clear();
+                v
+            })
+            .push(a.seq);
     }
     classes
 }
 
 /// Batch composition policy for *both* phases of generation.
 ///
-/// **Prefill admission** (`admit`): given the ready queue (FIFO by
-/// arrival), decide which requests enter this iteration's prefill
-/// batch. Implementations remove admitted requests from `queue`
+/// **Prefill admission** (`admit_into`): given the ready queue (FIFO
+/// by arrival), decide which requests enter this iteration's prefill
+/// batch, appending them to `out` (empty on entry — the server hands
+/// each policy a recycled buffer, so steady-state admission allocates
+/// nothing). Implementations remove admitted requests from `queue`
 /// (preserving the relative order of everything left behind) and must
 /// respect `slots` (free decode slots) and `max_tokens` (iteration
 /// token budget; the first admitted request is exempt so oversized
 /// prompts still run alone).
 ///
-/// **Decode composition** (`compose_decode`): given the active set,
-/// produce the [`DecodePlan`] for the next decode round. Groups must
-/// be disjoint, non-empty, and cover at most `slots` sequences in
-/// total. The default is the unified whole-set plan (the pre-refactor
-/// decode, bit for bit). `slo` is the server's SLO feedback tracker
-/// (None = open loop); SLO-aware compositions may consult its rolling
-/// per-class TBT headroom but must behave identically to their
-/// open-loop selves when it is absent.
-pub trait BatchPolicy: std::fmt::Debug {
+/// **Decode composition** (`compose_decode_pooled`): given the active
+/// set, produce the [`DecodePlan`] for the next decode round. Groups
+/// must be disjoint, non-empty, and cover at most `slots` sequences in
+/// total. Membership vectors are drawn from `pool` (the server
+/// recycles them when steps finish), so steady-state composition
+/// allocates nothing either. The default is the unified whole-set
+/// plan (the pre-refactor decode, bit for bit). `slo` is the server's
+/// SLO feedback tracker (None = open loop); SLO-aware compositions may
+/// consult its rolling per-class TBT headroom but must behave
+/// identically to their open-loop selves when it is absent.
+///
+/// `Send` because servers (each owning its policy) cross the sharded
+/// engine's scoped-thread boundary between epoch barriers.
+pub trait BatchPolicy: std::fmt::Debug + Send {
     fn name(&self) -> &'static str;
 
+    fn admit_into(
+        &mut self,
+        queue: &mut VecDeque<SimReq>,
+        slots: usize,
+        max_tokens: u64,
+        out: &mut Vec<SimReq>,
+    );
+
+    /// Allocating convenience wrapper around
+    /// [`admit_into`](BatchPolicy::admit_into) for tests and one-off
+    /// callers; the simulation hot path passes a recycled buffer
+    /// instead.
     fn admit(
         &mut self,
         queue: &mut VecDeque<SimReq>,
         slots: usize,
         max_tokens: u64,
-    ) -> Vec<SimReq>;
+    ) -> Vec<SimReq> {
+        let mut out = Vec::new();
+        self.admit_into(queue, slots, max_tokens, &mut out);
+        out
+    }
 
-    fn compose_decode(
+    fn compose_decode_pooled(
         &mut self,
         active: &[ActiveReq],
         slots: usize,
         _cm: &CostModel,
         _slo: Option<&SloTracker>,
+        pool: &mut Vec<Vec<u64>>,
     ) -> DecodePlan {
         let _ = slots; // the whole-set plan can never exceed slots
-        DecodePlan::unified(active)
+        DecodePlan::unified_pooled(active, pool)
+    }
+
+    /// Allocating convenience wrapper around
+    /// [`compose_decode_pooled`](BatchPolicy::compose_decode_pooled)
+    /// for tests and one-off callers.
+    fn compose_decode(
+        &mut self,
+        active: &[ActiveReq],
+        slots: usize,
+        cm: &CostModel,
+        slo: Option<&SloTracker>,
+    ) -> DecodePlan {
+        self.compose_decode_pooled(active, slots, cm, slo, &mut Vec::new())
     }
 
     /// SLO feedback hook: before each admission the server reports the
@@ -284,26 +342,26 @@ impl BatchPolicy for Fifo {
         "fifo"
     }
 
-    fn admit(
+    fn admit_into(
         &mut self,
         queue: &mut VecDeque<SimReq>,
         slots: usize,
         max_tokens: u64,
-    ) -> Vec<SimReq> {
-        let mut batch: Vec<SimReq> = Vec::new();
+        out: &mut Vec<SimReq>,
+    ) {
+        let start = out.len();
         let mut tokens = 0u64;
         while let Some(head) = queue.front() {
-            if batch.len() >= slots {
+            if out.len() - start >= slots {
                 break;
             }
             let t = head.req.prompt_len as u64;
-            if !batch.is_empty() && tokens + t > max_tokens {
+            if out.len() > start && tokens + t > max_tokens {
                 break;
             }
             tokens += t;
-            batch.push(queue.pop_front().unwrap());
+            out.push(queue.pop_front().unwrap());
         }
-        batch
     }
 }
 
@@ -337,6 +395,11 @@ pub struct RankBucketed {
     /// map's minimum operating point — unknown means assume expensive,
     /// never a runaway 1.0-denominator score.
     oppoints: BTreeMap<u32, f64>,
+    /// Reused drain buffer: admission swaps the queue's storage out,
+    /// then refills it with everything not admitted — steady-state
+    /// both deques keep their capacity and admission allocates
+    /// nothing.
+    scratch: VecDeque<SimReq>,
 }
 
 impl RankBucketed {
@@ -346,6 +409,7 @@ impl RankBucketed {
             waited: 0,
             pressure: 1.0,
             oppoints: BTreeMap::new(),
+            scratch: VecDeque::new(),
         }
     }
 
@@ -360,6 +424,7 @@ impl RankBucketed {
             waited: 0,
             pressure: 1.0,
             oppoints,
+            scratch: VecDeque::new(),
         }
     }
 
@@ -384,14 +449,15 @@ impl BatchPolicy for RankBucketed {
         self.pressure = headroom_frac.clamp(0.0, 1.0);
     }
 
-    fn admit(
+    fn admit_into(
         &mut self,
         queue: &mut VecDeque<SimReq>,
         slots: usize,
         max_tokens: u64,
-    ) -> Vec<SimReq> {
+        out: &mut Vec<SimReq>,
+    ) {
         if queue.is_empty() || slots == 0 {
-            return Vec::new();
+            return;
         }
         let front_rank = queue.front().unwrap().rank;
         let chosen = if self.waited >= self.effective_wait_bound() {
@@ -433,36 +499,34 @@ impl BatchPolicy for RankBucketed {
             }
             best.2
         };
-        let mut batch: Vec<SimReq> = Vec::new();
+        let start = out.len();
         let mut tokens = 0u64;
-        let mut kept: VecDeque<SimReq> =
-            VecDeque::with_capacity(queue.len());
+        debug_assert!(self.scratch.is_empty());
+        std::mem::swap(queue, &mut self.scratch);
         let mut stop = false;
-        for r in queue.drain(..) {
-            if stop || batch.len() >= slots || r.rank != chosen {
-                kept.push_back(r);
+        for r in self.scratch.drain(..) {
+            if stop || out.len() - start >= slots || r.rank != chosen {
+                queue.push_back(r);
                 continue;
             }
             let t = r.req.prompt_len as u64;
-            if !batch.is_empty() && tokens + t > max_tokens {
+            if out.len() > start && tokens + t > max_tokens {
                 // budget full: stop admitting to keep FIFO order
                 // within the class
-                kept.push_back(r);
+                queue.push_back(r);
                 stop = true;
                 continue;
             }
             tokens += t;
-            batch.push(r);
+            out.push(r);
         }
-        *queue = kept;
-        if !batch.is_empty() {
+        if out.len() > start {
             if chosen == front_rank {
                 self.waited = 0; // the head was admitted
             } else {
                 self.waited += 1;
             }
         }
-        batch
     }
 }
 
@@ -472,15 +536,21 @@ impl BatchPolicy for RankBucketed {
 /// queued, in order) instead of dragging the whole batch up to their
 /// rank. Nothing starves — a skipped request reaches the head in FIFO
 /// time and is then admitted unconditionally.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct RankCap {
     pub factor: u32,
+    /// Reused drain buffer (same swap-and-refill pattern as
+    /// `RankBucketed`).
+    scratch: VecDeque<SimReq>,
 }
 
 impl RankCap {
     pub fn new(factor: u32) -> Self {
         assert!(factor >= 1, "rank-cap factor must be >= 1");
-        RankCap { factor }
+        RankCap {
+            factor,
+            scratch: VecDeque::new(),
+        }
     }
 }
 
@@ -489,47 +559,46 @@ impl BatchPolicy for RankCap {
         "rank-cap"
     }
 
-    fn admit(
+    fn admit_into(
         &mut self,
         queue: &mut VecDeque<SimReq>,
         slots: usize,
         max_tokens: u64,
-    ) -> Vec<SimReq> {
+        out: &mut Vec<SimReq>,
+    ) {
         if queue.is_empty() || slots == 0 {
-            return Vec::new();
+            return;
         }
-        let mut batch: Vec<SimReq> = Vec::new();
+        let start = out.len();
         let mut tokens = 0u64;
         let mut cap = 0u32;
-        let mut kept: VecDeque<SimReq> =
-            VecDeque::with_capacity(queue.len());
+        debug_assert!(self.scratch.is_empty());
+        std::mem::swap(queue, &mut self.scratch);
         let mut stop = false;
-        for r in queue.drain(..) {
-            if stop || batch.len() >= slots {
-                kept.push_back(r);
+        for r in self.scratch.drain(..) {
+            if stop || out.len() - start >= slots {
+                queue.push_back(r);
                 continue;
             }
-            if batch.is_empty() {
+            if out.len() == start {
                 cap = r.rank.saturating_mul(self.factor);
                 tokens += r.req.prompt_len as u64;
-                batch.push(r);
+                out.push(r);
                 continue;
             }
             if r.rank > cap {
-                kept.push_back(r); // rank-skipped; keep scanning
+                queue.push_back(r); // rank-skipped; keep scanning
                 continue;
             }
             let t = r.req.prompt_len as u64;
             if tokens + t > max_tokens {
-                kept.push_back(r);
+                queue.push_back(r);
                 stop = true;
                 continue;
             }
             tokens += t;
-            batch.push(r);
+            out.push(r);
         }
-        *queue = kept;
-        batch
     }
 }
 
@@ -555,28 +624,30 @@ impl BatchPolicy for RankPartitionedDecode {
         "rank-partitioned"
     }
 
-    fn admit(
+    fn admit_into(
         &mut self,
         queue: &mut VecDeque<SimReq>,
         slots: usize,
         max_tokens: u64,
-    ) -> Vec<SimReq> {
-        self.inner.admit(queue, slots, max_tokens)
+        out: &mut Vec<SimReq>,
+    ) {
+        self.inner.admit_into(queue, slots, max_tokens, out);
     }
 
     fn set_slo_pressure(&mut self, headroom_frac: f64) {
         self.inner.set_slo_pressure(headroom_frac);
     }
 
-    fn compose_decode(
+    fn compose_decode_pooled(
         &mut self,
         active: &[ActiveReq],
         _slots: usize,
         _cm: &CostModel,
         _slo: Option<&SloTracker>,
+        pool: &mut Vec<Vec<u64>>,
     ) -> DecodePlan {
         DecodePlan {
-            groups: classes_of(active)
+            groups: classes_of(active, pool)
                 .into_values()
                 .map(|seqs| DecodeGroup { seqs })
                 .collect(),
@@ -625,17 +696,19 @@ fn slo_pick(
 fn breakeven_plan(
     cm: &CostModel,
     mut classes: BTreeMap<u32, Vec<u64>>,
+    pool: &mut Vec<Vec<u64>>,
 ) -> DecodePlan {
     let Some(&max_rank) = classes.keys().next_back() else {
         return DecodePlan::default();
     };
     let mut merged = classes.remove(&max_rank).unwrap_or_default();
     let mut groups: Vec<DecodeGroup> = Vec::new();
-    for (rank, seqs) in classes {
+    for (rank, mut seqs) in classes {
         if cm.decode_split_gain(seqs.len(), rank, max_rank) > 0.0 {
             groups.push(DecodeGroup { seqs });
         } else {
-            merged.extend(seqs);
+            merged.append(&mut seqs);
+            pool.push(seqs);
         }
     }
     groups.push(DecodeGroup { seqs: merged });
@@ -694,29 +767,31 @@ impl BatchPolicy for ClassSubBatchDecode {
         "class-subbatch"
     }
 
-    fn admit(
+    fn admit_into(
         &mut self,
         queue: &mut VecDeque<SimReq>,
         slots: usize,
         max_tokens: u64,
-    ) -> Vec<SimReq> {
-        self.inner.admit(queue, slots, max_tokens)
+        out: &mut Vec<SimReq>,
+    ) {
+        self.inner.admit_into(queue, slots, max_tokens, out);
     }
 
     fn set_slo_pressure(&mut self, headroom_frac: f64) {
         self.inner.set_slo_pressure(headroom_frac);
     }
 
-    fn compose_decode(
+    fn compose_decode_pooled(
         &mut self,
         active: &[ActiveReq],
         _slots: usize,
         cm: &CostModel,
         slo: Option<&SloTracker>,
+        pool: &mut Vec<Vec<u64>>,
     ) -> DecodePlan {
-        let mut classes = classes_of(active);
+        let mut classes = classes_of(active, pool);
         let Some(max_groups) = self.max_groups else {
-            return breakeven_plan(cm, classes);
+            return breakeven_plan(cm, classes, pool);
         };
         if classes.len() > max_groups {
             let ranks: Vec<u32> = classes.keys().copied().collect();
@@ -875,6 +950,20 @@ pub struct SimServer {
     pending_decode: VecDeque<PricedStep>,
     /// Next `ActiveReq::seq` to hand out.
     next_seq: u64,
+    /// Recycled prefill-batch buffers: admission fills one, the
+    /// finished prefill returns it — steady-state the iteration loop
+    /// allocates nothing.
+    batch_pool: Vec<Vec<SimReq>>,
+    /// Recycled decode-membership buffers, threaded through
+    /// `compose_decode_pooled` and returned when steps finish (or are
+    /// preempted).
+    seq_pool: Vec<Vec<u64>>,
+    /// Admission-time pinned-adapter set, reused across iterations.
+    pinned_scratch: BTreeSet<AdapterId>,
+    /// Distinct-remote-adapter scan scratch, reused across iterations.
+    remote_seen_scratch: Vec<AdapterId>,
+    /// `release_waiting` arrival-order scratch.
+    released_scratch: Vec<SimReq>,
 }
 
 /// One pre-priced decode sub-batch step: the group's membership plus
@@ -955,6 +1044,11 @@ impl SimServer {
             obs: Obs::default(),
             pending_decode: VecDeque::new(),
             next_seq: 0,
+            batch_pool: Vec::new(),
+            seq_pool: Vec::new(),
+            pinned_scratch: BTreeSet::new(),
+            remote_seen_scratch: Vec::new(),
+            released_scratch: Vec::new(),
         }
     }
 
@@ -1027,7 +1121,8 @@ impl SimServer {
     /// queue (ordered by arrival to preserve FIFO fairness), charging
     /// the time they spent blocked to the fetch-stall counter.
     pub fn release_waiting(&mut self, adapter: AdapterId, now: f64) {
-        let mut released: Vec<SimReq> = Vec::new();
+        let released = &mut self.released_scratch;
+        released.clear();
         let stall = &mut self.fetch_stall_s;
         let obs = &self.obs;
         self.waiting_fetch.retain(|(r, since)| {
@@ -1045,7 +1140,7 @@ impl SimServer {
         released.sort_by(|a, b| {
             a.req.arrival.partial_cmp(&b.req.arrival).unwrap()
         });
-        for r in released {
+        for r in released.drain(..) {
             self.queue.push_back(r);
         }
     }
@@ -1203,7 +1298,7 @@ impl SimServer {
         if !self.pending_decode.is_empty() {
             if self.should_preempt_round(now) {
                 let dropped = self.pending_decode.len();
-                self.pending_decode.clear();
+                self.recycle_pending();
                 self.preemptions += 1;
                 preempted = true;
                 if self.obs.trace_on() {
@@ -1238,10 +1333,13 @@ impl SimServer {
             let frac = slo.ttft_headroom_frac(waited);
             self.policy.set_slo_pressure(frac);
         }
-        let batch = self.policy.admit(
+        let mut batch = self.batch_pool.pop().unwrap_or_default();
+        batch.clear();
+        self.policy.admit_into(
             &mut self.queue,
             slots,
             self.cm.server.max_batch_tokens as u64,
+            &mut batch,
         );
         if !batch.is_empty() {
             self.prefill_under_pressure = under_pressure;
@@ -1266,15 +1364,16 @@ impl SimServer {
             // each pays the per-iteration RDMA penalty instead (once
             // per distinct adapter: its slices stream once per
             // iteration however many requests share it).
-            let pinned: std::collections::BTreeSet<AdapterId> = self
-                .active
-                .iter()
-                .map(|a| a.sreq.req.adapter)
-                .chain(batch.iter().map(|r| r.req.adapter))
-                .collect();
+            self.pinned_scratch.clear();
+            self.pinned_scratch.extend(
+                self.active
+                    .iter()
+                    .map(|a| a.sreq.req.adapter)
+                    .chain(batch.iter().map(|r| r.req.adapter)),
+            );
             let mut load_time = 0.0;
             let pcie = self.cm.server.gpu.pcie_bw;
-            let mut remote_seen: Vec<AdapterId> = Vec::new();
+            self.remote_seen_scratch.clear();
             // page-in vs remote split tracked for attribution only —
             // `load_time` keeps its exact accumulation order so the
             // timing stays bit-identical
@@ -1282,8 +1381,9 @@ impl SimServer {
             let mut remote_t = 0.0;
             for r in &batch {
                 if r.remote {
-                    if !remote_seen.contains(&r.req.adapter) {
-                        remote_seen.push(r.req.adapter);
+                    if !self.remote_seen_scratch.contains(&r.req.adapter)
+                    {
+                        self.remote_seen_scratch.push(r.req.adapter);
                         let pen = self.cm.remote_attach_penalty();
                         load_time += pen;
                         remote_t += pen;
@@ -1293,7 +1393,7 @@ impl SimServer {
                         r.req.adapter,
                         r.adapter_bytes,
                         pcie,
-                        &pinned,
+                        &self.pinned_scratch,
                     );
                     load_time += lt;
                     page_t += lt;
@@ -1312,6 +1412,7 @@ impl SimServer {
             self.busy_time += time;
             return Some(time);
         }
+        self.batch_pool.push(batch);
         if !self.active.is_empty() {
             if self.slo.is_some() {
                 // anchor every active class *and tenant* in the
@@ -1329,17 +1430,18 @@ impl SimServer {
                     slo.observe_active_members(now, &members);
                 }
             }
-            let plan = self.policy.compose_decode(
+            let plan = self.policy.compose_decode_pooled(
                 &self.active,
                 self.cm.server.max_batch_size,
                 &self.cm,
                 self.slo.as_ref(),
+                &mut self.seq_pool,
             );
             debug_assert!(
                 plan.total_members() <= self.cm.server.max_batch_size,
                 "decode plan exceeds slots"
             );
-            self.pending_decode = self.price_decode_round(plan);
+            self.price_decode_round(plan);
             if self.pending_decode.is_empty() {
                 // A malformed custom plan (empty, or only empty
                 // groups) must not stall a server with live decodes —
@@ -1347,8 +1449,8 @@ impl SimServer {
                 // would silently never complete. Fall back to the
                 // unified whole-set round.
                 debug_assert!(false, "decode plan left active set unserved");
-                self.pending_decode = self
-                    .price_decode_round(DecodePlan::unified(&self.active));
+                let plan = DecodePlan::unified(&self.active);
+                self.price_decode_round(plan);
             }
             if let Some(t) = self.start_pending_decode(now) {
                 return Some(t);
@@ -1409,7 +1511,10 @@ impl SimServer {
     /// change before their step runs (groups are disjoint, only a
     /// group's own step completes its members, and the round blocks
     /// prefill admission), so pricing at composition time is exact.
-    fn price_decode_round(&self, plan: DecodePlan) -> VecDeque<PricedStep> {
+    /// Fills `pending_decode` in place (reusing its storage round
+    /// over round); the caller guarantees it is empty on entry.
+    fn price_decode_round(&mut self, plan: DecodePlan) {
+        debug_assert!(self.pending_decode.is_empty());
         // profile the groups that actually run (empty groups dropped
         // first, so a [real, empty] plan is priced as a single-group
         // round, not a mispriced multi-group one)
@@ -1426,7 +1531,10 @@ impl SimServer {
             let (b, cached, max_rank, rank_sum, mixed, remote) =
                 self.group_stats(&seqs);
             if b == 0 {
-                continue; // empty group: nothing to run
+                // empty group: nothing to run
+                seqs.clear();
+                self.seq_pool.push(seqs);
+                continue;
             }
             b_total += b;
             cached_total += cached;
@@ -1436,8 +1544,6 @@ impl SimServer {
         }
         let multi = profiled.len() > 1;
         let want_price = self.obs.attrib_on();
-        let mut steps: VecDeque<PricedStep> =
-            VecDeque::with_capacity(profiled.len());
         for (i, (seqs, b, cached, max_rank, rank_sum, mixed, remote)) in
             profiled.into_iter().enumerate()
         {
@@ -1472,7 +1578,7 @@ impl SimServer {
                 cached,
                 multi,
             });
-            steps.push_back(PricedStep {
+            self.pending_decode.push_back(PricedStep {
                 seqs,
                 time,
                 members: b,
@@ -1482,7 +1588,15 @@ impl SimServer {
                 price,
             });
         }
-        steps
+    }
+
+    /// Drop any un-run steps of the round in flight, returning their
+    /// membership buffers to the pool.
+    fn recycle_pending(&mut self) {
+        while let Some(mut s) = self.pending_decode.pop_front() {
+            s.seqs.clear();
+            self.seq_pool.push(s.seqs);
+        }
     }
 
     /// Run the next sub-batch step of the decode round in flight, if
@@ -1655,16 +1769,30 @@ impl SimServer {
     }
 
     /// Finish the running iteration; returns completed requests.
+    /// Allocating wrapper around `finish_iteration_into` for tests
+    /// and one-off callers — the engine's hot path passes a recycled
+    /// buffer instead.
     pub fn finish_iteration(&mut self, now: f64) -> Vec<Completion> {
         let mut done = Vec::new();
+        self.finish_iteration_into(now, &mut done);
+        done
+    }
+
+    /// Finish the running iteration, appending completed requests to
+    /// `done` (not cleared here — the caller owns the buffer).
+    pub fn finish_iteration_into(
+        &mut self,
+        now: f64,
+        done: &mut Vec<Completion>,
+    ) {
         match std::mem::replace(&mut self.running, Iteration::Idle) {
             Iteration::Idle => {}
-            Iteration::Prefill { batch } => {
+            Iteration::Prefill { mut batch } => {
                 let pressured = std::mem::replace(
                     &mut self.prefill_under_pressure,
                     false,
                 );
-                for sreq in batch {
+                for sreq in batch.drain(..) {
                     let ttft = now - sreq.req.arrival;
                     self.ttft_samples.push(ttft);
                     if pressured {
@@ -1693,8 +1821,9 @@ impl SimServer {
                         });
                     }
                 }
+                self.batch_pool.push(batch);
             }
-            Iteration::Decode { seqs } => {
+            Iteration::Decode { mut seqs } => {
                 let id = self.id;
                 let outstanding = &mut self.outstanding;
                 // SLO feedback: collect the step's distinct (rank,
@@ -1738,13 +1867,14 @@ impl SimServer {
                 if let Some(slo) = &mut self.slo {
                     slo.record_decode_step_members(now, &stepped);
                 }
+                seqs.clear();
+                self.seq_pool.push(seqs);
                 if self.active.is_empty() {
                     // nothing left for any remaining (stale) steps
-                    self.pending_decode.clear();
+                    self.recycle_pending();
                 }
             }
         }
-        done
     }
 }
 

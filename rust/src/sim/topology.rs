@@ -25,11 +25,27 @@ pub enum SrvState {
     Retired,
 }
 
-/// The slot-state vector of the (possibly elastic) fleet. Fixed-fleet
-/// runs simply keep every slot `Active` forever.
+/// The slot-state vector of the (possibly elastic) fleet, with
+/// maintained class counters so the per-event reads (`billed`,
+/// `provisioning`, `n_active`) are O(1) instead of O(fleet) scans on
+/// the engine's barrier path. Fixed-fleet runs simply keep every slot
+/// `Active` forever.
 #[derive(Debug, Clone)]
 pub struct FleetTopology {
     state: Vec<SrvState>,
+    n_active: usize,
+    n_billed: usize,
+    n_provisioning: usize,
+}
+
+/// Does this state occupy (and bill for) GPUs? Provisioning + active +
+/// draining: a draining victim keeps burning its GPUs until it
+/// retires.
+fn bills(st: SrvState) -> bool {
+    matches!(
+        st,
+        SrvState::Provisioning | SrvState::Active | SrvState::Draining
+    )
 }
 
 impl FleetTopology {
@@ -46,6 +62,9 @@ impl FleetTopology {
                     }
                 })
                 .collect(),
+            n_active: n0.min(max_n),
+            n_billed: n0.min(max_n),
+            n_provisioning: 0,
         }
     }
 
@@ -62,7 +81,15 @@ impl FleetTopology {
     }
 
     pub fn set(&mut self, s: ServerId, st: SrvState) {
+        let old = self.state[s];
+        self.n_active -= (old == SrvState::Active) as usize;
+        self.n_billed -= bills(old) as usize;
+        self.n_provisioning -=
+            (old == SrvState::Provisioning) as usize;
         self.state[s] = st;
+        self.n_active += (st == SrvState::Active) as usize;
+        self.n_billed += bills(st) as usize;
+        self.n_provisioning += (st == SrvState::Provisioning) as usize;
     }
 
     /// Routable members of the fleet, in id order.
@@ -75,28 +102,19 @@ impl FleetTopology {
             .collect()
     }
 
+    /// Number of routable servers (O(1); `active()` allocates).
+    pub fn n_active(&self) -> usize {
+        self.n_active
+    }
+
     /// Servers occupying GPUs: provisioning + active + draining. This
-    /// is what `FleetMetrics::gpu_seconds` integrates — a draining
-    /// victim keeps burning its GPUs until it retires.
+    /// is what `FleetMetrics::gpu_seconds` integrates.
     pub fn billed(&self) -> usize {
-        self.state
-            .iter()
-            .filter(|&&st| {
-                matches!(
-                    st,
-                    SrvState::Provisioning
-                        | SrvState::Active
-                        | SrvState::Draining
-                )
-            })
-            .count()
+        self.n_billed
     }
 
     pub fn provisioning(&self) -> usize {
-        self.state
-            .iter()
-            .filter(|&&st| st == SrvState::Provisioning)
-            .count()
+        self.n_provisioning
     }
 
     /// Lowest-id slot a scale-up can (re)provision.
