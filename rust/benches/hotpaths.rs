@@ -17,6 +17,7 @@ use loraserve::placement::{place_onto, Placer, PlacementCtx};
 use loraserve::sim::{self, SimConfig, SystemKind};
 use loraserve::trace::azure::{self, AzureConfig};
 use loraserve::trace::LengthModel;
+use loraserve::util::argmin::ArgminTree;
 use loraserve::util::rng::Pcg32;
 use loraserve::util::stats::Samples;
 use loraserve::util::table::Table;
@@ -100,16 +101,34 @@ fn main() {
     b.run("router: table route (1k ad.)", || {
         let mut acc = 0usize;
         for i in 0..1024u32 {
-            acc += router.route(i % 1000, &outstanding, &mut rng);
+            acc += router.route(i % 1000, &mut rng);
         }
         black_box(acc);
         1024
     });
-    let toppings = Router::Toppings { n_servers: 64 };
+    let mut toppings = Router::toppings(64);
+    toppings.set_loads(&outstanding);
     b.run("router: toppings least-work", || {
         let mut acc = 0usize;
         for i in 0..1024u32 {
-            acc += toppings.route(i % 1000, &outstanding, &mut rng);
+            let t = toppings.route(i % 1000, &mut rng);
+            acc += t;
+            // the routed server's load changes: O(log n) tree update
+            toppings.update_load(t, (i % 17) as f64);
+        }
+        black_box(acc);
+        1024
+    });
+    // the raw index at big-fleet width: one load update + argmin query
+    let mut tree = ArgminTree::new(512);
+    for s in 0..512 {
+        tree.update(s, (s % 41) as f64);
+    }
+    b.run("router: argmin tree x512 srv", || {
+        let mut acc = 0usize;
+        for i in 0..1024usize {
+            tree.update((i * 7) % 512, (i % 23) as f64);
+            acc += tree.argmin();
         }
         black_box(acc);
         1024
@@ -129,6 +148,13 @@ fn main() {
     b.run("placement: epoch + permutation", || {
         let mut placer = LoraServePlacer::new();
         black_box(placer.place(&ctx_prev));
+        1
+    });
+    // assignment diff on the wholesale-rebalance path (sorted-merge
+    // membership, not the old O(copies²) contains scan)
+    let next_asg = LoraServePlacer::new().place(&ctx_prev);
+    b.run("placement: migration_bytes diff", || {
+        black_box(next_asg.migration_bytes(&asg, &adapters));
         1
     });
 

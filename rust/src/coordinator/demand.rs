@@ -1,5 +1,18 @@
 //! Per-adapter demand tracking + extrapolation (Algorithm 1 step 1:
 //! GETPREVTIMESTEPTPS + EXTRAPOLATE over TPSHistory).
+//!
+//! The tracker is allocation-free on the hot path: adapter ids are
+//! dense (trace construction interns them), so token accumulation,
+//! the per-window roll, and projections all run over flat vectors —
+//! ring-buffer TPS histories instead of `Vec::remove(0)`, an
+//! incrementally-maintained known-id set instead of a per-roll
+//! `BTreeSet` union, and projections cached per `(roll, ablation
+//! flag)` generation instead of a fresh `BTreeMap` per query. The
+//! legacy map-shaped accessors survive for cold paths (planners,
+//! reports) and produce bit-identical values: per-id projections use
+//! the same chronological sample order and fold, and the cluster
+//! total sums in ascending id order exactly like the old
+//! `BTreeMap::values().sum()`.
 
 use crate::util::stats::linear_fit;
 use crate::workload::AdapterId;
@@ -11,8 +24,32 @@ use std::collections::BTreeMap;
 pub struct DemandTracker {
     window: f64,
     history_len: usize,
-    current_tokens: BTreeMap<AdapterId, f64>,
-    history: BTreeMap<AdapterId, Vec<f64>>,
+    /// tokens accumulated this window, dense by adapter id
+    current: Vec<f64>,
+    /// ids with tokens this window (`in_current` dedups the pushes)
+    seen: Vec<AdapterId>,
+    in_current: Vec<bool>,
+    /// every id that has rolled at least once, ascending
+    known: Vec<AdapterId>,
+    is_known: Vec<bool>,
+    /// ring-buffer TPS histories, `history_len` slots per id at
+    /// `id * history_len` (block layout is stable under growth)
+    hist: Vec<f64>,
+    /// filled samples per id (saturates at `history_len`)
+    hist_n: Vec<u32>,
+    /// ring write cursor per id — once full, also the oldest sample
+    hist_pos: Vec<u32>,
+    /// nonzero samples currently in the ring per id: a zero count
+    /// short-circuits projection to 0.0 (bit-exact: a linear fit of
+    /// all-zero samples is (0, 0))
+    nz: Vec<u32>,
+    /// cached projections (dense by id) + their ascending-id total,
+    /// valid for `cached == Some((version, last_value_only))`
+    proj: Vec<f64>,
+    total_proj: f64,
+    version: u64,
+    cached: Option<(u64, bool)>,
+    fit_buf: Vec<f64>,
     /// Disable trend extrapolation (ablation A3): project last value.
     pub last_value_only: bool,
 }
@@ -23,71 +60,229 @@ impl DemandTracker {
         DemandTracker {
             window,
             history_len,
-            current_tokens: BTreeMap::new(),
-            history: BTreeMap::new(),
+            current: Vec::new(),
+            seen: Vec::new(),
+            in_current: Vec::new(),
+            known: Vec::new(),
+            is_known: Vec::new(),
+            hist: Vec::new(),
+            hist_n: Vec::new(),
+            hist_pos: Vec::new(),
+            nz: Vec::new(),
+            proj: Vec::new(),
+            total_proj: 0.0,
+            version: 0,
+            cached: None,
+            fit_buf: Vec::new(),
             last_value_only: false,
         }
     }
 
+    /// Grow every dense-by-id vector to cover `id` (amortized O(1):
+    /// ids are interned densely by trace construction).
+    fn ensure_id(&mut self, id: AdapterId) {
+        let need = id as usize + 1;
+        if need <= self.current.len() {
+            return;
+        }
+        self.current.resize(need, 0.0);
+        self.in_current.resize(need, false);
+        self.is_known.resize(need, false);
+        self.hist.resize(need * self.history_len, 0.0);
+        self.hist_n.resize(need, 0);
+        self.hist_pos.resize(need, 0);
+        self.nz.resize(need, 0);
+        self.proj.resize(need, 0.0);
+    }
+
     /// Record an arriving request's token demand.
+    #[inline]
     pub fn record(&mut self, adapter: AdapterId, tokens: u64) {
-        *self.current_tokens.entry(adapter).or_insert(0.0) +=
-            tokens as f64;
+        self.ensure_id(adapter);
+        let i = adapter as usize;
+        self.current[i] += tokens as f64;
+        if !self.in_current[i] {
+            self.in_current[i] = true;
+            self.seen.push(adapter);
+        }
     }
 
     /// Close the current time step: fold the accumulated tokens into
-    /// per-adapter TPS history.
+    /// per-adapter TPS history. Every known adapter gets a sample
+    /// (0 when silent); newly seen adapters join the known set.
     pub fn roll_window(&mut self) {
-        let current = std::mem::take(&mut self.current_tokens);
-        // every adapter with history also gets a 0 sample when silent
-        let ids: std::collections::BTreeSet<AdapterId> = self
-            .history
-            .keys()
-            .copied()
-            .chain(current.keys().copied())
-            .collect();
-        for id in ids {
-            let tps =
-                current.get(&id).copied().unwrap_or(0.0) / self.window;
-            let h = self.history.entry(id).or_default();
-            h.push(tps);
-            if h.len() > self.history_len {
-                h.remove(0);
+        // fold first-time ids into the ascending known set — an
+        // incremental merge, not a per-roll set union
+        if !self.seen.is_empty() {
+            let seen = std::mem::take(&mut self.seen);
+            let mut added = false;
+            for &id in &seen {
+                if !self.is_known[id as usize] {
+                    self.is_known[id as usize] = true;
+                    self.known.push(id);
+                    added = true;
+                }
+            }
+            self.seen = seen;
+            self.seen.clear();
+            if added {
+                self.known.sort_unstable();
+            }
+        }
+        let known = std::mem::take(&mut self.known);
+        for &id in &known {
+            let i = id as usize;
+            let tps = self.current[i] / self.window;
+            self.current[i] = 0.0;
+            self.in_current[i] = false;
+            let base = i * self.history_len;
+            let n = self.hist_n[i] as usize;
+            if n < self.history_len {
+                self.hist[base + n] = tps;
+                self.hist_n[i] = (n + 1) as u32;
+            } else {
+                let pos = self.hist_pos[i] as usize;
+                if self.hist[base + pos] != 0.0 {
+                    self.nz[i] -= 1;
+                }
+                self.hist[base + pos] = tps;
+                self.hist_pos[i] =
+                    ((pos + 1) % self.history_len) as u32;
+            }
+            if tps != 0.0 {
+                self.nz[i] += 1;
+            }
+        }
+        self.known = known;
+        self.version += 1;
+    }
+
+    /// Chronological (oldest→newest) ring contents for `id`.
+    fn fill_history(&self, id: AdapterId, out: &mut Vec<f64>) {
+        out.clear();
+        let i = id as usize;
+        if i >= self.hist_n.len() {
+            return;
+        }
+        let base = i * self.history_len;
+        let n = self.hist_n[i] as usize;
+        if n < self.history_len {
+            out.extend_from_slice(&self.hist[base..base + n]);
+        } else {
+            let pos = self.hist_pos[i] as usize;
+            for k in 0..n {
+                out.push(self.hist[base + (pos + k) % self.history_len]);
             }
         }
     }
 
+    /// Snapshot of `id`'s TPS history, oldest→newest (tests and
+    /// inspection; the hot path never materializes this).
+    pub fn history_of(&self, id: AdapterId) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.fill_history(id, &mut out);
+        out
+    }
+
+    /// One adapter's next-step projection from its ring — the same
+    /// value the pre-index tracker computed from its grow-and-shift
+    /// `Vec` history.
+    fn project_one(&self, id: AdapterId, buf: &mut Vec<f64>) -> f64 {
+        let i = id as usize;
+        let n = self.hist_n[i] as usize;
+        if self.nz[i] == 0 {
+            // all samples zero: last value is 0 and a linear fit is
+            // (slope 0, intercept 0) — both project exactly 0.0
+            return 0.0;
+        }
+        let base = i * self.history_len;
+        let last = if n < self.history_len {
+            self.hist[base + n - 1]
+        } else {
+            let pos = self.hist_pos[i] as usize;
+            self.hist[base + (pos + self.history_len - 1) % self.history_len]
+        };
+        if self.last_value_only || n < 3 {
+            return last;
+        }
+        self.fill_history(id, buf);
+        let (slope, intercept) = linear_fit(buf);
+        (slope * n as f64 + intercept).max(0.0)
+    }
+
+    /// Refresh the projection cache if the window rolled or the
+    /// ablation flag flipped since it was last built.
+    pub fn ensure_projections(&mut self) {
+        if self.cached == Some((self.version, self.last_value_only)) {
+            return;
+        }
+        let known = std::mem::take(&mut self.known);
+        let mut buf = std::mem::take(&mut self.fit_buf);
+        let mut total = 0.0f64;
+        for &id in &known {
+            let p = self.project_one(id, &mut buf);
+            self.proj[id as usize] = p;
+            total += p; // ascending-id order, like the old map sum
+        }
+        self.known = known;
+        self.fit_buf = buf;
+        self.total_proj = total;
+        self.cached = Some((self.version, self.last_value_only));
+    }
+
+    /// Known adapter ids (rolled at least once), ascending.
+    pub fn known_ids(&self) -> &[AdapterId] {
+        &self.known
+    }
+
+    /// Dense per-id projections; valid for ids in
+    /// [`Self::known_ids`] after [`Self::ensure_projections`]
+    /// (never-rolled ids read 0.0).
+    pub fn projections(&self) -> &[f64] {
+        &self.proj
+    }
+
     /// Projected TPS for the *next* time step per adapter: linear trend
     /// over the history, evaluated one step ahead, clamped to ≥ 0.
-    /// Unseen adapters project 0.
-    pub fn projected_tps(&self) -> BTreeMap<AdapterId, f64> {
-        self.history
+    /// Unseen adapters project 0. (Map-shaped accessor for cold
+    /// paths; served from the projection cache.)
+    pub fn projected_tps(&mut self) -> BTreeMap<AdapterId, f64> {
+        self.ensure_projections();
+        self.known
             .iter()
-            .map(|(&id, h)| {
-                let proj = if self.last_value_only || h.len() < 3 {
-                    *h.last().unwrap_or(&0.0)
-                } else {
-                    let (slope, intercept) = linear_fit(h);
-                    (slope * h.len() as f64 + intercept).max(0.0)
-                };
-                (id, proj)
-            })
+            .map(|&id| (id, self.proj[id as usize]))
             .collect()
     }
 
     /// Last completed-window TPS (no extrapolation), for reporting.
     pub fn last_tps(&self) -> BTreeMap<AdapterId, f64> {
-        self.history
+        self.known
             .iter()
-            .map(|(&id, h)| (id, *h.last().unwrap_or(&0.0)))
+            .map(|&id| {
+                let i = id as usize;
+                let n = self.hist_n[i] as usize;
+                let base = i * self.history_len;
+                let last = if n == 0 {
+                    0.0
+                } else if n < self.history_len {
+                    self.hist[base + n - 1]
+                } else {
+                    let pos = self.hist_pos[i] as usize;
+                    self.hist[base
+                        + (pos + self.history_len - 1) % self.history_len]
+                };
+                (id, last)
+            })
             .collect()
     }
 
     /// Cluster-wide projected tokens/sec for the next time step — the
     /// autoscaler's demand-side load signal
-    /// (`autoscale::ScaleSignals::projected_tps`).
-    pub fn total_projected_tps(&self) -> f64 {
-        self.projected_tps().values().sum()
+    /// (`autoscale::ScaleSignals::projected_tps`). Cached alongside
+    /// the per-adapter projections.
+    pub fn total_projected_tps(&mut self) -> f64 {
+        self.ensure_projections();
+        self.total_proj
     }
 }
 
@@ -129,7 +324,8 @@ mod tests {
         // history: 100..500, trend +100/step -> projection ~600
         let proj = d.projected_tps()[&0];
         assert!((proj - 600.0).abs() < 1.0, "proj={proj}");
-        // ablation: last-value-only projects 500
+        // ablation: last-value-only projects 500 — and must bust the
+        // projection cache built above under the other flag value
         let mut d2 = d.clone();
         d2.last_value_only = true;
         assert_eq!(d2.projected_tps()[&0], 500.0);
@@ -162,6 +358,124 @@ mod tests {
             d.record(0, 1);
             d.roll_window();
         }
-        assert_eq!(d.history[&0].len(), 3);
+        assert_eq!(d.history_of(0).len(), 3);
+    }
+
+    #[test]
+    fn ring_keeps_newest_samples_in_order() {
+        let mut d = DemandTracker::new(1.0, 3);
+        for step in 1..=5u64 {
+            d.record(0, step * 10);
+            d.roll_window();
+        }
+        // rolled 10,20,30,40,50 through a 3-deep ring
+        assert_eq!(d.history_of(0), vec![30.0, 40.0, 50.0]);
+        assert_eq!(d.last_tps()[&0], 50.0);
+    }
+
+    #[test]
+    fn cache_invalidates_on_roll_and_new_adapter() {
+        let mut d = DemandTracker::new(1.0, 8);
+        d.record(0, 100);
+        d.roll_window();
+        assert_eq!(d.total_projected_tps(), 100.0);
+        // a fresh adapter only enters the projections once rolled
+        d.record(1, 50);
+        assert_eq!(d.projected_tps().len(), 1);
+        d.roll_window();
+        let m = d.projected_tps();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[&1], 50.0);
+    }
+
+    /// The dense/ring tracker must reproduce the pre-index
+    /// map-of-vecs tracker bit for bit: same ids, same projections,
+    /// same total, under a randomized record/roll schedule.
+    #[test]
+    fn matches_map_reference_bitwise() {
+        use crate::util::rng::Pcg32;
+
+        struct Reference {
+            window: f64,
+            history_len: usize,
+            current: BTreeMap<AdapterId, f64>,
+            history: BTreeMap<AdapterId, Vec<f64>>,
+            last_value_only: bool,
+        }
+        impl Reference {
+            fn roll(&mut self) {
+                let current = std::mem::take(&mut self.current);
+                let ids: std::collections::BTreeSet<AdapterId> = self
+                    .history
+                    .keys()
+                    .copied()
+                    .chain(current.keys().copied())
+                    .collect();
+                for id in ids {
+                    let tps = current.get(&id).copied().unwrap_or(0.0)
+                        / self.window;
+                    let h = self.history.entry(id).or_default();
+                    h.push(tps);
+                    if h.len() > self.history_len {
+                        h.remove(0);
+                    }
+                }
+            }
+            fn projected(&self) -> BTreeMap<AdapterId, f64> {
+                self.history
+                    .iter()
+                    .map(|(&id, h)| {
+                        let proj = if self.last_value_only || h.len() < 3
+                        {
+                            *h.last().unwrap_or(&0.0)
+                        } else {
+                            let (slope, intercept) = linear_fit(h);
+                            (slope * h.len() as f64 + intercept)
+                                .max(0.0)
+                        };
+                        (id, proj)
+                    })
+                    .collect()
+            }
+        }
+
+        for flag in [false, true] {
+            let mut d = DemandTracker::new(2.0, 4);
+            d.last_value_only = flag;
+            let mut r = Reference {
+                window: 2.0,
+                history_len: 4,
+                current: BTreeMap::new(),
+                history: BTreeMap::new(),
+                last_value_only: flag,
+            };
+            let mut rng = Pcg32::new(42);
+            for _ in 0..40 {
+                for _ in 0..(rng.next_u32() % 8) {
+                    let id = rng.next_u32() % 9;
+                    let tokens = (rng.next_u32() % 1000) as u64;
+                    d.record(id, tokens);
+                    *r.current.entry(id).or_insert(0.0) +=
+                        tokens as f64;
+                }
+                d.roll_window();
+                r.roll();
+                let got = d.projected_tps();
+                let want = r.projected();
+                assert_eq!(got.len(), want.len());
+                for (id, w) in &want {
+                    assert_eq!(
+                        got[id].to_bits(),
+                        w.to_bits(),
+                        "adapter {id} diverged (flag={flag})"
+                    );
+                }
+                let total: f64 = want.values().sum();
+                assert_eq!(
+                    d.total_projected_tps().to_bits(),
+                    total.to_bits()
+                );
+            }
+        }
     }
 }

@@ -1,7 +1,14 @@
 //! Request routing: the probabilistic routing table plus the Toppings
 //! baseline's request-level least-work router.
+//!
+//! The least-work router is index-backed: server loads live in an
+//! [`ArgminTree`], so routing a request is an O(1) root read and a
+//! load change is an O(log n) point update, instead of the former
+//! O(n_servers) scan per arrival. Ties still resolve to the lowest
+//! server id, bit-identical to the old scan.
 
 use crate::placement::Assignment;
+use crate::util::argmin::ArgminTree;
 use crate::util::rng::Pcg32;
 use crate::workload::{AdapterId, ServerId};
 
@@ -50,34 +57,59 @@ impl RoutingTable {
 ///    assignments just never change);
 ///  * `Toppings` — request-level global least-outstanding-work router,
 ///    rank-agnostic, with every adapter replicated on every server.
+///    Loads are held in an argmin tree; the caller pushes load
+///    changes via [`Router::update_load`] / [`Router::set_loads`]
+///    (masked servers carry `f64::INFINITY`).
 #[derive(Debug, Clone)]
 pub enum Router {
     Table(RoutingTable),
-    Toppings { n_servers: usize },
+    Toppings { tree: ArgminTree },
 }
 
 impl Router {
-    /// Route one request. `outstanding_work[s]` is the live estimate of
-    /// queued + running service seconds on server s (what Toppings
-    /// inspects; the table policies ignore it).
-    pub fn route(
-        &self,
-        adapter: AdapterId,
-        outstanding_work: &[f64],
-        rng: &mut Pcg32,
-    ) -> ServerId {
+    /// A least-work router over `n_servers` slots, all loads masked
+    /// (`INFINITY`) until the first `update_load`/`set_loads`.
+    pub fn toppings(n_servers: usize) -> Router {
+        Router::Toppings {
+            tree: ArgminTree::new(n_servers),
+        }
+    }
+
+    /// Route one request: φ-sample the table, or read the argmin root
+    /// for Toppings (lowest server id among load ties, matching the
+    /// pre-index linear scan bit-for-bit).
+    pub fn route(&self, adapter: AdapterId, rng: &mut Pcg32) -> ServerId {
         match self {
             Router::Table(table) => table.route(adapter, rng),
-            Router::Toppings { n_servers } => {
-                debug_assert_eq!(outstanding_work.len(), *n_servers);
-                let mut best = 0;
-                for s in 1..*n_servers {
-                    if outstanding_work[s] < outstanding_work[best] {
-                        best = s;
-                    }
-                }
-                best
-            }
+            Router::Toppings { tree } => tree.argmin(),
+        }
+    }
+
+    /// Publish server `s`'s outstanding-work estimate (O(log n);
+    /// no-op for table routers). Use `f64::INFINITY` to mask a
+    /// non-routable (draining/cold) server.
+    #[inline]
+    pub fn update_load(&mut self, s: ServerId, load: f64) {
+        if let Router::Toppings { tree } = self {
+            tree.update(s, load);
+        }
+    }
+
+    /// Bulk-publish every server's load in one O(n) rebuild (no-op
+    /// for table routers).
+    pub fn set_loads(&mut self, loads: &[f64]) {
+        if let Router::Toppings { tree } = self {
+            debug_assert_eq!(loads.len(), tree.len());
+            tree.rebuild(|i| loads[i]);
+        }
+    }
+
+    /// The load index, when this is a Toppings router (parity
+    /// checks and tests).
+    pub fn load_index(&self) -> Option<&ArgminTree> {
+        match self {
+            Router::Table(_) => None,
+            Router::Toppings { tree } => Some(tree),
         }
     }
 
@@ -125,10 +157,27 @@ mod tests {
 
     #[test]
     fn toppings_picks_least_work() {
-        let r = Router::Toppings { n_servers: 3 };
+        let mut r = Router::toppings(3);
         let mut rng = Pcg32::new(2);
-        assert_eq!(r.route(0, &[5.0, 1.0, 3.0], &mut rng), 1);
-        assert_eq!(r.route(7, &[0.0, 0.0, 0.0], &mut rng), 0); // ties -> lowest id
+        r.set_loads(&[5.0, 1.0, 3.0]);
+        assert_eq!(r.route(0, &mut rng), 1);
+        r.set_loads(&[0.0, 0.0, 0.0]);
+        assert_eq!(r.route(7, &mut rng), 0); // ties -> lowest id
+        // point updates steer the argmin too
+        r.update_load(2, -1.0);
+        assert_eq!(r.route(7, &mut rng), 2);
+        r.update_load(2, 0.0);
+        assert_eq!(r.route(7, &mut rng), 0);
+    }
+
+    #[test]
+    fn toppings_masks_with_infinity() {
+        let mut r = Router::toppings(4);
+        let mut rng = Pcg32::new(5);
+        r.set_loads(&[2.0, f64::INFINITY, 1.0, 1.0]);
+        assert_eq!(r.route(0, &mut rng), 2);
+        r.update_load(2, f64::INFINITY);
+        assert_eq!(r.route(0, &mut rng), 3);
     }
 
     #[test]
@@ -138,6 +187,6 @@ mod tests {
         asg.add(0, 2, 1.0);
         r.update_table(RoutingTable::from_assignment(&asg));
         let mut rng = Pcg32::new(3);
-        assert_eq!(r.route(0, &[], &mut rng), 2);
+        assert_eq!(r.route(0, &mut rng), 2);
     }
 }

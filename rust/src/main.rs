@@ -84,7 +84,8 @@ fn usage() {
          [--shards N] [--report-out file.json]\n         \
          [--trace-out trace.json] [--trace-last N] \
          [--metrics-out file.prom]\n\
-         bench    [--scenario full|ci] [--shards N] [--seed S] \
+         bench    [--scenario full|ci|control] [--servers N] \
+         [--shards N] [--seed S]\n         \
          [--out BENCH_sim.json]\n\
          autoscale [--system <kind>|--all] [--slo-ttft MS] \
          [--slo-e2e MS]\n         \
@@ -508,15 +509,19 @@ fn peak_rss_bytes() -> u64 {
 fn cmd_bench(args: &Args) -> Result<(), String> {
     use loraserve::util::json::Json;
     let scenario = args.get_or("scenario", "full");
+    if scenario == "control" {
+        return cmd_bench_control(args);
+    }
     // (servers, rps, duration): `full` is the perf-trajectory
     // scenario; `ci` is the same shape scaled down to stay fast on
-    // shared runners.
+    // shared runners. `control` (dispatched above) is the big-fleet
+    // coordinator benchmark.
     let (n_servers, rps, duration) = match scenario {
         "full" => (16usize, 240.0, 300.0),
         "ci" => (8usize, 80.0, 120.0),
         other => {
             return Err(format!(
-                "unknown scenario '{other}' (full | ci)"
+                "unknown scenario '{other}' (full | ci | control)"
             ))
         }
     };
@@ -602,6 +607,175 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         ("servers", n_servers.into()),
         ("host_cores", host_cores.into()),
         ("runs", Json::Arr(runs.iter().map(run_json).collect())),
+        ("events_per_sec_seq", Json::Num(seq_eps)),
+        ("events_per_sec", Json::Num(par_eps)),
+        ("speedup", Json::Num(speedup)),
+        ("peak_rss_bytes", Json::from(peak_rss_bytes())),
+    ]);
+    let out = args.get_or("out", "BENCH_sim.json");
+    write_out(out, &out_json.to_string())?;
+    println!("[bench written {out}]");
+    Ok(())
+}
+
+/// `bench --scenario control`: the big-fleet control-plane benchmark
+/// (≥512 servers by default). Two arms stress the coordinator hot
+/// paths the indexed control plane optimizes:
+///
+/// * `toppings` — least-work routing over the full fleet, which
+///   forces an epoch barrier *per arrival*: each request costs one
+///   argmin query plus O(due-lanes) flush work instead of the old
+///   O(fleet) load scan + O(fleet) lane sweep;
+/// * `triggered` — LORASERVE with drift-triggered rebalancing and
+///   remote attach over thousands of adapters: every check reads the
+///   ring-buffer demand projections and the delta-maintained
+///   utilization vector instead of rebuilding BTreeMaps.
+///
+/// Each arm runs sequential and sharded and must produce
+/// byte-identical report digests (the determinism contract at fleet
+/// scale). The aggregate events/sec lands in `BENCH_sim.json` under
+/// the same top-level keys the CI regression gate reads for the other
+/// scenarios.
+fn cmd_bench_control(args: &Args) -> Result<(), String> {
+    use loraserve::config::{RebalanceConfig, RebalanceMode};
+    use loraserve::util::json::Json;
+    let n_servers = args.get_usize("servers", 512)?.max(2);
+    let seed = args.get_u64("seed", 0)?;
+    let host_cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let shards = args
+        .get_usize("shards", host_cores.max(4).min(n_servers))?
+        .clamp(1, n_servers);
+
+    // Arm 1: per-arrival-barrier least-work routing at fleet width.
+    let toppings_trace = azure::generate(&azure::AzureConfig {
+        rps: 400.0,
+        duration: 120.0,
+        seed,
+        lengths: loraserve::trace::LengthModel::fixed(256, 32),
+        ..Default::default()
+    });
+    let toppings_cfg = sim::SimConfig::new(
+        ClusterConfig {
+            n_servers,
+            ..Default::default()
+        },
+        SystemKind::Toppings,
+    );
+
+    // Arm 2: reactive control plane over a wide adapter catalog.
+    let triggered_trace = azure::generate(&azure::AzureConfig {
+        rps: 300.0,
+        duration: 120.0,
+        seed,
+        adapters_per_rank: 400, // 2000 adapters across 5 rank classes
+        lengths: loraserve::trace::LengthModel::fixed(256, 32),
+        ..Default::default()
+    });
+    let reb = RebalanceConfig {
+        mode: RebalanceMode::Triggered,
+        remote_attach: true,
+        ..ClusterConfig::default().rebalance
+    };
+    let triggered_cfg = sim::SimConfig::new(
+        ClusterConfig {
+            n_servers,
+            rebalance_period: 30.0,
+            ..Default::default()
+        },
+        SystemKind::LoraServe,
+    )
+    .with_rebalance(reb);
+
+    let arms: Vec<(&str, &Trace, sim::SimConfig)> = vec![
+        ("toppings", &toppings_trace, toppings_cfg),
+        ("triggered", &triggered_trace, triggered_cfg),
+    ];
+    println!(
+        "bench 'control': {n_servers} servers, {} host cores — \
+         sequential vs {shards} shards per arm",
+        host_cores,
+    );
+    let mut arm_jsons: Vec<Json> = Vec::new();
+    let mut seq_events = 0u64;
+    let mut seq_wall = 0.0f64;
+    let mut par_events = 0u64;
+    let mut par_wall = 0.0f64;
+    for (name, trace, cfg) in arms {
+        let mut runs: Vec<(usize, u64, f64)> = Vec::new();
+        let mut digests: Vec<String> = Vec::new();
+        for s in [1, shards] {
+            let cfg = cfg.clone().with_shards(s);
+            let t0 = std::time::Instant::now();
+            let mut rep = sim::run(trace, &cfg);
+            let wall = t0.elapsed().as_secs_f64();
+            println!(
+                "  {name} shards={s}: {} events in {wall:.3}s \
+                 ({:.0} events/sec)",
+                rep.events,
+                rep.events as f64 / wall.max(1e-9),
+            );
+            runs.push((s, rep.events, wall));
+            digests.push(rep.to_json_string());
+            if s == shards {
+                break;
+            }
+        }
+        if digests.windows(2).any(|w| w[0] != w[1]) {
+            return Err(format!(
+                "DETERMINISM VIOLATION: arm '{name}' digests \
+                 differ between shards=1 and shards={shards}"
+            ));
+        }
+        let (_, se, sw) = runs[0];
+        let &(_, pe, pw) = runs.last().unwrap();
+        seq_events += se;
+        seq_wall += sw;
+        par_events += pe;
+        par_wall += pw;
+        arm_jsons.push(Json::obj(vec![
+            ("arm", name.into()),
+            ("requests", trace.requests.len().into()),
+            (
+                "runs",
+                Json::Arr(
+                    runs.iter()
+                        .map(|&(s, e, w)| {
+                            Json::obj(vec![
+                                ("shards", s.into()),
+                                ("events", Json::from(e)),
+                                ("wall_s", Json::Num(w)),
+                                (
+                                    "events_per_sec",
+                                    Json::Num(
+                                        e as f64 / w.max(1e-9),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "events_per_sec",
+                Json::Num(pe as f64 / pw.max(1e-9)),
+            ),
+        ]));
+    }
+    let seq_eps = seq_events as f64 / seq_wall.max(1e-9);
+    let par_eps = par_events as f64 / par_wall.max(1e-9);
+    let speedup = par_eps / seq_eps.max(1e-9);
+    println!(
+        "  aggregate: {par_eps:.0} events/sec sharded \
+         ({speedup:.2}x over sequential)"
+    );
+    let out_json = Json::obj(vec![
+        ("scenario", "control".into()),
+        ("seed", Json::from(seed)),
+        ("servers", n_servers.into()),
+        ("host_cores", host_cores.into()),
+        ("arms", Json::Arr(arm_jsons)),
         ("events_per_sec_seq", Json::Num(seq_eps)),
         ("events_per_sec", Json::Num(par_eps)),
         ("speedup", Json::Num(speedup)),

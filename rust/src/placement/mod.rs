@@ -180,16 +180,21 @@ impl Assignment {
 
     /// Total bytes that must move to go from `prev` to `self`:
     /// adapters newly appearing on a server they weren't on.
+    /// Membership in the previous copy set is a binary search over a
+    /// sorted scratch vector (reused across adapters), not the old
+    /// O(copies²) `Vec::contains` inner loop — at replication-heavy
+    /// fan-outs the quadratic term dominated every rebalance.
     pub fn migration_bytes(&self, prev: &Assignment, adapters: &AdapterSet) -> u64 {
         let mut bytes = 0;
+        let mut old: Vec<ServerId> = Vec::new();
         for (a, ss) in self.shares.iter().enumerate() {
-            let old: Vec<ServerId> = prev
-                .shares
-                .get(a)
-                .map(|v| v.iter().map(|(s, _)| *s).collect())
-                .unwrap_or_default();
+            old.clear();
+            if let Some(v) = prev.shares.get(a) {
+                old.extend(v.iter().map(|(s, _)| *s));
+            }
+            old.sort_unstable();
             for &(s, _) in ss {
-                if !old.contains(&s) {
+                if old.binary_search(&s).is_err() {
                     bytes += adapters.get(a as AdapterId).size_bytes;
                 }
             }

@@ -162,9 +162,7 @@ impl RealCluster {
             }));
         }
         let router = match cfg.system {
-            SystemKind::Toppings => Router::Toppings {
-                n_servers: cfg.n_servers,
-            },
+            SystemKind::Toppings => Router::toppings(cfg.n_servers),
             _ => Router::Table(RoutingTable::from_assignment(&assignment)),
         };
         let rng = Pcg32::with_stream(cfg.seed, 0x2ea1);
@@ -223,11 +221,12 @@ impl RealCluster {
                 req.adapter,
                 (req.prompt.len() + req.output_len) as u64,
             );
-            let target = self.router.route(
-                req.adapter,
-                &outstanding,
-                &mut self.rng,
-            );
+            // the outstanding estimates changed since the last route
+            // (absorbed completions + our own additions): re-seed the
+            // least-work index in bulk before routing
+            self.router.set_loads(&outstanding);
+            let target =
+                self.router.route(req.adapter, &mut self.rng);
             let est = 0.001
                 * (req.prompt.len() as f64
                     + 4.0 * req.output_len as f64);

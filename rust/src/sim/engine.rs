@@ -49,7 +49,7 @@
 use super::cluster::SimConfig;
 use super::event::{EventQueue, SimEvent};
 use super::rebalance::{
-    imbalance_ratio, plan_incremental, RebalanceTrigger,
+    plan_incremental, RebalanceTrigger, UtilCache,
 };
 use super::report::SimReport;
 use super::server::{build_policy, Completion, SimReq, SimServer};
@@ -65,6 +65,7 @@ use crate::placement::loraserve::LoraServePlacer;
 use crate::placement::{place_onto, Assignment, Placer};
 use crate::pool::AdapterPool;
 use crate::trace::Trace;
+use crate::util::argmin::ArgminTree;
 use crate::util::rng::Pcg32;
 use crate::workload::{AdapterId, AdapterSet, ServerId};
 use std::collections::BTreeMap;
@@ -265,6 +266,11 @@ struct Lane {
     heap: EventQueue<LaneEvent>,
     outbox: Vec<Completion>,
     events: u64,
+    /// Set by `flush_lane` when the lane pops at least one event.
+    /// After a parallel flush the coordinator sweeps these to find
+    /// which lanes to absorb and which router loads went stale
+    /// (the inline path tracks both incrementally instead).
+    touched: bool,
 }
 
 /// Below this many pending lane events a parallel flush costs more in
@@ -292,6 +298,7 @@ fn flush_lane(
         }
         let Some((t, ev)) = lane.heap.pop() else { break };
         lane.events += 1;
+        lane.touched = true;
         match ev {
             LaneEvent::Deliver { sreq, ready } => {
                 if ready {
@@ -329,8 +336,6 @@ pub(crate) struct EngineState {
     pub last_tick: f64,
     pub win_completed: u64,
     pub win_violations: u64,
-    /// Scratch buffer for the per-arrival load signal.
-    pub outstanding_buf: Vec<f64>,
     /// In-flight batched drain migrations; `SimEvent::MigrationDone`
     /// carries an index into this list.
     pub migrations: Vec<Vec<AdapterId>>,
@@ -342,9 +347,34 @@ pub(crate) struct EngineState {
     /// Per-server event lanes, indexed like `servers` (the sharded
     /// half of the event loop).
     lanes: Vec<Lane>,
-    /// Σ `lanes[s].events`, refreshed after every flush so the
+    /// Σ `lanes[s].events`, maintained incrementally so the
     /// `max_events` backstop check on the control path stays O(1).
     lane_events: u64,
+    /// Σ `lanes[s].heap.len()`, maintained by `lane_push` and the
+    /// flush paths: the inline/parallel flush decision and the
+    /// nothing-pending early-out read it without scanning lanes.
+    lane_backlog: usize,
+    /// Argmin index over each lane's next event time (∞ = empty
+    /// lane). An inline barrier flush visits only lanes with an
+    /// event due by the horizon instead of scanning the whole fleet.
+    lane_times: ArgminTree,
+    /// Lanes that popped at least one event since the last
+    /// completion merge; merged in sorted-index order so the digest
+    /// matches the old scan-everything merge bit for bit.
+    flushed_lanes: Vec<ServerId>,
+    /// A parallel flush ran since the last merge: sweep all lanes
+    /// (the per-lane list is only maintained on the inline path).
+    flushed_all: bool,
+    /// Least-loaded routing only: servers whose load signal changed
+    /// since the router's argmin tree was last refreshed (dirty
+    /// list + dedup flags). Empty for table-routed systems.
+    router_dirty: Vec<ServerId>,
+    router_dirty_flag: Vec<bool>,
+    /// Delta-maintained per-server utilization (triggered/hybrid
+    /// rebalance modes): refreshed from projection deltas at each
+    /// trigger check instead of the O(adapters × copies) full
+    /// `server_utils` recompute.
+    pub util_cache: Option<UtilCache>,
 }
 
 /// The discrete-event cluster simulation: arrivals → routing →
@@ -507,9 +537,7 @@ impl<'a> SimEngine<'a> {
             RoutingPolicy::Table => {
                 Router::Table(RoutingTable::from_assignment(&assignment))
             }
-            RoutingPolicy::LeastLoaded => {
-                Router::Toppings { n_servers: max_n }
-            }
+            RoutingPolicy::LeastLoaded => Router::toppings(max_n),
         };
 
         // The demand tracker's window must match whoever rolls it: the
@@ -591,6 +619,14 @@ impl<'a> SimEngine<'a> {
         }
         let trigger =
             reactive.then(|| RebalanceTrigger::new(spec.rebalance));
+        // Delta-maintained utilization vector for the trigger's
+        // imbalance reads; re-pinned on every assignment swap.
+        let util_cache = reactive.then(|| {
+            let mut c =
+                UtilCache::new(max_n, &trace.adapters, &oppoints);
+            c.rebuild(&assignment);
+            c
+        });
         let controller: Option<ScaleController> =
             cfg.autoscale.map(ScaleController::new);
         if let Some(a) = cfg.autoscale {
@@ -630,7 +666,6 @@ impl<'a> SimEngine<'a> {
                 last_tick: 0.0,
                 win_completed: 0,
                 win_violations: 0,
-                outstanding_buf: vec![0.0f64; max_n],
                 migrations: Vec::new(),
                 trigger,
                 events: 0,
@@ -639,9 +674,23 @@ impl<'a> SimEngine<'a> {
                         heap: EventQueue::new(),
                         outbox: Vec::new(),
                         events: 0,
+                        touched: false,
                     })
                     .collect(),
                 lane_events: 0,
+                lane_backlog: 0,
+                lane_times: ArgminTree::new(max_n),
+                flushed_lanes: Vec::new(),
+                flushed_all: false,
+                // least-loaded: start all-dirty so the first refresh
+                // seeds every server's key (masked servers go to ∞)
+                router_dirty: if table_routed {
+                    Vec::new()
+                } else {
+                    (0..max_n).collect()
+                },
+                router_dirty_flag: vec![!table_routed; max_n],
+                util_cache,
             },
         }
     }
@@ -702,68 +751,179 @@ impl<'a> SimEngine<'a> {
     /// on scoped worker threads — unless observability is on (trace
     /// emission must stay in deterministic lane order through the
     /// shared sink) or the pending backlog is too small to amortize a
-    /// spawn. Either path performs identical per-lane work in the same
-    /// per-lane order, so results are bit-identical for any shard
-    /// count.
+    /// spawn. The inline path is index-directed: the `lane_times`
+    /// argmin tree yields only the lanes with an event due by
+    /// `horizon`, so a barrier over a mostly-idle fleet costs O(due ·
+    /// log n) instead of O(fleet). Each lane's computation is the
+    /// same regardless of which path (or thread) runs it and
+    /// completions are still merged in lane-index order, so results
+    /// are bit-identical for any shard count.
     fn flush_lanes(&mut self, horizon: f64) {
-        let pending: usize =
-            self.st.lanes.iter().map(|l| l.heap.len()).sum();
-        if pending == 0 {
+        if self.st.lane_backlog == 0 {
             return;
         }
-        let timeout = self.cfg.cluster.slo.timeout;
-        let cap = self.cfg.max_events.saturating_add(1);
         let inline = self.shards <= 1
             || self.obs.on()
-            || pending < PARALLEL_FLUSH_MIN;
-        let shards = self.shards;
-        let st = &mut self.st;
-        let servers = &mut st.servers;
-        let lanes = &mut st.lanes;
+            || self.st.lane_backlog < PARALLEL_FLUSH_MIN;
         if inline {
-            for (srv, lane) in servers.iter_mut().zip(lanes.iter_mut())
+            while self.st.lane_backlog > 0
+                && self.st.lane_times.min_key() <= horizon
             {
-                flush_lane(srv, lane, horizon, timeout, cap);
+                let s = self.st.lane_times.argmin();
+                let before = self.st.lanes[s].events;
+                self.flush_one_lane(s, horizon);
+                if self.st.lanes[s].events == before {
+                    // no progress: the lane hit the `max_events` cap —
+                    // bail out and let the control-thread budget check
+                    // raise the real panic
+                    break;
+                }
             }
         } else {
-            let chunk = servers.len().div_ceil(shards);
-            std::thread::scope(|scope| {
-                for (srvs, lns) in servers
-                    .chunks_mut(chunk)
-                    .zip(lanes.chunks_mut(chunk))
-                {
-                    scope.spawn(move || {
-                        for (srv, lane) in
-                            srvs.iter_mut().zip(lns.iter_mut())
-                        {
-                            flush_lane(srv, lane, horizon, timeout, cap);
-                        }
-                    });
+            let timeout = self.cfg.cluster.slo.timeout;
+            let cap = self.cfg.max_events.saturating_add(1);
+            let shards = self.shards;
+            let table_routed = self.table_routed;
+            let st = &mut self.st;
+            {
+                let servers = &mut st.servers;
+                let lanes = &mut st.lanes;
+                let chunk = servers.len().div_ceil(shards);
+                std::thread::scope(|scope| {
+                    for (srvs, lns) in servers
+                        .chunks_mut(chunk)
+                        .zip(lanes.chunks_mut(chunk))
+                    {
+                        scope.spawn(move || {
+                            for (srv, lane) in
+                                srvs.iter_mut().zip(lns.iter_mut())
+                            {
+                                flush_lane(
+                                    srv, lane, horizon, timeout, cap,
+                                );
+                            }
+                        });
+                    }
+                });
+            }
+            // O(fleet) bookkeeping, amortized over the
+            // ≥ PARALLEL_FLUSH_MIN events the workers just processed
+            let EngineState {
+                lanes,
+                lane_times,
+                lane_backlog,
+                lane_events,
+                flushed_all,
+                router_dirty,
+                router_dirty_flag,
+                ..
+            } = st;
+            *lane_backlog = 0;
+            *lane_events = 0;
+            for (s, lane) in lanes.iter_mut().enumerate() {
+                *lane_backlog += lane.heap.len();
+                *lane_events += lane.events;
+                if lane.touched {
+                    lane.touched = false;
+                    if !table_routed && !router_dirty_flag[s] {
+                        router_dirty_flag[s] = true;
+                        router_dirty.push(s);
+                    }
                 }
+            }
+            lane_times.rebuild(|i| {
+                lanes[i].heap.peek_time().unwrap_or(f64::INFINITY)
             });
+            *flushed_all = true;
         }
-        st.lane_events = st.lanes.iter().map(|l| l.events).sum();
+        #[cfg(debug_assertions)]
+        {
+            let sum: usize =
+                self.st.lanes.iter().map(|l| l.heap.len()).sum();
+            assert_eq!(
+                self.st.lane_backlog, sum,
+                "lane backlog counter out of sync"
+            );
+        }
+    }
+
+    /// Advance one lane to `horizon` with full incremental
+    /// bookkeeping: backlog and event counters, the next-due argmin
+    /// key, the merge list, and the router dirty mark. Used by the
+    /// index-directed barrier flush and by drain-time re-routing
+    /// (each least-loaded re-route must observe the previous
+    /// delivery).
+    fn flush_one_lane(&mut self, s: ServerId, horizon: f64) {
+        let timeout = self.cfg.cluster.slo.timeout;
+        let cap = self.cfg.max_events.saturating_add(1);
+        let table_routed = self.table_routed;
+        let st = &mut self.st;
+        let lane = &mut st.lanes[s];
+        let len_before = lane.heap.len();
+        let ev_before = lane.events;
+        flush_lane(&mut st.servers[s], lane, horizon, timeout, cap);
+        lane.touched = false;
+        let len_after = lane.heap.len();
+        let ev_after = lane.events;
+        let peek = lane.heap.peek_time().unwrap_or(f64::INFINITY);
+        st.lane_backlog -= len_before;
+        st.lane_backlog += len_after;
+        st.lane_events += ev_after - ev_before;
+        st.lane_times.update(s, peek);
+        if ev_after > ev_before {
+            st.flushed_lanes.push(s);
+            if !table_routed && !st.router_dirty_flag[s] {
+                st.router_dirty_flag[s] = true;
+                st.router_dirty.push(s);
+            }
+        }
     }
 
     /// Fold every lane's completions into the report, in lane-index
     /// order then per-lane completion order — both independent of the
     /// shard count, so every sample stream's push order (and therefore
-    /// the digest) is byte-identical sharded or not.
+    /// the digest) is byte-identical sharded or not. Only lanes that
+    /// actually popped events since the last merge are visited (the
+    /// sorted `flushed_lanes` list after inline flushes, everything
+    /// after a parallel flush) — same order, same result, no O(fleet)
+    /// scan per barrier.
     fn merge_completions(&mut self) {
-        for s in 0..self.max_n {
-            if self.st.lanes[s].outbox.is_empty() {
-                continue;
+        if self.st.flushed_all {
+            self.st.flushed_all = false;
+            self.st.flushed_lanes.clear();
+            for s in 0..self.max_n {
+                self.absorb_outbox(s);
             }
-            let outbox = std::mem::take(&mut self.st.lanes[s].outbox);
-            for c in &outbox {
-                self.absorb_completion(s, c);
-            }
-            // hand the buffer back so the next epoch reuses its
-            // capacity instead of re-allocating
-            let mut buf = outbox;
-            buf.clear();
-            self.st.lanes[s].outbox = buf;
+            return;
         }
+        if self.st.flushed_lanes.is_empty() {
+            return;
+        }
+        let mut flushed = std::mem::take(&mut self.st.flushed_lanes);
+        flushed.sort_unstable();
+        flushed.dedup();
+        for &s in &flushed {
+            self.absorb_outbox(s);
+        }
+        // hand the list back so the next epoch reuses its capacity
+        flushed.clear();
+        self.st.flushed_lanes = flushed;
+    }
+
+    /// Absorb one lane's completions (if any) into the report.
+    fn absorb_outbox(&mut self, s: ServerId) {
+        if self.st.lanes[s].outbox.is_empty() {
+            return;
+        }
+        let outbox = std::mem::take(&mut self.st.lanes[s].outbox);
+        for c in &outbox {
+            self.absorb_completion(s, c);
+        }
+        // hand the buffer back so the next epoch reuses its
+        // capacity instead of re-allocating
+        let mut buf = outbox;
+        buf.clear();
+        self.st.lanes[s].outbox = buf;
     }
 
     /// [`SimEngine::run`], then export the observability bundle the
@@ -792,22 +952,117 @@ impl<'a> SimEngine<'a> {
         }
     }
 
-    /// Refresh the load-signal buffer the router inspects. Non-routable
-    /// (cold, provisioning, draining, retired) servers are masked out.
-    fn fill_load_signal(&mut self) {
-        for (s, srv) in self.st.servers.iter().enumerate() {
-            self.st.outstanding_buf[s] =
-                if self.st.topo.state(s) == SrvState::Active {
-                    match self.spec.load_signal {
+    /// Push every dirty server's load signal into the router's argmin
+    /// tree — the incremental replacement for the old per-arrival
+    /// O(fleet) load-buffer scan. Dirty = touched by a lane flush, a
+    /// fetch/migration landing, or a topology transition since the
+    /// last refresh. Non-routable (cold, provisioning, draining,
+    /// retired) servers are masked to ∞.
+    fn refresh_router_loads(&mut self) {
+        let load_signal = self.spec.load_signal;
+        let st = &mut self.st;
+        if !st.router_dirty.is_empty() {
+            let dirty = std::mem::take(&mut st.router_dirty);
+            for &s in &dirty {
+                let load = if st.topo.state(s) == SrvState::Active {
+                    match load_signal {
                         LoadSignal::RequestCount => {
-                            srv.pending_count() as f64
+                            st.servers[s].pending_count() as f64
                         }
-                        LoadSignal::ServiceSeconds => srv.outstanding,
+                        LoadSignal::ServiceSeconds => {
+                            st.servers[s].outstanding
+                        }
                     }
                 } else {
                     f64::INFINITY
                 };
+                st.router.update_load(s, load);
+                st.router_dirty_flag[s] = false;
+            }
+            st.router_dirty = dirty;
+            st.router_dirty.clear();
         }
+        #[cfg(debug_assertions)]
+        self.assert_router_loads();
+    }
+
+    /// Debug net for the dirty-tracking refresh: every tree key must
+    /// equal the signal a full scan would produce (a mismatch means a
+    /// mutation site forgot `mark_router_dirty`), and the tree's
+    /// argmin must equal the linear scan's lowest-index minimum.
+    #[cfg(debug_assertions)]
+    fn assert_router_loads(&self) {
+        let Some(tree) = self.st.router.load_index() else {
+            return;
+        };
+        let keys = tree.keys();
+        for (s, &k) in keys.iter().enumerate() {
+            let want = if self.st.topo.state(s) == SrvState::Active {
+                match self.spec.load_signal {
+                    LoadSignal::RequestCount => {
+                        self.st.servers[s].pending_count() as f64
+                    }
+                    LoadSignal::ServiceSeconds => {
+                        self.st.servers[s].outstanding
+                    }
+                }
+            } else {
+                f64::INFINITY
+            };
+            assert!(
+                k.to_bits() == want.to_bits(),
+                "stale router load for server {s}: tree has {k}, \
+                 scan says {want} (missed dirty mark)"
+            );
+        }
+        let mut scan = 0usize;
+        for (s, &k) in keys.iter().enumerate().skip(1) {
+            if k < keys[scan] {
+                scan = s;
+            }
+        }
+        assert!(
+            tree.argmin() == scan,
+            "argmin tree diverged from linear scan"
+        );
+    }
+
+    /// Mark a server's load signal stale for the least-work router.
+    /// No-op for table-routed systems (the φ table reads no loads).
+    fn mark_router_dirty(&mut self, s: ServerId) {
+        if self.table_routed {
+            return;
+        }
+        let st = &mut self.st;
+        if !st.router_dirty_flag[s] {
+            st.router_dirty_flag[s] = true;
+            st.router_dirty.push(s);
+        }
+    }
+
+    /// Push into a lane's heap, keeping the backlog counter and the
+    /// next-due-lane argmin in sync. Every control-side lane push
+    /// goes through here (lane-internal pushes during a flush are
+    /// reconciled by the flush paths instead).
+    fn lane_push(&mut self, s: ServerId, t: f64, ev: LaneEvent) {
+        let st = &mut self.st;
+        st.lanes[s].heap.push(t, ev);
+        st.lane_backlog += 1;
+        let peek = st.lanes[s]
+            .heap
+            .peek_time()
+            .unwrap_or(f64::INFINITY);
+        st.lane_times.update(s, peek);
+    }
+
+    /// Swap in a new assignment, re-pinning the utilization cache's
+    /// copy sets (triggered/hybrid modes; the cache is `None`
+    /// otherwise and the swap is plain).
+    fn set_assignment(&mut self, next: Assignment) {
+        if let Some(cache) = &mut self.st.util_cache {
+            cache.rebuild(&next);
+        }
+        self.st.assignment = next;
     }
 
     /// Hand one request to `target`: decide how it will be served
@@ -886,9 +1141,7 @@ impl<'a> SimEngine<'a> {
             }
             false
         };
-        self.st.lanes[target]
-            .heap
-            .push(now, LaneEvent::Deliver { sreq, ready });
+        self.lane_push(target, now, LaneEvent::Deliver { sreq, ready });
     }
 
     fn replace_assignment(
@@ -962,7 +1215,7 @@ impl<'a> SimEngine<'a> {
             self.st
                 .router
                 .update_table(RoutingTable::from_assignment(&proposal));
-            self.st.assignment = proposal;
+            self.set_assignment(proposal);
             return;
         }
         let pool = &self.st.pool;
@@ -999,7 +1252,7 @@ impl<'a> SimEngine<'a> {
             .update_table(RoutingTable::from_assignment(&plan.assignment));
         self.st.pool.apply_assignment(&plan.residency);
         self.start_transfers(now, plan.transfers);
-        self.st.assignment = plan.assignment;
+        self.set_assignment(plan.assignment);
     }
 
     fn try_retire(&mut self, s: ServerId, now: f64) -> bool {
@@ -1026,15 +1279,13 @@ impl<'a> SimEngine<'a> {
         let req = self.trace.requests[i];
         self.st.demand.record(req.adapter, req.total_tokens());
         if !self.table_routed {
-            // the φ table never reads the load buffer — refreshing it
-            // per arrival would put an O(n) scan on the hot path
-            self.fill_load_signal();
+            // the φ table never reads the load signal — least-loaded
+            // routing refreshes only the servers dirtied since the
+            // last route, O(dirty · log n) instead of O(fleet)
+            self.refresh_router_loads();
         }
-        let target = self.st.router.route(
-            req.adapter,
-            &self.st.outstanding_buf,
-            &mut self.st.rng,
-        );
+        let target =
+            self.st.router.route(req.adapter, &mut self.st.rng);
         let rank = self.trace.adapters.get(req.adapter).rank;
         // A rank-blind estimate prices every request as if it carried
         // no LoRA cost, so high-rank requests are under-weighted in
@@ -1201,8 +1452,10 @@ impl<'a> SimEngine<'a> {
                 self.st.servers[s].mark_local(a);
             }
             self.st.servers[s].release_waiting(a, now);
+            // released requests change the server's load signal
+            self.mark_router_dirty(s);
             if let Some(dt) = self.st.servers[s].start_iteration(now) {
-                self.st.lanes[s].heap.push(now + dt, LaneEvent::IterDone);
+                self.lane_push(s, now + dt, LaneEvent::IterDone);
             }
         }
         self.retire_sweep(now);
@@ -1269,8 +1522,10 @@ impl<'a> SimEngine<'a> {
                 }
                 self.st.servers[s].release_waiting(a, now);
             }
+            // released requests change the server's load signal
+            self.mark_router_dirty(s);
             if let Some(dt) = self.st.servers[s].start_iteration(now) {
-                self.st.lanes[s].heap.push(now + dt, LaneEvent::IterDone);
+                self.lane_push(s, now + dt, LaneEvent::IterDone);
             }
         }
         self.retire_sweep(now);
@@ -1309,7 +1564,7 @@ impl<'a> SimEngine<'a> {
         if !self.replicate {
             self.st.pool.apply_assignment(&homes_of(&next));
         }
-        self.st.assignment = next;
+        self.set_assignment(next);
         self.st.report.rebalances += 1;
         self.st.report.rebalance_times.push(now);
         if self.obs.on() {
@@ -1352,17 +1607,56 @@ impl<'a> SimEngine<'a> {
             return;
         }
         self.st.demand.roll_window();
-        let projected = self.st.demand.projected_tps();
         let active_ids = self.st.topo.active();
         self.st.report.trigger_checks += 1;
-        let imbalance = imbalance_ratio(
-            &self.st.assignment,
-            self.max_n,
-            &active_ids,
-            &self.trace.adapters,
-            &projected,
-            &self.oppoints,
-        );
+        // Delta path: refresh the maintained per-server utilization
+        // vector from the adapters whose projection moved this window
+        // and read the ratio off it — the O(adapters × copies) full
+        // `server_utils` recompute only runs as a debug net below.
+        self.st.demand.ensure_projections();
+        let imbalance = {
+            let st = &mut self.st;
+            let cache = st
+                .util_cache
+                .as_mut()
+                .expect("trigger active implies util cache");
+            cache.refresh(
+                &st.assignment,
+                st.demand.known_ids(),
+                st.demand.projections(),
+            );
+            cache.imbalance(&active_ids)
+        };
+        #[cfg(debug_assertions)]
+        {
+            let projected = self.st.demand.projected_tps();
+            let utils_full = self.st.assignment.server_utils(
+                self.max_n,
+                &self.trace.adapters,
+                &projected,
+                &self.oppoints,
+            );
+            let cache = self.st.util_cache.as_ref().unwrap();
+            for (s, u) in utils_full.iter().enumerate() {
+                assert!(
+                    cache.utils()[s].to_bits() == u.to_bits(),
+                    "cached util diverged for server {s} \
+                     (missed a refresh delta)"
+                );
+            }
+            let full = super::rebalance::imbalance_ratio(
+                &self.st.assignment,
+                self.max_n,
+                &active_ids,
+                &self.trace.adapters,
+                &projected,
+                &self.oppoints,
+            );
+            assert!(
+                imbalance.to_bits() == full.to_bits(),
+                "cached imbalance diverged from full recompute"
+            );
+        }
         // Only servers with live decode work can exert TBT pressure: a
         // fully drained server's tracker rings are frozen (nothing
         // retires them while `active` is empty), and a stale negative
@@ -1427,6 +1721,9 @@ impl<'a> SimEngine<'a> {
             );
         }
         if fired {
+            // the planner wants the id→tps map; built only on the
+            // rare fired path, not per check
+            let projected = self.st.demand.projected_tps();
             self.triggered_rebalance(now, &projected, &active_ids);
         }
         if self.spec.rebalance.promote_hot > 0 {
@@ -1532,7 +1829,7 @@ impl<'a> SimEngine<'a> {
             self.st
                 .router
                 .update_table(RoutingTable::from_assignment(&proposal));
-            self.st.assignment = proposal;
+            self.set_assignment(proposal);
         } else {
             let pool = &self.st.pool;
             let plan = plan_incremental(
@@ -1573,7 +1870,7 @@ impl<'a> SimEngine<'a> {
                 ));
             self.st.pool.apply_assignment(&plan.residency);
             self.start_transfers(now, plan.transfers);
-            self.st.assignment = plan.assignment;
+            self.set_assignment(plan.assignment);
         }
         self.st.report.rebalances += 1;
         self.st.report.triggered_rebalances += 1;
@@ -1709,6 +2006,8 @@ impl<'a> SimEngine<'a> {
     /// quiesced, copy-free server retires.
     fn on_scale_down(&mut self, now: f64, victim: ServerId) {
         self.st.topo.set(victim, SrvState::Draining);
+        // draining servers are masked out of the least-work index
+        self.mark_router_dirty(victim);
         self.st.servers[victim].draining = true;
         self.st.report.fleet.scale_downs += 1;
         if self.obs.on() {
@@ -1763,34 +2062,22 @@ impl<'a> SimEngine<'a> {
         // re-route not-yet-running work through the swapped table
         // (active decodes finish here)
         let pending = self.st.servers[victim].extract_pending();
-        let timeout = self.cfg.cluster.slo.timeout;
-        let cap = self.cfg.max_events.saturating_add(1);
         for sreq in pending {
             if !self.table_routed {
-                self.fill_load_signal();
+                self.refresh_router_loads();
             }
-            let target = self.st.router.route(
-                sreq.req.adapter,
-                &self.st.outstanding_buf,
-                &mut self.st.rng,
-            );
+            let target = self
+                .st
+                .router
+                .route(sreq.req.adapter, &mut self.st.rng);
             self.deliver(target, sreq, now);
             if !self.table_routed {
                 // least-loaded re-routes must observe each other's
                 // load: drain the just-pushed delivery into the server
                 // before the next request reads the signal
-                let st = &mut self.st;
-                flush_lane(
-                    &mut st.servers[target],
-                    &mut st.lanes[target],
-                    now,
-                    timeout,
-                    cap,
-                );
+                self.flush_one_lane(target, now);
             }
         }
-        self.st.lane_events =
-            self.st.lanes.iter().map(|l| l.events).sum();
         self.st.q.push(now, SimEvent::DrainCheck(victim));
         debug_assert!(
             self.st.pool.check_coverage(self.trace.adapters.len()).is_ok(),
@@ -1803,6 +2090,9 @@ impl<'a> SimEngine<'a> {
             return; // stale (slot repurposed)
         }
         self.st.topo.set(s, SrvState::Active);
+        // the newcomer becomes routable: unmask it in the least-work
+        // index (its real load seeds on the next refresh)
+        self.mark_router_dirty(s);
         let active_ids = self.st.topo.active();
         self.st.report.fleet.set_fleet(
             now,

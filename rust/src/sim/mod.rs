@@ -27,6 +27,7 @@ pub use engine::{
 };
 pub use rebalance::{
     imbalance_ratio, plan_incremental, IncrementalPlan, RebalanceTrigger,
+    UtilCache,
 };
 pub use report::SimReport;
 pub use server::{BatchPolicy, DecodeGroup, DecodePlan};

@@ -64,6 +64,152 @@ pub fn imbalance_ratio(
     }
 }
 
+/// Delta-maintained per-server utilization vector: the incremental
+/// replacement for calling [`Assignment::server_utils`] — an
+/// O(adapters × copies) full recompute — at every trigger check.
+///
+/// The cache pins the assignment's copy sets in server-major form
+/// (`by_server`, rebuilt on every assignment swap) plus the demand
+/// projections it last priced (`dem`). A refresh diffs the new
+/// projections against `dem` bitwise and recomputes *only* the
+/// servers hosting a changed adapter — each recomputed server folds
+/// its terms in ascending adapter order with the exact
+/// `φ · demand / oppoint` expression `server_utils` uses, so a cached
+/// vector is bit-identical to the full recompute at every check
+/// (enforced by a debug assertion in the engine).
+#[derive(Debug, Clone)]
+pub struct UtilCache {
+    /// cached utilization per server (dense, `n_servers` long)
+    utils: Vec<f64>,
+    /// demand projection each adapter was last priced at
+    dem: Vec<f64>,
+    /// `oppoints[rank_a]` per adapter (`1.0` for unprofiled ranks —
+    /// `server_utils`' `unwrap_or`), fixed for the run
+    op: Vec<f64>,
+    /// copy sets server-major: `(adapter, φ)` in ascending adapter
+    /// order, mirroring `Assignment::shares`
+    by_server: Vec<Vec<(AdapterId, f64)>>,
+    dirty: Vec<bool>,
+    dirty_list: Vec<ServerId>,
+}
+
+impl UtilCache {
+    pub fn new(
+        n_servers: usize,
+        adapters: &AdapterSet,
+        oppoints: &BTreeMap<u32, f64>,
+    ) -> Self {
+        let op = adapters
+            .iter()
+            .map(|a| oppoints.get(&a.rank).copied().unwrap_or(1.0))
+            .collect();
+        UtilCache {
+            utils: vec![0.0; n_servers],
+            dem: vec![0.0; adapters.len()],
+            op,
+            by_server: vec![Vec::new(); n_servers],
+            dirty: vec![false; n_servers],
+            dirty_list: Vec::new(),
+        }
+    }
+
+    fn recompute(&mut self, s: ServerId) {
+        let mut u = 0.0f64;
+        // ascending adapter order: the exact accumulation order (and
+        // term) of `server_utils`, so the sum is bit-identical
+        for &(a, phi) in &self.by_server[s] {
+            u += phi * self.dem[a as usize] / self.op[a as usize];
+        }
+        self.utils[s] = u;
+    }
+
+    /// Re-pin the copy sets after an assignment swap (wholesale
+    /// rebalance, incremental plan landing, drain re-place) and
+    /// recompute every server — O(adapters × copies), the same cost
+    /// the swap's planner just paid.
+    pub fn rebuild(&mut self, asg: &Assignment) {
+        for v in &mut self.by_server {
+            v.clear();
+        }
+        for (a, ss) in asg.shares.iter().enumerate() {
+            for &(s, phi) in ss {
+                self.by_server[s].push((a as AdapterId, phi));
+            }
+        }
+        for s in 0..self.utils.len() {
+            self.recompute(s);
+        }
+        for f in &mut self.dirty {
+            *f = false;
+        }
+        self.dirty_list.clear();
+    }
+
+    /// Fold a fresh demand roll in: price the adapters whose
+    /// projection changed (bitwise) and recompute only their hosts.
+    /// `known`/`proj` are the tracker's dense projection view
+    /// ([`crate::coordinator::DemandTracker::known_ids`] /
+    /// `projections`); ids absent from `known` keep projecting 0.
+    pub fn refresh(
+        &mut self,
+        asg: &Assignment,
+        known: &[AdapterId],
+        proj: &[f64],
+    ) {
+        for &id in known {
+            let i = id as usize;
+            let p = proj[i];
+            if p.to_bits() == self.dem[i].to_bits() {
+                continue;
+            }
+            self.dem[i] = p;
+            for &(s, _) in &asg.shares[i] {
+                if !self.dirty[s] {
+                    self.dirty[s] = true;
+                    self.dirty_list.push(s);
+                }
+            }
+        }
+        if self.dirty_list.is_empty() {
+            return;
+        }
+        let list = std::mem::take(&mut self.dirty_list);
+        for &s in &list {
+            self.recompute(s);
+            self.dirty[s] = false;
+        }
+        self.dirty_list = list;
+        self.dirty_list.clear();
+    }
+
+    /// The cached utilization vector (valid after
+    /// `rebuild`/`refresh`).
+    pub fn utils(&self) -> &[f64] {
+        &self.utils
+    }
+
+    /// [`imbalance_ratio`] served from the cache: the identical
+    /// max/mean fold over the active servers, minus the
+    /// `server_utils` recompute.
+    pub fn imbalance(&self, active: &[ServerId]) -> f64 {
+        if active.is_empty() {
+            return 1.0;
+        }
+        let mut max = 0.0f64;
+        let mut sum = 0.0f64;
+        for &s in active {
+            max = max.max(self.utils[s]);
+            sum += self.utils[s];
+        }
+        let mean = sum / active.len() as f64;
+        if mean <= 1e-9 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
 /// Schmitt trigger with a min-interval guard over the rebalance
 /// signals. `evaluate` is called once per `trigger_check_period`; it
 /// returns true when a rebalance should fire *now*.
@@ -194,6 +340,12 @@ pub fn plan_incremental(
     let n_adapters = proposal.shares.len();
     let utils =
         prev.server_utils(n_servers, adapters, demand, oppoints);
+    // O(1) activity membership: the per-adapter `active.contains`
+    // probe was an O(adapters × fleet) scan at big fleets
+    let mut is_active = vec![false; n_servers];
+    for &s in active {
+        is_active[s] = true;
+    }
     let mut plan = IncrementalPlan {
         assignment: Assignment::new(n_adapters),
         residency: vec![Vec::new(); n_adapters],
@@ -217,7 +369,7 @@ pub fn plan_incremental(
         // φ-share shifts among existing homes move no bytes: accept
         // wholesale. Homes leaving the active set force the whole
         // proposal through — the status quo is not keepable.
-        let forced = old.iter().any(|s| !active.contains(s));
+        let forced = old.iter().any(|&s| !is_active[s]);
         if added.is_empty() || forced {
             for &(s, phi) in new_entry {
                 plan.assignment.add(a, s, phi);
@@ -599,6 +751,65 @@ mod tests {
         assert_eq!(plan.moves_rejected, 0);
         for a in 0..4u32 {
             assert_eq!(plan.assignment.servers_of(a), &[(1usize, 1.0)]);
+        }
+    }
+
+    /// The delta-maintained utilization cache must track the full
+    /// `server_utils` recompute bit for bit through randomized demand
+    /// drift and assignment swaps.
+    #[test]
+    fn util_cache_matches_full_recompute_bitwise() {
+        let (adapters, _, oppoints) = ctx();
+        let n_servers = 3;
+        let mut rng = Pcg32::new(17);
+        let mut asg = Assignment::new(adapters.len());
+        for a in 0..adapters.len() as AdapterId {
+            asg.add(a, (rng.next_u32() as usize) % n_servers, 1.0);
+        }
+        let mut cache = UtilCache::new(n_servers, &adapters, &oppoints);
+        cache.rebuild(&asg);
+        let mut known: Vec<AdapterId> =
+            (0..adapters.len() as AdapterId).collect();
+        known.sort_unstable();
+        let mut proj = vec![0.0f64; adapters.len()];
+        for step in 0..60 {
+            // drift a couple of projections (sometimes to the same
+            // bits — the refresh must skip those cleanly)
+            for _ in 0..2 {
+                let id = (rng.next_u32() as usize) % adapters.len();
+                proj[id] = (rng.next_u32() % 3) as f64 * 50.0;
+            }
+            if step % 10 == 9 {
+                // an assignment swap: move one adapter, rebuild
+                let a = (rng.next_u32() as usize) % adapters.len();
+                asg.shares[a] =
+                    vec![((rng.next_u32() as usize) % n_servers, 1.0)];
+                cache.rebuild(&asg);
+            }
+            cache.refresh(&asg, &known, &proj);
+            let demand: BTreeMap<AdapterId, f64> = known
+                .iter()
+                .map(|&id| (id, proj[id as usize]))
+                .collect();
+            let full = asg.server_utils(
+                n_servers, &adapters, &demand, &oppoints,
+            );
+            for s in 0..n_servers {
+                assert_eq!(
+                    cache.utils()[s].to_bits(),
+                    full[s].to_bits(),
+                    "server {s} diverged at step {step}"
+                );
+            }
+            let active = [0usize, 1, 2];
+            assert_eq!(
+                cache.imbalance(&active).to_bits(),
+                imbalance_ratio(
+                    &asg, n_servers, &active, &adapters, &demand,
+                    &oppoints
+                )
+                .to_bits()
+            );
         }
     }
 

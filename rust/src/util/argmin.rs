@@ -1,0 +1,209 @@
+//! Flat segment tree answering `argmin` over a dense `f64` key array
+//! in O(1), with O(log n) point updates — the index behind the
+//! control plane's hot paths: least-loaded routing over per-server
+//! outstanding work, and the engine's next-due-lane lookup at epoch
+//! barriers.
+//!
+//! Tie-breaking is *left wins*: among equal-key leaves the lowest
+//! index is returned, which makes the tree's answer bit-identical to
+//! a linear scan using a strict `<` comparison (the pre-index
+//! routing loop). Keys must never be NaN; `f64::INFINITY` is the
+//! conventional "masked" key (drained server, empty lane) and
+//! compares like any other value, so an all-masked tree returns
+//! index 0 — exactly what the scan's `best = 0` seed did.
+
+/// Positional argmin index over `n` dense `f64` keys.
+///
+/// Layout: a classic 1-indexed segment tree over `cap = n.next_power_
+/// of_two()` leaves. `node[v]` for internal `v ∈ 1..cap` holds the
+/// index of the min-key leaf in `v`'s subtree; leaves are implicit
+/// (`node[cap + i] = i`). Padding leaves (`i >= n`) are pinned at
+/// `INFINITY` and never updated, so they lose every comparison
+/// against a real leaf and an argmin over a non-empty tree is always
+/// a valid index `< n`.
+#[derive(Debug, Clone)]
+pub struct ArgminTree {
+    /// number of real leaves
+    n: usize,
+    /// power-of-two leaf capacity
+    cap: usize,
+    /// current key per leaf slot (padding slots stay `INFINITY`)
+    keys: Vec<f64>,
+    /// `node[v]` = argmin leaf index within subtree `v` (size `2*cap`,
+    /// slot 0 unused)
+    node: Vec<u32>,
+}
+
+impl ArgminTree {
+    /// Build a tree of `n` leaves, every key `f64::INFINITY` (all
+    /// masked). `n = 0` is allowed; `argmin`/`min_key` on an empty
+    /// tree return `0` / `INFINITY`.
+    pub fn new(n: usize) -> Self {
+        let cap = n.next_power_of_two().max(1);
+        let mut node = vec![0u32; 2 * cap];
+        for i in 0..cap {
+            node[cap + i] = i as u32;
+        }
+        // with all keys equal (INF), left wins everywhere: internal
+        // nodes point at their leftmost leaf
+        for v in (1..cap).rev() {
+            node[v] = node[2 * v];
+        }
+        ArgminTree {
+            n,
+            cap,
+            keys: vec![f64::INFINITY; cap],
+            node,
+        }
+    }
+
+    /// Number of real leaves.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Current key of leaf `i`.
+    #[inline]
+    pub fn key(&self, i: usize) -> f64 {
+        self.keys[i]
+    }
+
+    /// All real-leaf keys (length `n`).
+    pub fn keys(&self) -> &[f64] {
+        &self.keys[..self.n]
+    }
+
+    /// Index of the minimum-key leaf, lowest index among ties. `0`
+    /// when the tree is empty.
+    #[inline]
+    pub fn argmin(&self) -> usize {
+        self.node[1] as usize
+    }
+
+    /// Key at [`Self::argmin`] (`INFINITY` when empty or all-masked).
+    #[inline]
+    pub fn min_key(&self) -> f64 {
+        self.keys[self.node[1] as usize]
+    }
+
+    /// Set leaf `i`'s key and re-derive the O(log n) root path.
+    /// `key` must not be NaN (use `INFINITY` to mask a leaf).
+    #[inline]
+    pub fn update(&mut self, i: usize, key: f64) {
+        debug_assert!(i < self.n, "leaf {i} out of range {}", self.n);
+        debug_assert!(!key.is_nan(), "NaN keys break argmin ordering");
+        self.keys[i] = key;
+        let mut v = (self.cap + i) >> 1;
+        while v >= 1 {
+            let l = self.node[2 * v];
+            let r = self.node[2 * v + 1];
+            // strict `<` from the right: on ties the left (lower
+            // index) child wins, matching a linear scan
+            self.node[v] =
+                if self.keys[r as usize] < self.keys[l as usize] {
+                    r
+                } else {
+                    l
+                };
+            v >>= 1;
+        }
+    }
+
+    /// Reset every real leaf from `f(i)` in one O(n) bottom-up pass
+    /// (padding leaves stay masked). Used after bulk mutations where
+    /// per-leaf `update` calls would pay O(n log n).
+    pub fn rebuild<F: FnMut(usize) -> f64>(&mut self, mut f: F) {
+        for i in 0..self.n {
+            let k = f(i);
+            debug_assert!(!k.is_nan(), "NaN keys break argmin ordering");
+            self.keys[i] = k;
+        }
+        for v in (1..self.cap).rev() {
+            let l = self.node[2 * v];
+            let r = self.node[2 * v + 1];
+            self.node[v] =
+                if self.keys[r as usize] < self.keys[l as usize] {
+                    r
+                } else {
+                    l
+                };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn scan_argmin(keys: &[f64]) -> usize {
+        let mut best = 0;
+        for (i, &k) in keys.iter().enumerate().skip(1) {
+            if k < keys[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn matches_scan_under_random_updates() {
+        for n in [1usize, 2, 3, 7, 8, 9, 64, 65, 130] {
+            let mut rng = Pcg32::new(n as u64 + 11);
+            let mut tree = ArgminTree::new(n);
+            let mut keys = vec![f64::INFINITY; n];
+            for step in 0..400 {
+                let i = (rng.next_u32() as usize) % n;
+                // small discrete key set forces frequent ties; an
+                // occasional INF exercises masking
+                let k = match step % 5 {
+                    0 => f64::INFINITY,
+                    _ => (rng.next_u32() % 4) as f64,
+                };
+                keys[i] = k;
+                tree.update(i, k);
+                assert_eq!(tree.argmin(), scan_argmin(&keys));
+                assert_eq!(
+                    tree.min_key().to_bits(),
+                    keys[scan_argmin(&keys)].to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_masked_returns_zero() {
+        let tree = ArgminTree::new(12);
+        assert_eq!(tree.argmin(), 0);
+        assert!(tree.min_key().is_infinite());
+    }
+
+    #[test]
+    fn ties_pick_lowest_index() {
+        let mut tree = ArgminTree::new(5);
+        for i in 0..5 {
+            tree.update(i, 2.0);
+        }
+        assert_eq!(tree.argmin(), 0);
+        tree.update(3, 1.0);
+        tree.update(4, 1.0);
+        assert_eq!(tree.argmin(), 3);
+        tree.update(1, 1.0);
+        assert_eq!(tree.argmin(), 1);
+    }
+
+    #[test]
+    fn rebuild_matches_scan() {
+        let mut rng = Pcg32::new(3);
+        let mut tree = ArgminTree::new(33);
+        let keys: Vec<f64> =
+            (0..33).map(|_| (rng.next_u32() % 6) as f64).collect();
+        tree.rebuild(|i| keys[i]);
+        assert_eq!(tree.argmin(), scan_argmin(&keys));
+        assert_eq!(tree.keys().len(), 33);
+    }
+}

@@ -6,6 +6,7 @@
 //! (rand, serde, clap, criterion) are rebuilt here at the scale this
 //! project needs, with their own tests.
 
+pub mod argmin;
 pub mod cli;
 pub mod json;
 pub mod rng;
