@@ -333,12 +333,12 @@ fn main() {
             cluster.clone(),
             SystemKind::SLoraRandom,
         )
-        .with_batch_policy(
-            loraserve::config::BatchPolicyKind::RankBucketed {
+        .with_params(|p| {
+            p.batch(loraserve::config::BatchPolicyKind::RankBucketed {
                 max_wait_iters: 8,
                 select: loraserve::config::ClassSelect::LargestQueue,
-            },
-        );
+            })
+        });
         let rep = sim::run(&trace, &cfg);
         black_box(rep.completed);
         1
@@ -389,9 +389,9 @@ fn main() {
             cluster.clone(),
             SystemKind::SLoraRandom,
         )
-        .with_decode_policy(
-            loraserve::config::DecodePolicyKind::RankPartitioned,
-        );
+        .with_params(|p| {
+            p.decode(loraserve::config::DecodePolicyKind::RankPartitioned)
+        });
         let rep = sim::run(&trace, &cfg);
         black_box(rep.completed);
         1

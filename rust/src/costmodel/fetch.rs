@@ -56,6 +56,23 @@ pub fn fetch_time(gpu: &GpuSpec, src: FetchSource, bytes: u64) -> f64 {
     }
 }
 
+/// Inter-region variant of the `RemoteRdma` two-hop path: the second
+/// hop crosses the inter-region fabric, so the NIC-bound stage runs at
+/// `bw_factor` of the intra-region bandwidth (WAN/fabric
+/// oversubscription) and pays `extra_lat` seconds of added one-way
+/// latency on top of the IB setup cost.
+pub fn inter_region_fetch_time(
+    gpu: &GpuSpec,
+    bytes: u64,
+    bw_factor: f64,
+    extra_lat: f64,
+) -> f64 {
+    let b = bytes as f64;
+    let bw =
+        gpu.pcie_bw.min(gpu.ib_bw) * bw_factor.clamp(1e-3, 1.0);
+    LAT_RDMA + extra_lat.max(0.0) + (b / bw) * 1.1
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,6 +110,28 @@ mod tests {
         let rdma = fetch_time(&G, FetchSource::RemoteRdma, bytes);
         assert!(local > 3e-3 && local < 10e-3, "local={local}");
         assert!(rdma > 3e-3 && rdma < 12e-3, "rdma={rdma}");
+    }
+
+    #[test]
+    fn inter_region_priced_above_intra() {
+        for mb in [16u64, 134, 512] {
+            let bytes = mb * (1 << 20);
+            let intra = fetch_time(&G, FetchSource::RemoteRdma, bytes);
+            let inter =
+                inter_region_fetch_time(&G, bytes, 0.25, 750e-6);
+            assert!(
+                inter > intra,
+                "{mb}MB inter={inter} intra={intra}"
+            );
+            // unit bandwidth factor + zero extra latency degenerates
+            // to the intra-region price
+            let same = inter_region_fetch_time(&G, bytes, 1.0, 0.0);
+            assert!((same - intra).abs() < 1e-12);
+        }
+        // slower fabric => strictly slower fetch
+        let a = inter_region_fetch_time(&G, 1 << 27, 0.5, 0.0);
+        let b = inter_region_fetch_time(&G, 1 << 27, 0.25, 0.0);
+        assert!(b > a);
     }
 
     #[test]

@@ -14,6 +14,6 @@ pub mod fetch;
 pub mod latency;
 pub mod oppoint;
 
-pub use fetch::{fetch_time, FetchSource};
+pub use fetch::{fetch_time, inter_region_fetch_time, FetchSource};
 pub use latency::{decode_lora_time, decode_time, prefill_time, CostModel};
 pub use oppoint::operating_points;

@@ -16,6 +16,7 @@ pub mod elastic;
 pub mod eval;
 pub mod helpers;
 pub mod motivation;
+pub mod resilience;
 pub mod sched;
 pub mod sensitivity;
 
@@ -71,6 +72,9 @@ pub fn registry() -> Vec<(&'static str, &'static str, FigFn)> {
         ("attrib", "SLO-violation attribution: TTFT component \
                     breakdown by rebalance mode",
          attrib::attrib),
+        ("resilience", "crash + recovery on churn/diurnal demand: \
+                        p99 TTFT + SLO violations by rebalance mode",
+         resilience::resilience),
         ("gpus", "min fleet under SLO per system (GPU savings)",
          elastic::gpus_under_slo),
         ("fleet", "SLO-aware autoscaler fleet-size timeline",

@@ -1,0 +1,202 @@
+//! The `resilience` figure: p99 TTFT and SLO-violation rate through
+//! server crash + recovery, on a churn/diurnal production scenario —
+//! periodic vs triggered vs triggered+remote-attach rebalancing.
+//!
+//! The workload is the `trace::scenario` generator's production pack:
+//! tenant-lifecycle adapter churn over a Zipf-popular population with
+//! diurnal rate modulation. The failure process (seeded MTBF, see
+//! `sim::scenario`) crashes servers mid-trace; in-flight requests
+//! requeue, last-copy adapters re-fetch from host memory, and the
+//! rebalance layer reacts to the lost capacity — or doesn't, which is
+//! the comparison. Each arm runs twice on the identical trace: once
+//! with failures disabled (baseline) and once with the crash process
+//! on, so the *degradation* column isolates what the crash window
+//! costs under each rebalance mode.
+
+use super::drift::drift_rebalance;
+use super::helpers::{FigOpts, RESULTS_DIR};
+use crate::config::{ClusterConfig, RebalanceMode};
+use crate::sim::scenario::{FailureConfig, RegionConfig, ScenarioConfig};
+use crate::sim::{run, SimConfig, SimReport, SystemKind};
+use crate::trace::scenario::{generate, ScenarioTraceConfig};
+use crate::trace::Trace;
+use crate::util::table::{fmt_secs, Table};
+
+/// TTFT SLO the violation-rate columns report against: tighter than
+/// the autoscaler's `SloConfig` default so the crash window's queueing
+/// and host re-fetch stalls actually register as violations.
+pub const SLO_TTFT: f64 = 0.5;
+
+/// The churn + diurnal workload the resilience comparison runs on
+/// (generator defaults: Zipf 1.2 popularity, half the population
+/// churning with 300 s mean lifetimes, 2 diurnal cycles).
+pub fn resilience_trace(duration: f64, seed: u64) -> Trace {
+    generate(&ScenarioTraceConfig {
+        n_adapters: 48,
+        rps: 16.0,
+        duration,
+        seed,
+        ..Default::default()
+    })
+}
+
+/// The failure process of the comparison: crashes eligible after the
+/// cold-start window, expected every `mtbf` seconds, each down for
+/// ~`mttr`; in-flight requests requeue. Two regions so inter-region
+/// RDMA is priced distinctly in the cost model.
+pub fn resilience_scenario() -> ScenarioConfig {
+    ScenarioConfig {
+        failures: FailureConfig {
+            enabled: true,
+            mtbf: 90.0,
+            mttr: 45.0,
+            start: 60.0,
+            max_crashes: 2,
+            requeue: true,
+        },
+        regions: RegionConfig {
+            n_regions: 2,
+            ..Default::default()
+        },
+    }
+}
+
+fn run_arm(
+    trace: &Trace,
+    cluster: &ClusterConfig,
+    scenario: ScenarioConfig,
+    warmup: f64,
+) -> SimReport {
+    run(
+        trace,
+        &SimConfig::new(cluster.clone(), SystemKind::LoraServe)
+            .with_warmup(warmup)
+            .with_params(|p| p.scenario(scenario)),
+    )
+}
+
+/// p99 TTFT degradation of one rebalance arm: crash-enabled run minus
+/// the failure-free baseline on the identical trace/warmup. Exposed so
+/// the resilience acceptance test asserts the mode ordering on the
+/// same harness the figure renders.
+pub fn p99_degradation(
+    trace: &Trace,
+    cluster: &ClusterConfig,
+    mode: RebalanceMode,
+    remote_attach: bool,
+    scenario: ScenarioConfig,
+    warmup: f64,
+) -> f64 {
+    let mut cl = cluster.clone();
+    cl.rebalance = drift_rebalance(mode, remote_attach);
+    let mut baseline = scenario;
+    baseline.failures.enabled = false;
+    let mut base = run_arm(trace, &cl, baseline, warmup);
+    let mut crash = run_arm(trace, &cl, scenario, warmup);
+    crash.ttft.p99() - base.ttft.p99()
+}
+
+/// One row per rebalance arm: baseline vs crash-enabled percentiles,
+/// the degradation delta, and the crash bookkeeping (requeues, host
+/// re-fetches) behind it. Split from [`resilience`] so the test suite
+/// can smoke-run it on a tiny trace.
+pub fn resilience_table(
+    trace: &Trace,
+    cluster: &ClusterConfig,
+    scenario: ScenarioConfig,
+    warmup: f64,
+) -> Table {
+    let mut table = Table::new(
+        "resilience — crash + recovery on churn/diurnal demand \
+         (loraserve placement)",
+        &[
+            "mode",
+            "remote",
+            "crashes",
+            "recoveries",
+            "requeued",
+            "host fetches",
+            "p99 ttft base",
+            "p99 ttft crash",
+            "degradation",
+            "viol% base",
+            "viol% crash",
+        ],
+    );
+    let arms = [
+        (RebalanceMode::Periodic, false),
+        (RebalanceMode::Triggered, false),
+        (RebalanceMode::Triggered, true),
+    ];
+    for (mode, remote) in arms {
+        let mut cl = cluster.clone();
+        cl.rebalance = drift_rebalance(mode, remote);
+        let mut baseline = scenario;
+        baseline.failures.enabled = false;
+        let mut base = run_arm(trace, &cl, baseline, warmup);
+        let mut crash = run_arm(trace, &cl, scenario, warmup);
+        let viol =
+            |rep: &SimReport| (1.0 - rep.ttft.frac_leq(SLO_TTFT)) * 100.0;
+        table.row(vec![
+            mode.label().to_string(),
+            if remote { "on" } else { "off" }.to_string(),
+            crash.crashes.to_string(),
+            crash.recoveries.to_string(),
+            crash.crash_requeued.to_string(),
+            crash.host_fetches.to_string(),
+            fmt_secs(base.ttft.p99()),
+            fmt_secs(crash.ttft.p99()),
+            fmt_secs(crash.ttft.p99() - base.ttft.p99()),
+            format!("{:.2}", viol(&base)),
+            format!("{:.2}", viol(&crash)),
+        ]);
+    }
+    table
+}
+
+pub fn resilience(opts: &FigOpts) -> std::io::Result<()> {
+    let trace = resilience_trace(opts.scale(1200.0), opts.seed);
+    // Period longer than the crash window: the periodic arm re-places
+    // on its timer, not in reaction to the crash — exactly the gap the
+    // triggered arms close.
+    let cluster = ClusterConfig {
+        n_servers: 4,
+        rebalance_period: 120.0,
+        ..Default::default()
+    };
+    let scenario = resilience_scenario();
+    // Measurement starts where crashes become eligible, same cutoff
+    // for every arm and for baseline and crash runs alike, so each
+    // degradation column isolates the policy over the identical slice.
+    let warmup = scenario.failures.start.min(trace.duration() / 3.0);
+    resilience_table(&trace, &cluster, scenario, warmup)
+        .emit(RESULTS_DIR, "resilience")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resilience_table_smoke() {
+        let trace = resilience_trace(120.0, 3);
+        let cluster = ClusterConfig {
+            n_servers: 3,
+            rebalance_period: 60.0,
+            ..Default::default()
+        };
+        let mut sc = resilience_scenario();
+        sc.failures.mtbf = 20.0;
+        sc.failures.start = 10.0;
+        let table = resilience_table(&trace, &cluster, sc, 10.0);
+        assert_eq!(table.rows.len(), 3, "one row per rebalance arm");
+        for row in &table.rows {
+            for cell in row {
+                assert!(!cell.is_empty(), "empty cell in {row:?}");
+            }
+        }
+        let md = table.to_markdown();
+        assert!(md.contains("periodic"));
+        assert!(md.contains("triggered"));
+    }
+}

@@ -72,7 +72,7 @@ pub fn sched_table(trace: &Trace, cluster: &ClusterConfig) -> Table {
     for system in SystemKind::all() {
         for &policy in &policies {
             let cfg = SimConfig::new(cluster.clone(), system)
-                .with_batch_policy(policy);
+                .with_params(|p| p.batch(policy));
             let mut rep = run(trace, &cfg);
             table.row(vec![
                 system.label().to_string(),
@@ -127,8 +127,7 @@ pub fn sched_decode_table(trace: &Trace, cluster: &ClusterConfig) -> Table {
         for &decode in &decodes {
             let cfg =
                 SimConfig::new(cluster.clone(), SystemKind::SLoraRandom)
-                    .with_batch_policy(prefill)
-                    .with_decode_policy(decode);
+                    .with_params(|p| p.batch(prefill).decode(decode));
             let mut rep = run(trace, &cfg);
             let tbt_lo = rep.tbt_p99_class(8);
             let tbt_hi = rep.tbt_p99_class(128);
@@ -305,11 +304,10 @@ pub fn sched_slo_table(trace: &Trace, cluster: &ClusterConfig) -> Table {
     for (batch, decode, feedback) in rows {
         let mut cfg =
             SimConfig::new(cluster.clone(), SystemKind::SLoraRandom)
-                .with_batch_policy(batch)
-                .with_decode_policy(decode)
+                .with_params(|p| p.batch(batch).decode(decode))
                 .with_warmup(2.0);
         if let Some(f) = feedback {
-            cfg = cfg.with_slo_feedback(f);
+            cfg = cfg.with_params(|p| p.slo(f));
         }
         let mut rep = run(trace, &cfg);
         table.row(vec![

@@ -81,6 +81,8 @@ fn usage() {
          [--slo-ttft-ms MS] [--slo-tbt-ms MS] [--preempt-decode on|off]\n         \
          [--rebalance-mode periodic|triggered|hybrid] \
          [--remote-attach on|off]\n         \
+         [--scenario file.json]  (churn/diurnal trace + failure \
+         injection + regions)\n         \
          [--shards N] [--report-out file.json]\n         \
          [--trace-out trace.json] [--trace-last N] \
          [--metrics-out file.prom]\n\
@@ -250,8 +252,30 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     let duration = args.get_f64("duration", 600.0)?;
     let n_adapters = args.get_usize("adapters", 100)?;
     let seed = args.get_u64("seed", 0)?;
+    // --scenario file.json: failure-injection + region runtime knobs,
+    // plus (optionally) a generated churn/diurnal production trace
+    // that replaces the --trace choice
+    let scenario = match args.get("scenario") {
+        Some(path) => Some(sim::scenario::Scenario::from_file(path)?),
+        None => None,
+    };
+    let runtime = scenario
+        .as_ref()
+        .map(|s| s.runtime)
+        .unwrap_or_default();
     let kind = args.get_or("trace", "prod");
-    let trace = match kind {
+    let trace = if let Some(tc) =
+        scenario.as_ref().and_then(|s| s.trace.as_ref())
+    {
+        // an explicit --seed overrides the file's (so CI can run the
+        // same scenario file under several seeds)
+        let mut tc = tc.clone();
+        if args.get("seed").is_some() {
+            tc.seed = seed;
+        }
+        loraserve::trace::scenario::generate(&tc)
+    } else {
+        match kind {
         "prod" => production::generate(&production::ProductionConfig {
             n_adapters,
             n_requests: (rps * duration) as usize,
@@ -279,6 +303,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
             seed,
         ),
         other => return Err(format!("unknown trace kind '{other}'")),
+        }
     };
     // observability knobs — all default off so the plain path stays
     // bit-identical (see tests/obs_tracing.rs)
@@ -324,31 +349,27 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
             &trace,
             &sim::SimConfig::new(cluster.clone(), *k)
                 .with_shards(shards)
-                .with_obs(obs_cfg),
+                .with_obs(obs_cfg)
+                .with_params(|p| p.scenario(runtime)),
         ),
         SystemChoice::Custom(name) => {
+            // the canned kind inside SimConfig is unused by run_spec;
+            // it only carries the cluster/warmup knobs
+            let cfg = sim::SimConfig::new(
+                cluster.clone(),
+                SystemKind::LoraServe,
+            )
+            .with_shards(shards)
+            .with_obs(obs_cfg)
+            .with_params(|p| p.scenario(runtime));
             let spec = sim::custom_system_spec(
                 name,
-                cluster.batch_policy,
-                cluster.decode_policy,
-                cluster.feedback,
-                cluster.rebalance,
+                &sim::SpecParams::from_config(&cfg),
             )
             .ok_or_else(|| {
                 format!("custom system '{name}' not registered")
             })?;
-            // the canned kind inside SimConfig is unused by run_spec;
-            // it only carries the cluster/warmup knobs
-            sim::run_spec_observed(
-                &trace,
-                &sim::SimConfig::new(
-                    cluster.clone(),
-                    SystemKind::LoraServe,
-                )
-                .with_shards(shards)
-                .with_obs(obs_cfg),
-                &spec,
-            )
+            sim::run_spec_observed(&trace, &cfg, &spec)
         }
     };
     let wall = t0.elapsed().as_secs_f64();
@@ -686,7 +707,7 @@ fn cmd_bench_control(args: &Args) -> Result<(), String> {
         },
         SystemKind::LoraServe,
     )
-    .with_rebalance(reb);
+    .with_params(|p| p.rebalance(reb));
 
     let arms: Vec<(&str, &Trace, sim::SimConfig)> = vec![
         ("toppings", &toppings_trace, toppings_cfg),

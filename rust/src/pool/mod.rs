@@ -7,7 +7,9 @@
 //! server's assignment it is deleted locally — but never while it is
 //! the last copy in the cluster (the coverage invariant).
 
-use crate::costmodel::{fetch_time, FetchSource};
+use crate::costmodel::{
+    fetch_time, inter_region_fetch_time, FetchSource,
+};
 use crate::config::GpuSpec;
 use crate::workload::{AdapterId, AdapterSet, ServerId};
 use std::collections::BTreeSet;
@@ -23,6 +25,17 @@ pub struct AdapterPool {
     assigned: Vec<BTreeSet<AdapterId>>,
     /// high-water mark of resident+fetching per server (Fig 18 bottom).
     max_resident: Vec<usize>,
+    /// Region-aware RDMA pricing (scenario pack): `(n_regions,
+    /// inter_bw_factor, inter_latency)`; server `s` lives in region
+    /// `s % n_regions`. `None` = flat intra-region pricing (default).
+    regions: Option<(usize, f64, f64)>,
+    /// When true, a fetch of an adapter with no replica anywhere falls
+    /// back to the host/registry tier (`LocalHostMem` pricing) instead
+    /// of panicking — the crash path legitimately loses last copies.
+    host_fallback: bool,
+    /// Fetches that had to come from the host/registry tier (a crash
+    /// destroyed the last GPU-side copy).
+    pub host_fetches: u64,
     pub total_fetches: u64,
     pub total_fetch_bytes: u64,
 }
@@ -46,8 +59,51 @@ impl AdapterPool {
             resident,
             fetching: vec![BTreeSet::new(); n_servers],
             max_resident,
+            regions: None,
+            host_fallback: false,
+            host_fetches: 0,
             total_fetches: 0,
             total_fetch_bytes: 0,
+        }
+    }
+
+    /// Enable region-aware RDMA pricing: server `s` is in region
+    /// `s % n_regions`, and cross-region transfers pay the derated
+    /// inter-region path. `n_regions <= 1` keeps flat pricing.
+    pub fn set_regions(
+        &mut self,
+        n_regions: usize,
+        inter_bw_factor: f64,
+        inter_latency: f64,
+    ) {
+        self.regions = (n_regions > 1)
+            .then_some((n_regions, inter_bw_factor, inter_latency));
+    }
+
+    /// Allow fetches of replica-less adapters to fall back to the
+    /// host/registry tier instead of panicking (crash scenarios only).
+    pub fn set_host_fallback(&mut self, on: bool) {
+        self.host_fallback = on;
+    }
+
+    /// Transfer time of `bytes` into `server` from `source` (`None` =
+    /// the host/registry tier): intra-region RDMA, derated
+    /// inter-region RDMA, or a host-memory page-in.
+    fn transfer_time(
+        &self,
+        gpu: &GpuSpec,
+        source: Option<ServerId>,
+        server: ServerId,
+        bytes: u64,
+    ) -> f64 {
+        match source {
+            None => fetch_time(gpu, FetchSource::LocalHostMem, bytes),
+            Some(src) => match self.regions {
+                Some((n, bw, lat)) if src % n != server % n => {
+                    inter_region_fetch_time(gpu, bytes, bw, lat)
+                }
+                _ => fetch_time(gpu, FetchSource::RemoteRdma, bytes),
+            },
         }
     }
 
@@ -78,7 +134,9 @@ impl AdapterPool {
     /// Begin fetching `adapter` into `server`. Returns the transfer
     /// time (the caller schedules the completion event), or None if it
     /// is already resident/in flight. Panics if no replica exists
-    /// anywhere (coverage invariant broken upstream).
+    /// anywhere (coverage invariant broken upstream) — unless
+    /// `set_host_fallback` armed the host/registry tier, in which case
+    /// the fetch is priced as a host-memory page-in.
     pub fn start_fetch(
         &mut self,
         server: ServerId,
@@ -90,16 +148,20 @@ impl AdapterPool {
         {
             return None;
         }
-        let source = self.find_replica(adapter).unwrap_or_else(|| {
-            panic!("adapter {adapter}: no replica left in cluster")
-        });
-        debug_assert_ne!(source, server);
+        let source = self.find_replica(adapter);
+        if source.is_none() {
+            if !self.host_fallback {
+                panic!("adapter {adapter}: no replica left in cluster");
+            }
+            self.host_fetches += 1;
+        }
+        debug_assert_ne!(source, Some(server));
         let bytes = adapters.get(adapter).size_bytes;
         self.fetching[server].insert(adapter);
         self.bump_watermark(server);
         self.total_fetches += 1;
         self.total_fetch_bytes += bytes;
-        Some(fetch_time(gpu, FetchSource::RemoteRdma, bytes))
+        Some(self.transfer_time(gpu, source, server, bytes))
     }
 
     /// Begin fetching a *group* of adapters into `server` as one
@@ -117,7 +179,10 @@ impl AdapterPool {
         adapters: &AdapterSet,
         gpu: &GpuSpec,
     ) -> Option<(f64, Vec<AdapterId>)> {
-        let mut bytes = 0u64;
+        // One amortized stream per path class: intra-region RDMA,
+        // derated inter-region RDMA, and host page-ins each pay their
+        // own latency floor over their share of the bytes.
+        let mut class_bytes = [0u64; 3]; // [intra, inter, host]
         let mut started = Vec::new();
         for &a in ids {
             if self.is_resident(server, a) || self.is_fetching(server, a)
@@ -126,11 +191,23 @@ impl AdapterPool {
             }
             // same release-mode invariant as the serial start_fetch:
             // never fabricate a copy of an adapter nobody holds
-            if self.find_replica(a).is_none() {
-                panic!("adapter {a}: no replica left in cluster");
-            }
+            let class = match self.find_replica(a) {
+                Some(src) => match self.regions {
+                    Some((n, _, _)) if src % n != server % n => 1,
+                    _ => 0,
+                },
+                None => {
+                    if !self.host_fallback {
+                        panic!(
+                            "adapter {a}: no replica left in cluster"
+                        );
+                    }
+                    self.host_fetches += 1;
+                    2
+                }
+            };
             self.fetching[server].insert(a);
-            bytes += adapters.get(a).size_bytes;
+            class_bytes[class] += adapters.get(a).size_bytes;
             started.push(a);
             self.total_fetches += 1;
         }
@@ -138,22 +215,76 @@ impl AdapterPool {
             return None;
         }
         self.bump_watermark(server);
-        self.total_fetch_bytes += bytes;
-        Some((fetch_time(gpu, FetchSource::RemoteRdma, bytes), started))
+        self.total_fetch_bytes += class_bytes.iter().sum::<u64>();
+        let mut t = 0.0;
+        if class_bytes[0] > 0 {
+            t += fetch_time(gpu, FetchSource::RemoteRdma, class_bytes[0]);
+        }
+        if class_bytes[1] > 0 {
+            let (_, bw, lat) = self.regions.unwrap();
+            t += inter_region_fetch_time(gpu, class_bytes[1], bw, lat);
+        }
+        if class_bytes[2] > 0 {
+            t += fetch_time(
+                gpu,
+                FetchSource::LocalHostMem,
+                class_bytes[2],
+            );
+        }
+        Some((t, started))
     }
 
     /// Complete an in-flight fetch: the adapter becomes resident and,
     /// per Fig 13, source copies that are no longer assigned anywhere
     /// can now be garbage collected.
     pub fn finish_fetch(&mut self, server: ServerId, adapter: AdapterId) {
-        let was = self.fetching[server].remove(&adapter);
+        let was = self.finish_fetch_checked(server, adapter);
         debug_assert!(was, "finish_fetch without start_fetch");
+    }
+
+    /// `finish_fetch` that tolerates a vanished in-flight mark: a
+    /// server crash wipes its `fetching` set, so a completion event
+    /// that was already scheduled lands on nothing. Returns whether
+    /// the copy actually materialized.
+    pub fn finish_fetch_checked(
+        &mut self,
+        server: ServerId,
+        adapter: AdapterId,
+    ) -> bool {
+        if !self.fetching[server].remove(&adapter) {
+            return false;
+        }
         self.resident[server].insert(adapter);
         self.bump_watermark(server);
         // The freshly fetched copy is in active use (a request routed
         // here), so it survives GC even if a rebalance has since moved
         // the assignment; stale *source* copies are collected now.
         self.gc_adapter_keeping(adapter, Some(server));
+        true
+    }
+
+    /// Hardware failure: every copy on `server` — resident and in
+    /// flight — dies with it, and it stops being a desired home until
+    /// the next placement. Returns the adapters this leaves with no
+    /// copy anywhere (no resident replica, no in-flight fetch), in
+    /// ascending id order; the engine must re-fetch those from the
+    /// host/registry tier or the universal set shrinks.
+    pub fn crash_server(&mut self, server: ServerId) -> Vec<AdapterId> {
+        let gone: BTreeSet<AdapterId> = self.resident[server]
+            .iter()
+            .chain(self.fetching[server].iter())
+            .copied()
+            .collect();
+        self.resident[server].clear();
+        self.fetching[server].clear();
+        self.assigned[server].clear();
+        gone.into_iter()
+            .filter(|&a| {
+                self.find_replica(a).is_none()
+                    && !(0..self.n_servers)
+                        .any(|s| self.fetching[s].contains(&a))
+            })
+            .collect()
     }
 
     /// Apply a new placement: update desired sets and GC copies that
@@ -288,12 +419,18 @@ impl AdapterPool {
         bytes
     }
 
-    /// Coverage invariant: every adapter id < n has ≥ 1 replica
-    /// (resident or in flight — an in-flight copy still has its source
-    /// resident because GC keeps survivors until `finish_fetch`).
+    /// Coverage invariant: every adapter id < n has ≥ 1 copy, resident
+    /// or in flight. On the normal paths an in-flight copy still has
+    /// its source resident (GC keeps survivors until `finish_fetch`);
+    /// after a crash an adapter's only copy can be the in-flight host
+    /// re-fetch itself, which is why the in-flight check is part of
+    /// the invariant.
     pub fn check_coverage(&self, n_adapters: usize) -> Result<(), String> {
         for a in 0..n_adapters as AdapterId {
-            if self.find_replica(a).is_none() {
+            let covered = self.find_replica(a).is_some()
+                || (0..self.n_servers)
+                    .any(|s| self.fetching[s].contains(&a));
+            if !covered {
                 return Err(format!("adapter {a} lost (no replica)"));
             }
         }
@@ -493,6 +630,85 @@ mod tests {
             .is_none());
         pool2.finish_fetch(2, 2);
         pool2.check_coverage(4).unwrap();
+    }
+
+    #[test]
+    fn crash_drops_copies_and_reports_lost_last_copies() {
+        let (mut pool, adapters) = setup();
+        let g = GpuSpec::A100_40G;
+        // replicate adapter 1 onto server 1 so it survives the crash
+        pool.start_fetch(1, 1, &adapters, &g).unwrap();
+        pool.finish_fetch(1, 1);
+        // adapter 0's only copy is on server 0 → lost by the crash
+        let lost = pool.crash_server(0);
+        assert_eq!(lost, vec![0]);
+        assert_eq!(pool.resident_count(0), 0);
+        assert!(pool.check_coverage(4).is_err(), "0 is really gone");
+        // host-tier re-fetch restores coverage (priced as a page-in,
+        // cheaper latency floor than RDMA for equal bytes)
+        pool.set_host_fallback(true);
+        let t_host = pool.start_fetch(2, 0, &adapters, &g).unwrap();
+        assert_eq!(pool.host_fetches, 1);
+        pool.check_coverage(4).unwrap(); // in-flight copy counts
+        pool.finish_fetch(2, 0);
+        pool.check_coverage(4).unwrap();
+        let t_rdma = pool.start_fetch(1, 0, &adapters, &g).unwrap();
+        assert!(t_host < t_rdma, "host {t_host} vs rdma {t_rdma}");
+        pool.finish_fetch(1, 0);
+    }
+
+    #[test]
+    fn crash_wipes_inflight_and_checked_finish_tolerates_it() {
+        let (mut pool, adapters) = setup();
+        let g = GpuSpec::A100_40G;
+        pool.start_fetch(2, 0, &adapters, &g).unwrap();
+        assert!(pool.is_fetching(2, 0));
+        pool.crash_server(2);
+        assert!(!pool.is_fetching(2, 0));
+        // the scheduled completion lands on nothing
+        assert!(!pool.finish_fetch_checked(2, 0));
+        assert!(!pool.is_resident(2, 0));
+        // the source copy on server 0 survived
+        pool.check_coverage(4).unwrap();
+    }
+
+    #[test]
+    fn inter_region_fetches_priced_above_intra() {
+        // servers 0,2 in region 0; servers 1,3 in region 1
+        let initial = vec![vec![0], vec![0], vec![1], vec![1]];
+        let adapters = AdapterSet::uniform_per_rank(
+            4,
+            &[8, 128],
+            &ModelSpec::LLAMA_7B,
+        );
+        let g = GpuSpec::A100_40G;
+        let mut flat = AdapterPool::new(4, &initial);
+        let mut regional = AdapterPool::new(4, &initial);
+        regional.set_regions(2, 0.25, 750e-6);
+        // adapter 0 lives on server 0 (region 0): fetch to server 2
+        // stays intra-region, fetch to server 3 crosses
+        let t_flat_intra = flat.start_fetch(2, 0, &adapters, &g).unwrap();
+        let t_flat_cross = flat.start_fetch(3, 0, &adapters, &g).unwrap();
+        let t_reg_intra =
+            regional.start_fetch(2, 0, &adapters, &g).unwrap();
+        let t_reg_cross =
+            regional.start_fetch(3, 0, &adapters, &g).unwrap();
+        assert_eq!(t_flat_intra, t_flat_cross, "flat pricing");
+        assert_eq!(t_reg_intra, t_flat_intra, "intra unchanged");
+        assert!(
+            t_reg_cross > 2.0 * t_reg_intra,
+            "cross-region must cost well above intra: {t_reg_cross} \
+             vs {t_reg_intra}"
+        );
+        // batched: a cross-region group is dearer than the same group
+        // intra-region
+        let (tb_cross, _) = regional
+            .start_fetch_batch(3, &[1], &adapters, &g)
+            .unwrap();
+        let (tb_intra, _) = regional
+            .start_fetch_batch(2, &[1], &adapters, &g)
+            .unwrap();
+        assert!(tb_cross > tb_intra);
     }
 
     #[test]

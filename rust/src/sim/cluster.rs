@@ -14,6 +14,7 @@ use super::engine::{
     LoadSignal, PlacementPolicy, PoolMode, RoutingPolicy, SystemSpec,
 };
 use super::report::SimReport;
+use super::scenario::ScenarioConfig;
 use crate::config::{
     AutoscaleConfig, BatchPolicyKind, ClusterConfig, DecodePolicyKind,
     RebalanceConfig, SloFeedbackConfig,
@@ -21,6 +22,77 @@ use crate::config::{
 use crate::placement::Placer;
 use crate::trace::Trace;
 use std::sync::{Mutex, OnceLock};
+
+/// The policy bundle a [`SystemSpec`] is composed from — every knob
+/// that is orthogonal to *which* system runs: ablation options, batch
+/// admission, decode composition, SLO feedback, drift-reactive
+/// rebalancing, and the operational scenario (failure injection +
+/// regions). One struct instead of five positional parameters, so new
+/// knobs stop breaking every `spec()` call site.
+///
+/// Build one with [`SpecParams::from_config`] (the canonical
+/// derivation from a [`SimConfig`]) or from `Default` plus the
+/// builder-style setters:
+///
+/// ```ignore
+/// let p = SpecParams::default().batch(BatchPolicyKind::RankAware);
+/// let spec = SystemKind::LoraServe.spec(&p);
+/// ```
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpecParams {
+    pub opts: LoraServeOpts,
+    pub batch: BatchPolicyKind,
+    pub decode: DecodePolicyKind,
+    pub slo: SloFeedbackConfig,
+    pub rebalance: RebalanceConfig,
+    pub scenario: ScenarioConfig,
+}
+
+impl SpecParams {
+    /// The canonical derivation: every policy knob a `SimConfig`
+    /// carries, bundled for `SystemKind::spec` /
+    /// `custom_system_spec`.
+    pub fn from_config(cfg: &SimConfig) -> Self {
+        SpecParams {
+            opts: cfg.opts,
+            batch: cfg.batch,
+            decode: cfg.decode,
+            slo: cfg.feedback,
+            rebalance: cfg.rebalance,
+            scenario: cfg.scenario,
+        }
+    }
+
+    pub fn opts(mut self, opts: LoraServeOpts) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    pub fn batch(mut self, batch: BatchPolicyKind) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    pub fn decode(mut self, decode: DecodePolicyKind) -> Self {
+        self.decode = decode;
+        self
+    }
+
+    pub fn slo(mut self, slo: SloFeedbackConfig) -> Self {
+        self.slo = slo;
+        self
+    }
+
+    pub fn rebalance(mut self, rebalance: RebalanceConfig) -> Self {
+        self.rebalance = rebalance;
+        self
+    }
+
+    pub fn scenario(mut self, scenario: ScenarioConfig) -> Self {
+        self.scenario = scenario;
+        self
+    }
+}
 
 /// The four systems of §V-D.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,16 +125,9 @@ impl SystemKind {
     /// The canned [`SystemSpec`] this kind names — the four systems of
     /// §V-D expressed as policy compositions. The ablation knobs fold
     /// in here (they tweak the spec, not the engine).
-    pub fn spec(
-        &self,
-        opts: &LoraServeOpts,
-        batch: BatchPolicyKind,
-        decode: DecodePolicyKind,
-        slo: SloFeedbackConfig,
-        rebalance: RebalanceConfig,
-    ) -> SystemSpec {
+    pub fn spec(&self, p: &SpecParams) -> SystemSpec {
         // (the Toppings arm below forces Replicated regardless)
-        let pool = if opts.full_replication {
+        let pool = if p.opts.full_replication {
             PoolMode::Replicated
         } else {
             PoolMode::Distributed
@@ -72,21 +137,22 @@ impl SystemKind {
             placement: PlacementPolicy::Contiguous,
             routing: RoutingPolicy::Table,
             pool,
-            batch,
-            decode,
+            batch: p.batch,
+            decode: p.decode,
             periodic_rebalance: false,
             empirical_oppoints: false,
-            rank_agnostic: opts.rank_agnostic,
-            last_value_demand: opts.last_value_demand,
+            rank_agnostic: p.opts.rank_agnostic,
+            last_value_demand: p.opts.last_value_demand,
             load_signal: LoadSignal::ServiceSeconds,
             rank_blind_cost: false,
-            slo,
-            rebalance,
+            slo: p.slo,
+            rebalance: p.rebalance,
+            scenario: p.scenario,
         };
         match self {
             SystemKind::LoraServe => SystemSpec {
                 placement: PlacementPolicy::LoraServe {
-                    skip_permutation: opts.skip_permutation,
+                    skip_permutation: p.opts.skip_permutation,
                 },
                 periodic_rebalance: true,
                 empirical_oppoints: true,
@@ -168,6 +234,9 @@ pub struct SimConfig {
     /// All knobs default off, and the engine is bit-identical with
     /// them off (asserted in `tests/obs_tracing.rs`).
     pub obs: crate::obs::ObsConfig,
+    /// Operational scenario (failure injection + region pricing).
+    /// Inert by default; threaded into the spec like the policy knobs.
+    pub scenario: ScenarioConfig,
 }
 
 impl SimConfig {
@@ -189,6 +258,7 @@ impl SimConfig {
             feedback,
             rebalance,
             obs: crate::obs::ObsConfig::default(),
+            scenario: ScenarioConfig::default(),
         }
     }
 
@@ -207,16 +277,43 @@ impl SimConfig {
         self
     }
 
+    /// Edit the policy bundle in one place: derives the current
+    /// [`SpecParams`], applies `f`, and writes the result back. This
+    /// replaces the per-knob `with_batch_policy` /
+    /// `with_decode_policy` / `with_slo_feedback` / `with_rebalance`
+    /// chain:
+    ///
+    /// ```ignore
+    /// let cfg = SimConfig::new(cluster, SystemKind::LoraServe)
+    ///     .with_params(|p| p.batch(batch).rebalance(reb));
+    /// ```
+    pub fn with_params(
+        mut self,
+        f: impl FnOnce(SpecParams) -> SpecParams,
+    ) -> Self {
+        let p = f(SpecParams::from_config(&self));
+        self.opts = p.opts;
+        self.batch = p.batch;
+        self.decode = p.decode;
+        self.feedback = p.slo;
+        self.rebalance = p.rebalance;
+        self.scenario = p.scenario;
+        self
+    }
+
+    #[deprecated(note = "use with_params(|p| p.batch(..))")]
     pub fn with_batch_policy(mut self, batch: BatchPolicyKind) -> Self {
         self.batch = batch;
         self
     }
 
+    #[deprecated(note = "use with_params(|p| p.decode(..))")]
     pub fn with_decode_policy(mut self, decode: DecodePolicyKind) -> Self {
         self.decode = decode;
         self
     }
 
+    #[deprecated(note = "use with_params(|p| p.slo(..))")]
     pub fn with_slo_feedback(
         mut self,
         feedback: SloFeedbackConfig,
@@ -225,6 +322,7 @@ impl SimConfig {
         self
     }
 
+    #[deprecated(note = "use with_params(|p| p.rebalance(..))")]
     pub fn with_rebalance(mut self, rebalance: RebalanceConfig) -> Self {
         self.rebalance = rebalance;
         self
@@ -241,13 +339,7 @@ impl SimConfig {
 /// drives the [`SimEngine`](super::engine::SimEngine); custom systems
 /// use [`run_spec`](super::engine::run_spec) directly.
 pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
-    let spec = cfg.system.spec(
-        &cfg.opts,
-        cfg.batch,
-        cfg.decode,
-        cfg.feedback,
-        cfg.rebalance,
-    );
+    let spec = cfg.system.spec(&SpecParams::from_config(cfg));
     super::engine::run_spec(trace, cfg, &spec)
 }
 
@@ -259,13 +351,7 @@ pub fn run_observed(
     trace: &Trace,
     cfg: &SimConfig,
 ) -> (SimReport, crate::obs::ObsOutput) {
-    let spec = cfg.system.spec(
-        &cfg.opts,
-        cfg.batch,
-        cfg.decode,
-        cfg.feedback,
-        cfg.rebalance,
-    );
+    let spec = cfg.system.spec(&SpecParams::from_config(cfg));
     super::engine::run_spec_observed(trace, cfg, &spec)
 }
 
@@ -309,10 +395,7 @@ pub fn registered_custom_systems() -> Vec<&'static str> {
 /// registered.
 pub fn custom_system_spec(
     name: &str,
-    batch: BatchPolicyKind,
-    decode: DecodePolicyKind,
-    slo: SloFeedbackConfig,
-    rebalance: RebalanceConfig,
+    p: &SpecParams,
 ) -> Option<SystemSpec> {
     let reg = custom_registry().lock().unwrap();
     let &(static_name, build) =
@@ -322,16 +405,17 @@ pub fn custom_system_spec(
         placement: PlacementPolicy::Custom(static_name, build),
         routing: RoutingPolicy::Table,
         pool: PoolMode::Distributed,
-        batch,
-        decode,
+        batch: p.batch,
+        decode: p.decode,
         periodic_rebalance: true,
         empirical_oppoints: false,
         rank_agnostic: false,
         last_value_demand: false,
         load_signal: LoadSignal::ServiceSeconds,
         rank_blind_cost: false,
-        slo,
-        rebalance,
+        slo: p.slo,
+        rebalance: p.rebalance,
+        scenario: p.scenario,
     })
 }
 
@@ -485,28 +569,19 @@ mod tests {
 
     #[test]
     fn custom_registry_registers_and_resolves() {
-        use crate::config::DecodePolicyKind;
         use crate::placement::baselines::RoundRobinPlacer;
+        let params = SpecParams::default();
         assert!(custom_system_spec(
             "definitely-not-registered",
-            BatchPolicyKind::Fifo,
-            DecodePolicyKind::Unified,
-            SloFeedbackConfig::default(),
-            RebalanceConfig::default(),
+            &params,
         )
         .is_none());
         register_custom_system("rr-test", |_seed| {
             Box::new(RoundRobinPlacer::new())
         });
         assert!(registered_custom_systems().contains(&"rr-test"));
-        let spec = custom_system_spec(
-            "rr-test",
-            BatchPolicyKind::Fifo,
-            DecodePolicyKind::Unified,
-            SloFeedbackConfig::default(),
-            RebalanceConfig::default(),
-        )
-        .expect("registered name must resolve");
+        let spec = custom_system_spec("rr-test", &params)
+            .expect("registered name must resolve");
         assert_eq!(spec.label, "rr-test");
         // the spec runs end to end through the composition seam
         let trace = small_trace(4.0, 11);
@@ -548,7 +623,7 @@ mod tests {
             DecodePolicyKind::ClassSubBatchAuto,
         ] {
             let cfg = SimConfig::new(cluster(), SystemKind::SLoraRandom)
-                .with_decode_policy(decode);
+                .with_params(|p| p.decode(decode));
             let rep = run(&trace, &cfg);
             assert_eq!(
                 rep.completed + rep.timeouts,

@@ -181,6 +181,11 @@ pub struct SystemSpec {
     /// Disabled by default; with it disabled the engine is the PR 3
     /// open-loop engine bit for bit.
     pub slo: crate::config::SloFeedbackConfig,
+    /// Production-scenario runtime knobs: the seeded MTBF failure
+    /// process (`ServerCrash`/`ServerRecover` control events) and
+    /// region-aware RDMA pricing. The default is inert — with it the
+    /// engine is the pre-scenario code path bit for bit.
+    pub scenario: super::scenario::ScenarioConfig,
 }
 
 /// Run one trace through one composed system. Deterministic per
@@ -419,6 +424,14 @@ pub struct SimEngine<'a> {
     /// deliveries since the last trigger check. Only maintained when
     /// `RebalanceConfig::promote_hot` > 0.
     remote_hot: BTreeMap<(AdapterId, ServerId), u64>,
+    /// Seeded failure process (stream 0xfa11, independent of routing
+    /// and workload streams); `None` unless the scenario enables
+    /// failure injection. Draw order per crash is fixed — victim,
+    /// MTTR, next inter-crash gap — so the schedule never depends on
+    /// shard count.
+    failure_rng: Option<Pcg32>,
+    /// Crashes injected so far (`FailureConfig::max_crashes` cap).
+    crashes_done: u32,
     st: EngineState,
 }
 
@@ -524,7 +537,7 @@ impl<'a> SimEngine<'a> {
         // through the φ table and must swap it on every topology
         // change.
         let table_routed = spec.routing == RoutingPolicy::Table;
-        let pool = if replicate {
+        let mut pool = if replicate {
             let initial: Vec<Vec<ServerId>> = (0..trace.adapters.len())
                 .map(|_| active0.clone())
                 .collect();
@@ -532,6 +545,22 @@ impl<'a> SimEngine<'a> {
         } else {
             AdapterPool::new(max_n, &homes_of(&assignment))
         };
+        let regions = spec.scenario.regions;
+        if regions.n_regions > 1 {
+            pool.set_regions(
+                regions.n_regions,
+                regions.inter_bw_factor,
+                regions.inter_latency,
+            );
+        }
+        let failures = spec.scenario.failures;
+        let mut failure_rng = failures.enabled.then(|| {
+            // a crash can strand the *last* copy of an adapter on the
+            // dead server: re-fetches fall back to the host/registry
+            // tier instead of tripping the coverage panic
+            pool.set_host_fallback(true);
+            Pcg32::with_stream(cfg.cluster.seed, 0xfa11)
+        });
 
         let router = match spec.routing {
             RoutingPolicy::Table => {
@@ -632,6 +661,14 @@ impl<'a> SimEngine<'a> {
         if let Some(a) = cfg.autoscale {
             q.push(a.decision_period, SimEvent::AutoscaleTick);
         }
+        if let Some(frng) = failure_rng.as_mut() {
+            // first crash: exponential gap after the settle-in floor
+            let first =
+                failures.start + frng.exponential(1.0 / failures.mtbf);
+            if first <= trace_end && failures.max_crashes > 0 {
+                q.push(first, SimEvent::ServerCrash);
+            }
+        }
 
         SimEngine {
             trace,
@@ -651,6 +688,8 @@ impl<'a> SimEngine<'a> {
             obs,
             stall_snap: 0.0,
             remote_hot: BTreeMap::new(),
+            failure_rng,
+            crashes_done: 0,
             st: EngineState {
                 rng,
                 topo,
@@ -949,6 +988,10 @@ impl<'a> SimEngine<'a> {
             SimEvent::AutoscaleTick => self.on_autoscale_tick(now),
             SimEvent::ServerReady(s) => self.on_server_ready(now, s),
             SimEvent::DrainCheck(s) => self.on_drain_check(now, s),
+            SimEvent::ServerCrash => self.on_server_crash(now),
+            SimEvent::ServerRecover(s) => {
+                self.on_server_recover(now, s)
+            }
         }
     }
 
@@ -1397,10 +1440,17 @@ impl<'a> SimEngine<'a> {
     }
 
     fn on_fetch_done(&mut self, now: f64, s: ServerId, a: AdapterId) {
-        self.st.pool.finish_fetch(s, a);
+        // `checked`: a crash wipes the destination's in-flight marks,
+        // so a completion scheduled before the crash lands on nothing
+        let landed = self.st.pool.finish_fetch_checked(s, a);
+        debug_assert!(
+            landed || self.spec.scenario.failures.enabled,
+            "fetch landing lost its in-flight mark"
+        );
         if self.obs.on() {
             self.obs.counter_add("sim_fetches_done_total", 1);
             if self.obs.trace_on() {
+                // end the span either way so begin/end stay balanced
                 self.obs.async_end(
                     "fetch",
                     "fetch",
@@ -1410,6 +1460,10 @@ impl<'a> SimEngine<'a> {
                     vec![],
                 );
             }
+        }
+        if !landed {
+            self.retire_sweep(now);
+            return;
         }
         if self.st.topo.state(s) == SrvState::Draining {
             // a fetch that raced the drain decision: discard the fresh
@@ -1464,10 +1518,21 @@ impl<'a> SimEngine<'a> {
     /// A batched drain migration lands: every adapter in the group
     /// becomes resident at once (single RDMA stream per destination).
     fn on_migration_done(&mut self, now: f64, s: ServerId, mid: u32) {
-        let ids = std::mem::take(&mut self.st.migrations[mid as usize]);
-        for &a in &ids {
-            self.st.pool.finish_fetch(s, a);
-        }
+        let all = std::mem::take(&mut self.st.migrations[mid as usize]);
+        // keep only the adapters whose in-flight mark survived — a
+        // crash of the destination wipes them, and the batch must not
+        // resurrect copies on (or re-home last copies via) a dead box
+        let ids: Vec<AdapterId> = all
+            .into_iter()
+            .filter(|&a| {
+                let landed = self.st.pool.finish_fetch_checked(s, a);
+                debug_assert!(
+                    landed || self.spec.scenario.failures.enabled,
+                    "migration landing lost its in-flight mark"
+                );
+                landed
+            })
+            .collect();
         if self.obs.trace_on() {
             self.obs.async_end(
                 "migration",
@@ -2131,6 +2196,191 @@ impl<'a> SimEngine<'a> {
         self.try_retire(s, now);
     }
 
+    /// Kill a crashed server's lane: every scheduled delivery and
+    /// iteration completion dies with the hardware. The heap keeps its
+    /// clock and sequence counter (determinism), and the backlog /
+    /// next-due-lane bookkeeping stays exact.
+    fn wipe_lane(&mut self, s: ServerId) {
+        let st = &mut self.st;
+        let lane = &mut st.lanes[s];
+        st.lane_backlog -= lane.heap.len();
+        lane.heap.clear();
+        st.lane_times.update(s, f64::INFINITY);
+    }
+
+    /// Scenario failure injection: hard-stop one active server. Unlike
+    /// the graceful drain protocol there is no migrate-then-retire
+    /// window — the lane is wiped, in-flight requests are requeued to
+    /// survivors (or failed, per `FailureConfig::requeue`), every
+    /// adapter copy on the box dies, and adapters it held the *last*
+    /// copy of are re-fetched from the host/registry tier. The victim
+    /// is drawn from the live fleet at fire time with the dedicated
+    /// failure stream, so the schedule is deterministic per seed and
+    /// independent of shard count (crashes are coordinator-epoch
+    /// events — all lanes flush before one lands).
+    fn on_server_crash(&mut self, now: f64) {
+        let fail = self.spec.scenario.failures;
+        if self.crashes_done >= fail.max_crashes {
+            return;
+        }
+        let active = self.st.topo.active();
+        if active.len() <= 1 {
+            // never kill the last survivor; re-arm the MTBF process
+            let gap = self
+                .failure_rng
+                .as_mut()
+                .expect("crash event without failure process")
+                .exponential(1.0 / fail.mtbf);
+            if now + gap <= self.trace_end {
+                self.st.q.push(now + gap, SimEvent::ServerCrash);
+            }
+            return;
+        }
+        // fixed draw order: victim, downtime, next inter-crash gap
+        let frng = self
+            .failure_rng
+            .as_mut()
+            .expect("crash event without failure process");
+        let victim = active[frng.below(active.len() as u64) as usize];
+        let mttr = frng.exponential(1.0 / fail.mttr);
+        let gap = frng.exponential(1.0 / fail.mtbf);
+        self.crashes_done += 1;
+        self.st.report.crashes += 1;
+        self.st.topo.set(victim, SrvState::Crashed);
+        // crashed servers are masked out of the least-work index
+        self.mark_router_dirty(victim);
+        self.wipe_lane(victim);
+        // in-flight work dies with the box: running prefill batch,
+        // active decodes, queue, and fetch-waiters (their stall time
+        // is charged to fetch_stall attribution on the way out)
+        let recovered = self.st.servers[victim].crash_reset(now);
+        // every copy on the box — resident and in flight — is gone
+        let lost = self.st.pool.crash_server(victim);
+        let survivors = self.st.topo.active();
+        // a crashed box stops billing immediately (it is not ours to
+        // pay for while it is down), unlike a draining one
+        self.st.report.fleet.set_fleet(
+            now,
+            survivors.len(),
+            self.st.topo.billed(),
+        );
+        if self.obs.on() {
+            self.obs.counter_add("sim_crashes_total", 1);
+            self.obs.instant(
+                "server_crash",
+                now,
+                obs::PID_CONTROL,
+                0,
+                vec![
+                    ("server", victim.into()),
+                    ("requests", recovered.len().into()),
+                    ("lost_last_copies", lost.len().into()),
+                ],
+            );
+        }
+        if self.table_routed {
+            // swap the table off the victim *now*; the incremental
+            // planner sees the post-crash pool, so moves it proposes
+            // onto survivors price their RDMA from surviving copies
+            self.incremental_replace(now, &survivors);
+        }
+        // Re-materialize adapters whose last copy died: one batched
+        // host-tier fetch per destination (the drain protocol's
+        // transfer machinery; `transfer_time` prices replica-less
+        // fetches as host page-ins because `host_fallback` is armed).
+        if !lost.is_empty() {
+            let mut by_tgt: BTreeMap<ServerId, Vec<AdapterId>> =
+                BTreeMap::new();
+            for a in lost {
+                let tgt = self.st.assignment.shares[a as usize]
+                    .iter()
+                    .map(|&(s, _)| s)
+                    .find(|&s| {
+                        self.st.topo.state(s) == SrvState::Active
+                    })
+                    .unwrap_or(survivors[0]);
+                by_tgt.entry(tgt).or_default().push(a);
+            }
+            self.start_transfers(now, by_tgt);
+        }
+        // the victim's in-flight requests: requeue to survivors
+        // through the (already-swapped) router, or fail outright
+        if fail.requeue {
+            self.st.report.crash_requeued += recovered.len() as u64;
+            for sreq in recovered {
+                if !self.table_routed {
+                    self.refresh_router_loads();
+                }
+                let target = self
+                    .st
+                    .router
+                    .route(sreq.req.adapter, &mut self.st.rng);
+                self.deliver(target, sreq, now);
+                if !self.table_routed {
+                    // least-loaded requeues must observe each other
+                    self.flush_one_lane(target, now);
+                }
+            }
+        } else {
+            self.st.report.crash_failed += recovered.len() as u64;
+        }
+        self.st
+            .q
+            .push(now + mttr, SimEvent::ServerRecover(victim));
+        if self.crashes_done < fail.max_crashes
+            && now + gap <= self.trace_end
+        {
+            self.st.q.push(now + gap, SimEvent::ServerCrash);
+        }
+        debug_assert!(
+            self.st.pool.check_coverage(self.trace.adapters.len()).is_ok(),
+            "crash lost coverage"
+        );
+    }
+
+    /// MTTR elapsed: the crashed box rejoins the fleet empty-handed —
+    /// same re-entry path as a freshly provisioned server (replicated
+    /// pools re-copy everything; table-routed systems spread load back
+    /// onto it through the incremental planner).
+    fn on_server_recover(&mut self, now: f64, s: ServerId) {
+        if self.st.topo.state(s) != SrvState::Crashed {
+            return; // stale (slot repurposed by the autoscaler)
+        }
+        self.st.topo.set(s, SrvState::Active);
+        self.st.servers[s].draining = false;
+        self.mark_router_dirty(s);
+        self.st.report.recoveries += 1;
+        let active_ids = self.st.topo.active();
+        self.st.report.fleet.set_fleet(
+            now,
+            active_ids.len(),
+            self.st.topo.billed(),
+        );
+        if self.obs.on() {
+            self.obs.counter_add("sim_recoveries_total", 1);
+            self.obs.instant(
+                "server_recover",
+                now,
+                obs::PID_CONTROL,
+                0,
+                vec![("server", s.into())],
+            );
+        }
+        if self.replicate {
+            self.st.report.migration_bytes += self
+                .st
+                .pool
+                .replicate_all_to(s, &self.trace.adapters);
+        }
+        if self.table_routed {
+            self.incremental_replace(now, &active_ids);
+        }
+        debug_assert!(
+            self.st.pool.check_coverage(self.trace.adapters.len()).is_ok(),
+            "recovery lost coverage"
+        );
+    }
+
     fn finish(mut self) -> SimReport {
         debug_assert!(
             self.st.pool.check_coverage(self.trace.adapters.len()).is_ok(),
@@ -2178,6 +2428,7 @@ impl<'a> SimEngine<'a> {
         }
         self.st.report.fetches = self.st.pool.total_fetches;
         self.st.report.fetch_bytes = self.st.pool.total_fetch_bytes;
+        self.st.report.host_fetches = self.st.pool.host_fetches;
         // control + lane events: identical for any shard count (the
         // control schedule and per-lane work never depend on it), so
         // this is safe to fold into the determinism digest

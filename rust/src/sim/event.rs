@@ -45,6 +45,13 @@ pub enum SimEvent {
     /// server. The engine resolves the adapter group by the carried
     /// batch id (one event per destination, not per adapter).
     MigrationDone(ServerId, u32),
+    /// Scenario failure injection: the seeded MTBF process kills one
+    /// active server (victim chosen at fire time from the live fleet).
+    /// A coordinator-epoch event — all lanes flush before it lands.
+    ServerCrash,
+    /// A crashed server comes back (MTTR elapsed) and rejoins the
+    /// fleet empty-handed.
+    ServerRecover(ServerId),
 }
 
 /// Events are ordered by time, then by insertion sequence (FIFO among
@@ -173,6 +180,14 @@ impl<E> EventQueue<E> {
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
+
+    /// Drop every pending event without rewinding the clock or the
+    /// sequence counter (a crashed server's lane wipe: scheduled
+    /// deliveries and iteration completions die with the server, but
+    /// determinism requires `now`/`seq` to keep their history).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
 }
 
 #[cfg(test)]
@@ -205,6 +220,19 @@ mod tests {
         assert_eq!(q.pop().unwrap().1, 1);
         assert_eq!(q.pop().unwrap().1, 2);
         assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn clear_keeps_clock_and_seq() {
+        let mut q = EventQueue::new();
+        q.push(1.0, "a");
+        q.push(5.0, "b");
+        assert_eq!(q.pop().unwrap(), (1.0, "a"));
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.now(), 1.0, "clear must not rewind the clock");
+        q.push(2.0, "c");
+        assert_eq!(q.pop().unwrap(), (2.0, "c"));
     }
 
     #[test]

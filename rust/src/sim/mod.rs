@@ -12,6 +12,7 @@ pub mod event;
 pub mod profile;
 pub mod rebalance;
 pub mod report;
+pub mod scenario;
 pub mod server;
 pub mod slo;
 pub mod topology;
@@ -19,7 +20,7 @@ pub mod topology;
 pub use cluster::{
     custom_system_spec, register_custom_system,
     registered_custom_systems, run, run_observed, LoraServeOpts,
-    SimConfig, SystemKind,
+    SimConfig, SpecParams, SystemKind,
 };
 pub use engine::{
     run_spec, run_spec_observed, LoadSignal, PlacementPolicy, PoolMode,

@@ -107,6 +107,19 @@ pub struct SimReport {
     /// already remote counts once; one that turned local and later
     /// misses again starts a new episode.
     pub remote_served: u64,
+    /// Failure injection (scenario pack): crashes fired and recoveries
+    /// completed by the seeded MTBF process.
+    pub crashes: u64,
+    pub recoveries: u64,
+    /// In-flight requests lost to a crash under `on_crash = "fail"`
+    /// (conservation: completed + timeouts + crash_failed = arrived).
+    pub crash_failed: u64,
+    /// In-flight requests a crash re-routed to surviving servers
+    /// (each restarts from scratch; TTFT still measured from arrival).
+    pub crash_requeued: u64,
+    /// Adapter fetches served from the host/registry tier because a
+    /// crash destroyed the last GPU-side copy.
+    pub host_fetches: u64,
     /// Total simulated events processed: control-queue events plus
     /// every server lane's delivery/iteration events. Shard-invariant
     /// by the epoch-barrier determinism contract, so it is part of the
@@ -272,6 +285,11 @@ impl SimReport {
             ("rejected_moves", Json::from(self.rejected_moves)),
             ("promotions", Json::from(self.promotions)),
             ("remote_served", Json::from(self.remote_served)),
+            ("crashes", Json::from(self.crashes)),
+            ("recoveries", Json::from(self.recoveries)),
+            ("crash_failed", Json::from(self.crash_failed)),
+            ("crash_requeued", Json::from(self.crash_requeued)),
+            ("host_fetches", Json::from(self.host_fetches)),
             ("ttft", digest(&mut self.ttft)),
             ("tbt", digest(&mut self.tbt)),
             ("e2e", digest(&mut self.e2e)),
@@ -341,6 +359,9 @@ mod tests {
             triggered_rebalances: 2,
             incremental_moves: 5,
             remote_served: 7,
+            crashes: 2,
+            recoveries: 1,
+            crash_requeued: 11,
             ..Default::default()
         };
         for i in 0..10 {
@@ -356,6 +377,11 @@ mod tests {
             "\"triggered_rebalances\":2",
             "\"incremental_moves\":5",
             "\"remote_served\":7",
+            "\"crashes\":2",
+            "\"recoveries\":1",
+            "\"crash_requeued\":11",
+            "\"crash_failed\":0",
+            "\"host_fetches\":0",
             "\"makespan\":12.5",
             "\"ttft\":{",
             "\"ttft_under_pressure\":{",

@@ -1,0 +1,286 @@
+//! Operational scenario runtime knobs: failure injection + regions.
+//!
+//! `ScenarioConfig` is the runtime half of the production scenario
+//! pack (the trace half lives in `trace::scenario`). It travels inside
+//! `SpecParams`/`SystemSpec`, so every engine run carries it; all
+//! defaults are inert — a default `ScenarioConfig` leaves the engine
+//! byte-identical to the pre-scenario code paths.
+//!
+//! * `FailureConfig` drives the seeded MTBF crash process: the engine
+//!   pre-seeds `ServerCrash` control events from a dedicated RNG
+//!   stream, each crash hard-stops an active server (state `Crashed`,
+//!   in-flight requests requeued or failed, every adapter copy lost,
+//!   last copies re-fetched from host memory) and schedules a
+//!   `ServerRecover` an exponential MTTR later.
+//! * `RegionConfig` tags servers with a region (`id % n_regions`) and
+//!   prices inter-region RDMA distinctly from intra-region in the
+//!   fetch cost model (derated bandwidth + extra fabric latency).
+//!
+//! A `--scenario file.json` bundles both with an optional
+//! `trace::scenario::ScenarioTraceConfig` under `"trace"`.
+
+use crate::trace::scenario::ScenarioTraceConfig;
+use crate::util::json::{self, Json};
+
+/// Seeded MTBF/MTTR failure-injection process. Inert by default.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureConfig {
+    pub enabled: bool,
+    /// Mean time between failures (s) — fleet-wide exponential
+    /// inter-crash gaps.
+    pub mtbf: f64,
+    /// Mean time to recovery (s) — exponential per-crash downtime.
+    pub mttr: f64,
+    /// No crash fires before this time (lets warmup settle).
+    pub start: f64,
+    /// Hard cap on injected crashes per run.
+    pub max_crashes: u32,
+    /// `true`: a crashed server's in-flight requests are re-routed to
+    /// survivors (conservation: completed + timeouts = arrived).
+    /// `false`: they fail outright and are counted in
+    /// `SimReport::crash_failed`.
+    pub requeue: bool,
+}
+
+impl Default for FailureConfig {
+    fn default() -> Self {
+        FailureConfig {
+            enabled: false,
+            mtbf: 600.0,
+            mttr: 60.0,
+            start: 60.0,
+            max_crashes: 4,
+            requeue: true,
+        }
+    }
+}
+
+/// Region topology: server `s` lives in region `s % n_regions`.
+/// `n_regions <= 1` disables region-aware pricing entirely.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RegionConfig {
+    pub n_regions: usize,
+    /// Inter-region RDMA bandwidth as a fraction of the intra-region
+    /// NIC-bound path (WAN/fabric oversubscription).
+    pub inter_bw_factor: f64,
+    /// Extra one-way latency (s) an inter-region transfer pays on top
+    /// of the RDMA setup cost.
+    pub inter_latency: f64,
+}
+
+impl Default for RegionConfig {
+    fn default() -> Self {
+        RegionConfig {
+            n_regions: 1,
+            inter_bw_factor: 0.25,
+            inter_latency: 750e-6,
+        }
+    }
+}
+
+impl RegionConfig {
+    /// Region tag of a server id.
+    pub fn region_of(&self, server: usize) -> usize {
+        server % self.n_regions.max(1)
+    }
+
+    /// Whether two servers sit in different regions (always false when
+    /// regions are disabled).
+    pub fn crosses(&self, a: usize, b: usize) -> bool {
+        self.n_regions > 1 && self.region_of(a) != self.region_of(b)
+    }
+}
+
+/// Runtime scenario knobs carried by `SystemSpec`. Default is inert.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ScenarioConfig {
+    pub failures: FailureConfig,
+    pub regions: RegionConfig,
+}
+
+impl ScenarioConfig {
+    /// Overlay `"failures"` / `"regions"` JSON sections on the inert
+    /// defaults. Missing keys keep defaults; present keys are
+    /// validated.
+    pub fn from_json(v: &Json) -> Result<ScenarioConfig, String> {
+        let mut cfg = ScenarioConfig::default();
+        if let Some(f) = v.get("failures") {
+            if let Some(x) = f.get("enabled").and_then(Json::as_bool) {
+                cfg.failures.enabled = x;
+            }
+            if let Some(x) = f.get("mtbf").and_then(Json::as_f64) {
+                if x <= 0.0 {
+                    return Err(format!(
+                        "failures.mtbf must be > 0, got {x}"
+                    ));
+                }
+                cfg.failures.mtbf = x;
+            }
+            if let Some(x) = f.get("mttr").and_then(Json::as_f64) {
+                if x <= 0.0 {
+                    return Err(format!(
+                        "failures.mttr must be > 0, got {x}"
+                    ));
+                }
+                cfg.failures.mttr = x;
+            }
+            if let Some(x) = f.get("start").and_then(Json::as_f64) {
+                if x < 0.0 {
+                    return Err(format!(
+                        "failures.start must be >= 0, got {x}"
+                    ));
+                }
+                cfg.failures.start = x;
+            }
+            if let Some(x) =
+                f.get("max_crashes").and_then(Json::as_usize)
+            {
+                cfg.failures.max_crashes = x as u32;
+            }
+            if let Some(s) = f.get("on_crash").and_then(Json::as_str) {
+                cfg.failures.requeue = match s {
+                    "requeue" => true,
+                    "fail" => false,
+                    other => {
+                        return Err(format!(
+                            "failures.on_crash must be \
+                             'requeue' or 'fail', got '{other}'"
+                        ))
+                    }
+                };
+            }
+        }
+        if let Some(r) = v.get("regions") {
+            if let Some(x) = r.get("n_regions").and_then(Json::as_usize)
+            {
+                if x == 0 {
+                    return Err(
+                        "regions.n_regions must be >= 1".into()
+                    );
+                }
+                cfg.regions.n_regions = x;
+            }
+            if let Some(x) =
+                r.get("inter_bw_factor").and_then(Json::as_f64)
+            {
+                if !(x > 0.0 && x <= 1.0) {
+                    return Err(format!(
+                        "regions.inter_bw_factor must be in (0, 1], \
+                         got {x}"
+                    ));
+                }
+                cfg.regions.inter_bw_factor = x;
+            }
+            if let Some(x) =
+                r.get("inter_latency").and_then(Json::as_f64)
+            {
+                if x < 0.0 {
+                    return Err(format!(
+                        "regions.inter_latency must be >= 0, got {x}"
+                    ));
+                }
+                cfg.regions.inter_latency = x;
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// A full `--scenario` file: a name, optional trace-generation knobs,
+/// and the runtime failure/region knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// When present, the CLI synthesizes the workload from
+    /// `trace::scenario::generate` instead of the `--trace` choice.
+    pub trace: Option<ScenarioTraceConfig>,
+    pub runtime: ScenarioConfig,
+}
+
+impl Scenario {
+    pub fn from_json(v: &Json) -> Result<Scenario, String> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("scenario")
+            .to_string();
+        let trace = match v.get("trace") {
+            Some(t) => Some(ScenarioTraceConfig::from_json(t)?),
+            None => None,
+        };
+        Ok(Scenario {
+            name,
+            trace,
+            runtime: ScenarioConfig::from_json(v)?,
+        })
+    }
+
+    pub fn from_file(path: &str) -> Result<Scenario, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        let v = json::parse(&text)
+            .map_err(|e| format!("parse {path}: {e}"))?;
+        Scenario::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_inert() {
+        let cfg = ScenarioConfig::default();
+        assert!(!cfg.failures.enabled);
+        assert_eq!(cfg.regions.n_regions, 1);
+        assert!(!cfg.regions.crosses(0, 5));
+    }
+
+    #[test]
+    fn region_tags_and_crossing() {
+        let r = RegionConfig {
+            n_regions: 3,
+            ..RegionConfig::default()
+        };
+        assert_eq!(r.region_of(0), 0);
+        assert_eq!(r.region_of(4), 1);
+        assert!(r.crosses(0, 1));
+        assert!(!r.crosses(0, 3));
+    }
+
+    #[test]
+    fn json_roundtrip_and_validation() {
+        let v = json::parse(
+            r#"{
+                "name": "res",
+                "failures": {"enabled": true, "mtbf": 120.0,
+                             "mttr": 30.0, "max_crashes": 2,
+                             "on_crash": "fail"},
+                "regions": {"n_regions": 2, "inter_bw_factor": 0.5},
+                "trace": {"n_adapters": 32, "rps": 20.0}
+            }"#,
+        )
+        .unwrap();
+        let s = Scenario::from_json(&v).unwrap();
+        assert_eq!(s.name, "res");
+        assert!(s.runtime.failures.enabled);
+        assert_eq!(s.runtime.failures.mtbf, 120.0);
+        assert!(!s.runtime.failures.requeue);
+        assert_eq!(s.runtime.regions.n_regions, 2);
+        let t = s.trace.expect("trace section");
+        assert_eq!(t.n_adapters, 32);
+
+        for bad in [
+            r#"{"failures": {"mtbf": 0}}"#,
+            r#"{"failures": {"on_crash": "explode"}}"#,
+            r#"{"regions": {"n_regions": 0}}"#,
+            r#"{"regions": {"inter_bw_factor": 2.0}}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(
+                ScenarioConfig::from_json(&v).is_err(),
+                "{bad} should be rejected"
+            );
+        }
+    }
+}

@@ -1163,6 +1163,41 @@ impl SimServer {
         out
     }
 
+    /// Hard-stop for failure injection: unlike the graceful
+    /// `extract_pending`, *everything* comes off — queued requests,
+    /// fetch-blocked requests (their block time is still charged to
+    /// the fetch-stall counter), the running iteration's prefill
+    /// batch, and every active (mid-decode) sequence. The scheduler
+    /// state resets to empty/idle; the engine decides whether the
+    /// returned requests requeue on survivors or fail. Sorted by
+    /// arrival so re-delivery preserves FIFO fairness.
+    pub fn crash_reset(&mut self, now: f64) -> Vec<SimReq> {
+        let mut out: Vec<SimReq> = self.queue.drain(..).collect();
+        let waiting: Vec<(SimReq, f64)> =
+            self.waiting_fetch.drain(..).collect();
+        for (r, since) in waiting {
+            self.fetch_stall_s += now - since;
+            self.obs.with_attrib(|t| {
+                t.rec(r.uid).fetch_stall += now - since;
+            });
+            out.push(r);
+        }
+        if let Iteration::Prefill { batch } =
+            std::mem::replace(&mut self.running, Iteration::Idle)
+        {
+            out.extend(batch);
+        }
+        out.extend(self.active.drain(..).map(|a| a.sreq));
+        self.pending_decode.clear();
+        self.outstanding = 0.0;
+        self.busy_until = now;
+        self.prefill_under_pressure = false;
+        out.sort_by(|a, b| {
+            a.req.arrival.partial_cmp(&b.req.arrival).unwrap()
+        });
+        out
+    }
+
     /// True once a draining server holds no work at all — the compute
     /// half of the retire condition (the pool half is that it holds no
     /// last-copy adapters).

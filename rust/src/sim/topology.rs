@@ -23,6 +23,11 @@ pub enum SrvState {
     Draining,
     /// Fully quiesced and copy-free; reusable by a later scale-up.
     Retired,
+    /// Hardware failure (scenario failure injection): unroutable, not
+    /// billed, every adapter copy lost. Unlike `Retired`, the slot is
+    /// reserved for the pending `ServerRecover` and is NOT a free slot
+    /// the autoscaler may claim.
+    Crashed,
 }
 
 /// The slot-state vector of the (possibly elastic) fleet, with
@@ -173,5 +178,21 @@ mod tests {
         t.set(0, SrvState::Retired);
         assert_eq!(t.billed(), 2);
         assert_eq!(t.free_slot(), Some(0), "retired slots are reusable");
+    }
+
+    #[test]
+    fn crashed_is_unbilled_and_not_a_free_slot() {
+        let mut t = FleetTopology::new(2, 2);
+        t.set(1, SrvState::Crashed);
+        assert_eq!(t.active(), vec![0]);
+        assert_eq!(t.billed(), 1, "a dead server stops billing");
+        assert_eq!(
+            t.free_slot(),
+            None,
+            "the slot is reserved for recovery"
+        );
+        t.set(1, SrvState::Active);
+        assert_eq!(t.active(), vec![0, 1]);
+        assert_eq!(t.billed(), 2);
     }
 }

@@ -11,6 +11,7 @@
 pub mod azure;
 pub mod characterize;
 pub mod production;
+pub mod scenario;
 
 use crate::workload::{AdapterSet, Request};
 

@@ -1,0 +1,412 @@
+//! Composable production-scenario trace generator.
+//!
+//! The `production` module reproduces the paper's five-adapter drift
+//! shapes; this one synthesizes the operational stressors the paper's
+//! fleet sees but its figures never isolate (PAPERS.md: S-LoRA-scale
+//! adapter counts, CaraServe-style constant adapter churn):
+//!
+//! * **Tenant lifecycle churn** — every adapter gets a `[birth, death)`
+//!   window. A `resident_frac` slice of the fleet is live from t = 0;
+//!   the rest are created over the run and deleted after an
+//!   exponentially distributed lifetime. Traffic only targets live
+//!   tenants, so demand continuously shifts onto newly created (cold)
+//!   adapters and away from deleted ones.
+//! * **Zipf popularity** — request traffic across live adapters follows
+//!   a Zipf(`zipf_alpha`) law over a seed-shuffled popularity order, so
+//!   popularity is uncorrelated with rank class or adapter id.
+//! * **Diurnal tide** — the aggregate arrival rate is modulated by
+//!   `1 + amplitude * sin(...)` with `diurnal_cycles` full cycles over
+//!   the trace, trough-first so the run opens calm and crests mid-way.
+//!
+//! Arrivals are per-minute Poisson-thinned like `production::generate`,
+//! normalized so the expected request total is `rps * duration`.
+//! Everything is driven by one dedicated RNG stream: same seed, same
+//! trace, byte for byte.
+
+use crate::config::ModelSpec;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::workload::{AdapterSet, RANK_CLASSES};
+
+use super::{LengthModel, Request, Trace};
+
+/// RNG stream tag for scenario traces (disjoint from the production
+/// trace's 0x9d0d and the engine's 0x51).
+const SCENARIO_STREAM: u64 = 0x5ce7a;
+
+/// Knobs for the churn + diurnal scenario trace. All fields have inert
+/// middle-of-the-road defaults; `from_json` overlays a `--scenario`
+/// file's `"trace"` section on top of them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioTraceConfig {
+    pub n_adapters: usize,
+    /// Mean offered request rate; the diurnal tide modulates around it.
+    pub rps: f64,
+    pub duration: f64,
+    /// Zipf exponent of the traffic split across live adapters.
+    pub zipf_alpha: f64,
+    /// Power-law exponent over adapter *counts* per rank class
+    /// (mirrors `ProductionConfig::alpha`).
+    pub alpha_counts: f64,
+    /// Fraction of adapters live at t = 0 (the "resident" tenants);
+    /// the remainder churn in over the run.
+    pub resident_frac: f64,
+    /// Mean tenant lifetime (s) for churned-in adapters; exponential.
+    pub mean_lifetime: f64,
+    /// Diurnal modulation depth in [0, 1): rate swings between
+    /// `rps * (1 ± amplitude)`.
+    pub diurnal_amplitude: f64,
+    /// Full day/night cycles across the trace duration.
+    pub diurnal_cycles: f64,
+    pub lengths: LengthModel,
+    pub model: ModelSpec,
+    pub seed: u64,
+}
+
+impl Default for ScenarioTraceConfig {
+    fn default() -> Self {
+        ScenarioTraceConfig {
+            n_adapters: 64,
+            rps: 30.0,
+            duration: 600.0,
+            zipf_alpha: 1.2,
+            alpha_counts: 1.0,
+            resident_frac: 0.5,
+            mean_lifetime: 300.0,
+            diurnal_amplitude: 0.6,
+            diurnal_cycles: 2.0,
+            lengths: LengthModel::default(),
+            model: ModelSpec::LLAMA_7B,
+            seed: 0,
+        }
+    }
+}
+
+impl ScenarioTraceConfig {
+    /// Overlay JSON knobs on the defaults; unknown keys are rejected
+    /// upstream by `sim::scenario::Scenario::from_json`'s schema, so
+    /// this only validates ranges.
+    pub fn from_json(v: &Json) -> Result<ScenarioTraceConfig, String> {
+        let mut cfg = ScenarioTraceConfig::default();
+        if let Some(n) = v.get("n_adapters").and_then(Json::as_usize) {
+            if n < RANK_CLASSES.len() {
+                return Err(format!(
+                    "trace.n_adapters must be >= {} (one per rank \
+                     class), got {n}",
+                    RANK_CLASSES.len()
+                ));
+            }
+            cfg.n_adapters = n;
+        }
+        if let Some(x) = v.get("rps").and_then(Json::as_f64) {
+            if x <= 0.0 {
+                return Err(format!("trace.rps must be > 0, got {x}"));
+            }
+            cfg.rps = x;
+        }
+        if let Some(x) = v.get("duration").and_then(Json::as_f64) {
+            if x <= 0.0 {
+                return Err(format!(
+                    "trace.duration must be > 0, got {x}"
+                ));
+            }
+            cfg.duration = x;
+        }
+        if let Some(x) = v.get("zipf_alpha").and_then(Json::as_f64) {
+            cfg.zipf_alpha = x.max(0.0);
+        }
+        if let Some(x) = v.get("alpha_counts").and_then(Json::as_f64) {
+            cfg.alpha_counts = x.max(0.0);
+        }
+        if let Some(x) = v.get("resident_frac").and_then(Json::as_f64) {
+            if !(0.0..=1.0).contains(&x) {
+                return Err(format!(
+                    "trace.resident_frac must be in [0, 1], got {x}"
+                ));
+            }
+            cfg.resident_frac = x;
+        }
+        if let Some(x) = v.get("mean_lifetime").and_then(Json::as_f64) {
+            if x <= 0.0 {
+                return Err(format!(
+                    "trace.mean_lifetime must be > 0, got {x}"
+                ));
+            }
+            cfg.mean_lifetime = x;
+        }
+        if let Some(x) =
+            v.get("diurnal_amplitude").and_then(Json::as_f64)
+        {
+            if !(0.0..1.0).contains(&x) {
+                return Err(format!(
+                    "trace.diurnal_amplitude must be in [0, 1), got {x}"
+                ));
+            }
+            cfg.diurnal_amplitude = x;
+        }
+        if let Some(x) = v.get("diurnal_cycles").and_then(Json::as_f64) {
+            cfg.diurnal_cycles = x.max(0.0);
+        }
+        if let Some(name) = v.get("model").and_then(Json::as_str) {
+            cfg.model = ModelSpec::by_name(name)
+                .ok_or_else(|| format!("unknown model '{name}'"))?;
+        }
+        if let Some(x) = v.get("seed").and_then(Json::as_f64) {
+            cfg.seed = x as u64;
+        }
+        Ok(cfg)
+    }
+}
+
+/// Aggregate arrival-rate multiplier at trace fraction `f` in [0, 1]:
+/// trough-first sinusoid so warmup happens in the quiet phase.
+fn diurnal_intensity(cfg: &ScenarioTraceConfig, f: f64) -> f64 {
+    1.0 + cfg.diurnal_amplitude
+        * (std::f64::consts::TAU * (f * cfg.diurnal_cycles - 0.25)).sin()
+}
+
+/// Per-adapter tenant lifecycle window `[birth, death)`.
+#[derive(Debug, Clone, Copy)]
+struct Lifecycle {
+    birth: f64,
+    death: f64,
+}
+
+/// Synthesize the churn + Zipf + diurnal scenario trace.
+pub fn generate(cfg: &ScenarioTraceConfig) -> Trace {
+    let mut rng = Pcg32::with_stream(cfg.seed, SCENARIO_STREAM);
+    let adapters = AdapterSet::power_law_counts(
+        cfg.n_adapters,
+        &RANK_CLASSES,
+        cfg.alpha_counts,
+        &cfg.model,
+    );
+    let n = adapters.len();
+
+    // Tenant lifecycle: residents live from t = 0, churners are born
+    // uniformly over the first 80% of the run (so late tenants still
+    // see traffic) and die an exponential lifetime later. A death past
+    // `duration` simply means the tenant outlives the trace.
+    let lifecycles: Vec<Lifecycle> = (0..n)
+        .map(|_| {
+            let resident = rng.f64() < cfg.resident_frac;
+            let birth = if resident {
+                0.0
+            } else {
+                rng.f64() * cfg.duration * 0.8
+            };
+            let death =
+                birth + rng.exponential(1.0 / cfg.mean_lifetime);
+            Lifecycle { birth, death }
+        })
+        .collect();
+
+    // Zipf popularity over a seed-shuffled order so heavy hitters are
+    // uncorrelated with rank class (power_law_counts emits adapters
+    // grouped by class).
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut weights = vec![0.0f64; n];
+    for (pos, &a) in order.iter().enumerate() {
+        weights[a] = ((pos + 1) as f64).powf(-cfg.zipf_alpha);
+    }
+
+    // Per-minute Poisson thinning, normalized so the expected total is
+    // rps * duration regardless of the diurnal shape.
+    let minutes = (cfg.duration / 60.0).ceil().max(1.0) as usize;
+    let mut norm = 0.0;
+    for m in 0..minutes {
+        norm += diurnal_intensity(cfg, m as f64 / minutes as f64);
+    }
+    let base = cfg.rps * cfg.duration / norm;
+
+    let mut requests =
+        Vec::with_capacity((cfg.rps * cfg.duration) as usize + 1024);
+    let mut live = vec![0.0f64; n];
+    for m in 0..minutes {
+        let f = m as f64 / minutes as f64;
+        // Live set evaluated at the minute start: the lifecycle
+        // resolution of the churn process is one minute.
+        let t0 = m as f64 * 60.0;
+        let mut any = false;
+        for a in 0..n {
+            let lc = &lifecycles[a];
+            live[a] = if lc.birth <= t0 && t0 < lc.death {
+                any = true;
+                weights[a]
+            } else {
+                0.0
+            };
+        }
+        if !any {
+            continue;
+        }
+        let lambda = base * diurnal_intensity(cfg, f);
+        let count = rng.poisson(lambda);
+        for _ in 0..count {
+            let t = (m as f64 + rng.f64()) * 60.0;
+            if t > cfg.duration {
+                continue;
+            }
+            let adapter =
+                adapters.adapters[rng.weighted_index(&live)].id;
+            let (p, o) = cfg.lengths.sample(&mut rng);
+            requests.push(Request {
+                id: 0,
+                adapter,
+                prompt_len: p,
+                output_len: o,
+                arrival: t,
+            });
+        }
+    }
+    Trace::new(
+        &format!("scenario-n{}-s{}", cfg.n_adapters, cfg.seed),
+        adapters,
+        requests,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = ScenarioTraceConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(b.requests.iter()) {
+            assert_eq!(x.adapter, y.adapter);
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(x.prompt_len, y.prompt_len);
+        }
+        let c = generate(&ScenarioTraceConfig {
+            seed: 1,
+            ..ScenarioTraceConfig::default()
+        });
+        assert_ne!(
+            a.requests.len(),
+            0,
+            "default scenario must produce traffic"
+        );
+        assert!(
+            a.requests.len() != c.requests.len()
+                || a.requests
+                    .iter()
+                    .zip(c.requests.iter())
+                    .any(|(x, y)| x.adapter != y.adapter),
+            "different seeds must differ"
+        );
+    }
+
+    #[test]
+    fn request_count_close_to_target() {
+        let cfg = ScenarioTraceConfig {
+            resident_frac: 1.0, // no churn: full rate all run
+            ..ScenarioTraceConfig::default()
+        };
+        let t = generate(&cfg);
+        let target = cfg.rps * cfg.duration;
+        let got = t.requests.len() as f64;
+        // Poisson noise: 5 sigma around the normalized target.
+        assert!(
+            (got - target).abs() < 5.0 * target.sqrt() + 1.0,
+            "got {got}, want ~{target}"
+        );
+    }
+
+    #[test]
+    fn churn_gates_traffic_to_lifecycle_windows() {
+        let cfg = ScenarioTraceConfig {
+            resident_frac: 0.0,
+            mean_lifetime: 120.0,
+            ..ScenarioTraceConfig::default()
+        };
+        let t = generate(&cfg);
+        // Rebuild the lifecycle windows with the same stream prefix.
+        let mut rng = Pcg32::with_stream(cfg.seed, SCENARIO_STREAM);
+        let n = t.adapters.len();
+        let windows: Vec<(f64, f64)> = (0..n)
+            .map(|_| {
+                let resident = rng.f64() < cfg.resident_frac;
+                let birth = if resident {
+                    0.0
+                } else {
+                    rng.f64() * cfg.duration * 0.8
+                };
+                (birth, birth + rng.exponential(1.0 / cfg.mean_lifetime))
+            })
+            .collect();
+        for r in &t.requests {
+            let (birth, death) = windows[r.adapter as usize];
+            // Minute-granularity gating: arrivals land within the
+            // window widened by one minute on each side.
+            assert!(
+                r.arrival >= birth - 60.0 && r.arrival <= death + 60.0,
+                "adapter {} hit at {:.1} outside [{birth:.1}, {death:.1})",
+                r.adapter,
+                r.arrival
+            );
+        }
+        // With pure churn some adapters must die mid-trace and stop
+        // receiving traffic.
+        assert!(
+            windows.iter().any(|&(_, d)| d < cfg.duration / 2.0),
+            "expected at least one early tenant deletion"
+        );
+    }
+
+    #[test]
+    fn diurnal_tide_modulates_rate() {
+        let cfg = ScenarioTraceConfig {
+            resident_frac: 1.0,
+            diurnal_amplitude: 0.8,
+            diurnal_cycles: 1.0,
+            duration: 1200.0,
+            ..ScenarioTraceConfig::default()
+        };
+        let t = generate(&cfg);
+        // One trough-first cycle: the first quarter is the quiet
+        // phase, the middle half holds the crest.
+        let q = cfg.duration / 4.0;
+        let quiet = t
+            .requests
+            .iter()
+            .filter(|r| r.arrival < q)
+            .count() as f64;
+        let crest = t
+            .requests
+            .iter()
+            .filter(|r| r.arrival >= q && r.arrival < 3.0 * q)
+            .count() as f64
+            / 2.0;
+        assert!(
+            crest > 1.5 * quiet,
+            "crest {crest} should dominate quiet phase {quiet}"
+        );
+    }
+
+    #[test]
+    fn json_overlay_and_validation() {
+        let v = crate::util::json::parse(
+            r#"{"n_adapters": 16, "rps": 12.5, "resident_frac": 0.25,
+                "diurnal_amplitude": 0.3, "seed": 9}"#,
+        )
+        .unwrap();
+        let cfg = ScenarioTraceConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.n_adapters, 16);
+        assert_eq!(cfg.rps, 12.5);
+        assert_eq!(cfg.resident_frac, 0.25);
+        assert_eq!(cfg.seed, 9);
+        // untouched knobs keep defaults
+        assert_eq!(
+            cfg.mean_lifetime,
+            ScenarioTraceConfig::default().mean_lifetime
+        );
+        let bad = crate::util::json::parse(r#"{"resident_frac": 1.5}"#)
+            .unwrap();
+        assert!(ScenarioTraceConfig::from_json(&bad).is_err());
+    }
+}

@@ -221,7 +221,7 @@ fn run_decode(
     sim::run(
         trace,
         &SimConfig::new(cluster, SystemKind::SLoraRandom)
-            .with_decode_policy(decode),
+            .with_params(|p| p.decode(decode)),
     )
 }
 
@@ -306,7 +306,7 @@ fn decode_knob_threads_through_config() {
     let explicit = sim::run(
         &trace,
         &SimConfig::new(cluster.clone(), SystemKind::SLoraRandom)
-            .with_decode_policy(DecodePolicyKind::Unified),
+            .with_params(|p| p.decode(DecodePolicyKind::Unified)),
     );
     assert_eq!(default_run.completed, explicit.completed);
     assert_eq!(

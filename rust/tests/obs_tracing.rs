@@ -187,13 +187,15 @@ fn attribution_reconciles_on_mixed_preempt_remote_trace() {
     let (mut rep, out) = run_observed(
         &trace,
         &SimConfig::new(drift_cluster(rb), SystemKind::LoraServe)
-            .with_decode_policy(DecodePolicyKind::RankPartitioned)
-            .with_slo_feedback(SloFeedbackConfig {
-                enabled: true,
-                ttft_target: 0.08,
-                tbt_target: 0.05,
-                preempt_decode: true,
-                pressure_theta: 0.5,
+            .with_params(|p| {
+                p.decode(DecodePolicyKind::RankPartitioned)
+                    .slo(SloFeedbackConfig {
+                        enabled: true,
+                        ttft_target: 0.08,
+                        tbt_target: 0.05,
+                        preempt_decode: true,
+                        pressure_theta: 0.5,
+                    })
             })
             .with_obs(ObsConfig {
                 attrib: true,

@@ -1,0 +1,203 @@
+//! Failure-injection acceptance: crash + recovery epochs keep the
+//! sharded engine byte-identical to sequential, the crashed-server
+//! request ledger conserves (requeue and fail modes), last-copy host
+//! re-fetches are charged to `fetch_stall` in the attribution, and
+//! the rebalance modes keep their resilience ordering through the
+//! crash window.
+
+use loraserve::config::{ClusterConfig, RebalanceMode};
+use loraserve::figures::resilience::{
+    p99_degradation, resilience_scenario, resilience_trace,
+};
+use loraserve::obs::ObsConfig;
+use loraserve::sim::scenario::{
+    FailureConfig, RegionConfig, ScenarioConfig,
+};
+use loraserve::sim::{self, run_observed, SimConfig, SystemKind};
+use loraserve::trace::scenario::{generate, ScenarioTraceConfig};
+use loraserve::trace::Trace;
+
+fn cluster(n: usize) -> ClusterConfig {
+    ClusterConfig {
+        n_servers: n,
+        rebalance_period: 30.0,
+        ..Default::default()
+    }
+}
+
+/// A crash process dense enough that a short trace reliably sees at
+/// least one crash + recovery.
+fn crash_scenario(requeue: bool) -> ScenarioConfig {
+    ScenarioConfig {
+        failures: FailureConfig {
+            enabled: true,
+            mtbf: 25.0,
+            mttr: 30.0,
+            start: 20.0,
+            max_crashes: 2,
+            requeue,
+        },
+        regions: RegionConfig::default(),
+    }
+}
+
+/// Churn trace hot enough that the victim has a deep queue at crash
+/// time, so the requeue/fail ledgers are exercised non-trivially.
+fn hot_trace(seed: u64) -> Trace {
+    generate(&ScenarioTraceConfig {
+        n_adapters: 24,
+        rps: 40.0,
+        duration: 120.0,
+        seed,
+        ..Default::default()
+    })
+}
+
+/// Crash and recovery are coordinator-epoch events: the same seed must
+/// produce a byte-identical report digest at shards 1, 2, and 8 with
+/// the failure process live — for the table-routed distributed-pool
+/// system and the least-loaded replicated one alike.
+#[test]
+fn crash_epochs_shard_invariant() {
+    let trace = resilience_trace(150.0, 7);
+    for system in [SystemKind::LoraServe, SystemKind::Toppings] {
+        let cfg = SimConfig::new(cluster(4), system)
+            .with_params(|p| p.scenario(crash_scenario(true)));
+        let mut seq = sim::run(&trace, &cfg.clone().with_shards(1));
+        assert!(
+            seq.crashes > 0,
+            "{}: failure process never fired",
+            system.label()
+        );
+        assert!(seq.recoveries > 0, "{}: no recovery", system.label());
+        let want = seq.to_json_string();
+        for shards in [2usize, 8] {
+            let mut rep =
+                sim::run(&trace, &cfg.clone().with_shards(shards));
+            assert_eq!(
+                want,
+                rep.to_json_string(),
+                "{}: digest diverged at shards={shards}",
+                system.label()
+            );
+        }
+    }
+}
+
+/// The crashed-server request ledger. Requeue mode: every request the
+/// crash recovered finishes (or times out) somewhere else, so the
+/// usual conservation law holds unchanged. Fail mode: the recovered
+/// requests are failed outright and the ledger balances only with the
+/// `crash_failed` column added.
+#[test]
+fn crashed_server_request_conservation() {
+    let trace = hot_trace(11);
+    let run = |requeue: bool| {
+        sim::run(
+            &trace,
+            &SimConfig::new(cluster(3), SystemKind::LoraServe)
+                .with_params(|p| p.scenario(crash_scenario(requeue))),
+        )
+    };
+    let rq = run(true);
+    assert!(rq.crashes >= 1, "no crash fired");
+    assert!(rq.crash_requeued > 0, "victim was idle at crash time");
+    assert_eq!(rq.crash_failed, 0);
+    assert_eq!(
+        rq.completed + rq.timeouts,
+        trace.requests.len() as u64,
+        "requeue mode lost requests"
+    );
+    let fl = run(false);
+    assert!(fl.crashes >= 1, "no crash fired");
+    assert!(fl.crash_failed > 0, "victim was idle at crash time");
+    assert_eq!(fl.crash_requeued, 0);
+    assert_eq!(
+        fl.completed + fl.timeouts + fl.crash_failed,
+        trace.requests.len() as u64,
+        "fail mode ledger does not balance"
+    );
+}
+
+/// A crash that takes an adapter's last copy re-fetches it from host
+/// memory (`host_fetches`), and the requests that requeue onto the
+/// still-fetching target are charged the wait as `fetch_stall` in the
+/// SLO attribution.
+#[test]
+fn last_copy_refetch_charges_fetch_stall() {
+    let trace = hot_trace(13);
+    let (mut rep, _) = run_observed(
+        &trace,
+        &SimConfig::new(cluster(3), SystemKind::LoraServe)
+            .with_params(|p| p.scenario(crash_scenario(true)))
+            .with_obs(ObsConfig {
+                attrib: true,
+                ..Default::default()
+            }),
+    );
+    assert!(rep.crashes >= 1, "no crash fired");
+    assert!(
+        rep.host_fetches > 0,
+        "no last copy was lost — the crash path never paged from host"
+    );
+    let a = rep.attribution.expect("summary attached to the report");
+    assert!(a.all.n > 0);
+    assert!(
+        a.all.fetch_stall > 0.0,
+        "host re-fetch waits never charged to fetch_stall"
+    );
+    assert!(a.all.recon < 1e-6, "recon={}", a.all.recon);
+    // the digest carries the crash bookkeeping
+    let digest = rep.to_json_string();
+    for key in ["\"crashes\"", "\"recoveries\"", "\"host_fetches\""] {
+        assert!(digest.contains(key), "digest missing {key}");
+    }
+}
+
+/// The resilience ordering the figure reports: through an identical
+/// crash window on the identical churn trace, triggered+remote-attach
+/// rebalancing must not degrade p99 TTFT more than the open-loop
+/// periodic timer (small additive tolerance for sampling noise — the
+/// full-size figure shows the strict gap).
+#[test]
+fn triggered_remote_attach_no_worse_than_periodic_through_crash() {
+    let trace = resilience_trace(300.0, 5);
+    // period longer than the trace: the periodic arm cannot react to
+    // the crash at all
+    let cl = ClusterConfig {
+        n_servers: 4,
+        rebalance_period: 600.0,
+        ..Default::default()
+    };
+    let mut sc = resilience_scenario();
+    sc.failures.start = 50.0;
+    sc.failures.mtbf = 30.0;
+    sc.failures.mttr = 120.0;
+    sc.failures.max_crashes = 1;
+    let warmup = sc.failures.start;
+    let deg_per = p99_degradation(
+        &trace,
+        &cl,
+        RebalanceMode::Periodic,
+        false,
+        sc,
+        warmup,
+    );
+    let deg_tri = p99_degradation(
+        &trace,
+        &cl,
+        RebalanceMode::Triggered,
+        true,
+        sc,
+        warmup,
+    );
+    assert!(
+        deg_per.is_finite() && deg_tri.is_finite(),
+        "degradations must be measurable: per={deg_per} tri={deg_tri}"
+    );
+    assert!(
+        deg_tri <= deg_per + 0.050,
+        "triggered+remote p99 degradation {deg_tri:.4}s exceeds \
+         periodic {deg_per:.4}s"
+    );
+}

@@ -54,6 +54,7 @@ fn hand_composed(kind: SystemKind) -> SystemSpec {
         rank_blind_cost: false,
         slo: SloFeedbackConfig::default(),
         rebalance: RebalanceConfig::default(),
+        scenario: Default::default(),
     };
     match kind {
         SystemKind::LoraServe => SystemSpec {
@@ -148,9 +149,11 @@ fn rank_bucketed_reduces_highrank_share_under_random_placement() {
     let bucketed = sim::run(
         &trace,
         &SimConfig::new(cluster(2), SystemKind::SLoraRandom)
-            .with_batch_policy(BatchPolicyKind::RankBucketed {
-                max_wait_iters: 8,
-                select: ClassSelect::LargestQueue,
+            .with_params(|p| {
+                p.batch(BatchPolicyKind::RankBucketed {
+                    max_wait_iters: 8,
+                    select: ClassSelect::LargestQueue,
+                })
             }),
     );
     // structural: one rank class per prefill — no mixed batches, no
@@ -187,7 +190,7 @@ fn rank_cap_shrinks_padding_tax() {
     let capped = sim::run(
         &trace,
         &SimConfig::new(cluster(2), SystemKind::SLoraRandom)
-            .with_batch_policy(BatchPolicyKind::RankCap { factor: 2 }),
+            .with_params(|p| p.batch(BatchPolicyKind::RankCap { factor: 2 })),
     );
     assert!(fifo.pad_rank_tokens > 0);
     assert!(

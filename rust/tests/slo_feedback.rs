@@ -41,11 +41,10 @@ fn run_one(
     feedback: Option<SloFeedbackConfig>,
 ) -> SimReport {
     let mut cfg = SimConfig::new(cluster(), SystemKind::SLoraRandom)
-        .with_batch_policy(batch)
-        .with_decode_policy(decode)
+        .with_params(|p| p.batch(batch).decode(decode))
         .with_warmup(2.0);
     if let Some(f) = feedback {
-        cfg = cfg.with_slo_feedback(f);
+        cfg = cfg.with_params(|p| p.slo(f));
     }
     sim::run(trace, &cfg)
 }
