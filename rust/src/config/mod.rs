@@ -338,6 +338,16 @@ pub struct RebalanceConfig {
     /// for sustained traffic). 0 (the default) disables promotion.
     /// Only meaningful with `remote_attach` in triggered/hybrid mode.
     pub promote_hot: u64,
+    /// Feed HBM memory pressure — any active server's unified-pool
+    /// page occupancy at or above `occupancy_hot` — into the trigger
+    /// as a fourth OR-term. Off by default, and inert unless the pool
+    /// is bounded (`ServerConfig::hbm_pages > 0`). JSON knob
+    /// `trigger_memory_signal`.
+    pub memory_signal: bool,
+    /// Page-occupancy fraction (used ÷ total pages, in (0, 1]) at
+    /// which one server counts as memory-pressed. JSON knob
+    /// `trigger_occupancy`.
+    pub occupancy_hot: f64,
 }
 
 impl Default for RebalanceConfig {
@@ -353,6 +363,8 @@ impl Default for RebalanceConfig {
             queue_depth_hot: 8.0,
             stall_hot: 0.5,
             promote_hot: 0,
+            memory_signal: false,
+            occupancy_hot: 0.9,
         }
     }
 }
@@ -611,6 +623,18 @@ pub struct ServerConfig {
     /// model (see `costmodel::calib::REMOTE_ATTACH_PENALTY`). JSON
     /// knob: `remote_attach_penalty_ms`.
     pub remote_attach_penalty: f64,
+    /// Unified paged HBM budget per server, in
+    /// `costmodel::calib::HBM_PAGE_BYTES` pages, shared by adapter
+    /// slices *and* per-request KV cache (`pool::hbm::HbmPool`). 0 (the
+    /// default) keeps the pool unbounded: adapters use the legacy
+    /// `gpu_adapter_cache_bytes` byte-LRU bit for bit and KV is never
+    /// tracked — pre-refactor behavior exactly. JSON knob `hbm_pages`,
+    /// CLI `--hbm-pages`.
+    pub hbm_pages: usize,
+    /// Victim selection when a bounded HBM pool must evict adapter
+    /// pages (`hbm_pages > 0`; inert otherwise). JSON knob
+    /// `evict_policy`, CLI `--evict-policy`.
+    pub evict_policy: crate::pool::hbm::EvictPolicy,
 }
 
 impl Default for ServerConfig {
@@ -630,6 +654,8 @@ impl Default for ServerConfig {
                 crate::costmodel::calib::DECODE_LAUNCH_OVERHEAD,
             remote_attach_penalty:
                 crate::costmodel::calib::REMOTE_ATTACH_PENALTY,
+            hbm_pages: 0,
+            evict_policy: crate::pool::hbm::EvictPolicy::default(),
         }
     }
 }
@@ -863,6 +889,34 @@ impl ClusterConfig {
             v.get("remote_promote_hot").and_then(Json::as_usize)
         {
             cfg.rebalance.promote_hot = x as u64;
+        }
+        if let Some(x) = v.get("hbm_pages").and_then(Json::as_usize) {
+            cfg.server.hbm_pages = x;
+        }
+        if let Some(s) = v.get("evict_policy").and_then(Json::as_str) {
+            cfg.server.evict_policy =
+                crate::pool::hbm::EvictPolicy::parse(s).ok_or_else(
+                    || {
+                        format!(
+                            "unknown evict_policy '{s}' \
+                             (lru | rank-weighted | slo-aware)"
+                        )
+                    },
+                )?;
+        }
+        if let Some(b) =
+            v.get("trigger_memory_signal").and_then(Json::as_bool)
+        {
+            cfg.rebalance.memory_signal = b;
+        }
+        if let Some(x) = v.get("trigger_occupancy").and_then(Json::as_f64)
+        {
+            if !(0.0..=1.0).contains(&x) || x == 0.0 {
+                return Err(format!(
+                    "trigger_occupancy must be in (0, 1], got {x}"
+                ));
+            }
+            cfg.rebalance.occupancy_hot = x;
         }
         if let Some(a) = v.get("autoscale") {
             let au = &mut cfg.autoscale;
@@ -1299,6 +1353,53 @@ mod tests {
             ClusterConfig::default().server.remote_attach_penalty,
             crate::costmodel::calib::REMOTE_ATTACH_PENALTY
         );
+    }
+
+    #[test]
+    fn hbm_config_from_json() {
+        use crate::pool::hbm::EvictPolicy;
+        // defaults: unbounded pool, LRU, memory signal off
+        let cfg = ClusterConfig::default();
+        assert_eq!(cfg.server.hbm_pages, 0);
+        assert_eq!(cfg.server.evict_policy, EvictPolicy::Lru);
+        assert!(!cfg.rebalance.memory_signal);
+        assert_eq!(cfg.rebalance.occupancy_hot, 0.9);
+        let v = json::parse(
+            r#"{"hbm_pages": 2048,
+                "evict_policy": "rank-weighted",
+                "trigger_memory_signal": true,
+                "trigger_occupancy": 0.8}"#,
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.server.hbm_pages, 2048);
+        assert_eq!(
+            cfg.server.evict_policy,
+            EvictPolicy::RankWeighted
+        );
+        assert!(cfg.rebalance.memory_signal);
+        assert_eq!(cfg.rebalance.occupancy_hot, 0.8);
+        // labels round-trip through parse, bad values rejected
+        for p in [
+            EvictPolicy::Lru,
+            EvictPolicy::RankWeighted,
+            EvictPolicy::SloAware,
+        ] {
+            assert_eq!(EvictPolicy::parse(p.label()).unwrap(), p);
+        }
+        for bad in [
+            r#"{"evict_policy": "random"}"#,
+            r#"{"trigger_occupancy": 0.0}"#,
+            r#"{"trigger_occupancy": 1.5}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(ClusterConfig::from_json(&v).is_err(), "{bad}");
+        }
+        let v = json::parse(r#"{"evict_policy": "nope"}"#).unwrap();
+        let e = ClusterConfig::from_json(&v).unwrap_err();
+        for p in ["lru", "rank-weighted", "slo-aware"] {
+            assert!(e.contains(p), "error misses '{p}': {e}");
+        }
     }
 
     #[test]

@@ -101,3 +101,11 @@ pub const OPPOINT_HEADROOM: f64 = 0.85;
 /// 512/128).
 pub const PROFILE_PROMPT: u32 = 512;
 pub const PROFILE_OUTPUT: u32 = 128;
+
+/// Page size of the unified HBM pool (`pool::hbm::HbmPool`): the
+/// S-LoRA unified-paging granularity at which adapter slices and KV
+/// blocks are carved from one per-server budget. 2 MiB matches the
+/// huge-page-aligned pool S-LoRA-generation stacks allocate (one page
+/// holds 4 KV tokens of Llama-7B at 512 KiB/token, or one 32-length
+/// rank-8 adapter chunk). `ServerConfig::hbm_pages` counts these.
+pub const HBM_PAGE_BYTES: u64 = 2 * 1024 * 1024;

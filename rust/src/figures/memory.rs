@@ -1,0 +1,180 @@
+//! The `memory` figure: throughput and tail TTFT vs the unified HBM
+//! page budget, across eviction policies.
+//!
+//! The workload is the memory-constrained class the paper never
+//! isolates: long-context prompts (KV-heavy) over a many-adapter
+//! fleet, so per-request KV footprints and adapter residency contend
+//! for the same paged pool (`pool::hbm::HbmPool`). An unbounded pool
+//! (the default config, `hbm_pages = 0`) anchors the comparison; each
+//! bounded budget then runs every eviction policy at identical
+//! pressure, so the rows isolate the victim-selection knob.
+
+use super::helpers::{run_system, FigOpts, RESULTS_DIR};
+use crate::config::{ClusterConfig, ModelSpec};
+use crate::sim::SystemKind;
+use crate::trace::Trace;
+use crate::util::rng::{Pcg32, PowerLaw};
+use crate::util::table::{fmt_secs, Table};
+use crate::workload::{AdapterSet, Request};
+
+/// RNG stream tag for the memory-pressure trace (disjoint from the
+/// drift figure's 0xd21f7, the production trace's 0x9d0d, the
+/// scenario trace's 0x5ce7a, and the engine's 0x51).
+const MEMORY_STREAM: u64 = 0x4b1df;
+
+/// Long-context × many-adapter trace: flat Poisson arrivals split
+/// power-law across a two-class (rank 8 / rank 64) fleet, with
+/// lognormal prompt lengths centred near 640 tokens — each active
+/// sequence holds hundreds of KV pages, so a bounded pool feels
+/// pressure from admission alone. Expected total ≈ `rps × duration`.
+pub fn memory_trace(
+    n_adapters: usize,
+    rps: f64,
+    duration: f64,
+    seed: u64,
+) -> Trace {
+    let adapters = AdapterSet::uniform_per_rank(
+        n_adapters,
+        &[8u32, 64],
+        &ModelSpec::LLAMA_7B,
+    );
+    let splitter = PowerLaw::new(n_adapters.max(1), 1.5);
+    let mut rng = Pcg32::with_stream(seed, MEMORY_STREAM);
+    let minutes = ((duration / 60.0).ceil() as usize).max(1);
+    let lambda = rps * duration / minutes as f64;
+    let mut requests: Vec<Request> = Vec::new();
+    for m in 0..minutes {
+        for _ in 0..rng.poisson(lambda) {
+            let t = (m as f64 + rng.f64()) * 60.0;
+            if t > duration {
+                continue;
+            }
+            let adapter = splitter.sample(&mut rng) as u32;
+            let prompt = rng
+                .lognormal((640.0f64).ln(), 0.35)
+                .round()
+                .clamp(64.0, 1536.0) as u32;
+            let output = rng
+                .lognormal((32.0f64).ln(), 0.4)
+                .round()
+                .clamp(4.0, 96.0) as u32;
+            requests.push(Request {
+                id: 0,
+                adapter,
+                prompt_len: prompt,
+                output_len: output,
+                arrival: t,
+            });
+        }
+    }
+    Trace::new(
+        &format!("memory-n{n_adapters}-s{seed}"),
+        adapters,
+        requests,
+    )
+}
+
+pub fn memory(opts: &FigOpts) -> std::io::Result<()> {
+    use crate::pool::hbm::EvictPolicy;
+    let duration = opts.scale(1200.0);
+    let trace = memory_trace(48, 8.0, duration, opts.seed);
+    let base = ClusterConfig {
+        n_servers: 4,
+        ..Default::default()
+    };
+    let mut table = Table::new(
+        "memory — unified HBM page budget × eviction policy on a \
+         long-context many-adapter trace (loraserve, 4 servers)",
+        &[
+            "hbm pages",
+            "policy",
+            "p95 ttft",
+            "p99 ttft",
+            "tput rps",
+            "completed",
+            "evictions",
+            "peak pages",
+            "fetch stall",
+        ],
+    );
+    // unbounded anchor first, then each budget across every policy
+    let mut arms: Vec<(usize, EvictPolicy)> =
+        vec![(0, EvictPolicy::Lru)];
+    for pages in [2048usize, 1024] {
+        for pol in [
+            EvictPolicy::Lru,
+            EvictPolicy::RankWeighted,
+            EvictPolicy::SloAware,
+        ] {
+            arms.push((pages, pol));
+        }
+    }
+    for (pages, pol) in arms {
+        let mut cluster = base.clone();
+        cluster.server.hbm_pages = pages;
+        cluster.server.evict_policy = pol;
+        let mut rep =
+            run_system(&trace, &cluster, SystemKind::LoraServe);
+        let (evictions, peak) = rep
+            .hbm
+            .as_ref()
+            .map(|h| (h.evictions, h.peak_pages))
+            .unwrap_or((0, 0));
+        table.row(vec![
+            if pages == 0 {
+                "unbounded".to_string()
+            } else {
+                pages.to_string()
+            },
+            if pages == 0 {
+                "-".to_string()
+            } else {
+                pol.label().to_string()
+            },
+            fmt_secs(rep.ttft.p95()),
+            fmt_secs(rep.ttft.p99()),
+            format!("{:.2}", rep.throughput_rps()),
+            rep.completed.to_string(),
+            evictions.to_string(),
+            peak.to_string(),
+            fmt_secs(rep.fetch_stall_s),
+        ]);
+    }
+    table.emit(RESULTS_DIR, "memory")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_trace_shape() {
+        let t = memory_trace(48, 8.0, 600.0, 1);
+        // expected total within a loose Poisson band
+        let n = t.requests.len() as f64;
+        assert!((n - 4800.0).abs() < 4800.0 * 0.15, "n={n}");
+        assert!(t.duration() <= 600.0);
+        assert_eq!(t.adapters.len(), 48);
+        // long-context: the mean prompt dwarfs the default chat model
+        let mean = t
+            .requests
+            .iter()
+            .map(|r| r.prompt_len as f64)
+            .sum::<f64>()
+            / n;
+        assert!(mean > 400.0, "mean prompt {mean} too short");
+        // deterministic per seed
+        let t2 = memory_trace(48, 8.0, 600.0, 1);
+        assert_eq!(t.requests.len(), t2.requests.len());
+        assert_eq!(t.requests[11], t2.requests[11]);
+        // different seeds differ
+        let t3 = memory_trace(48, 8.0, 600.0, 2);
+        assert!(
+            t.requests.len() != t3.requests.len()
+                || t.requests
+                    .iter()
+                    .zip(t3.requests.iter())
+                    .any(|(a, b)| a != b)
+        );
+    }
+}

@@ -15,6 +15,7 @@ pub mod drift;
 pub mod elastic;
 pub mod eval;
 pub mod helpers;
+pub mod memory;
 pub mod motivation;
 pub mod resilience;
 pub mod sched;
@@ -75,6 +76,9 @@ pub fn registry() -> Vec<(&'static str, &'static str, FigFn)> {
         ("resilience", "crash + recovery on churn/diurnal demand: \
                         p99 TTFT + SLO violations by rebalance mode",
          resilience::resilience),
+        ("memory", "unified HBM economy: throughput + p99 TTFT vs \
+                    page budget across eviction policies",
+         memory::memory),
         ("gpus", "min fleet under SLO per system (GPU savings)",
          elastic::gpus_under_slo),
         ("fleet", "SLO-aware autoscaler fleet-size timeline",

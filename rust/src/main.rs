@@ -83,10 +83,11 @@ fn usage() {
          [--remote-attach on|off]\n         \
          [--scenario file.json]  (churn/diurnal trace + failure \
          injection + regions)\n         \
+         [--hbm-pages N] [--evict-policy lru|rank-weighted|slo-aware]\n         \
          [--shards N] [--report-out file.json]\n         \
          [--trace-out trace.json] [--trace-last N] \
          [--metrics-out file.prom]\n\
-         bench    [--scenario full|ci|control] [--servers N] \
+         bench    [--scenario full|ci|control|memory] [--servers N] \
          [--shards N] [--seed S]\n         \
          [--out BENCH_sim.json]\n\
          autoscale [--system <kind>|--all] [--slo-ttft MS] \
@@ -241,6 +242,22 @@ fn build_cluster(args: &Args) -> Result<ClusterConfig, String> {
                 ))
             }
         }
+    }
+    // unified HBM economy knobs: a page budget bounds the pool (0 =
+    // unbounded, the pre-refactor behavior bit for bit); the eviction
+    // policy only matters once bounded
+    cluster.server.hbm_pages =
+        args.get_usize("hbm-pages", cluster.server.hbm_pages)?;
+    if let Some(p) = args.get("evict-policy") {
+        cluster.server.evict_policy =
+            loraserve::pool::hbm::EvictPolicy::parse(p).ok_or_else(
+                || {
+                    format!(
+                        "unknown evict policy '{p}' \
+                         (lru | rank-weighted | slo-aware)"
+                    )
+                },
+            )?;
     }
     Ok(cluster)
 }
@@ -535,14 +552,18 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     }
     // (servers, rps, duration): `full` is the perf-trajectory
     // scenario; `ci` is the same shape scaled down to stay fast on
-    // shared runners. `control` (dispatched above) is the big-fleet
-    // coordinator benchmark.
+    // shared runners; `memory` is ci-shaped but runs the bounded
+    // unified HBM pool (page accounting, dynamic admission, eviction)
+    // so the memory economy's hot paths are benchmarked and
+    // digest-checked under sharding. `control` (dispatched above) is
+    // the big-fleet coordinator benchmark.
     let (n_servers, rps, duration) = match scenario {
         "full" => (16usize, 240.0, 300.0),
-        "ci" => (8usize, 80.0, 120.0),
+        "ci" | "memory" => (8usize, 80.0, 120.0),
         other => {
             return Err(format!(
-                "unknown scenario '{other}' (full | ci | control)"
+                "unknown scenario '{other}' \
+                 (full | ci | control | memory)"
             ))
         }
     };
@@ -562,11 +583,18 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         lengths: loraserve::trace::LengthModel::fixed(256, 32),
         ..Default::default()
     });
-    let cluster = ClusterConfig {
+    let mut cluster = ClusterConfig {
         n_servers,
         rebalance_period: 20.0,
         ..Default::default()
     };
+    if scenario == "memory" {
+        // constrained unified pool: ~1 GiB of 2 MiB pages per server,
+        // tight enough that adapter residency and KV churn contend
+        cluster.server.hbm_pages = 512;
+        cluster.server.evict_policy =
+            loraserve::pool::hbm::EvictPolicy::RankWeighted;
+    }
     println!(
         "bench '{scenario}': {} reqs, {:.0} rps, {} servers, \
          {} host cores — sequential vs {} shards",

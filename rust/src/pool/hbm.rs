@@ -1,0 +1,543 @@
+//! Paged HBM economy: one per-server memory pool for adapter slices
+//! *and* KV cache (S-LoRA's unified paging, PAPERS.md).
+//!
+//! [`HbmPool`] replaces the old byte-budget `GpuAdapterCache` and runs
+//! in one of two regimes, picked by `ServerConfig::hbm_pages`:
+//!
+//! * **Unbounded** (`hbm_pages == 0`, the default): KV is not modeled
+//!   and adapter paging uses the legacy free-form byte budget
+//!   (`gpu_adapter_cache_bytes`) with LRU eviction — arithmetic
+//!   bit-identical to the pre-refactor cache, so every default-config
+//!   digest is unchanged.
+//! * **Bounded** (`hbm_pages > 0`): a single page-granular budget of
+//!   `hbm_pages × HBM_PAGE_BYTES` from which both adapter copies and
+//!   the active set's KV footprint are carved. The server refreshes
+//!   the KV page count each iteration (`set_kv_tokens`), admission
+//!   reads a *dynamic* token budget off the free pages
+//!   (`admissible_tokens`), and adapter page-ins evict under the
+//!   configured [`EvictPolicy`]. Evicted adapter ids are parked in a
+//!   takeout list the engine drains at epoch barriers (eviction →
+//!   pool-miss → re-fetch, priced through `fetch_stall`).
+//!
+//! Both regimes price a page-in miss identically:
+//! `100 µs + bytes / pcie_bw`.
+
+use crate::util::json::Json;
+use crate::workload::AdapterId;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Which resident adapter a bounded [`HbmPool`] evicts under page
+/// pressure. All policies skip pinned adapters (the current batch and
+/// every active sequence's adapter) — an in-use adapter is never
+/// evicted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvictPolicy {
+    /// Least-recently-used (the legacy byte-budget order).
+    #[default]
+    Lru,
+    /// Evict the largest-and-coldest first: maximize `age × bytes`,
+    /// so one eviction of a stale high-rank adapter frees many pages
+    /// instead of churning through several hot low-rank ones.
+    RankWeighted,
+    /// LRU that protects adapters with queued demand: evicting an
+    /// adapter a queued request is about to need lands a page-in (or a
+    /// re-fetch) squarely on that request's TTFT path. Falls back to
+    /// plain LRU when everything unpinned is protected.
+    SloAware,
+}
+
+impl EvictPolicy {
+    pub fn parse(s: &str) -> Option<EvictPolicy> {
+        match s {
+            "lru" => Some(EvictPolicy::Lru),
+            "rank-weighted" => Some(EvictPolicy::RankWeighted),
+            "slo-aware" => Some(EvictPolicy::SloAware),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EvictPolicy::Lru => "lru",
+            EvictPolicy::RankWeighted => "rank-weighted",
+            EvictPolicy::SloAware => "slo-aware",
+        }
+    }
+}
+
+/// End-of-run memory-economy counters, aggregated over the fleet by
+/// the engine. Present in `SimReport` (and appended to the JSON
+/// digest) only for bounded runs — an unbounded run's digest is
+/// byte-identical to the pre-refactor one.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HbmStats {
+    /// Per-server page budget the run was bounded to.
+    pub total_pages: u64,
+    /// Eviction policy label the servers ran.
+    pub policy: String,
+    /// Adapter evictions under page pressure, fleet-wide.
+    pub evictions: u64,
+    pub evicted_bytes: u64,
+    /// Max pages in use (adapter + KV) on any server at any point.
+    pub peak_pages: u64,
+    /// Max KV-only pages on any server at any point.
+    pub peak_kv_pages: u64,
+}
+
+impl HbmStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_pages", Json::from(self.total_pages)),
+            ("policy", Json::from(self.policy.as_str())),
+            ("evictions", Json::from(self.evictions)),
+            ("evicted_bytes", Json::from(self.evicted_bytes)),
+            ("peak_pages", Json::from(self.peak_pages)),
+            ("peak_kv_pages", Json::from(self.peak_kv_pages)),
+        ])
+    }
+}
+
+/// Per-server paged HBM pool (see the module docs for the two
+/// regimes). Owned by `SimServer`; mutated only from that server's
+/// event lane, which is what keeps the sharded determinism contract —
+/// the engine reads occupancy and drains the eviction takeout list
+/// only at epoch barriers, in lane-index order.
+#[derive(Debug, Default)]
+pub struct HbmPool {
+    /// Legacy byte budget (unbounded regime only).
+    budget: u64,
+    used: u64,
+    /// adapter -> (bytes, last-use tick)
+    entries: BTreeMap<AdapterId, (u64, u64)>,
+    tick: u64,
+    pub loads: u64,
+    pub load_bytes: u64,
+    /// Page budget; 0 = unbounded (legacy byte-budget regime).
+    total_pages: u64,
+    page_bytes: u64,
+    policy: EvictPolicy,
+    /// KV bytes one token of the served model occupies across layers.
+    kv_bytes_per_token: f64,
+    /// Pages the adapter entries occupy (bounded regime only).
+    adapter_pages: u64,
+    /// Pages the active set's KV footprint occupies, refreshed by the
+    /// server each iteration from prompt + produced token counts.
+    kv_pages: u64,
+    /// Adapters with queued demand (`EvictPolicy::SloAware` only),
+    /// refreshed by the server before each admission.
+    protected: BTreeSet<AdapterId>,
+    /// Adapters evicted since the engine last drained the list.
+    evicted_out: Vec<AdapterId>,
+    pub evictions: u64,
+    pub evicted_bytes: u64,
+    pub peak_pages: u64,
+    pub peak_kv_pages: u64,
+}
+
+impl HbmPool {
+    /// Legacy-compatible pool: `total_pages == 0` reproduces the old
+    /// `GpuAdapterCache::new(budget)` bit for bit.
+    pub fn new(
+        budget: u64,
+        total_pages: u64,
+        page_bytes: u64,
+        policy: EvictPolicy,
+        kv_bytes_per_token: f64,
+    ) -> Self {
+        assert!(page_bytes > 0, "page size must be positive");
+        HbmPool {
+            budget,
+            total_pages,
+            page_bytes,
+            policy,
+            kv_bytes_per_token,
+            ..Default::default()
+        }
+    }
+
+    /// Unbounded legacy pool (tests and default-config servers).
+    pub fn unbounded(budget: u64) -> Self {
+        HbmPool::new(
+            budget,
+            0,
+            crate::costmodel::calib::HBM_PAGE_BYTES,
+            EvictPolicy::Lru,
+            1.0,
+        )
+    }
+
+    /// Page-granular budget active?
+    pub fn bounded(&self) -> bool {
+        self.total_pages > 0
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    fn pages_for(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.page_bytes)
+    }
+
+    /// Pages in use (adapters + KV). 0 in the unbounded regime.
+    pub fn pages_used(&self) -> u64 {
+        self.adapter_pages + self.kv_pages
+    }
+
+    /// Free pages under the budget (saturating: an overcommitted pool
+    /// — everything pinned — reads 0, not a wrap).
+    pub fn free_pages(&self) -> u64 {
+        self.total_pages.saturating_sub(self.pages_used())
+    }
+
+    /// Occupancy in [0, 1] (0 when unbounded) — the memory-pressure
+    /// signal `RebalanceTrigger` reads. Overcommit clamps to 1.
+    pub fn occupancy(&self) -> f64 {
+        if self.total_pages == 0 {
+            return 0.0;
+        }
+        (self.pages_used() as f64 / self.total_pages as f64).min(1.0)
+    }
+
+    /// Refresh the KV footprint from the active set's token count.
+    /// No-op when unbounded (KV is not modeled there).
+    pub fn set_kv_tokens(&mut self, tokens: u64) {
+        if !self.bounded() {
+            return;
+        }
+        let bytes = (tokens as f64 * self.kv_bytes_per_token) as u64;
+        self.kv_pages = self.pages_for(bytes);
+        self.peak_kv_pages = self.peak_kv_pages.max(self.kv_pages);
+        self.peak_pages = self.peak_pages.max(self.pages_used());
+    }
+
+    /// Dynamic admission budget: how many prefill tokens the free
+    /// pages can hold, capped at the configured `max_batch_tokens`.
+    /// Unbounded pools pass the configured budget through untouched.
+    /// Admission policies exempt the queue head from the token budget,
+    /// so a zero here still admits one request (no deadlock).
+    pub fn admissible_tokens(&self, configured: u64) -> u64 {
+        if !self.bounded() {
+            return configured;
+        }
+        let per_page =
+            (self.page_bytes as f64 / self.kv_bytes_per_token.max(1.0))
+                .floor()
+                .max(1.0) as u64;
+        configured.min(self.free_pages() * per_page)
+    }
+
+    /// SloAware only: replace the protected set with the adapters of
+    /// currently queued requests.
+    pub fn set_protected<I: IntoIterator<Item = AdapterId>>(
+        &mut self,
+        ids: I,
+    ) {
+        self.protected.clear();
+        self.protected.extend(ids);
+    }
+
+    /// Does this pool's policy consult the protected set? (Lets the
+    /// server skip the per-iteration queue scan otherwise.)
+    pub fn wants_protected(&self) -> bool {
+        self.bounded() && self.policy == EvictPolicy::SloAware
+    }
+
+    /// Anything in the eviction takeout list? (Cheap barrier check.)
+    pub fn has_evicted(&self) -> bool {
+        !self.evicted_out.is_empty()
+    }
+
+    /// Drain the adapters evicted since the last call (engine-side,
+    /// at epoch barriers): the engine drops their pool copies so the
+    /// next routed request re-fetches over RDMA.
+    pub fn take_evicted(&mut self) -> Vec<AdapterId> {
+        std::mem::take(&mut self.evicted_out)
+    }
+
+    /// Ensure `adapter` is resident; returns the PCIe paging time
+    /// (0 on hit). `pinned` adapters are never evicted.
+    pub fn touch(
+        &mut self,
+        adapter: AdapterId,
+        bytes: u64,
+        pcie_bw: f64,
+        pinned: &BTreeSet<AdapterId>,
+    ) -> f64 {
+        self.tick += 1;
+        if let Some(e) = self.entries.get_mut(&adapter) {
+            e.1 = self.tick;
+            return 0.0;
+        }
+        if self.bounded() {
+            self.evict_for(bytes, pinned);
+        } else {
+            // legacy byte-budget LRU, bit for bit
+            while self.used + bytes > self.budget
+                && !self.entries.is_empty()
+            {
+                let victim = self
+                    .entries
+                    .iter()
+                    .filter(|(a, _)| !pinned.contains(a))
+                    .min_by_key(|(_, (_, t))| *t)
+                    .map(|(a, _)| *a);
+                match victim {
+                    Some(a) => {
+                        let (b, _) = self.entries.remove(&a).unwrap();
+                        self.used -= b;
+                    }
+                    None => break, // everything pinned; overcommit
+                }
+            }
+        }
+        self.entries.insert(adapter, (bytes, self.tick));
+        self.used += bytes;
+        if self.bounded() {
+            self.adapter_pages += self.pages_for(bytes);
+            self.peak_pages = self.peak_pages.max(self.pages_used());
+        }
+        self.loads += 1;
+        self.load_bytes += bytes;
+        100e-6 + bytes as f64 / pcie_bw
+    }
+
+    /// Bounded-regime eviction loop: free pages for an incoming
+    /// `bytes`-sized adapter under the configured policy. Stops when
+    /// it fits or only pinned entries remain (overcommit, like the
+    /// legacy cache).
+    fn evict_for(&mut self, bytes: u64, pinned: &BTreeSet<AdapterId>) {
+        let need = self.pages_for(bytes);
+        while self.pages_used() + need > self.total_pages
+            && !self.entries.is_empty()
+        {
+            let Some(victim) = self.pick_victim(pinned) else {
+                break;
+            };
+            let (b, _) = self.entries.remove(&victim).unwrap();
+            self.used -= b;
+            self.adapter_pages -= self.pages_for(b);
+            self.evictions += 1;
+            self.evicted_bytes += b;
+            self.evicted_out.push(victim);
+        }
+    }
+
+    /// Policy-directed victim selection over unpinned entries; ties
+    /// break toward the lowest adapter id (BTreeMap iteration order),
+    /// keeping eviction order fully deterministic.
+    fn pick_victim(
+        &self,
+        pinned: &BTreeSet<AdapterId>,
+    ) -> Option<AdapterId> {
+        let unpinned = self
+            .entries
+            .iter()
+            .filter(|(a, _)| !pinned.contains(a));
+        match self.policy {
+            EvictPolicy::Lru => unpinned
+                .min_by_key(|(_, (_, t))| *t)
+                .map(|(a, _)| *a),
+            EvictPolicy::RankWeighted => {
+                // maximize age × bytes; strict '>' keeps the first
+                // (lowest-id) of a tied pair
+                let mut best: Option<(AdapterId, u64)> = None;
+                for (&a, &(b, t)) in unpinned {
+                    let score = (self.tick - t) * b;
+                    if best.map_or(true, |(_, s)| score > s) {
+                        best = Some((a, score));
+                    }
+                }
+                best.map(|(a, _)| a)
+            }
+            EvictPolicy::SloAware => {
+                let mut cold: Option<(AdapterId, u64)> = None;
+                let mut any: Option<(AdapterId, u64)> = None;
+                for (&a, &(_, t)) in unpinned {
+                    if any.map_or(true, |(_, bt)| t < bt) {
+                        any = Some((a, t));
+                    }
+                    if !self.protected.contains(&a)
+                        && cold.map_or(true, |(_, bt)| t < bt)
+                    {
+                        cold = Some((a, t));
+                    }
+                }
+                cold.or(any).map(|(a, _)| a)
+            }
+        }
+    }
+
+    pub fn resident(&self, adapter: AdapterId) -> bool {
+        self.entries.contains_key(&adapter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PAGE: u64 = 2 * 1024 * 1024;
+    const PCIE: f64 = 16e9;
+
+    fn bounded(pages: u64, policy: EvictPolicy) -> HbmPool {
+        // kv_bytes_per_token = half a page per 1024 tokens keeps the
+        // arithmetic easy to reason about in tests
+        HbmPool::new(u64::MAX, pages, PAGE, policy, 1024.0)
+    }
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        for p in [
+            EvictPolicy::Lru,
+            EvictPolicy::RankWeighted,
+            EvictPolicy::SloAware,
+        ] {
+            assert_eq!(EvictPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(EvictPolicy::parse("nope"), None);
+        assert_eq!(EvictPolicy::default(), EvictPolicy::Lru);
+    }
+
+    #[test]
+    fn unbounded_matches_legacy_lru_semantics() {
+        // budget of 2 adapters; third insert evicts the LRU one
+        let mut p = HbmPool::unbounded(2 * (17 << 20));
+        let pinned = BTreeSet::new();
+        let t0 = p.touch(0, 17 << 20, PCIE, &pinned);
+        assert!(t0 > 100e-6);
+        assert_eq!(p.touch(0, 17 << 20, PCIE, &pinned), 0.0, "hit");
+        p.touch(1, 17 << 20, PCIE, &pinned);
+        p.touch(2, 17 << 20, PCIE, &pinned); // evicts 0 (LRU)
+        assert!(!p.resident(0) && p.resident(1) && p.resident(2));
+        assert_eq!(p.loads, 3);
+        assert_eq!(p.load_bytes, 3 * (17 << 20));
+        // unbounded: no pages, no pressure, no takeout list
+        assert!(!p.bounded());
+        assert_eq!(p.occupancy(), 0.0);
+        assert_eq!(p.admissible_tokens(2048), 2048);
+        assert!(!p.has_evicted());
+        assert_eq!(p.evictions, 0);
+    }
+
+    #[test]
+    fn unbounded_pinned_overcommits_like_legacy() {
+        let mut p = HbmPool::unbounded(17 << 20);
+        let pinned: BTreeSet<AdapterId> = [0].into_iter().collect();
+        p.touch(0, 17 << 20, PCIE, &pinned);
+        p.touch(1, 17 << 20, PCIE, &pinned); // 0 pinned → overcommit
+        assert!(p.resident(0) && p.resident(1));
+    }
+
+    #[test]
+    fn bounded_pages_conserve_and_evict() {
+        let mut p = bounded(16, EvictPolicy::Lru);
+        let pinned = BTreeSet::new();
+        // 8 pages each: two fit, the third evicts the LRU
+        p.touch(0, 8 * PAGE, PCIE, &pinned);
+        p.touch(1, 8 * PAGE, PCIE, &pinned);
+        assert_eq!(p.pages_used(), 16);
+        assert_eq!(p.free_pages(), 0);
+        p.touch(2, 8 * PAGE, PCIE, &pinned);
+        assert!(!p.resident(0), "LRU victim");
+        assert_eq!(p.pages_used(), 16, "page conservation");
+        assert_eq!(p.evictions, 1);
+        assert_eq!(p.evicted_bytes, 8 * PAGE);
+        assert_eq!(p.take_evicted(), vec![0]);
+        assert!(!p.has_evicted(), "takeout list drains");
+        assert_eq!(p.peak_pages, 16);
+    }
+
+    #[test]
+    fn bounded_never_evicts_pinned() {
+        let mut p = bounded(16, EvictPolicy::Lru);
+        let pinned: BTreeSet<AdapterId> = [0, 1].into_iter().collect();
+        p.touch(0, 8 * PAGE, PCIE, &pinned);
+        p.touch(1, 8 * PAGE, PCIE, &pinned);
+        p.touch(2, 8 * PAGE, PCIE, &pinned); // everything pinned
+        assert!(p.resident(0) && p.resident(1) && p.resident(2));
+        assert_eq!(p.pages_used(), 24, "overcommitted");
+        assert_eq!(p.occupancy(), 1.0, "clamped");
+        assert_eq!(p.free_pages(), 0);
+        assert_eq!(p.evictions, 0);
+    }
+
+    #[test]
+    fn kv_pressure_shrinks_admission_and_evicts_adapters() {
+        let mut p = bounded(16, EvictPolicy::Lru);
+        let pinned = BTreeSet::new();
+        p.touch(0, 4 * PAGE, PCIE, &pinned);
+        // 1024 bytes/token → 2048 tokens/page; 8 pages of KV
+        p.set_kv_tokens(8 * 2048);
+        assert_eq!(p.pages_used(), 12);
+        // 4 free pages × 2048 tokens, capped by the configured budget
+        assert_eq!(p.admissible_tokens(u64::MAX), 4 * 2048);
+        assert_eq!(p.admissible_tokens(1000), 1000);
+        // a long-context burst: KV wants 14 pages → adapter 0 must go
+        p.set_kv_tokens(14 * 2048);
+        p.touch(1, 4 * PAGE, PCIE, &pinned);
+        assert!(!p.resident(0), "KV pressure evicted the adapter");
+        assert_eq!(p.take_evicted(), vec![0]);
+        assert_eq!(p.peak_kv_pages, 14);
+        // KV shrinks back as requests complete
+        p.set_kv_tokens(0);
+        assert_eq!(p.pages_used(), 4);
+    }
+
+    #[test]
+    fn rank_weighted_evicts_large_cold_first() {
+        let mut p = bounded(20, EvictPolicy::RankWeighted);
+        let pinned = BTreeSet::new();
+        p.touch(0, 8 * PAGE, PCIE, &pinned); // big, cold
+        p.touch(1, PAGE, PCIE, &pinned); // small, colder-adjacent
+        p.touch(2, 8 * PAGE, PCIE, &pinned); // big, warm
+        p.touch(1, PAGE, PCIE, &pinned); // re-touch: 1 is hot now
+        // needs 4 pages; LRU would evict 0 then (tie) — rank-weighted
+        // also picks 0 (biggest age × bytes), freeing 8 pages at once
+        p.touch(3, 4 * PAGE, PCIE, &pinned);
+        assert!(!p.resident(0));
+        assert!(p.resident(1), "small hot adapter survives");
+        assert!(p.resident(2) && p.resident(3));
+        // now force another squeeze: 2 is older than 1 AND bigger
+        p.touch(4, 8 * PAGE, PCIE, &pinned);
+        assert!(!p.resident(2), "large cold beats small hot");
+        assert!(p.resident(1));
+    }
+
+    #[test]
+    fn slo_aware_protects_queued_demand() {
+        let mut p = bounded(16, EvictPolicy::SloAware);
+        let pinned = BTreeSet::new();
+        p.touch(0, 8 * PAGE, PCIE, &pinned); // LRU victim normally
+        p.touch(1, 8 * PAGE, PCIE, &pinned);
+        p.set_protected([0]); // 0 has queued demand
+        p.touch(2, 8 * PAGE, PCIE, &pinned);
+        assert!(p.resident(0), "protected adapter survives");
+        assert!(!p.resident(1), "unprotected one goes instead");
+        // all unpinned protected → falls back to LRU over them
+        p.set_protected([0, 2]);
+        p.touch(3, 8 * PAGE, PCIE, &pinned);
+        assert!(!p.resident(0), "fallback evicts the coldest");
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let s = HbmStats {
+            total_pages: 512,
+            policy: "lru".into(),
+            evictions: 3,
+            evicted_bytes: 99,
+            peak_pages: 500,
+            peak_kv_pages: 300,
+        };
+        let j = s.to_json().to_string();
+        for key in [
+            "\"total_pages\":512",
+            "\"policy\":\"lru\"",
+            "\"evictions\":3",
+            "\"peak_kv_pages\":300",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+}

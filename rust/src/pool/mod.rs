@@ -14,6 +14,10 @@ use crate::config::GpuSpec;
 use crate::workload::{AdapterId, AdapterSet, ServerId};
 use std::collections::BTreeSet;
 
+pub mod hbm;
+
+pub use hbm::{EvictPolicy, HbmPool, HbmStats};
+
 #[derive(Debug, Clone)]
 pub struct AdapterPool {
     n_servers: usize,

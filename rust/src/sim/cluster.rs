@@ -278,10 +278,8 @@ impl SimConfig {
     }
 
     /// Edit the policy bundle in one place: derives the current
-    /// [`SpecParams`], applies `f`, and writes the result back. This
-    /// replaces the per-knob `with_batch_policy` /
-    /// `with_decode_policy` / `with_slo_feedback` / `with_rebalance`
-    /// chain:
+    /// [`SpecParams`], applies `f`, and writes the result back
+    /// (the per-knob `with_*` setter chain it replaced is gone):
     ///
     /// ```ignore
     /// let cfg = SimConfig::new(cluster, SystemKind::LoraServe)
@@ -298,33 +296,6 @@ impl SimConfig {
         self.feedback = p.slo;
         self.rebalance = p.rebalance;
         self.scenario = p.scenario;
-        self
-    }
-
-    #[deprecated(note = "use with_params(|p| p.batch(..))")]
-    pub fn with_batch_policy(mut self, batch: BatchPolicyKind) -> Self {
-        self.batch = batch;
-        self
-    }
-
-    #[deprecated(note = "use with_params(|p| p.decode(..))")]
-    pub fn with_decode_policy(mut self, decode: DecodePolicyKind) -> Self {
-        self.decode = decode;
-        self
-    }
-
-    #[deprecated(note = "use with_params(|p| p.slo(..))")]
-    pub fn with_slo_feedback(
-        mut self,
-        feedback: SloFeedbackConfig,
-    ) -> Self {
-        self.feedback = feedback;
-        self
-    }
-
-    #[deprecated(note = "use with_params(|p| p.rebalance(..))")]
-    pub fn with_rebalance(mut self, rebalance: RebalanceConfig) -> Self {
-        self.rebalance = rebalance;
         self
     }
 

@@ -432,6 +432,12 @@ pub struct SimEngine<'a> {
     failure_rng: Option<Pcg32>,
     /// Crashes injected so far (`FailureConfig::max_crashes` cap).
     crashes_done: u32,
+    /// Bounded unified HBM pools (`ServerConfig::hbm_pages > 0`):
+    /// servers can evict adapter pages under KV pressure, and the
+    /// engine drains their eviction lists at every epoch barrier.
+    /// False (the default) skips the drain entirely — the unbounded
+    /// path is the pre-refactor engine bit for bit.
+    hbm_bounded: bool,
     st: EngineState,
 }
 
@@ -690,6 +696,7 @@ impl<'a> SimEngine<'a> {
             remote_hot: BTreeMap::new(),
             failure_rng,
             crashes_done: 0,
+            hbm_bounded: cfg.cluster.server.hbm_pages > 0,
             st: EngineState {
                 rng,
                 topo,
@@ -747,6 +754,7 @@ impl<'a> SimEngine<'a> {
             if self.needs_barrier(&ev) {
                 self.flush_lanes(now);
                 self.merge_completions();
+                self.drain_evictions();
                 self.retire_sweep(now);
             }
             self.handle(now, ev);
@@ -756,6 +764,7 @@ impl<'a> SimEngine<'a> {
         // delivery time), so run them out in one final epoch
         self.flush_lanes(f64::INFINITY);
         self.merge_completions();
+        self.drain_evictions();
         self.check_event_budget();
         let end = self.st.report.makespan.max(self.st.q.now());
         self.retire_sweep(end);
@@ -947,6 +956,38 @@ impl<'a> SimEngine<'a> {
         // hand the list back so the next epoch reuses its capacity
         flushed.clear();
         self.st.flushed_lanes = flushed;
+    }
+
+    /// Reconcile bounded-pool adapter evictions with the distributed
+    /// pool: a server that evicted an adapter's pages under KV
+    /// pressure no longer holds a usable copy, so the pool must stop
+    /// routing to it — the next delivery misses, re-fetches, and the
+    /// wait is priced through the existing fetch-stall attribution.
+    /// Runs at epoch barriers only, iterating servers in lane-index
+    /// order: evictions are lane-local state and the barrier schedule
+    /// is shard-invariant, so pool mutations stay byte-identical at
+    /// any `--shards` count. The last replica of an adapter is never
+    /// dropped from the pool (`AdapterPool::drop_copy` refuses):
+    /// the pages are gone either way, so the copy re-pages in on next
+    /// use, but coverage is preserved. No-op for unbounded pools.
+    fn drain_evictions(&mut self) {
+        if !self.hbm_bounded {
+            return;
+        }
+        for s in 0..self.max_n {
+            if !self.st.servers[s].hbm.has_evicted() {
+                continue;
+            }
+            for a in self.st.servers[s].hbm.take_evicted() {
+                // a later iteration in the same epoch may have paged
+                // the victim straight back in — still resident means
+                // nothing to reconcile
+                if !self.replicate && !self.st.servers[s].hbm.resident(a)
+                {
+                    self.st.pool.drop_copy(s, a);
+                }
+            }
+        }
     }
 
     /// Absorb one lane's completions (if any) into the report.
@@ -1763,12 +1804,25 @@ impl<'a> SimEngine<'a> {
         } else {
             false
         };
-        let fired = self
-            .st
-            .trigger
-            .as_mut()
-            .unwrap()
-            .evaluate(now, imbalance, slo_pressed, queue_pressed);
+        // Memory-pressure signal (config-gated, default off; inert
+        // with unbounded pools): any active server whose unified HBM
+        // pool sits at or above the occupancy threshold. Pure KV load
+        // can evict every cold adapter and thrash page-ins while the
+        // *projected-utilization* imbalance still looks flat — this is
+        // the symptom signal for that blind spot.
+        let mem_pressed = self.spec.rebalance.memory_signal
+            && self.hbm_bounded
+            && active_ids.iter().any(|&s| {
+                self.st.servers[s].hbm.occupancy()
+                    >= self.spec.rebalance.occupancy_hot
+            });
+        let fired = self.st.trigger.as_mut().unwrap().evaluate(
+            now,
+            imbalance,
+            slo_pressed,
+            queue_pressed,
+            mem_pressed,
+        );
         if self.obs.on() {
             self.obs.counter_add("sim_trigger_checks_total", 1);
             self.obs.gauge_set("sim_imbalance_ratio", imbalance);
@@ -1781,6 +1835,7 @@ impl<'a> SimEngine<'a> {
                     ("imbalance", imbalance.into()),
                     ("slo_pressed", slo_pressed.into()),
                     ("queue_pressed", queue_pressed.into()),
+                    ("mem_pressed", mem_pressed.into()),
                     ("fired", fired.into()),
                 ],
             );
@@ -2395,8 +2450,9 @@ impl<'a> SimEngine<'a> {
                 .per_server_max_adapters
                 .push(self.st.pool.max_resident(s));
             self.st.report.timeouts += srv.timeouts;
-            self.st.report.gpu_loads += srv.gpu_cache.loads;
-            self.st.report.gpu_load_bytes += srv.gpu_cache.load_bytes;
+            self.st.report.gpu_loads += srv.hbm.loads;
+            self.st.report.gpu_load_bytes += srv.hbm.load_bytes;
+            self.st.report.fetch_stall_s += srv.fetch_stall_s;
             self.st.report.per_server_highrank_frac.push(
                 srv.iters_highrank as f64 / srv.iters.max(1) as f64,
             );
@@ -2429,6 +2485,43 @@ impl<'a> SimEngine<'a> {
         self.st.report.fetches = self.st.pool.total_fetches;
         self.st.report.fetch_bytes = self.st.pool.total_fetch_bytes;
         self.st.report.host_fetches = self.st.pool.host_fetches;
+        // Bounded unified HBM pools: aggregate the per-server page
+        // economy into the report (the `hbm` digest field appears only
+        // here, so unbounded-default digests stay byte-identical to
+        // the pre-refactor engine).
+        if self.hbm_bounded {
+            let mut h = crate::pool::hbm::HbmStats {
+                total_pages: self.cfg.cluster.server.hbm_pages as u64,
+                policy: self
+                    .cfg
+                    .cluster
+                    .server
+                    .evict_policy
+                    .label()
+                    .to_string(),
+                ..Default::default()
+            };
+            for srv in &self.st.servers {
+                h.evictions += srv.hbm.evictions;
+                h.evicted_bytes += srv.hbm.evicted_bytes;
+                h.peak_pages = h.peak_pages.max(srv.hbm.peak_pages);
+                h.peak_kv_pages =
+                    h.peak_kv_pages.max(srv.hbm.peak_kv_pages);
+            }
+            if self.obs.metrics_on() {
+                self.obs
+                    .counter_set("sim_hbm_evictions_total", h.evictions);
+                self.obs.counter_set(
+                    "sim_hbm_evicted_bytes_total",
+                    h.evicted_bytes,
+                );
+                self.obs.gauge_set(
+                    "sim_hbm_peak_occupancy",
+                    h.peak_pages as f64 / h.total_pages.max(1) as f64,
+                );
+            }
+            self.st.report.hbm = Some(h);
+        }
         // control + lane events: identical for any shard count (the
         // control schedule and per-lane work never depend on it), so
         // this is safe to fold into the determinism digest

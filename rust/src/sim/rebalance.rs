@@ -249,15 +249,19 @@ impl RebalanceTrigger {
     /// `queue_pressed` is the opt-in third OR-term
     /// (`RebalanceConfig::queue_signal`): queue depth or fetch-stall
     /// pressure, treated exactly like SLO pressure — it fires while
-    /// armed and holds the latch until it clears.
+    /// armed and holds the latch until it clears. `mem_pressed` is the
+    /// opt-in fourth OR-term (`RebalanceConfig::memory_signal`): a
+    /// bounded unified HBM pool running at hot page occupancy, with
+    /// identical fire-and-latch semantics.
     pub fn evaluate(
         &mut self,
         now: f64,
         imbalance: f64,
         slo_pressed: bool,
         queue_pressed: bool,
+        mem_pressed: bool,
     ) -> bool {
-        let pressed = slo_pressed || queue_pressed;
+        let pressed = slo_pressed || queue_pressed || mem_pressed;
         let hot =
             imbalance >= self.cfg.imbalance_threshold || pressed;
         let exit = 1.0
@@ -501,7 +505,7 @@ mod tests {
                 // ratio wanders in [1.0, 1.4): under the 1.5 threshold
                 let sig = 1.0 + 0.4 * rng.f64();
                 assert!(
-                    !t.evaluate(15.0 * step as f64, sig, false, false),
+                    !t.evaluate(15.0 * step as f64, sig, false, false, false),
                     "seed {seed} step {step}: fired on stable signal"
                 );
             }
@@ -526,7 +530,7 @@ mod tests {
                 } else {
                     1.0 + 0.2 * rng.f64()
                 };
-                if t.evaluate(15.0 * step as f64, sig, false, false) {
+                if t.evaluate(15.0 * step as f64, sig, false, false, false) {
                     fired_at.push(step);
                 }
             }
@@ -544,22 +548,22 @@ mod tests {
     #[test]
     fn rearms_after_cooling_and_paces_by_min_interval() {
         let mut t = RebalanceTrigger::new(cfg());
-        assert!(t.evaluate(0.0, 2.0, false, false));
+        assert!(t.evaluate(0.0, 2.0, false, false, false));
         // still hot: latched
-        assert!(!t.evaluate(15.0, 2.0, false, false));
+        assert!(!t.evaluate(15.0, 2.0, false, false, false));
         // hovering between exit (1 + 0.8 × 0.5 = 1.4) and enter
         // (1.5): stays latched
-        assert!(!t.evaluate(30.0, 1.45, false, false));
+        assert!(!t.evaluate(30.0, 1.45, false, false, false));
         // cools below the exit threshold: re-arms silently
-        assert!(!t.evaluate(45.0, 1.1, false, false));
+        assert!(!t.evaluate(45.0, 1.1, false, false, false));
         // second episode 60 s after the first fire: refires
-        assert!(t.evaluate(60.0, 1.6, false, false));
+        assert!(t.evaluate(60.0, 1.6, false, false, false));
         assert_eq!(t.fires, 2);
         // immediate third episode is paced out by min_interval even
         // after cooling
-        assert!(!t.evaluate(70.0, 1.0, false, false));
-        assert!(!t.evaluate(80.0, 3.0, false, false), "min-interval guard");
-        assert!(t.evaluate(95.0, 3.0, false, false));
+        assert!(!t.evaluate(70.0, 1.0, false, false, false));
+        assert!(!t.evaluate(80.0, 3.0, false, false, false), "min-interval guard");
+        assert!(t.evaluate(95.0, 3.0, false, false, false));
     }
 
     /// SLO pressure fires the trigger on its own, and holds the latch
@@ -567,11 +571,27 @@ mod tests {
     #[test]
     fn slo_pressure_fires_and_latches() {
         let mut t = RebalanceTrigger::new(cfg());
-        assert!(t.evaluate(0.0, 1.0, true, false));
-        assert!(!t.evaluate(40.0, 1.0, true, false), "latched under pressure");
+        assert!(t.evaluate(0.0, 1.0, true, false, false));
+        assert!(!t.evaluate(40.0, 1.0, true, false, false), "latched under pressure");
         // pressure clears with a cold ratio: re-arm, then refire
-        assert!(!t.evaluate(55.0, 1.0, false, false));
-        assert!(t.evaluate(70.0, 1.0, true, false));
+        assert!(!t.evaluate(55.0, 1.0, false, false, false));
+        assert!(t.evaluate(70.0, 1.0, true, false, false));
+        assert_eq!(t.fires, 2);
+    }
+
+    /// Memory pressure (the bounded-HBM fourth OR-term) fires and
+    /// latches exactly like the SLO and queue signals.
+    #[test]
+    fn memory_pressure_fires_and_latches() {
+        let mut t = RebalanceTrigger::new(cfg());
+        assert!(t.evaluate(0.0, 1.0, false, false, true));
+        assert!(
+            !t.evaluate(40.0, 1.0, false, false, true),
+            "latched under memory pressure"
+        );
+        // occupancy drops with a cold ratio: re-arm, then refire
+        assert!(!t.evaluate(55.0, 1.0, false, false, false));
+        assert!(t.evaluate(70.0, 1.0, false, false, true));
         assert_eq!(t.fires, 2);
     }
 

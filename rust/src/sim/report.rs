@@ -135,6 +135,17 @@ pub struct SimReport {
     /// observed with `ObsConfig::attrib` — absent, the digest is
     /// byte-identical to an unobserved run.
     pub attribution: Option<crate::obs::AttributionSummary>,
+    /// Fleet-total seconds requests spent blocked on adapter fetches
+    /// (the queue-pressure stall signal, summed at finish). Not part
+    /// of the digest — floats summed over servers would make the
+    /// digest sensitive to representation details the scalar counters
+    /// avoid; it exists for programmatic comparisons (the memory
+    /// economy tests read it).
+    pub fetch_stall_s: f64,
+    /// Unified-HBM page economy (evictions, peaks), present only when
+    /// the pool is bounded (`ServerConfig::hbm_pages > 0`) — absent,
+    /// the digest is byte-identical to a pre-refactor run.
+    pub hbm: Option<crate::pool::hbm::HbmStats>,
 }
 
 impl SimReport {
@@ -303,6 +314,9 @@ impl SimReport {
         if let Some(a) = &self.attribution {
             pairs.push(("attribution", a.to_json()));
         }
+        if let Some(h) = &self.hbm {
+            pairs.push(("hbm", h.to_json()));
+        }
         Json::obj(pairs).to_string()
     }
 
@@ -393,6 +407,21 @@ mod tests {
         let d = empty.to_json_string();
         assert!(d.contains("\"NaN\""));
         assert!(empty.ttft_under_pressure_p99().is_nan());
+        // the hbm block appears only for bounded-pool runs — an absent
+        // pool must leave the digest without the key (the unbounded
+        // bit-parity contract), and fetch_stall_s never enters it
+        assert!(!a.contains("\"hbm\""));
+        assert!(!a.contains("fetch_stall"));
+        r.hbm = Some(crate::pool::hbm::HbmStats {
+            total_pages: 64,
+            policy: "lru".into(),
+            evictions: 3,
+            ..Default::default()
+        });
+        let h = r.to_json_string();
+        assert!(h.contains("\"hbm\":{"));
+        assert!(h.contains("\"total_pages\":64"));
+        assert!(h.contains("\"evictions\":3"));
     }
 
     #[test]

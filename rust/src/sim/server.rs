@@ -36,8 +36,10 @@ use super::slo::SloTracker;
 use crate::config::{
     BatchPolicyKind, ClassSelect, DecodePolicyKind, SloFeedbackConfig,
 };
+use crate::costmodel::calib::HBM_PAGE_BYTES;
 use crate::costmodel::CostModel;
 use crate::obs::{self, Obs};
+use crate::pool::hbm::HbmPool;
 use crate::workload::{AdapterId, Request};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
@@ -62,72 +64,6 @@ pub struct SimReq {
     /// copy — the routing moved without the bytes. Set by the engine
     /// on delivery; always false outside remote-attach pools.
     pub remote: bool,
-}
-
-/// S-LoRA-style GPU adapter cache: active adapter slices live in a
-/// fixed HBM pool; a batch whose adapter is not resident pages it in
-/// from host memory over PCIe before the iteration can run. LRU
-/// eviction, with adapters of currently-active sequences pinned.
-#[derive(Debug, Default)]
-pub struct GpuAdapterCache {
-    budget: u64,
-    used: u64,
-    /// adapter -> (bytes, last-use tick)
-    entries: std::collections::BTreeMap<AdapterId, (u64, u64)>,
-    tick: u64,
-    pub loads: u64,
-    pub load_bytes: u64,
-}
-
-impl GpuAdapterCache {
-    pub fn new(budget: u64) -> Self {
-        GpuAdapterCache {
-            budget,
-            ..Default::default()
-        }
-    }
-
-    /// Ensure `adapter` is resident; returns the PCIe paging time
-    /// (0 on hit). `pinned` adapters are never evicted.
-    pub fn touch(
-        &mut self,
-        adapter: AdapterId,
-        bytes: u64,
-        pcie_bw: f64,
-        pinned: &std::collections::BTreeSet<AdapterId>,
-    ) -> f64 {
-        self.tick += 1;
-        if let Some(e) = self.entries.get_mut(&adapter) {
-            e.1 = self.tick;
-            return 0.0;
-        }
-        // evict LRU until it fits (pinned entries skipped)
-        while self.used + bytes > self.budget && !self.entries.is_empty()
-        {
-            let victim = self
-                .entries
-                .iter()
-                .filter(|(a, _)| !pinned.contains(a))
-                .min_by_key(|(_, (_, t))| *t)
-                .map(|(a, _)| *a);
-            match victim {
-                Some(a) => {
-                    let (b, _) = self.entries.remove(&a).unwrap();
-                    self.used -= b;
-                }
-                None => break, // everything pinned; overcommit
-            }
-        }
-        self.entries.insert(adapter, (bytes, self.tick));
-        self.used += bytes;
-        self.loads += 1;
-        self.load_bytes += bytes;
-        100e-6 + bytes as f64 / pcie_bw
-    }
-
-    pub fn resident(&self, adapter: AdapterId) -> bool {
-        self.entries.contains_key(&adapter)
-    }
 }
 
 /// One decode sub-batch: the active sequences (by their per-server
@@ -885,7 +821,10 @@ pub struct SimServer {
     /// Drain state: no new work is routed here; active decodes finish
     /// and last-copy adapters migrate before the server retires.
     pub draining: bool,
-    pub gpu_cache: GpuAdapterCache,
+    /// Unified paged HBM pool: adapter slices and (when bounded) KV
+    /// footprints carved from one page budget. Unbounded by default —
+    /// the legacy S-LoRA byte-LRU adapter cache bit for bit.
+    pub hbm: HbmPool,
     pub busy_until: f64,
     pub busy_time: f64,
     /// Per-server TTFT samples (queueing+prefill, Fig 18 top).
@@ -1019,8 +958,12 @@ impl SimServer {
             running: Iteration::Idle,
             outstanding: 0.0,
             draining: false,
-            gpu_cache: GpuAdapterCache::new(
+            hbm: HbmPool::new(
                 cm.server.gpu_adapter_cache_bytes,
+                cm.server.hbm_pages as u64,
+                HBM_PAGE_BYTES,
+                cm.server.evict_policy,
+                cm.server.model.kv_bytes_per_token(),
             ),
             busy_until: 0.0,
             busy_time: 0.0,
@@ -1370,10 +1313,39 @@ impl SimServer {
         }
         let mut batch = self.batch_pool.pop().unwrap_or_default();
         batch.clear();
+        // Bounded HBM: refresh the pool's KV footprint (every active
+        // sequence holds prompt + produced tokens of cache) so the
+        // admission budget below reflects the pages in-flight work
+        // already owns, and hand the slo-aware evictor the adapters
+        // with live demand here. Unbounded pools skip all of this and
+        // admit on the configured budget — the legacy path bit for bit.
+        if self.hbm.bounded() {
+            let kv: u64 = self
+                .active
+                .iter()
+                .map(|a| {
+                    a.sreq.req.prompt_len as u64 + a.produced as u64
+                })
+                .sum();
+            self.hbm.set_kv_tokens(kv);
+            if self.hbm.wants_protected() {
+                self.hbm.set_protected(
+                    self.active
+                        .iter()
+                        .map(|a| a.sreq.req.adapter)
+                        .chain(
+                            self.queue.iter().map(|r| r.req.adapter),
+                        ),
+                );
+            }
+        }
+        let budget = self
+            .hbm
+            .admissible_tokens(self.cm.server.max_batch_tokens as u64);
         self.policy.admit_into(
             &mut self.queue,
             slots,
-            self.cm.server.max_batch_tokens as u64,
+            budget,
             &mut batch,
         );
         if !batch.is_empty() {
@@ -1424,7 +1396,7 @@ impl SimServer {
                         remote_t += pen;
                     }
                 } else {
-                    let lt = self.gpu_cache.touch(
+                    let lt = self.hbm.touch(
                         r.req.adapter,
                         r.adapter_bytes,
                         pcie,
@@ -2259,7 +2231,7 @@ mod tests {
                 // warm the cache so the local path pays no page-in
                 // (remote adapters never enter the cache at all)
                 let pinned = std::collections::BTreeSet::new();
-                s.gpu_cache.touch(
+                s.hbm.touch(
                     7,
                     17 << 20,
                     s.cm.server.gpu.pcie_bw,

@@ -151,6 +151,56 @@ impl ScenarioTraceConfig {
             cfg.model = ModelSpec::by_name(name)
                 .ok_or_else(|| format!("unknown model '{name}'"))?;
         }
+        // Request-length knobs (the KV-footprint axis of the unified
+        // HBM economy): lognormal medians and spreads plus hard caps,
+        // overlaying `LengthModel::default`. Means are medians of the
+        // lognormal (mu = ln(median)), matching how the default model
+        // is quoted. Draw order in `generate` is untouched, so traces
+        // without these keys stay byte-identical.
+        if let Some(x) = v.get("prompt_mean").and_then(Json::as_f64) {
+            if x < 1.0 {
+                return Err(format!(
+                    "trace.prompt_mean must be >= 1, got {x}"
+                ));
+            }
+            cfg.lengths.prompt_mu = x.ln();
+        }
+        if let Some(x) = v.get("prompt_sigma").and_then(Json::as_f64) {
+            if x < 0.0 {
+                return Err(format!(
+                    "trace.prompt_sigma must be >= 0, got {x}"
+                ));
+            }
+            cfg.lengths.prompt_sigma = x;
+        }
+        if let Some(n) = v.get("max_prompt").and_then(Json::as_usize) {
+            if n == 0 {
+                return Err("trace.max_prompt must be > 0".into());
+            }
+            cfg.lengths.max_prompt = n as u32;
+        }
+        if let Some(x) = v.get("output_mean").and_then(Json::as_f64) {
+            if x < 1.0 {
+                return Err(format!(
+                    "trace.output_mean must be >= 1, got {x}"
+                ));
+            }
+            cfg.lengths.output_mu = x.ln();
+        }
+        if let Some(x) = v.get("output_sigma").and_then(Json::as_f64) {
+            if x < 0.0 {
+                return Err(format!(
+                    "trace.output_sigma must be >= 0, got {x}"
+                ));
+            }
+            cfg.lengths.output_sigma = x;
+        }
+        if let Some(n) = v.get("max_output").and_then(Json::as_usize) {
+            if n == 0 {
+                return Err("trace.max_output must be > 0".into());
+            }
+            cfg.lengths.max_output = n as u32;
+        }
         if let Some(x) = v.get("seed").and_then(Json::as_f64) {
             cfg.seed = x as u64;
         }
@@ -408,5 +458,52 @@ mod tests {
         let bad = crate::util::json::parse(r#"{"resident_frac": 1.5}"#)
             .unwrap();
         assert!(ScenarioTraceConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn length_knobs_overlay_and_shape_the_trace() {
+        let v = crate::util::json::parse(
+            r#"{"prompt_mean": 1024.0, "prompt_sigma": 0.3,
+                "max_prompt": 4096, "output_mean": 256.0,
+                "output_sigma": 0.2, "max_output": 1024}"#,
+        )
+        .unwrap();
+        let cfg = ScenarioTraceConfig::from_json(&v).unwrap();
+        assert!((cfg.lengths.prompt_mu - (1024.0f64).ln()).abs() < 1e-12);
+        assert_eq!(cfg.lengths.prompt_sigma, 0.3);
+        assert_eq!(cfg.lengths.max_prompt, 4096);
+        assert!((cfg.lengths.output_mu - (256.0f64).ln()).abs() < 1e-12);
+        assert_eq!(cfg.lengths.max_output, 1024);
+        // long-context knobs actually shift the generated trace: the
+        // median prompt of the long config dominates the default's
+        let long = generate(&ScenarioTraceConfig {
+            lengths: cfg.lengths,
+            ..ScenarioTraceConfig::default()
+        });
+        let short = generate(&ScenarioTraceConfig::default());
+        let mean = |t: &Trace| {
+            t.requests.iter().map(|r| r.prompt_len as f64).sum::<f64>()
+                / t.requests.len().max(1) as f64
+        };
+        assert!(
+            mean(&long) > 2.0 * mean(&short),
+            "long {} vs short {}",
+            mean(&long),
+            mean(&short)
+        );
+        for bad in [
+            r#"{"prompt_mean": 0.5}"#,
+            r#"{"prompt_sigma": -0.1}"#,
+            r#"{"max_prompt": 0}"#,
+            r#"{"output_mean": 0.0}"#,
+            r#"{"output_sigma": -1.0}"#,
+            r#"{"max_output": 0}"#,
+        ] {
+            let v = crate::util::json::parse(bad).unwrap();
+            assert!(
+                ScenarioTraceConfig::from_json(&v).is_err(),
+                "{bad}"
+            );
+        }
     }
 }
